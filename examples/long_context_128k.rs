@@ -1,0 +1,84 @@
+//! Long-context study (the Fig 19 scenario as a standalone app): decode at
+//! 128K context on Qwen-72B and GPT3-175B, comparing CENT and CompAir with
+//! full per-op and per-component energy breakdowns.
+//!
+//! Run: `cargo run --release --example long_context_128k`
+
+use compair::arch::simulate;
+use compair::config::{ArchKind, ModelConfig, RunConfig};
+use compair::util::table::{fenergy_pj, fnum, ftime_ns, Table};
+use compair::workload::OpClass;
+
+fn main() {
+    for model in [ModelConfig::qwen_72b(), ModelConfig::gpt3_175b()] {
+        println!("==== {} @ 128K context, batch 16, TP=8, 32 devices ====", model.name);
+        let mut per_arch = Vec::new();
+        for arch in [ArchKind::Cent, ArchKind::CentCurry, ArchKind::CompAirOpt] {
+            let mut rc = RunConfig::new(arch, model.clone());
+            rc.batch = 16;
+            rc.seq_len = 128 * 1024;
+            rc.gen_len = 8192;
+            let r = simulate(rc);
+            per_arch.push((arch, r));
+        }
+        let mut t = Table::new(
+            "summary",
+            &["arch", "lat/token", "tok/s", "nonlinear", "energy/token"],
+        );
+        let base = per_arch[0].1.latency_ns;
+        for (arch, r) in &per_arch {
+            t.rowv(vec![
+                arch.label().into(),
+                format!("{} ({})", ftime_ns(r.latency_ns), format!("{:.2}x", base / r.latency_ns)),
+                fnum(r.throughput_tok_s),
+                format!("{:.1}%", r.nonlinear_frac * 100.0),
+                fenergy_pj(r.energy.total_pj()),
+            ]);
+        }
+        t.print();
+
+        // per-op time breakdown for the winner
+        let (_, best) = per_arch.last().unwrap();
+        let mut t2 = Table::new("CompAir_Opt per-op breakdown (one layer)", &["op", "time", "share"]);
+        let total = best.layer_cost.latency_ns;
+        for op in &best.ops {
+            t2.rowv(vec![
+                op.name.clone(),
+                ftime_ns(op.cost.latency_ns),
+                format!("{:.1}%", op.cost.latency_ns / total * 100.0),
+            ]);
+        }
+        t2.print();
+
+        // energy by component
+        let e = &best.energy;
+        let mut t3 = Table::new("CompAir_Opt energy/token by component", &["component", "energy"]);
+        for (name, v) in [
+            ("dram", e.dram_pj),
+            ("sram", e.sram_pj),
+            ("hybrid bonding", e.hb_pj),
+            ("noc", e.noc_pj),
+            ("global buffer", e.gb_pj),
+            ("cxl", e.cxl_pj),
+            ("static", e.static_pj),
+        ] {
+            t3.rowv(vec![name.into(), fenergy_pj(v)]);
+        }
+        t3.print();
+
+        // sanity: the nonlinear share must be material at 128K on CENT
+        let cent_nl = per_arch[0].1.nonlinear_frac;
+        let nl_ops: f64 = per_arch[0]
+            .1
+            .ops
+            .iter()
+            .filter(|o| o.class == OpClass::NonLinear)
+            .map(|o| o.cost.latency_ns)
+            .sum();
+        println!(
+            "CENT spends {:.1}% of layer time ({}/layer) in non-linear ops at 128K\n",
+            cent_nl * 100.0,
+            ftime_ns(nl_ops)
+        );
+    }
+}

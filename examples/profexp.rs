@@ -1,0 +1,12 @@
+use compair::config::{HwConfig, SramGang};
+use compair::isa::{Machine, RowProgram};
+fn main() {
+    let hw = HwConfig::paper();
+    for _ in 0..500 {
+        let mut m = Machine::new(&hw, SramGang::In256Out16);
+        let xs: Vec<f32> = (0..16).map(|i| 0.05 * i as f32 - 0.4).collect();
+        m.write_row(0, 0, &xs);
+        let p = RowProgram::exp_program(0, 2000, 16, 6, 1);
+        compair::util::bench::sink(m.run(&p, true));
+    }
+}

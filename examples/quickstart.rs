@@ -1,0 +1,64 @@
+//! Quickstart: the three-layer stack in one page.
+//!
+//! 1. Load the AOT-compiled JAX/Pallas artifacts (L1/L2) through the PJRT
+//!    runtime and run real numerics (a Curry-softmax row + one decode step
+//!    of the tiny transformer).
+//! 2. Simulate the same decode step on the CompAir hardware model (L3) and
+//!    print latency/energy vs the CENT baseline.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use compair::arch;
+use compair::config::{ArchKind, ModelConfig, RunConfig};
+use compair::runtime::{Runtime, Tensor};
+use compair::util::table::{fenergy_pj, fnum, ftime_ns};
+use compair::util::XorShiftRng;
+
+fn main() -> anyhow::Result<()> {
+    // ---- numerics through the AOT artifacts ----
+    let mut rt = Runtime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+
+    let softmax = rt.load("curry_softmax")?;
+    let mut rng = XorShiftRng::new(1);
+    let scores = rng.vec_f32(8 * 128, -4.0, 4.0);
+    let probs = softmax.run(&[Tensor::new(scores, &[8, 128])])?;
+    let row0: f32 = probs[0].data[..128].iter().sum();
+    println!("curry_softmax row 0 sums to {row0:.4} (Pallas kernel via PJRT)");
+
+    let decode = rt.load("decode_step")?;
+    let (l, b, h, s, dh, d) = (2usize, 2usize, 4usize, 64usize, 16usize, 64usize);
+    let x = rng.vec_f32(b * d, -0.5, 0.5);
+    let zeros = vec![0.0f32; l * b * h * s * dh];
+    let out = decode.run_with_i32_scalar(
+        &[
+            Tensor::new(x, &[b, 1, d]),
+            Tensor::new(zeros.clone(), &[l, b, h, s, dh]),
+            Tensor::new(zeros, &[l, b, h, s, dh]),
+        ],
+        0,
+    )?;
+    println!(
+        "decode_step: hidden out {:?}, KV caches updated ({} values written)",
+        out[0].dims,
+        out[1].data.iter().filter(|v| **v != 0.0).count()
+    );
+
+    // ---- timing/energy through the hardware simulator ----
+    println!("\nsimulated hardware (Llama2-7B, batch=16, 4K context, TP=8):");
+    for arch_kind in [ArchKind::Cent, ArchKind::CompAirOpt] {
+        let mut rc = RunConfig::new(arch_kind, ModelConfig::llama2_7b());
+        rc.batch = 16;
+        rc.seq_len = 4096;
+        let r = arch::simulate(rc);
+        println!(
+            "  {:<14} latency/token {}  throughput {} tok/s  energy/token {}",
+            arch_kind.label(),
+            ftime_ns(r.latency_ns),
+            fnum(r.throughput_tok_s),
+            fenergy_pj(r.energy.total_pj()),
+        );
+    }
+    println!("\nquickstart OK");
+    Ok(())
+}

@@ -1,0 +1,1 @@
+"""CompAir build-path package (never imported at runtime)."""

@@ -1,0 +1,60 @@
+"""AOT lowering: every entry point -> artifacts/<name>.hlo.txt.
+
+HLO *text* is the interchange format (NOT lowered.compile() serialization):
+jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids which the rust
+crate's xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import hashlib
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import make_entry_points
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # CRITICAL: the default printer elides large constants as "{...}", which
+    # the HLO text parser silently reads back as zeros — baked-in model
+    # weights would vanish. Print them in full.
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # the crate's XLA 0.5.1 text parser predates newer metadata attributes
+    # (source_end_line etc.) — strip metadata entirely
+    opts.print_metadata = False
+    text = comp.get_hlo_module().to_string(opts)
+    assert "{...}" not in text, "HLO printer elided constants"
+    return text
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", nargs="*", help="subset of entry points")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    entries = make_entry_points()
+    names = args.only or sorted(entries)
+    for name in names:
+        fn, example = entries[name]
+        lowered = jax.jit(fn).lower(*example)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:12]
+        print(f"wrote {path}  ({len(text)} chars, sha256 {digest})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,2 @@
+"""CompAir L1 Pallas kernels + the pure-jnp oracle (ref)."""
+from . import curry, gemv_bank, ref, rmsnorm, rope, softmax, sram_macro  # noqa: F401

@@ -1,0 +1,100 @@
+"""L1 Pallas kernels for the Curry-ALU iterative non-linear functions.
+
+The exponential is Fig 13's Horner chain — per iteration
+``t *= x; t /= k; t += 1; k -= 1`` — with a BF16 round after every ALU
+touch, matching the 16-bit flit payload. The rust simulator
+(``noc::curry::curry_exp``) implements the identical recurrence; the pytest
+suite pins them together through ``ref.curry_exp_ref``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EXP_ROUNDS = 6
+EXP_RR_ROUNDS = 8
+SQRT_ROUNDS = 8
+
+
+def _bf16(v):
+    return v.astype(jnp.bfloat16).astype(jnp.float32)
+
+
+def _exp_kernel(x_ref, o_ref, *, rounds):
+    x = _bf16(x_ref[...])
+
+    def body(i, carry):
+        t, k = carry
+        t = _bf16(t * x)
+        t = _bf16(t / _bf16(k))
+        t = _bf16(t + 1.0)
+        k = _bf16(k - 1.0)
+        return t, k
+
+    t0 = jnp.ones_like(x)
+    k0 = jnp.full_like(x, float(rounds))
+    t, _ = jax.lax.fori_loop(0, rounds, body, (t0, k0))
+    o_ref[...] = t
+
+
+@functools.partial(jax.jit, static_argnames=("rounds",))
+def curry_exp(x, rounds=EXP_ROUNDS):
+    """Element-wise Curry exponential over a 1-D or 2-D array."""
+    return pl.pallas_call(
+        functools.partial(_exp_kernel, rounds=rounds),
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        interpret=True,
+    )(x)
+
+
+def _exp_rr_kernel(x_ref, o_ref, *, rounds, squarings):
+    x = _bf16(x_ref[...]) / float(1 << squarings)
+
+    def body(i, carry):
+        t, k = carry
+        t = _bf16(t * x)
+        t = _bf16(t / _bf16(k))
+        t = _bf16(t + 1.0)
+        return t, _bf16(k - 1.0)
+
+    t, _ = jax.lax.fori_loop(
+        0, rounds, body, (jnp.ones_like(x), jnp.full_like(x, float(rounds)))
+    )
+    for _ in range(squarings):
+        t = _bf16(t * t)
+    o_ref[...] = t
+
+
+@functools.partial(jax.jit, static_argnames=("rounds", "squarings"))
+def curry_exp_rr(x, rounds=8, squarings=2):
+    """Range-reduced Curry exponential (convergent over wide ranges)."""
+    return pl.pallas_call(
+        functools.partial(_exp_rr_kernel, rounds=rounds, squarings=squarings),
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        interpret=True,
+    )(x)
+
+
+def _sqrt_kernel(x_ref, o_ref, *, rounds):
+    x = _bf16(x_ref[...])
+    y0 = _bf16(jnp.maximum(x, 1.0))
+
+    def body(i, y):
+        q = _bf16(x / y)
+        s = _bf16(y + q)
+        return _bf16(s / 2.0)
+
+    y = jax.lax.fori_loop(0, rounds, body, y0)
+    o_ref[...] = jnp.where(x <= 0.0, jnp.zeros_like(x), y)
+
+
+@functools.partial(jax.jit, static_argnames=("rounds",))
+def curry_sqrt(x, rounds=SQRT_ROUNDS):
+    """Element-wise Newton square root (the RMSNorm path's rsqrt core)."""
+    return pl.pallas_call(
+        functools.partial(_sqrt_kernel, rounds=rounds),
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        interpret=True,
+    )(x)

@@ -1,0 +1,48 @@
+"""L1 Pallas kernel: bank-tiled GeMV — the DRAM-PIM 16-lane MAC datapath.
+
+Hardware mapping (DESIGN.md §Hardware-Adaptation): each grid step is one
+bank's output tile; the weight BlockSpec streams (LANES x d_in) tiles from
+HBM into VMEM the way a bank's column decoder streams rows into the MAC
+lanes. Inputs are BF16 (the bank datapath), accumulation is f32 (the MAC
+accumulator), outputs round back through BF16.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; correctness is validated on the interpret path and TPU
+performance is estimated structurally (EXPERIMENTS.md §Perf-L1).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# 16 BF16 MAC lanes per bank (Table 3).
+LANES = 16
+
+
+def _kernel(w_ref, x_ref, o_ref):
+    w = w_ref[...].astype(jnp.bfloat16).astype(jnp.float32)
+    x = x_ref[...].astype(jnp.bfloat16).astype(jnp.float32)
+    acc = jax.lax.dot_general(
+        w, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    o_ref[...] = acc.astype(jnp.bfloat16).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def gemv_bank(w, x):
+    """w: [out, in] (out % 16 == 0), x: [in] -> [out] f32 (BF16-rounded)."""
+    out_dim, in_dim = w.shape
+    assert out_dim % LANES == 0, f"out dim {out_dim} must tile by {LANES} lanes"
+    return pl.pallas_call(
+        _kernel,
+        grid=(out_dim // LANES,),
+        in_specs=[
+            pl.BlockSpec((LANES, in_dim), lambda i: (i, 0)),
+            pl.BlockSpec((in_dim,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((LANES,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((out_dim,), jnp.float32),
+        interpret=True,
+    )(w, x)

@@ -1,0 +1,139 @@
+"""Pure-jnp oracles for every kernel — the correctness ground truth.
+
+Two flavours live here:
+
+* ``*_ref``: textbook float32 implementations (what the math should be);
+* ``curry_*_ref``: step-exact models of the CompAir hardware algorithms
+  (BF16-rounded Horner/Newton iterations, pair-swap RoPE), which the Pallas
+  kernels AND the rust ISA interpreter must match bit-for-bit.
+"""
+
+import jax.numpy as jnp
+
+
+def bf16_round(x):
+    """Round f32 -> bf16 -> f32 (the hardware's per-step rounding)."""
+    return jnp.asarray(x, jnp.float32).astype(jnp.bfloat16).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------- matmuls
+
+def gemv_ref(w, x):
+    """w: [out, in], x: [in] -> [out] in f32."""
+    return jnp.asarray(w, jnp.float32) @ jnp.asarray(x, jnp.float32)
+
+
+def gemm_ref(x, w):
+    """x: [batch, in], w: [in, out] -> [batch, out]."""
+    return jnp.asarray(x, jnp.float32) @ jnp.asarray(w, jnp.float32)
+
+
+def bank_gemv_ref(w, x):
+    """BF16-input GeMV with f32 accumulation (the 16-lane MAC datapath)."""
+    wb = bf16_round(w)
+    xb = bf16_round(x)
+    return bf16_round(wb @ xb)
+
+
+# ------------------------------------------------------------- non-linear
+
+def curry_exp_ref(x, rounds=6):
+    """Fig 13 Horner exponential, BF16-rounded per step.
+
+    Per iteration: t *= x; t /= k; t += 1; k -= 1 (k counts down from
+    ``rounds``). Must match rust ``noc::curry::curry_exp`` exactly.
+    """
+    x = bf16_round(x)
+    t = jnp.ones_like(x)
+    k = float(rounds)
+    for _ in range(rounds):
+        t = bf16_round(bf16_round(t) * x)
+        t = bf16_round(t / bf16_round(jnp.float32(k)))
+        t = bf16_round(t + jnp.float32(1.0))
+        k -= 1.0
+    return t
+
+
+def curry_exp_rr_ref(x, rounds=8, squarings=2):
+    """Range-reduced Curry exponential: exp(x) = exp(x / 2^s)^(2^s).
+
+    The Horner chain runs on x/2^s (convergent for |x/2^s| <= 2) and the
+    squarings are two extra Mul passes through the same ALU. Matches rust
+    ``noc::curry::curry_exp_rr``."""
+    t = curry_exp_ref(jnp.asarray(x, jnp.float32) / float(1 << squarings), rounds)
+    for _ in range(squarings):
+        t = bf16_round(t * t)
+    return t
+
+
+def curry_sqrt_ref(x, rounds=8):
+    """Newton sqrt as the NoC executes it (seed max(x, 1), BF16 steps)."""
+    x = bf16_round(x)
+    y = bf16_round(jnp.maximum(x, 1.0))
+    for _ in range(rounds):
+        q = bf16_round(x / y)
+        s = bf16_round(y + q)
+        y = bf16_round(s / 2.0)
+    return jnp.where(x <= 0.0, jnp.zeros_like(x), y)
+
+
+def softmax_ref(x, axis=-1):
+    """Numerically-stable float32 softmax."""
+    x = jnp.asarray(x, jnp.float32)
+    m = jnp.max(x, axis=axis, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=axis, keepdims=True)
+
+
+def curry_softmax_ref(x, rounds=8):
+    """Softmax as CompAir computes it: max-shift (scheduler-side), Curry
+    exponential, tree-reduce sum, in-transit divide. Rows on the last axis.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    m = jnp.max(x, axis=-1, keepdims=True)  # scheduler-side stabilization
+    z = jnp.clip(x - m, -8.0, 0.0)  # range clamp (exp(-8) ~ 3e-4 ~ 0)
+    e = curry_exp_rr_ref(z, rounds)
+    s = jnp.sum(e, axis=-1, keepdims=True)  # tree reduce (exact adds)
+    return bf16_round(e / bf16_round(s))
+
+
+def rmsnorm_ref(x, g, eps=1e-5):
+    """Float32 RMSNorm with learned gain g."""
+    x = jnp.asarray(x, jnp.float32)
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x / jnp.sqrt(ms + eps) * g
+
+
+def silu_ref(x):
+    x = jnp.asarray(x, jnp.float32)
+    return x / (1.0 + jnp.exp(-x))
+
+
+# ------------------------------------------------------------------ RoPE
+
+def rope_rearrange_ref(x):
+    """Neighbour swap with negation: (x0, x1) -> (-x1, x0) per pair, on the
+    last axis (the NoC_Exchange(R-, .., 1, 2) semantics)."""
+    x = jnp.asarray(x, jnp.float32)
+    x2 = x.reshape(x.shape[:-1] + (-1, 2))
+    out = jnp.stack([-x2[..., 1], x2[..., 0]], axis=-1)
+    return bf16_round(out.reshape(x.shape))
+
+
+def rope_apply_ref(x, cos, sin):
+    """Full RoPE: x*cos + rearrange(x)*sin (interleaved-pair convention)."""
+    return bf16_round(
+        bf16_round(jnp.asarray(x, jnp.float32) * cos)
+        + bf16_round(rope_rearrange_ref(x) * sin)
+    )
+
+
+def rope_tables(positions, d_head, base=10000.0):
+    """cos/sin tables for interleaved-pair RoPE: [len(positions), d_head]."""
+    pos = jnp.asarray(positions, jnp.float32)[:, None]
+    idx = jnp.arange(d_head // 2, dtype=jnp.float32)
+    inv = base ** (-2.0 * idx / d_head)
+    ang = pos * inv[None, :]
+    cos = jnp.repeat(jnp.cos(ang), 2, axis=-1)
+    sin = jnp.repeat(jnp.sin(ang), 2, axis=-1)
+    return cos, sin

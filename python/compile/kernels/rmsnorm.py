@@ -1,0 +1,37 @@
+"""L1 Pallas kernel: RMSNorm via the hardware path — per-bank square
+accumulation (MAC lanes), tree-reduced mean, Newton rsqrt (Curry), scale.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bf16(v):
+    return v.astype(jnp.bfloat16).astype(jnp.float32)
+
+
+def _rms_kernel(x_ref, g_ref, o_ref, *, eps, newton_rounds):
+    x = x_ref[...].astype(jnp.float32)
+    ms = jnp.mean(x * x, axis=-1, keepdims=True) + eps
+
+    # Newton sqrt seeded at max(ms, 1): y <- (y + ms/y)/2
+    y = jnp.maximum(ms, 1.0)
+
+    def body(i, y):
+        return 0.5 * (y + ms / y)
+
+    y = jax.lax.fori_loop(0, newton_rounds, body, y)
+    o_ref[...] = _bf16(x / y * g_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "newton_rounds"))
+def rmsnorm(x, g, eps=1e-5, newton_rounds=12):
+    """x: [tokens, d], g: [d] -> normalized x (Newton-rsqrt hardware path)."""
+    return pl.pallas_call(
+        functools.partial(_rms_kernel, eps=eps, newton_rounds=newton_rounds),
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        interpret=True,
+    )(x, g)

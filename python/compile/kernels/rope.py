@@ -1,0 +1,35 @@
+"""L1 Pallas kernel: RoPE with the NoC pair-exchange rearrangement.
+
+The (x0, x1) -> (-x1, x0) neighbour swap is exactly NoC_Exchange(R-, .., 1, 2)
+(paper Fig 12); the cos/sin multiplies are the bank's EWMUL pass.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bf16(v):
+    return v.astype(jnp.bfloat16).astype(jnp.float32)
+
+
+def _rope_kernel(x_ref, cos_ref, sin_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    pairs = x.reshape(x.shape[:-1] + (x.shape[-1] // 2, 2))
+    rot = jnp.stack([-pairs[..., 1], pairs[..., 0]], axis=-1)
+    rot = _bf16(rot.reshape(x.shape))
+    o_ref[...] = _bf16(_bf16(x * cos_ref[...]) + _bf16(rot * sin_ref[...]))
+
+
+@functools.partial(jax.jit, static_argnames=())
+def rope(x, cos, sin):
+    """x: [tokens, d_head], cos/sin: [tokens, d_head] -> rotated x."""
+    assert x.shape == cos.shape == sin.shape
+    assert x.shape[-1] % 2 == 0
+    return pl.pallas_call(
+        _rope_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        interpret=True,
+    )(x, cos, sin)

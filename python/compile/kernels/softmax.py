@@ -1,0 +1,61 @@
+"""L1 Pallas kernel: CompAir-style softmax.
+
+Dataflow mirrors the hardware split: per-row max shift (scheduler-side),
+Curry exponential in transit, tree-reduced sum (binary fold, the §4.3.3
+reduce tree), and an in-transit divide. Rows are grid-parallel like banks.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .curry import EXP_RR_ROUNDS
+
+
+def _bf16(v):
+    return v.astype(jnp.bfloat16).astype(jnp.float32)
+
+
+def _softmax_kernel(x_ref, o_ref, *, rounds, tree_width):
+    x = x_ref[...].astype(jnp.float32)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    # range clamp: scores below max-8 are ~0 in the distribution
+    zc = _bf16(jnp.clip(x - m, -8.0, 0.0))
+    z = zc / 4.0  # range reduction: exp(z) = exp(z/4)^4
+
+    # Curry exponential (Horner, BF16 per step)
+    def body(i, carry):
+        t, k = carry
+        t = _bf16(t * z)
+        t = _bf16(t / _bf16(k))
+        t = _bf16(t + 1.0)
+        return t, _bf16(k - 1.0)
+
+    t0 = jnp.ones_like(z)
+    k0 = jnp.full_like(z, float(rounds))
+    e, _ = jax.lax.fori_loop(0, rounds, body, (t0, k0))
+    e = _bf16(e * e)
+    e = _bf16(e * e)
+
+    # binary-tree reduction over the row (the bank reduce tree)
+    s = e.reshape(e.shape[:-1] + (tree_width, e.shape[-1] // tree_width))
+    partial = jnp.sum(s, axis=-1)  # per-bank partial (MAC lanes)
+    total = jnp.sum(partial, axis=-1, keepdims=True)  # tree fold
+    o_ref[...] = _bf16(e / _bf16(total))
+
+
+@functools.partial(jax.jit, static_argnames=("rounds",))
+def curry_softmax(x, rounds=EXP_RR_ROUNDS):
+    """Row softmax over the last axis of a 2-D array [rows, seq]."""
+    rows, seq = x.shape
+    tree_width = 16 if seq % 16 == 0 else 1  # 16 banks per channel
+    return pl.pallas_call(
+        functools.partial(_softmax_kernel, rounds=rounds, tree_width=tree_width),
+        grid=(rows,),
+        in_specs=[pl.BlockSpec((1, seq), lambda r: (r, 0))],
+        out_specs=pl.BlockSpec((1, seq), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, seq), jnp.float32),
+        interpret=True,
+    )(x)

@@ -1,0 +1,55 @@
+"""L1 Pallas kernel: macro-tiled GeMM — the SRAM-PIM 128-in x 8-out array.
+
+Hardware mapping: the (MACRO_IN x MACRO_OUT) weight BlockSpec *is* the CIM
+macro's array; the in-tile grid axis walks the weight reloads the hybrid
+bonding performs, and the f32 accumulator block mirrors the macro's
+accumulation registers across in-tiles. Batch rides in the block's leading
+dim — exactly the weight-reuse axis that makes SRAM-PIM win at batch>1
+(paper Fig 4B).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+MACRO_IN = 128
+MACRO_OUT = 8
+
+
+def _kernel(x_ref, w_ref, o_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.bfloat16).astype(jnp.float32)
+    w = w_ref[...].astype(jnp.bfloat16).astype(jnp.float32)
+    o_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=())
+def gemm_macro(x, w):
+    """x: [batch, in], w: [in, out] -> [batch, out] f32.
+
+    in % 128 == 0 and out % 8 == 0 (macro tiling).
+    """
+    batch, in_dim = x.shape
+    in_dim2, out_dim = w.shape
+    assert in_dim == in_dim2
+    assert in_dim % MACRO_IN == 0, f"in dim {in_dim} must tile by {MACRO_IN}"
+    assert out_dim % MACRO_OUT == 0, f"out dim {out_dim} must tile by {MACRO_OUT}"
+    grid = (out_dim // MACRO_OUT, in_dim // MACRO_IN)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((batch, MACRO_IN), lambda o, i: (0, i)),
+            pl.BlockSpec((MACRO_IN, MACRO_OUT), lambda o, i: (i, o)),
+        ],
+        out_specs=pl.BlockSpec((batch, MACRO_OUT), lambda o, i: (0, o)),
+        out_shape=jax.ShapeDtypeStruct((batch, out_dim), jnp.float32),
+        interpret=True,
+    )(x, w)

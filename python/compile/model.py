@@ -1,0 +1,205 @@
+"""L2: the JAX transformer (tiny Llama-style) built on the L1 kernels.
+
+This is the numeric golden model for the rust coordinator: ``aot.py``
+lowers ``block_prefill`` and ``decode_step`` (with the deterministic TINY
+parameters baked in as constants) to HLO text, and the rust runtime
+executes them on the PJRT CPU client. Python never runs at request time.
+
+The TINY config must match rust ``config::ModelConfig::tiny()``.
+"""
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import curry, gemv_bank, ref, rmsnorm, rope, softmax, sram_macro
+
+
+@dataclass(frozen=True)
+class TinyConfig:
+    n_layers: int = 2
+    d_model: int = 64
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    d_ffn: int = 128
+    vocab: int = 256
+    max_seq: int = 64
+
+    @property
+    def d_head(self):
+        return self.d_model // self.n_heads
+
+
+TINY = TinyConfig()
+
+
+def init_params(cfg: TinyConfig = TINY, seed: int = 0):
+    """Deterministic parameter pytree (baked into the AOT artifacts)."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, cfg.n_layers * 8 + 1)
+    scale = 0.08
+    params = {"layers": []}
+    d, f = cfg.d_model, cfg.d_ffn
+    kv = cfg.n_kv_heads * cfg.d_head
+    for l in range(cfg.n_layers):
+        k = ks[l * 8 : (l + 1) * 8]
+        params["layers"].append(
+            {
+                "wq": jax.random.normal(k[0], (d, d), jnp.float32) * scale,
+                "wk": jax.random.normal(k[1], (d, kv), jnp.float32) * scale,
+                "wv": jax.random.normal(k[2], (d, kv), jnp.float32) * scale,
+                "wo": jax.random.normal(k[3], (d, d), jnp.float32) * scale,
+                "w_up": jax.random.normal(k[4], (d, f), jnp.float32) * scale,
+                "w_gate": jax.random.normal(k[5], (d, f), jnp.float32) * scale,
+                "w_down": jax.random.normal(k[6], (f, d), jnp.float32) * scale,
+                "g1": 1.0 + 0.01 * jax.random.normal(k[7], (d,), jnp.float32),
+                "g2": jnp.ones((d,), jnp.float32),
+            }
+        )
+    return params
+
+
+def _fc(x, w):
+    """Dense through the SRAM-macro kernel when shapes tile, else jnp."""
+    b, din = x.shape
+    din2, dout = w.shape
+    if din % sram_macro.MACRO_IN == 0 and dout % sram_macro.MACRO_OUT == 0:
+        return sram_macro.gemm_macro(x, w)
+    return ref.bf16_round(ref.gemm_ref(x, w))
+
+
+def _attention(q, k, v, cfg: TinyConfig):
+    """q: [B, H, Tq, Dh]; k/v: [B, H, Tk, Dh] -> [B, H, Tq, Dh].
+
+    Causal only when Tq == Tk (prefill); decode passes Tq=1 with a full
+    cache view and masks by length upstream.
+    """
+    B, H, Tq, Dh = q.shape
+    Tk = k.shape[2]
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(Dh))
+    if Tq == Tk:
+        mask = jnp.tril(jnp.ones((Tq, Tk), bool))
+        scores = jnp.where(mask[None, None], scores, -1e9)
+    probs = softmax.curry_softmax(scores.reshape(-1, Tk)).reshape(scores.shape)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def _rope_qk(x, positions, cfg: TinyConfig):
+    """x: [B, T, H, Dh] with per-token positions [T] -> [B, H, T, Dh]."""
+    B, T, H, Dh = x.shape
+    cos, sin = ref.rope_tables(positions, Dh)
+    flat = x.transpose(0, 2, 1, 3).reshape(-1, Dh)
+    cos_f = jnp.tile(cos, (B * H, 1))
+    sin_f = jnp.tile(sin, (B * H, 1))
+    out = rope.rope(flat, cos_f, sin_f)
+    return out.reshape(B, H, T, Dh)
+
+
+def block_fwd(params_l, x, positions, cfg: TinyConfig, kv=None):
+    """One transformer block. x: [B, T, d]. kv: optional (k_cache, v_cache,
+    pos) for decode. Returns (y, (k_new, v_new))."""
+    B, T, d = x.shape
+    H, Dh = cfg.n_heads, cfg.d_head
+    xf = x.reshape(-1, d)
+    h = rmsnorm.rmsnorm(xf, params_l["g1"])
+    q = _fc(h, params_l["wq"]).reshape(B, T, H, Dh)
+    k = _fc(h, params_l["wk"]).reshape(B, T, cfg.n_kv_heads, Dh)
+    v = _fc(h, params_l["wv"]).reshape(B, T, cfg.n_kv_heads, Dh)
+    q = _rope_qk(q, positions, cfg)  # [B, H, T, Dh]
+    k = _rope_qk(k, positions, cfg)
+    v = v.transpose(0, 2, 1, 3)
+
+    if kv is None:
+        attn = _attention(q, k, v, cfg)
+        k_out, v_out = k, v
+    else:
+        k_cache, v_cache, pos = kv  # [B, H, max_seq, Dh]
+        k_out = jax.lax.dynamic_update_slice(k_cache, k, (0, 0, pos, 0))
+        v_out = jax.lax.dynamic_update_slice(v_cache, v, (0, 0, pos, 0))
+        Tk = k_cache.shape[2]
+        scores = jnp.einsum("bhqd,bhkd->bhqk", q, k_out) / jnp.sqrt(float(Dh))
+        valid = jnp.arange(Tk)[None, None, None, :] <= pos
+        scores = jnp.where(valid, scores, -1e9)
+        probs = softmax.curry_softmax(scores.reshape(-1, Tk)).reshape(scores.shape)
+        attn = jnp.einsum("bhqk,bhkd->bhqd", probs, v_out)
+
+    attn = attn.transpose(0, 2, 1, 3).reshape(-1, d)
+    x1 = xf + _fc(attn, params_l["wo"])
+    h2 = rmsnorm.rmsnorm(x1, params_l["g2"])
+    up = _fc(h2, params_l["w_up"])
+    gate = _fc(h2, params_l["w_gate"])
+    act = ref.bf16_round(up * ref.silu_ref(gate))
+    y = x1 + _fc(act, params_l["w_down"])
+    return y.reshape(B, T, d), (k_out, v_out)
+
+
+def model_prefill(params, x, cfg: TinyConfig = TINY):
+    """Full prefill over all layers. x: [B, T, d]. Returns (y, caches)."""
+    T = x.shape[1]
+    positions = jnp.arange(T)
+    caches = []
+    for pl_ in params["layers"]:
+        x, kvs = block_fwd(pl_, x, positions, cfg)
+        caches.append(kvs)
+    return x, caches
+
+
+def model_decode_step(params, x, k_caches, v_caches, pos, cfg: TinyConfig = TINY):
+    """One decode step. x: [B, 1, d]; caches: [L, B, H, max_seq, Dh]; pos is
+    a traced scalar. Returns (y, k_caches', v_caches')."""
+    positions = jnp.full((1,), pos)
+    ks, vs = [], []
+    for li, pl_ in enumerate(params["layers"]):
+        x, (k2, v2) = block_fwd(pl_, x, positions, cfg, kv=(k_caches[li], v_caches[li], pos))
+        ks.append(k2)
+        vs.append(v2)
+    return x, jnp.stack(ks), jnp.stack(vs)
+
+
+# ---- AOT entry points (fixed shapes, params baked as constants) ----
+
+def make_entry_points(cfg: TinyConfig = TINY, batch: int = 2, prompt: int = 8):
+    """Returns {name: (fn, example_args)} for aot.py to lower."""
+    params = init_params(cfg)
+    H, Dh, L = cfg.n_heads, cfg.d_head, cfg.n_layers
+
+    def prefill_fn(x):
+        y, _ = model_prefill(params, x, cfg)
+        return (y,)
+
+    def decode_fn(x, k_caches, v_caches, pos):
+        y, k2, v2 = model_decode_step(params, x, k_caches, v_caches, pos, cfg)
+        return (y, k2, v2)
+
+    def softmax_fn(x):
+        return (softmax.curry_softmax(x),)
+
+    def exp_fn(x):
+        return (curry.curry_exp(x),)
+
+    def rope_fn(x, cos, sin):
+        return (rope.rope(x, cos, sin),)
+
+    def gemv_fn(w, x):
+        return (gemv_bank.gemv_bank(w, x),)
+
+    f32 = jnp.float32
+    spec = jax.ShapeDtypeStruct
+    return {
+        "block_prefill": (prefill_fn, (spec((batch, prompt, cfg.d_model), f32),)),
+        "decode_step": (
+            decode_fn,
+            (
+                spec((batch, 1, cfg.d_model), f32),
+                spec((L, batch, H, cfg.max_seq, Dh), f32),
+                spec((L, batch, H, cfg.max_seq, Dh), f32),
+                spec((), jnp.int32),
+            ),
+        ),
+        "curry_softmax": (softmax_fn, (spec((8, 128), f32),)),
+        "curry_exp": (exp_fn, (spec((64,), f32),)),
+        "rope": (rope_fn, (spec((16, 16), f32),) * 3),
+        "gemv_bank": (gemv_fn, (spec((64, 64), f32), spec((64,), f32))),
+    }

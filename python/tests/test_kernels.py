@@ -1,0 +1,202 @@
+"""L1 correctness: every Pallas kernel against the pure-jnp oracle,
+including hypothesis sweeps over shapes and value ranges."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import curry, gemv_bank, ref, rmsnorm, rope, softmax, sram_macro
+
+RNG = np.random.default_rng(1234)
+
+
+def randn(*shape, scale=1.0):
+    return (RNG.standard_normal(shape) * scale).astype(np.float32)
+
+
+# ------------------------------------------------------------ gemv_bank
+
+class TestGemvBank:
+    def test_matches_bank_ref_exactly(self):
+        w, x = randn(32, 48), randn(48)
+        got = np.array(gemv_bank.gemv_bank(w, x))
+        want = np.array(ref.bank_gemv_ref(w, x))
+        np.testing.assert_array_equal(got, want)
+
+    def test_close_to_f32_gemv(self):
+        w, x = randn(64, 128, scale=0.1), randn(128, scale=0.1)
+        got = np.array(gemv_bank.gemv_bank(w, x))
+        want = np.array(ref.gemv_ref(w, x))
+        np.testing.assert_allclose(got, want, atol=0.05)
+
+    def test_rejects_unaligned_output(self):
+        with pytest.raises(AssertionError):
+            gemv_bank.gemv_bank(randn(17, 8), randn(8))
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        out_tiles=st.integers(1, 6),
+        in_dim=st.integers(1, 200),
+    )
+    def test_shape_sweep(self, out_tiles, in_dim):
+        w, x = randn(16 * out_tiles, in_dim, scale=0.3), randn(in_dim, scale=0.3)
+        got = np.array(gemv_bank.gemv_bank(w, x))
+        want = np.array(ref.bank_gemv_ref(w, x))
+        np.testing.assert_array_equal(got, want)
+
+
+# ------------------------------------------------------------ sram_macro
+
+class TestSramMacro:
+    def test_close_to_f32_gemm(self):
+        x, w = randn(4, 256, scale=0.1), randn(256, 16, scale=0.1)
+        got = np.array(sram_macro.gemm_macro(x, w))
+        want = np.array(ref.gemm_ref(x, w))
+        np.testing.assert_allclose(got, want, atol=0.1)
+
+    def test_matches_bf16_quantized_ref(self):
+        x, w = randn(3, 128), randn(128, 8)
+        got = np.array(sram_macro.gemm_macro(x, w))
+        want = np.array(ref.gemm_ref(ref.bf16_round(x), ref.bf16_round(w)))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_rejects_bad_tiling(self):
+        with pytest.raises(AssertionError):
+            sram_macro.gemm_macro(randn(2, 100), randn(100, 8))
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        batch=st.integers(1, 8),
+        in_tiles=st.integers(1, 4),
+        out_tiles=st.integers(1, 4),
+    )
+    def test_shape_sweep(self, batch, in_tiles, out_tiles):
+        x = randn(batch, 128 * in_tiles, scale=0.2)
+        w = randn(128 * in_tiles, 8 * out_tiles, scale=0.2)
+        got = np.array(sram_macro.gemm_macro(x, w))
+        want = np.array(ref.gemm_ref(ref.bf16_round(x), ref.bf16_round(w)))
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+# ------------------------------------------------------------ curry exp/sqrt
+
+class TestCurry:
+    def test_exp_matches_curry_ref_exactly(self):
+        x = randn(64)
+        np.testing.assert_array_equal(
+            np.array(curry.curry_exp(x)), np.array(ref.curry_exp_ref(x))
+        )
+
+    def test_exp_approximates_true_exp(self):
+        x = np.linspace(-2.0, 1.0, 64, dtype=np.float32)
+        got = np.array(curry.curry_exp(x, rounds=8))
+        np.testing.assert_allclose(got, np.exp(x), rtol=0.05, atol=0.02)
+
+    def test_more_rounds_improve(self):
+        x = np.full(8, 1.0, np.float32)
+        e3 = abs(np.array(curry.curry_exp(x, rounds=3))[0] - np.e)
+        e8 = abs(np.array(curry.curry_exp(x, rounds=8))[0] - np.e)
+        assert e8 <= e3
+
+    def test_sqrt_matches_ref_and_truth(self):
+        x = np.abs(randn(32)) * 10 + 0.1
+        got = np.array(curry.curry_sqrt(x))
+        np.testing.assert_array_equal(got, np.array(ref.curry_sqrt_ref(x)))
+        np.testing.assert_allclose(got, np.sqrt(x), rtol=0.02)
+
+    def test_sqrt_zero_and_negative(self):
+        x = np.array([0.0, -1.0, 4.0], np.float32)
+        got = np.array(curry.curry_sqrt(x))
+        assert got[0] == 0.0 and got[1] == 0.0
+        np.testing.assert_allclose(got[2], 2.0, rtol=0.01)
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.lists(st.floats(-2.0, 1.5, width=32), min_size=1, max_size=64))
+    def test_exp_value_sweep(self, xs):
+        x = np.array(xs, np.float32)
+        got = np.array(curry.curry_exp(x, rounds=8))
+        np.testing.assert_allclose(got, np.exp(x), rtol=0.08, atol=0.03)
+
+
+# ------------------------------------------------------------ softmax
+
+class TestSoftmax:
+    def test_matches_curry_ref(self):
+        x = randn(4, 64, scale=2.0)
+        np.testing.assert_array_equal(
+            np.array(softmax.curry_softmax(x)), np.array(ref.curry_softmax_ref(x))
+        )
+
+    def test_close_to_true_softmax(self):
+        x = randn(8, 128, scale=3.0)
+        got = np.array(softmax.curry_softmax(x))
+        want = np.array(ref.softmax_ref(x))
+        # bf16 datapath + 8-round range-reduced exp: ~5% worst-case on probs
+        np.testing.assert_allclose(got, want, atol=0.05)
+
+    def test_rows_sum_to_one(self):
+        x = randn(16, 64, scale=4.0)
+        got = np.array(softmax.curry_softmax(x))
+        np.testing.assert_allclose(got.sum(-1), 1.0, atol=0.05)
+
+    @settings(max_examples=15, deadline=None)
+    @given(rows=st.integers(1, 8), seq=st.sampled_from([16, 32, 48, 64, 128]))
+    def test_shape_sweep(self, rows, seq):
+        x = randn(rows, seq, scale=2.0)
+        got = np.array(softmax.curry_softmax(x))
+        want = np.array(ref.softmax_ref(x))
+        np.testing.assert_allclose(got, want, atol=0.06)
+
+
+# ------------------------------------------------------------ rope
+
+class TestRope:
+    def test_matches_ref(self):
+        x = randn(8, 32)
+        cos, sin = ref.rope_tables(np.arange(8), 32)
+        np.testing.assert_array_equal(
+            np.array(rope.rope(x, cos, sin)),
+            np.array(ref.rope_apply_ref(x, cos, sin)),
+        )
+
+    def test_position_zero_is_identity(self):
+        x = ref.bf16_round(randn(1, 16))
+        cos, sin = ref.rope_tables([0], 16)
+        np.testing.assert_allclose(np.array(rope.rope(np.array(x), cos, sin)), x, atol=1e-6)
+
+    def test_norm_preserved(self):
+        x = randn(4, 64)
+        cos, sin = ref.rope_tables([3, 7, 100, 1000], 64)
+        y = np.array(rope.rope(x, cos, sin))
+        np.testing.assert_allclose(
+            np.linalg.norm(y, axis=-1), np.linalg.norm(x, axis=-1), rtol=0.03
+        )
+
+    def test_rejects_odd_dim(self):
+        with pytest.raises(AssertionError):
+            rope.rope(randn(2, 7), randn(2, 7), randn(2, 7))
+
+
+# ------------------------------------------------------------ rmsnorm
+
+class TestRmsNorm:
+    def test_close_to_ref(self):
+        x, g = randn(8, 64), 1.0 + 0.1 * randn(64)
+        got = np.array(rmsnorm.rmsnorm(x, g))
+        want = np.array(ref.rmsnorm_ref(x, g))
+        np.testing.assert_allclose(got, want, atol=0.02)
+
+    def test_unit_rms_output(self):
+        x = randn(4, 128, scale=5.0)
+        got = np.array(rmsnorm.rmsnorm(x, np.ones(128, np.float32)))
+        rms = np.sqrt((got**2).mean(-1))
+        np.testing.assert_allclose(rms, 1.0, atol=0.05)
+
+    @settings(max_examples=15, deadline=None)
+    @given(tokens=st.integers(1, 8), d=st.sampled_from([16, 32, 64, 128]))
+    def test_shape_sweep(self, tokens, d):
+        x = randn(tokens, d, scale=2.0)
+        g = np.ones(d, np.float32)
+        got = np.array(rmsnorm.rmsnorm(x, g))
+        want = np.array(ref.rmsnorm_ref(x, g))
+        np.testing.assert_allclose(got, want, atol=0.03)

@@ -1,0 +1,72 @@
+//! Hot-path micro-benchmarks for the §Perf optimization loop: the pieces
+//! profiling shows dominate figure regeneration and serving simulation.
+//!
+//! Run: `cargo bench --bench bench_hotpath`
+
+use compair::arch::collective as coll;
+use compair::config::{HwConfig, NocConfig, SramGang};
+use compair::dram::{stream_latency_ns, PimBank};
+use compair::isa::{Machine, RowProgram};
+use compair::noc::packet::{Packet, PacketType, PathStep, RouterId, StepOp};
+use compair::noc::{trees, Mesh};
+use compair::sram::bank::{SramBank, WeightPolicy};
+use compair::util::bench::Bencher;
+
+fn main() {
+    let hw = HwConfig::paper();
+    let mut b = Bencher::from_env();
+
+    println!("== substrate closed forms ==");
+    let bank = PimBank::new(&hw.dram);
+    b.bench("dram/gemv-closed-form-10x5120xb64", || bank.gemv(10, 5120, 64).latency_ns);
+    b.bench("dram/stream-latency", || stream_latency_ns(&hw.dram, 1000, 32));
+    let sram = SramBank::new(&hw.sram, SramGang::In256Out16, &hw.dram);
+    b.bench("sram/gemm-10x5120xb64", || {
+        sram.gemm(10, 5120, 64, WeightPolicy::Reload).latency_ns
+    });
+    b.bench("collective/noc-reduce-4096x16", || {
+        coll::noc_reduce(4096, 16, &hw.noc).latency_ns
+    });
+
+    println!("\n== flit-level mesh simulation ==");
+    b.bench("mesh/cross-traffic-64-packets", || {
+        let mut m = Mesh::new(&NocConfig::default());
+        for y in 0..16usize {
+            for x in 0..4usize {
+                m.inject(Packet::new(
+                    PacketType::Write,
+                    RouterId::new(x, y),
+                    1.0,
+                    vec![PathStep::relay(RouterId::new(3 - x, 15 - y))],
+                ));
+            }
+        }
+        m.run(1_000_000).latency_ns
+    });
+    b.bench("mesh/tree-reduce-16", || {
+        let mut m = Mesh::new(&NocConfig::default());
+        let vals: Vec<Vec<f32>> =
+            (0..4).map(|c| (0..16).map(|i| (c * i) as f32).collect()).collect();
+        trees::reduce(&mut m, &vals, StepOp::Add, 0, 16).cost.latency_ns
+    });
+
+    println!("\n== ISA machine ==");
+    b.bench("isa/exp-program-fused-16", || {
+        let mut m = Machine::new(&hw, SramGang::In256Out16);
+        let xs: Vec<f32> = (0..16).map(|i| 0.05 * i as f32 - 0.4).collect();
+        m.write_row(0, 0, &xs);
+        let p = RowProgram::exp_program(0, 2000, 16, 6, 1);
+        m.run(&p, true).latency_ns
+    });
+
+    println!("\n== system-level ==");
+    b.bench("system/llama7b-layer-cost", || {
+        let mut rc = compair::config::RunConfig::new(
+            compair::config::ArchKind::CompAirOpt,
+            compair::config::ModelConfig::llama2_7b(),
+        );
+        rc.batch = 64;
+        rc.seq_len = 4096;
+        compair::arch::simulate(rc).latency_ns
+    });
+}

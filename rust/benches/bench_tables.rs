@@ -1,0 +1,46 @@
+//! End-to-end benchmarks: one timed entry per paper table/figure (how long
+//! the full regeneration of each experiment takes), plus the headline
+//! system simulations. Uses the in-crate bench harness (criterion is not
+//! vendored offline); honors COMPAIR_BENCH_FAST=1.
+//!
+//! Run: `cargo bench --bench bench_tables`
+
+use compair::arch::simulate;
+use compair::config::{ArchKind, ModelConfig, RunConfig};
+use compair::figures;
+use compair::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::from_env();
+    println!("== per-figure regeneration (end-to-end) ==");
+    for (name, f) in figures::registry() {
+        b.bench(&format!("figures/{name}"), f);
+    }
+
+    println!("\n== headline simulations ==");
+    b.bench("simulate/cent-7b-decode-b64-4k", || {
+        let mut rc = RunConfig::new(ArchKind::Cent, ModelConfig::llama2_7b());
+        rc.batch = 64;
+        rc.seq_len = 4096;
+        simulate(rc).latency_ns
+    });
+    b.bench("simulate/compair-7b-decode-b64-4k", || {
+        let mut rc = RunConfig::new(ArchKind::CompAirOpt, ModelConfig::llama2_7b());
+        rc.batch = 64;
+        rc.seq_len = 4096;
+        simulate(rc).latency_ns
+    });
+    b.bench("simulate/compair-175b-decode-b64-128k", || {
+        let mut rc = RunConfig::new(ArchKind::CompAirOpt, ModelConfig::gpt3_175b());
+        rc.batch = 64;
+        rc.seq_len = 128 * 1024;
+        simulate(rc).latency_ns
+    });
+    b.bench("simulate/compair-13b-prefill-2k", || {
+        let mut rc = RunConfig::new(ArchKind::CompAirOpt, ModelConfig::llama2_13b());
+        rc.phase = compair::config::Phase::Prefill;
+        rc.batch = 1;
+        rc.seq_len = 2048;
+        simulate(rc).latency_ns
+    });
+}

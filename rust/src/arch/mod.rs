@@ -1,0 +1,8 @@
+//! Architecture compositions: CompAir and the paper's baselines, plus the
+//! analytic collective/non-linear cost library they share.
+pub mod attacc;
+pub mod collective;
+pub mod system;
+
+pub use attacc::{pure_sram_requirements, AttAccConfig};
+pub use system::{simulate, OpReport, PhaseReport, System};

@@ -1,0 +1,537 @@
+//! System-level composition: lower the transformer op-graph onto an
+//! architecture variant (CENT / CENT+Curry / CompAir_Base / CompAir_Opt /
+//! SRAM-stack) and report per-token latency, throughput, and energy.
+//!
+//! Topology model (paper §3, §7.1): `devices` PIM devices on a CXL switch;
+//! a model replica is tensor-parallel over `tp` devices; `devices/tp`
+//! replicas form pipeline stages over the layers, so decode throughput at a
+//! full pipeline is `batch · pp / (n_layers · layer_latency)` while
+//! per-token latency is `n_layers · layer_latency` plus stage handoffs.
+
+use crate::config::{ArchKind, FcMapping, Phase, RunConfig};
+use crate::dram::{Channel, PimBank};
+use crate::energy::{EnergyBreakdown, EnergyModel};
+use crate::noc::exchange;
+use crate::sim::OpCost;
+use crate::sram::bank::{SramBank, WeightPolicy};
+use crate::workload::{layer_ops, LlmOp, OpClass};
+
+use super::collective as coll;
+
+/// Per-op cost entry in the report.
+#[derive(Debug, Clone)]
+pub struct OpReport {
+    pub name: String,
+    pub class: OpClass,
+    pub cost: OpCost,
+}
+
+/// Full phase report.
+#[derive(Debug, Clone)]
+pub struct PhaseReport {
+    /// Decode: latency per generated token (all layers). Prefill: latency of
+    /// the full prompt pass.
+    pub latency_ns: f64,
+    /// Decode: aggregate tokens/s over the whole fabric.
+    pub throughput_tok_s: f64,
+    /// Energy per generated token (decode) or per prompt (prefill).
+    pub energy: EnergyBreakdown,
+    pub ops: Vec<OpReport>,
+    /// Fraction of layer latency spent in non-linear ops.
+    pub nonlinear_frac: f64,
+    /// Fraction of layer latency spent in collectives.
+    pub collective_frac: f64,
+    /// Average FC bank utilization (Fig 18A).
+    pub bank_util: f64,
+    /// One layer's composed cost (per device; counts cover all tp devices).
+    pub layer_cost: OpCost,
+}
+
+/// The simulator facade.
+pub struct System {
+    pub rc: RunConfig,
+    pub em: EnergyModel,
+    bank: PimBank,
+    sram: SramBank,
+    channel: Channel,
+}
+
+impl System {
+    pub fn new(rc: RunConfig) -> Self {
+        let em = EnergyModel::new(&rc.hw.sram, rc.hw.hb.pj_per_bit);
+        let bank = PimBank::new(&rc.hw.dram);
+        let sram = SramBank::new(&rc.hw.sram, rc.sram_gang, &rc.hw.dram);
+        let channel = Channel::new(&rc.hw.dram);
+        Self { rc, em, bank, sram, channel }
+    }
+
+    fn banks_per_device(&self) -> usize {
+        self.rc.hw.dram.banks_per_device()
+    }
+
+    /// Cost of one FC op on this architecture (per device; single layer).
+    /// Returns (cost, active-bank fraction).
+    fn fc_cost(&self, name: &str, d_in: usize, d_out: usize, tokens: usize) -> (OpCost, f64) {
+        let tp = self.rc.tp;
+        let row_parallel = matches!(name, "o" | "down");
+        let (din_dev, dout_dev) = if row_parallel {
+            (d_in.div_ceil(tp), d_out)
+        } else {
+            (d_in, d_out.div_ceil(tp))
+        };
+        let banks = self.banks_per_device();
+        let channels = self.rc.hw.dram.channels_per_device;
+        let banks_pc = self.rc.hw.dram.banks_per_channel;
+
+        // Input distribution: the activation vector reaches every channel's
+        // global buffer (channels stream in parallel over the device bus).
+        let in_bytes = (tokens * din_dev * 2) as u64;
+        let bcast = self.channel.gb_broadcast(in_bytes).replicate(channels as u64);
+
+        let use_sram = self.rc.arch.has_sram();
+        let (compute, active_banks, reduce) = match self.rc.fc_mapping {
+            FcMapping::OutputSplit => {
+                let out_tile = dout_dev.div_ceil(banks).max(1);
+                let active = dout_dev.div_ceil(out_tile).min(banks);
+                let per_bank = if use_sram {
+                    self.sram.gemm(out_tile, din_dev, tokens, WeightPolicy::Reload)
+                } else {
+                    self.bank.gemv(out_tile, din_dev, tokens)
+                };
+                (per_bank.replicate(active as u64), active, OpCost::zero())
+            }
+            FcMapping::InputSplit => {
+                // input split across the banks of a channel, output split
+                // across channels
+                let out_tile = dout_dev.div_ceil(channels).max(1);
+                let in_tile = din_dev.div_ceil(banks_pc).max(1);
+                let active = banks;
+                let per_bank = if use_sram {
+                    self.sram.gemm(out_tile, in_tile, tokens, WeightPolicy::Reload)
+                } else {
+                    self.bank.gemv(out_tile, in_tile, tokens)
+                };
+                // partial sums reduced across the channel's banks
+                let elems = (tokens * out_tile) as u64;
+                let red = if self.rc.arch.has_curry() {
+                    coll::noc_reduce(elems, banks_pc as u64, &self.rc.hw.noc)
+                        .replicate(channels as u64)
+                } else {
+                    self.channel
+                        .gb_reduce(elems as usize, banks_pc)
+                        .replicate(channels as u64)
+                };
+                (per_bank.replicate(active as u64), active, red)
+            }
+        };
+        let util = active_banks as f64 / banks as f64;
+        (bcast.then(&compute).then(&reduce), util)
+    }
+
+    /// Attention score / value matmuls (always DRAM-PIM in the default
+    /// CompAir mapping — K/V are input-dependent, §8).
+    fn attn_cost(&self, qk: bool, batch: usize, heads: usize, rows_q: usize, seq: usize, d_head: usize) -> OpCost {
+        let tp = self.rc.tp;
+        let heads_dev = heads.div_ceil(tp).max(1);
+        let banks = self.banks_per_device();
+        let pairs = batch * heads_dev;
+        if pairs >= banks {
+            let per_bank_pairs = pairs.div_ceil(banks);
+            let per_pair = if qk {
+                self.bank.gemv(seq, d_head, rows_q)
+            } else {
+                self.bank.gemv(d_head, seq, rows_q)
+            };
+            per_pair.repeat(per_bank_pairs as u64).replicate(banks as u64)
+        } else {
+            let banks_per_pair = (banks / pairs).max(1);
+            if qk {
+                // output-split along seq: no reduction needed
+                let seq_tile = seq.div_ceil(banks_per_pair).max(1);
+                self.bank.gemv(seq_tile, d_head, rows_q).replicate(pairs as u64 * banks_per_pair as u64)
+            } else {
+                // input-split along seq: partial Dh sums reduced per pair
+                let in_tile = seq.div_ceil(banks_per_pair).max(1);
+                let gemv = self
+                    .bank
+                    .gemv(d_head, in_tile, rows_q)
+                    .replicate(pairs as u64 * banks_per_pair as u64);
+                let elems = (d_head * rows_q) as u64;
+                let red = if self.rc.arch.has_curry() {
+                    coll::noc_reduce(elems, banks_per_pair.min(16) as u64, &self.rc.hw.noc)
+                        .replicate(pairs as u64)
+                } else {
+                    self.channel
+                        .gb_reduce(elems as usize, banks_per_pair.min(16))
+                        .replicate(pairs as u64)
+                };
+                gemv.then(&red)
+            }
+        }
+    }
+
+    fn softmax_cost(&self, rows: usize, seq: usize) -> OpCost {
+        let tp = self.rc.tp;
+        let rows_dev = rows.div_ceil(tp).max(1);
+        let banks = self.banks_per_device() as u64;
+        let elems = rows_dev as u64 * seq as u64;
+        if self.rc.arch.has_curry() {
+            // distributed: exp bank-locally, per-row partial sums on the MAC
+            // lanes, scalar tree reduce + broadcast, divide in transit
+            let per_bank = elems.div_ceil(banks);
+            let exp = coll::noc_exp(per_bank, 8, &self.rc.hw.noc).replicate(banks);
+            let partial_ns = per_bank as f64 / 16.0 * self.rc.hw.dram.t_ccd_ns;
+            let partial = OpCost::latency(partial_ns);
+            let banks_pc = self.rc.hw.dram.banks_per_channel as u64;
+            let channels = self.rc.hw.dram.channels_per_device as u64;
+            let rows_pc = (rows_dev as u64).div_ceil(channels).max(1);
+            let red = coll::noc_reduce(rows_pc, banks_pc, &self.rc.hw.noc).replicate(channels);
+            let bc = coll::noc_broadcast(rows_pc, banks_pc, &self.rc.hw.noc).replicate(channels);
+            let div = coll::noc_scalar_stream(per_bank, &self.rc.hw.noc).replicate(banks);
+            exp.then(&partial).then(&red).then(&bc).then(&div)
+        } else {
+            // centralized NLU: scores cross the channel I/O both ways
+            let bytes = elems * 2;
+            coll::nlu_roundtrip(
+                bytes,
+                bytes,
+                5 * elems,
+                self.rc.hw.dram.channels_per_device as u64,
+                &self.rc.hw.dram,
+            )
+        }
+    }
+
+    fn rope_cost(&self, tokens: usize, heads: usize, d_head: usize) -> OpCost {
+        let tp = self.rc.tp;
+        let vecs_dev = (tokens * heads.div_ceil(tp)).max(1);
+        let banks = self.banks_per_device();
+        if self.rc.arch.has_curry() {
+            let per_bank_vecs = vecs_dev.div_ceil(banks).max(1);
+            let ex = exchange::exchange_cost(d_head, &self.rc.hw.noc)
+                .repeat(per_bank_vecs as u64)
+                .replicate(banks as u64);
+            // cos/sin EWMULs on the bank lanes: 2 muls + 1 add per element
+            let ew = coll::dram_ewmul((per_bank_vecs * d_head * 2) as u64, &self.rc.hw)
+                .replicate(banks as u64);
+            ex.then(&ew)
+        } else {
+            let bytes = (vecs_dev * d_head * 2) as u64;
+            coll::nlu_roundtrip(
+                bytes,
+                bytes,
+                3 * (vecs_dev * d_head) as u64,
+                self.rc.hw.dram.channels_per_device as u64,
+                &self.rc.hw.dram,
+            )
+        }
+    }
+
+    fn rmsnorm_cost(&self, tokens: usize, d_model: usize) -> OpCost {
+        let banks = self.banks_per_device() as u64;
+        let elems = (tokens * d_model) as u64;
+        if self.rc.arch.has_curry() {
+            let per_bank = elems.div_ceil(banks);
+            // square-accumulate on MAC lanes (x·x into the accumulator)
+            let sq = OpCost::latency(per_bank as f64 / 16.0 * self.rc.hw.dram.t_ccd_ns)
+                .replicate(banks);
+            let banks_pc = self.rc.hw.dram.banks_per_channel as u64;
+            let channels = self.rc.hw.dram.channels_per_device as u64;
+            let rows_pc = (tokens as u64).div_ceil(channels).max(1);
+            let red = coll::noc_reduce(rows_pc, banks_pc, &self.rc.hw.noc).replicate(channels);
+            let rsqrt = coll::noc_sqrt(rows_pc, 4, &self.rc.hw.noc).replicate(channels);
+            let bc = coll::noc_broadcast(rows_pc, banks_pc, &self.rc.hw.noc).replicate(channels);
+            let scale = coll::dram_ewmul(per_bank, &self.rc.hw).replicate(banks);
+            sq.then(&red).then(&rsqrt).then(&bc).then(&scale)
+        } else {
+            let bytes = elems * 2;
+            coll::nlu_roundtrip(
+                bytes,
+                bytes,
+                3 * elems,
+                self.rc.hw.dram.channels_per_device as u64,
+                &self.rc.hw.dram,
+            )
+        }
+    }
+
+    fn activation_cost(&self, tokens: usize, width: usize) -> OpCost {
+        let tp = self.rc.tp;
+        let elems = (tokens * width.div_ceil(tp)) as u64;
+        let banks = self.banks_per_device() as u64;
+        if self.rc.arch.has_curry() {
+            let per_bank = elems.div_ceil(banks);
+            // sigmoid: exp + 1/(1+e); gating: EWMUL on the lanes
+            let exp = coll::noc_exp(per_bank, 8, &self.rc.hw.noc).replicate(banks);
+            let post = coll::noc_scalar_stream(per_bank, &self.rc.hw.noc).replicate(banks);
+            let gate = coll::dram_ewmul(per_bank, &self.rc.hw).replicate(banks);
+            exp.then(&post).then(&gate)
+        } else {
+            let bytes = elems * 2;
+            coll::nlu_roundtrip(
+                bytes * 2, // x and gate move out
+                bytes,
+                4 * elems,
+                self.rc.hw.dram.channels_per_device as u64,
+                &self.rc.hw.dram,
+            )
+        }
+    }
+
+    /// Lower one op; counts are per tp-group (all devices of the replica).
+    pub fn op_cost(&self, op: &LlmOp) -> (OpCost, f64) {
+        let tp = self.rc.tp as u64;
+        let (c, util) = match op {
+            LlmOp::Fc { name, d_in, d_out, tokens } => self.fc_cost(name, *d_in, *d_out, *tokens),
+            LlmOp::AttnQK { batch, heads, rows_q, seq, d_head } => {
+                (self.attn_cost(true, *batch, *heads, *rows_q, *seq, *d_head), 1.0)
+            }
+            LlmOp::AttnSV { batch, heads, rows_q, seq, d_head } => {
+                (self.attn_cost(false, *batch, *heads, *rows_q, *seq, *d_head), 1.0)
+            }
+            LlmOp::Softmax { rows, seq } => (self.softmax_cost(*rows, *seq), 1.0),
+            LlmOp::Rope { tokens, heads, d_head } => (self.rope_cost(*tokens, *heads, *d_head), 1.0),
+            LlmOp::RmsNorm { tokens, d_model } => (self.rmsnorm_cost(*tokens, *d_model), 1.0),
+            LlmOp::Activation { tokens, width, .. } => {
+                (self.activation_cost(*tokens, *width), 1.0)
+            }
+            LlmOp::AllReduce { tokens, d_model } => (
+                coll::cxl_allreduce(
+                    (*tokens * *d_model * 2) as u64,
+                    self.rc.tp as u64,
+                    &self.rc.hw.cxl,
+                ),
+                1.0,
+            ),
+        };
+        // events happen on every device of the tp group
+        (c.replicate(tp), util)
+    }
+
+    /// Simulate the configured phase.
+    pub fn run(&self) -> PhaseReport {
+        let rc = &self.rc;
+        let ops = layer_ops(&rc.model, rc.phase, rc.batch, rc.seq_len);
+        let mut layer = OpCost::zero();
+        let mut reports = Vec::new();
+        let mut nl_ns = 0.0;
+        let mut coll_ns = 0.0;
+        let mut utils = Vec::new();
+        for op in &ops {
+            let (c, util) = self.op_cost(op);
+            match op.class() {
+                OpClass::NonLinear => nl_ns += c.latency_ns,
+                OpClass::Collective => coll_ns += c.latency_ns,
+                OpClass::Fc => utils.push(util),
+                _ => {}
+            }
+            reports.push(OpReport { name: op.name(), class: op.class(), cost: c });
+            layer = layer.then(&c);
+        }
+        let layers = rc.model.n_layers as u64;
+        let pp = (rc.devices / rc.tp).max(1) as u64;
+        // stage handoff between pipeline stages (activations move once per
+        // stage boundary)
+        let handoff = coll::cxl_p2p((rc.batch * rc.model.d_model * 2) as u64, &rc.hw.cxl);
+        let total = layer.repeat(layers).then(&handoff.repeat(pp.saturating_sub(1)));
+
+        let (latency_ns, tokens_per_pass) = match rc.phase {
+            Phase::Decode => (total.latency_ns, rc.batch as f64),
+            Phase::Prefill => (total.latency_ns, (rc.batch * rc.seq_len) as f64),
+        };
+        // pipeline-full throughput
+        let stage_ns = latency_ns / pp as f64;
+        let throughput = tokens_per_pass / (stage_ns / 1e9);
+
+        // energy per token: dynamic of all layers / tokens + static share
+        let dyn_e = self.em.dynamic(&total.counts);
+        let static_pj =
+            rc.devices as f64 * self.em.pim_device_static_w * (latency_ns / pp as f64)
+                / tokens_per_pass;
+        let mut energy = dyn_e.scale(1.0 / tokens_per_pass);
+        energy.static_pj = static_pj;
+
+        let layer_ns = layer.latency_ns.max(1e-9);
+        PhaseReport {
+            latency_ns,
+            throughput_tok_s: throughput,
+            energy,
+            ops: reports,
+            nonlinear_frac: nl_ns / layer_ns,
+            collective_frac: coll_ns / layer_ns,
+            bank_util: if utils.is_empty() {
+                0.0
+            } else {
+                utils.iter().sum::<f64>() / utils.len() as f64
+            },
+            layer_cost: layer,
+        }
+    }
+}
+
+/// Convenience: build + run.
+pub fn simulate(rc: RunConfig) -> PhaseReport {
+    assert_ne!(rc.arch, ArchKind::AttAcc, "use arch::attacc::simulate for AttAcc");
+    System::new(rc).run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ArchKind, ModelConfig, Phase, RunConfig};
+
+    fn rc(arch: ArchKind) -> RunConfig {
+        RunConfig::new(arch, ModelConfig::llama2_7b())
+    }
+
+    #[test]
+    fn compair_beats_cent_at_large_batch_decode() {
+        // headline: 1.95-6.28x decode improvement
+        let mut base = rc(ArchKind::Cent);
+        base.batch = 64;
+        base.seq_len = 4096;
+        let mut ca = rc(ArchKind::CompAirOpt);
+        ca.batch = 64;
+        ca.seq_len = 4096;
+        let t_cent = simulate(base).throughput_tok_s;
+        let t_ca = simulate(ca).throughput_tok_s;
+        let speedup = t_ca / t_cent;
+        assert!(
+            (1.5..12.0).contains(&speedup),
+            "decode speedup out of plausible band: {speedup:.2}"
+        );
+    }
+
+    #[test]
+    fn batch_1_speedup_is_marginal() {
+        let mut base = rc(ArchKind::Cent);
+        base.batch = 1;
+        let mut ca = rc(ArchKind::CompAirOpt);
+        ca.batch = 1;
+        let s = simulate(ca).throughput_tok_s / simulate(base).throughput_tok_s;
+        assert!(s < 2.0, "batch=1 speedup should be small, got {s:.2}");
+    }
+
+    #[test]
+    fn prefill_speedup_in_paper_band() {
+        // Fig 17: 3.29-5.46x (Base) to 4.1-7.89x (Opt) across models
+        for m in [ModelConfig::llama2_7b(), ModelConfig::llama2_13b()] {
+            let mut base = RunConfig::new(ArchKind::Cent, m.clone());
+            base.phase = Phase::Prefill;
+            base.batch = 1;
+            base.seq_len = 512;
+            let mut ca = base.clone();
+            ca.arch = ArchKind::CompAirOpt;
+            ca.hw = crate::config::HwConfig::paper_opt();
+            let s = simulate(base).latency_ns / simulate(ca).latency_ns;
+            assert!((2.0..10.0).contains(&s), "{}: prefill speedup {s:.2}", m.name);
+        }
+    }
+
+    #[test]
+    fn opt_decoder_beats_base() {
+        let mut a = rc(ArchKind::CompAirBase);
+        a.batch = 32;
+        let mut b = rc(ArchKind::CompAirOpt);
+        b.batch = 32;
+        let ta = simulate(a).latency_ns;
+        let tb = simulate(b).latency_ns;
+        assert!(tb < ta, "decoupled decoder must help: {tb} vs {ta}");
+    }
+
+    #[test]
+    fn nonlinear_fraction_grows_with_context_on_cent() {
+        // Fig 5C: ~20% at 4K
+        let frac = |seq: usize| {
+            let mut c = rc(ArchKind::Cent);
+            c.batch = 16;
+            c.seq_len = seq;
+            simulate(c).nonlinear_frac
+        };
+        let f_short = frac(512);
+        let f_long = frac(32768);
+        assert!(f_long > f_short, "nl fraction must grow: {f_short} -> {f_long}");
+        let f_4k = frac(4096);
+        assert!((0.03..0.6).contains(&f_4k), "4K nl fraction {f_4k}");
+    }
+
+    #[test]
+    fn curry_alu_cuts_nonlinear_latency() {
+        // Fig 22: ~30% of total non-linear latency compressed
+        let mut cent = rc(ArchKind::Cent);
+        cent.batch = 32;
+        cent.seq_len = 16384;
+        let mut curry = rc(ArchKind::CentCurry);
+        curry.batch = 32;
+        curry.seq_len = 16384;
+        let nl = |r: &PhaseReport| -> f64 {
+            r.ops
+                .iter()
+                .filter(|o| o.class == OpClass::NonLinear)
+                .map(|o| o.cost.latency_ns)
+                .sum()
+        };
+        let a = simulate(cent);
+        let b = simulate(curry);
+        assert!(nl(&b) < 0.8 * nl(&a), "curry nl {} vs cent nl {}", nl(&b), nl(&a));
+    }
+
+    #[test]
+    fn tp_reduces_latency_with_diminishing_returns() {
+        // Fig 18: latency drops with TP then converges
+        let lat = |tp: usize| {
+            let mut c = RunConfig::new(ArchKind::CompAirOpt, ModelConfig::llama2_13b());
+            c.batch = 64;
+            c.seq_len = 4096;
+            c.tp = tp;
+            c.devices = 32;
+            simulate(c).latency_ns
+        };
+        let l1 = lat(1);
+        let l8 = lat(8);
+        let l32 = lat(32);
+        assert!(l8 < l1);
+        let gain_1_8 = l1 / l8;
+        let gain_8_32 = l8 / l32;
+        assert!(gain_1_8 > gain_8_32, "diminishing returns: {gain_1_8} then {gain_8_32}");
+    }
+
+    #[test]
+    fn bank_utilization_drops_with_tp() {
+        let util = |tp: usize| {
+            let mut c = RunConfig::new(ArchKind::Cent, ModelConfig::llama2_13b());
+            c.tp = tp;
+            simulate(c).bank_util
+        };
+        assert!(util(32) <= util(1));
+    }
+
+    #[test]
+    fn energy_sram_overhead_is_bounded() {
+        // Fig 15B: CompAir increases energy vs pure DRAM-PIM due to
+        // cross-die traffic, but within a modest factor.
+        let mut cent = rc(ArchKind::Cent);
+        cent.batch = 64;
+        let mut ca = rc(ArchKind::CompAirOpt);
+        ca.batch = 64;
+        let e_cent = simulate(cent).energy.total_pj();
+        let e_ca = simulate(ca).energy.total_pj();
+        let ratio = e_ca / e_cent;
+        assert!((0.3..3.0).contains(&ratio), "energy ratio {ratio:.2}");
+    }
+
+    #[test]
+    fn throughput_scales_with_devices() {
+        let thru = |devices: usize| {
+            let mut c = RunConfig::new(ArchKind::CompAirOpt, ModelConfig::gpt3_175b());
+            c.batch = 8;
+            c.seq_len = 1024;
+            c.tp = 8;
+            c.devices = devices;
+            simulate(c).throughput_tok_s
+        };
+        let t32 = thru(32);
+        let t96 = thru(96);
+        assert!((2.5..3.5).contains(&(t96 / t32)), "96/32 device scaling {}", t96 / t32);
+    }
+}

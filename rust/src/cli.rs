@@ -1,0 +1,124 @@
+//! Hand-rolled CLI argument parsing (no clap is vendored offline).
+//!
+//! Grammar: `compair <command> [--flag value]... [positional]...`
+
+use std::collections::BTreeMap;
+
+/// Flags that never take a value (resolves the `--all fig15` ambiguity).
+const KNOWN_SWITCHES: &[&str] = &["all", "verbose", "quiet"];
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from raw args (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        out.command = it.next().unwrap_or_default();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err("bad flag '--'".into());
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if KNOWN_SWITCHES.contains(&name) {
+                    out.switches.push(name.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.flags.insert(name.to_string(), v);
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn flag_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn flag_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+pub const USAGE: &str = "\
+compair — CompAir hybrid-PIM LLM inference simulator + coordinator
+
+USAGE:
+  compair figures [<id>...] [--all]       regenerate paper tables/figures
+  compair simulate [--arch A] [--model M] [--phase decode|prefill]
+                   [--batch N] [--seqlen N] [--tp N] [--devices N]
+                   [--config file.toml]   run one simulation, print report
+  compair serve    [--arch A] [--model M] [--rate R] [--requests N]
+                   [--prompt N] [--gen N] continuous-batching serving sim
+  compair isa-demo [--len N] [--rounds N] run the hierarchical-ISA exp demo
+  compair config show                     print the Table-3 hardware config
+  compair list                            list available figures/models/archs
+
+ARCHS:  cent | cent-curry | compair-base | compair-opt
+MODELS: llama2-7b | llama2-13b | llama2-70b | qwen-72b | gpt3-175b | tiny
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_command_flags_switches() {
+        let a = parse("simulate --batch 64 --model llama2-7b --all fig15");
+        assert_eq!(a.command, "simulate");
+        assert_eq!(a.flag("batch"), Some("64"));
+        assert_eq!(a.flag("model"), Some("llama2-7b"));
+        assert!(a.has("all"));
+        assert_eq!(a.positional, vec!["fig15"]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("simulate --batch=8");
+        assert_eq!(a.flag_usize("batch", 1).unwrap(), 8);
+    }
+
+    #[test]
+    fn typed_flag_errors() {
+        let a = parse("simulate --batch nope");
+        assert!(a.flag_usize("batch", 1).is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("simulate");
+        assert_eq!(a.flag_usize("batch", 7).unwrap(), 7);
+        assert_eq!(a.flag_f64("rate", 1.5).unwrap(), 1.5);
+    }
+}

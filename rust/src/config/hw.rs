@@ -1,0 +1,416 @@
+//! Hardware configuration (paper Table 3) for all simulated components.
+//!
+//! All timing is in nanoseconds, bandwidth in GB/s (10^9 bytes/s), energy
+//! constants live in `energy::model`. Values and their provenance:
+//!
+//! * DRAM-PIM: SK-Hynix AiM-style GDDR6 bank (32 MB, BF16, 16 MACs/bank),
+//!   timings from Table 3 (tRCDWR=14, tRCDRD=18, tRAS=27, tCL=25, tRP=16 ns).
+//! * SRAM-PIM: the fabricated 28nm macro of [Guo+, ISSCC'23]: 64 kb array,
+//!   128-input × 8-output BF16 MAC, access 6.8–14.1 ns over 0.9–0.6 V,
+//!   14.4–31.6 TOPS/W.
+//! * Hybrid bonding: 256 bonds/bank at 6.4 Gbps/bond, 0.05–0.88 pJ/b.
+//! * CompAir-NoC: 4×16 2D mesh per channel (4 routers per bank × 16 banks),
+//!   72-bit flits, 2 Curry ALUs per router, DOR routing, SWIFT-style router.
+//! * CXL fabric: 32 devices/switch, 29.44 GB/s collective, 53.5 GB/s p2p.
+
+/// Column-decoder organization of the DRAM-PIM bank (paper §3.4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ColumnDecoder {
+    /// Baseline AiM/Newton organization: a single 32:1 mux. Each read-out
+    /// delivers row_bytes/32 = 32 B regardless of the consumer.
+    Coupled32to1,
+    /// CompAir's decoupled organization: an 8:1 decoder feeds the
+    /// hybrid-bonded SRAM-PIM (128 B/access) while a 4:1 decoder serves the
+    /// bank's own MAC path (256 B/access).
+    Decoupled8and4,
+}
+
+impl ColumnDecoder {
+    /// Bytes delivered per column access toward the SRAM-PIM (via HB).
+    pub fn sram_access_bytes(&self, row_bytes: usize) -> usize {
+        match self {
+            ColumnDecoder::Coupled32to1 => row_bytes / 32,
+            ColumnDecoder::Decoupled8and4 => row_bytes / 8,
+        }
+    }
+
+    /// Bytes delivered per column access toward the bank's own MAC units.
+    pub fn mac_access_bytes(&self, row_bytes: usize) -> usize {
+        match self {
+            ColumnDecoder::Coupled32to1 => row_bytes / 32,
+            ColumnDecoder::Decoupled8and4 => row_bytes / 4,
+        }
+    }
+}
+
+/// GDDR6-PIM timing and organization (one bank).
+#[derive(Debug, Clone)]
+pub struct DramConfig {
+    pub t_rcdwr_ns: f64,
+    pub t_rcdrd_ns: f64,
+    pub t_ras_ns: f64,
+    pub t_cl_ns: f64,
+    pub t_rp_ns: f64,
+    /// Column-to-column (MAC issue) interval; AiM issues one MAC command per
+    /// column access at the GDDR6 core clock (1 GHz effective → 1 ns).
+    pub t_ccd_ns: f64,
+    /// DRAM array row width in bytes (1 KB per the paper's §3.4 discussion).
+    pub row_bytes: usize,
+    /// Per-bank capacity in MB (32 MB, Table 3).
+    pub bank_mb: usize,
+    /// BF16 MAC lanes per bank (16, Table 3).
+    pub macs_per_bank: usize,
+    pub banks_per_channel: usize,
+    pub channels_per_device: usize,
+    /// Aggregate internal bandwidth of one channel (AiM: 512 GB/s).
+    pub internal_gbs_per_channel: f64,
+    /// External I/O bandwidth of one channel (AiM: 32 GB/s).
+    pub external_gbs_per_channel: f64,
+    pub column_decoder: ColumnDecoder,
+    /// Global-buffer bandwidth for inter-bank transfers within a channel
+    /// (serializing resource in baseline DRAM-PIM; 32 GB/s).
+    pub global_buffer_gbs: f64,
+}
+
+impl Default for DramConfig {
+    fn default() -> Self {
+        Self {
+            t_rcdwr_ns: 14.0,
+            t_rcdrd_ns: 18.0,
+            t_ras_ns: 27.0,
+            t_cl_ns: 25.0,
+            t_rp_ns: 16.0,
+            t_ccd_ns: 1.0,
+            row_bytes: 1024,
+            bank_mb: 32,
+            macs_per_bank: 16,
+            banks_per_channel: 16,
+            channels_per_device: 32,
+            internal_gbs_per_channel: 512.0,
+            external_gbs_per_channel: 32.0,
+            column_decoder: ColumnDecoder::Coupled32to1,
+            global_buffer_gbs: 32.0,
+        }
+    }
+}
+
+impl DramConfig {
+    /// Per-bank share of the channel's internal bandwidth (GB/s).
+    pub fn per_bank_gbs(&self) -> f64 {
+        self.internal_gbs_per_channel / self.banks_per_channel as f64
+    }
+
+    /// Total banks in one device.
+    pub fn banks_per_device(&self) -> usize {
+        self.banks_per_channel * self.channels_per_device
+    }
+
+    /// Per-device DRAM capacity in bytes.
+    pub fn device_capacity_bytes(&self) -> u64 {
+        (self.bank_mb as u64) << 20 << 0 * self.banks_per_device() as u64
+    }
+}
+
+/// SRAM-PIM operating voltage point; scales latency and efficiency linearly
+/// between the published 0.6 V and 0.9 V corners.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Voltage(pub f64);
+
+impl Voltage {
+    pub const MIN: f64 = 0.6;
+    pub const MAX: f64 = 0.9;
+
+    pub fn clamp(self) -> Voltage {
+        Voltage(self.0.clamp(Self::MIN, Self::MAX))
+    }
+
+    /// Normalized position in [0,1]: 0 → 0.6 V (slow/efficient), 1 → 0.9 V.
+    pub fn t(self) -> f64 {
+        (self.clamp().0 - Self::MIN) / (Self::MAX - Self::MIN)
+    }
+}
+
+/// SRAM-PIM macro specification (fabricated chip [12]).
+#[derive(Debug, Clone)]
+pub struct SramConfig {
+    /// Inputs per macro MAC array (128).
+    pub macro_inputs: usize,
+    /// Outputs per macro (8).
+    pub macro_outputs: usize,
+    /// Macros stacked under each DRAM bank (4).
+    pub macros_per_bank: usize,
+    /// Array size in kilobits (64 kb).
+    pub array_kb: usize,
+    /// Access latency at the fast corner (0.9 V): 6.8 ns.
+    pub t_access_fast_ns: f64,
+    /// Access latency at the slow corner (0.6 V): 14.1 ns.
+    pub t_access_slow_ns: f64,
+    /// Efficiency at 0.9 V: 14.4 TFLOPS/W.
+    pub tflops_w_fast: f64,
+    /// Efficiency at 0.6 V: 31.6 TFLOPS/W.
+    pub tflops_w_slow: f64,
+    /// Weight-write latency per macro row (ns); one 128-input row of BF16
+    /// weights per write port cycle.
+    pub t_write_row_ns: f64,
+    pub voltage: Voltage,
+}
+
+impl Default for SramConfig {
+    fn default() -> Self {
+        Self {
+            macro_inputs: 128,
+            macro_outputs: 8,
+            macros_per_bank: 4,
+            array_kb: 64,
+            t_access_fast_ns: 6.8,
+            t_access_slow_ns: 14.1,
+            tflops_w_fast: 14.4,
+            tflops_w_slow: 31.6,
+            t_write_row_ns: 2.0,
+            voltage: Voltage(0.9),
+        }
+    }
+}
+
+impl SramConfig {
+    /// Access latency at the configured voltage (linear interpolation between
+    /// published corners).
+    pub fn t_access_ns(&self) -> f64 {
+        let t = self.voltage.t();
+        self.t_access_slow_ns + t * (self.t_access_fast_ns - self.t_access_slow_ns)
+    }
+
+    /// Efficiency (TFLOPS/W) at the configured voltage.
+    pub fn tflops_w(&self) -> f64 {
+        let t = self.voltage.t();
+        self.tflops_w_slow + t * (self.tflops_w_fast - self.tflops_w_slow)
+    }
+
+    /// Energy per MAC operation (two flops) in pJ at the configured voltage.
+    pub fn pj_per_mac(&self) -> f64 {
+        2.0 / self.tflops_w()
+    }
+
+    /// MACs performed by one macro access (inputs × outputs).
+    pub fn macs_per_access(&self) -> usize {
+        self.macro_inputs * self.macro_outputs
+    }
+
+    /// Weight bytes held by one macro (BF16).
+    pub fn macro_weight_bytes(&self) -> usize {
+        self.macro_inputs * self.macro_outputs * 2
+    }
+}
+
+/// How the bank's 4 macros are ganged into one logical matrix unit (§3.3).
+/// `(512, 8)` extends the input dimension; `(256, 16)` balances both.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SramGang {
+    /// 4 macros along the input dim: logical 512-in × 8-out.
+    In512Out8,
+    /// 2×2: logical 256-in × 16-out.
+    In256Out16,
+}
+
+impl SramGang {
+    pub fn shape(&self, m: &SramConfig) -> (usize, usize) {
+        match self {
+            SramGang::In512Out8 => (m.macro_inputs * 4, m.macro_outputs),
+            SramGang::In256Out16 => (m.macro_inputs * 2, m.macro_outputs * 2),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            SramGang::In512Out8 => "(512,8)",
+            SramGang::In256Out16 => "(256,16)",
+        }
+    }
+}
+
+/// Hybrid-bonding cross-die link (per bank).
+#[derive(Debug, Clone)]
+pub struct HbConfig {
+    pub bonds_per_bank: usize,
+    pub gbps_per_bond: f64,
+    pub pj_per_bit: f64,
+}
+
+impl Default for HbConfig {
+    fn default() -> Self {
+        Self { bonds_per_bank: 256, gbps_per_bond: 6.4, pj_per_bit: 0.3 }
+    }
+}
+
+impl HbConfig {
+    /// Aggregate link bandwidth per bank in GB/s.
+    pub fn gbs_per_bank(&self) -> f64 {
+        self.bonds_per_bank as f64 * self.gbps_per_bond / 8.0
+    }
+}
+
+/// CompAir-NoC configuration (per channel).
+#[derive(Debug, Clone)]
+pub struct NocConfig {
+    /// Mesh dimensions: 4 columns × 16 rows (4 routers per bank).
+    pub mesh_cols: usize,
+    pub mesh_rows: usize,
+    pub flit_bits: usize,
+    /// Router cycle time (1 GHz logic-die clock).
+    pub cycle_ns: f64,
+    /// Curry ALUs per router (2, Table 3).
+    pub curry_alus_per_router: usize,
+    /// Router traversal latency in cycles with SWIFT lookahead+bypass hit.
+    pub bypass_cycles: u64,
+    /// Router traversal latency in cycles on a bypass miss (arbitration).
+    pub pipeline_cycles: u64,
+    /// Input-queue depth per port in flits.
+    pub queue_depth: usize,
+    /// Divider latency in cycles (iterative unit inside the Curry ALU).
+    pub div_cycles: u64,
+}
+
+impl Default for NocConfig {
+    fn default() -> Self {
+        Self {
+            mesh_cols: 4,
+            mesh_rows: 16,
+            flit_bits: 72,
+            cycle_ns: 1.0,
+            curry_alus_per_router: 2,
+            bypass_cycles: 1,
+            pipeline_cycles: 2,
+            queue_depth: 4,
+            div_cycles: 4,
+        }
+    }
+}
+
+impl NocConfig {
+    pub fn n_routers(&self) -> usize {
+        self.mesh_cols * self.mesh_rows
+    }
+}
+
+/// CXL fabric across devices.
+#[derive(Debug, Clone)]
+pub struct CxlConfig {
+    pub devices: usize,
+    /// Collective (broadcast/reduce) bandwidth, GB/s.
+    pub collective_gbs: f64,
+    /// Point-to-point bandwidth, GB/s.
+    pub p2p_gbs: f64,
+    /// One-way latency per hop through the switch (ns).
+    pub hop_latency_ns: f64,
+}
+
+impl Default for CxlConfig {
+    fn default() -> Self {
+        Self { devices: 32, collective_gbs: 29.44, p2p_gbs: 53.5, hop_latency_ns: 250.0 }
+    }
+}
+
+/// Full hardware configuration (Table 3).
+#[derive(Debug, Clone, Default)]
+pub struct HwConfig {
+    pub dram: DramConfig,
+    pub sram: SramConfig,
+    pub hb: HbConfig,
+    pub noc: NocConfig,
+    pub cxl: CxlConfig,
+    pub sram_gang: SramGangDefault,
+}
+
+/// Wrapper to give `SramGang` a `Default` without implementing it on the
+/// enum (the best gang is workload-dependent; (256,16) wins most, §3.3).
+#[derive(Debug, Clone, Copy)]
+pub struct SramGangDefault(pub SramGang);
+
+impl Default for SramGangDefault {
+    fn default() -> Self {
+        SramGangDefault(SramGang::In256Out16)
+    }
+}
+
+impl HwConfig {
+    /// The paper's evaluated configuration (Table 3) verbatim.
+    pub fn paper() -> Self {
+        Self::default()
+    }
+
+    /// CompAir with the optimized (decoupled) column decoder — "CompAir_Opt".
+    pub fn paper_opt() -> Self {
+        let mut hw = Self::default();
+        hw.dram.column_decoder = ColumnDecoder::Decoupled8and4;
+        hw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_defaults() {
+        let hw = HwConfig::paper();
+        assert_eq!(hw.dram.t_rcdwr_ns, 14.0);
+        assert_eq!(hw.dram.t_rcdrd_ns, 18.0);
+        assert_eq!(hw.dram.t_ras_ns, 27.0);
+        assert_eq!(hw.dram.t_cl_ns, 25.0);
+        assert_eq!(hw.dram.t_rp_ns, 16.0);
+        assert_eq!(hw.dram.banks_per_channel, 16);
+        assert_eq!(hw.dram.channels_per_device, 32);
+        assert_eq!(hw.noc.n_routers(), 64);
+        assert_eq!(hw.cxl.devices, 32);
+    }
+
+    #[test]
+    fn per_bank_bandwidth_is_32gbs() {
+        let d = DramConfig::default();
+        assert!((d.per_bank_gbs() - 32.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn column_decoder_access_widths() {
+        let row = 1024;
+        assert_eq!(ColumnDecoder::Coupled32to1.sram_access_bytes(row), 32);
+        assert_eq!(ColumnDecoder::Coupled32to1.mac_access_bytes(row), 32);
+        assert_eq!(ColumnDecoder::Decoupled8and4.sram_access_bytes(row), 128);
+        assert_eq!(ColumnDecoder::Decoupled8and4.mac_access_bytes(row), 256);
+    }
+
+    #[test]
+    fn sram_voltage_interpolation() {
+        let mut s = SramConfig::default();
+        s.voltage = Voltage(0.9);
+        assert!((s.t_access_ns() - 6.8).abs() < 1e-9);
+        assert!((s.tflops_w() - 14.4).abs() < 1e-9);
+        s.voltage = Voltage(0.6);
+        assert!((s.t_access_ns() - 14.1).abs() < 1e-9);
+        assert!((s.tflops_w() - 31.6).abs() < 1e-9);
+        s.voltage = Voltage(0.75);
+        assert!(s.t_access_ns() > 6.8 && s.t_access_ns() < 14.1);
+    }
+
+    #[test]
+    fn sram_gang_shapes() {
+        let m = SramConfig::default();
+        assert_eq!(SramGang::In512Out8.shape(&m), (512, 8));
+        assert_eq!(SramGang::In256Out16.shape(&m), (256, 16));
+    }
+
+    #[test]
+    fn hb_bandwidth_meets_dram_per_bank() {
+        // §3.3: HB (256 bonds × 6.4 Gbps = 204.8 GB/s) fully covers the
+        // 32 GB/s per-bank DRAM read-out.
+        let hb = HbConfig::default();
+        assert!((hb.gbs_per_bank() - 204.8).abs() < 1e-9);
+        assert!(hb.gbs_per_bank() > DramConfig::default().per_bank_gbs());
+    }
+
+    #[test]
+    fn voltage_clamps() {
+        assert_eq!(Voltage(1.5).clamp().0, 0.9);
+        assert_eq!(Voltage(0.1).clamp().0, 0.6);
+    }
+}

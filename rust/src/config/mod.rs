@@ -1,0 +1,10 @@
+//! Configuration: hardware (Table 3), LLM model zoo, run configs, and the
+//! TOML-subset parser used by the launcher.
+pub mod hw;
+pub mod model;
+pub mod run;
+pub mod toml;
+
+pub use hw::{ColumnDecoder, CxlConfig, DramConfig, HbConfig, HwConfig, NocConfig, SramConfig, SramGang, Voltage};
+pub use model::ModelConfig;
+pub use run::{ArchKind, FcMapping, Phase, RunConfig};

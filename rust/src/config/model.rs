@@ -1,0 +1,206 @@
+//! LLM model zoo: the architectures the paper evaluates, plus a tiny config
+//! used for end-to-end numeric validation against the JAX/Pallas artifacts.
+
+/// Transformer architecture description (decoder-only, Llama-style).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: &'static str,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    /// KV heads; < n_heads ⇒ grouped-query attention (GQA).
+    pub n_kv_heads: usize,
+    pub d_ffn: usize,
+    pub vocab: usize,
+    /// Uses gated FFN (SiLU gate, Llama-style) vs plain GELU MLP (GPT-style).
+    pub gated_ffn: bool,
+}
+
+impl ModelConfig {
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// GQA group size (query heads per KV head).
+    pub fn gqa_group(&self) -> usize {
+        self.n_heads / self.n_kv_heads
+    }
+
+    pub fn is_gqa(&self) -> bool {
+        self.n_kv_heads < self.n_heads
+    }
+
+    /// Weight parameter count of one transformer block's FC layers.
+    pub fn block_fc_params(&self) -> u64 {
+        let d = self.d_model as u64;
+        let kv = (self.n_kv_heads * self.d_head()) as u64;
+        let f = self.d_ffn as u64;
+        // Q + K + V + O
+        let attn = d * d + 2 * d * kv + d * d;
+        // gated: up + gate + down; plain: up + down
+        let ffn = if self.gated_ffn { 3 * d * f } else { 2 * d * f };
+        attn + ffn
+    }
+
+    /// Total FC parameter count across all blocks (embeddings excluded: they
+    /// are lookup, not PIM matrix work).
+    pub fn total_fc_params(&self) -> u64 {
+        self.block_fc_params() * self.n_layers as u64
+    }
+
+    /// Bytes of one token's KV-cache entry across all layers (BF16).
+    pub fn kv_bytes_per_token(&self) -> u64 {
+        (2 * self.n_kv_heads * self.d_head() * self.n_layers * 2) as u64
+    }
+
+    // ---- model zoo (paper §6) ----
+
+    pub fn llama2_7b() -> Self {
+        Self {
+            name: "llama2-7b",
+            n_layers: 32,
+            d_model: 4096,
+            n_heads: 32,
+            n_kv_heads: 32,
+            d_ffn: 11008,
+            vocab: 32000,
+            gated_ffn: true,
+        }
+    }
+
+    pub fn llama2_13b() -> Self {
+        Self {
+            name: "llama2-13b",
+            n_layers: 40,
+            d_model: 5120,
+            n_heads: 40,
+            n_kv_heads: 40,
+            d_ffn: 13824,
+            vocab: 32000,
+            gated_ffn: true,
+        }
+    }
+
+    pub fn llama2_70b() -> Self {
+        Self {
+            name: "llama2-70b",
+            n_layers: 80,
+            d_model: 8192,
+            n_heads: 64,
+            n_kv_heads: 8,
+            d_ffn: 28672,
+            vocab: 32000,
+            gated_ffn: true,
+        }
+    }
+
+    pub fn qwen_72b() -> Self {
+        Self {
+            name: "qwen-72b",
+            n_layers: 80,
+            d_model: 8192,
+            n_heads: 64,
+            n_kv_heads: 64,
+            d_ffn: 24576,
+            vocab: 151936,
+            gated_ffn: true,
+        }
+    }
+
+    pub fn gpt3_175b() -> Self {
+        Self {
+            name: "gpt3-175b",
+            n_layers: 96,
+            d_model: 12288,
+            n_heads: 96,
+            n_kv_heads: 96,
+            d_ffn: 49152,
+            vocab: 50257,
+            gated_ffn: false,
+        }
+    }
+
+    /// Tiny Llama-style config for end-to-end numeric validation against the
+    /// AOT-compiled JAX model (must match python/compile/model.py TINY).
+    pub fn tiny() -> Self {
+        Self {
+            name: "tiny",
+            n_layers: 2,
+            d_model: 64,
+            n_heads: 4,
+            n_kv_heads: 4,
+            d_ffn: 128,
+            vocab: 256,
+            gated_ffn: true,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "llama2-7b" => Some(Self::llama2_7b()),
+            "llama2-13b" => Some(Self::llama2_13b()),
+            "llama2-70b" => Some(Self::llama2_70b()),
+            "qwen-72b" => Some(Self::qwen_72b()),
+            "gpt3-175b" => Some(Self::gpt3_175b()),
+            "tiny" => Some(Self::tiny()),
+            _ => None,
+        }
+    }
+
+    pub fn zoo() -> Vec<Self> {
+        vec![
+            Self::llama2_7b(),
+            Self::llama2_13b(),
+            Self::llama2_70b(),
+            Self::qwen_72b(),
+            Self::gpt3_175b(),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_param_counts_in_expected_range() {
+        // FC params are the bulk; checks the configs are the real models.
+        let b7 = ModelConfig::llama2_7b().total_fc_params() as f64 / 1e9;
+        assert!((5.5..7.5).contains(&b7), "7B fc params = {b7}B");
+        let b13 = ModelConfig::llama2_13b().total_fc_params() as f64 / 1e9;
+        assert!((11.0..13.5).contains(&b13), "13B fc params = {b13}B");
+        let b70 = ModelConfig::llama2_70b().total_fc_params() as f64 / 1e9;
+        assert!((60.0..70.0).contains(&b70), "70B fc params = {b70}B");
+        let b175 = ModelConfig::gpt3_175b().total_fc_params() as f64 / 1e9;
+        assert!((165.0..180.0).contains(&b175), "175B fc params = {b175}B");
+    }
+
+    #[test]
+    fn gqa_detection() {
+        assert!(!ModelConfig::llama2_7b().is_gqa());
+        assert!(ModelConfig::llama2_70b().is_gqa());
+        assert_eq!(ModelConfig::llama2_70b().gqa_group(), 8);
+    }
+
+    #[test]
+    fn head_dims() {
+        assert_eq!(ModelConfig::llama2_7b().d_head(), 128);
+        assert_eq!(ModelConfig::gpt3_175b().d_head(), 128);
+    }
+
+    #[test]
+    fn kv_bytes_per_token() {
+        // 7B: 2 (K,V) * 32 heads * 128 dim * 32 layers * 2 B = 512 KiB/token
+        assert_eq!(ModelConfig::llama2_7b().kv_bytes_per_token(), 524_288);
+        // 70B GQA: 8 kv heads → 8x smaller per layer but 80 layers
+        assert_eq!(ModelConfig::llama2_70b().kv_bytes_per_token(), 327_680);
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for m in ModelConfig::zoo() {
+            assert_eq!(ModelConfig::by_name(m.name).unwrap(), m);
+        }
+        assert!(ModelConfig::by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,271 @@
+//! Run configuration: which architecture variant, model, and workload shape a
+//! simulation executes. Constructed from CLI flags or a TOML-subset file.
+
+use super::hw::{HwConfig, SramGang, Voltage};
+use super::model::ModelConfig;
+use super::toml::Doc;
+
+/// Architecture variants evaluated in the paper (§7.1 ablation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArchKind {
+    /// CENT: pure DRAM-PIM, centralized NLU in the CXL controller.
+    Cent,
+    /// CENT + localized Curry ALUs (ablation step i).
+    CentCurry,
+    /// CompAir with baseline 32:1 column decoder (ablation step ii).
+    CompAirBase,
+    /// Full CompAir with decoupled column decoder (ablation step iii).
+    CompAirOpt,
+    /// SRAM-PIM stacking DRAM (motivation baseline, Fig 4).
+    SramStack,
+    /// AttAcc: A100 GPUs + HBM-PIM (hybrid baseline, Fig 15).
+    AttAcc,
+}
+
+impl ArchKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ArchKind::Cent => "CENT",
+            ArchKind::CentCurry => "CENT_Curry_ALU",
+            ArchKind::CompAirBase => "CompAir_Base",
+            ArchKind::CompAirOpt => "CompAir_Opt",
+            ArchKind::SramStack => "SRAM_stack",
+            ArchKind::AttAcc => "AttAcc",
+        }
+    }
+
+    pub fn by_name(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "cent" => Some(ArchKind::Cent),
+            "cent-curry" | "cent_curry_alu" => Some(ArchKind::CentCurry),
+            "compair-base" | "compair_base" => Some(ArchKind::CompAirBase),
+            "compair" | "compair-opt" | "compair_opt" => Some(ArchKind::CompAirOpt),
+            "sram-stack" | "sram_stack" => Some(ArchKind::SramStack),
+            "attacc" => Some(ArchKind::AttAcc),
+            _ => None,
+        }
+    }
+
+    /// Does this variant have SRAM-PIM under the DRAM banks?
+    pub fn has_sram(&self) -> bool {
+        matches!(self, ArchKind::CompAirBase | ArchKind::CompAirOpt | ArchKind::SramStack)
+    }
+
+    /// Does this variant have Curry ALUs in the NoC?
+    pub fn has_curry(&self) -> bool {
+        matches!(self, ArchKind::CentCurry | ArchKind::CompAirBase | ArchKind::CompAirOpt)
+    }
+}
+
+/// FC-layer mapping strategy across banks (§3.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FcMapping {
+    /// Split the output dimension across banks (baseline DRAM-PIM mapping;
+    /// avoids inter-bank reduction, needs input broadcast).
+    OutputSplit,
+    /// Split the input dimension across banks (needs inter-bank reduction,
+    /// which CompAir-NoC makes cheap).
+    InputSplit,
+}
+
+impl FcMapping {
+    pub fn label(&self) -> &'static str {
+        match self {
+            FcMapping::OutputSplit => "output-split",
+            FcMapping::InputSplit => "input-split",
+        }
+    }
+}
+
+/// Inference phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Prefill,
+    Decode,
+}
+
+/// One simulation run request.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub arch: ArchKind,
+    pub model: ModelConfig,
+    pub hw: HwConfig,
+    pub phase: Phase,
+    pub batch: usize,
+    /// Context length (tokens already in the KV cache for decode; prompt
+    /// length for prefill).
+    pub seq_len: usize,
+    /// Tokens to generate (decode steps simulated; latency is reported per
+    /// token, energy per token).
+    pub gen_len: usize,
+    /// Tensor-parallel degree across devices.
+    pub tp: usize,
+    /// Devices available in the CXL fabric.
+    pub devices: usize,
+    pub sram_gang: SramGang,
+    pub fc_mapping: FcMapping,
+}
+
+impl RunConfig {
+    pub fn new(arch: ArchKind, model: ModelConfig) -> Self {
+        let hw = if arch == ArchKind::CompAirOpt { HwConfig::paper_opt() } else { HwConfig::paper() };
+        Self {
+            arch,
+            model,
+            hw,
+            phase: Phase::Decode,
+            batch: 1,
+            seq_len: 4096,
+            gen_len: 1,
+            tp: 8,
+            devices: 32,
+            sram_gang: SramGang::In256Out16,
+            fc_mapping: FcMapping::OutputSplit,
+        }
+    }
+
+    pub fn with(mut self, f: impl FnOnce(&mut Self)) -> Self {
+        f(&mut self);
+        self
+    }
+
+    /// Apply overrides from a parsed TOML-subset document ([run] + [hw.*]).
+    pub fn apply_doc(&mut self, doc: &Doc) -> Result<(), String> {
+        if let Some(m) = doc.get_str("run.model") {
+            self.model =
+                ModelConfig::by_name(m).ok_or_else(|| format!("unknown model '{m}'"))?;
+        }
+        if let Some(a) = doc.get_str("run.arch") {
+            self.arch = ArchKind::by_name(a).ok_or_else(|| format!("unknown arch '{a}'"))?;
+            if self.arch == ArchKind::CompAirOpt {
+                self.hw = HwConfig::paper_opt();
+            }
+        }
+        if let Some(p) = doc.get_str("run.phase") {
+            self.phase = match p {
+                "prefill" => Phase::Prefill,
+                "decode" => Phase::Decode,
+                _ => return Err(format!("unknown phase '{p}'")),
+            };
+        }
+        if let Some(v) = doc.get_int("run.batch") {
+            self.batch = v as usize;
+        }
+        if let Some(v) = doc.get_int("run.seqlen") {
+            self.seq_len = v as usize;
+        }
+        if let Some(v) = doc.get_int("run.genlen") {
+            self.gen_len = v as usize;
+        }
+        if let Some(v) = doc.get_int("run.tp") {
+            self.tp = v as usize;
+        }
+        if let Some(v) = doc.get_int("run.devices") {
+            self.devices = v as usize;
+        }
+        if let Some(g) = doc.get_str("run.sram_gang") {
+            self.sram_gang = match g {
+                "512x8" | "(512,8)" => SramGang::In512Out8,
+                "256x16" | "(256,16)" => SramGang::In256Out16,
+                _ => return Err(format!("unknown sram_gang '{g}'")),
+            };
+        }
+        if let Some(m) = doc.get_str("run.fc_mapping") {
+            self.fc_mapping = match m {
+                "output-split" => FcMapping::OutputSplit,
+                "input-split" => FcMapping::InputSplit,
+                _ => return Err(format!("unknown fc_mapping '{m}'")),
+            };
+        }
+        if let Some(v) = doc.get_float("hw.sram.voltage") {
+            self.hw.sram.voltage = Voltage(v).clamp();
+        }
+        if let Some(v) = doc.get_float("hw.dram.t_ras_ns") {
+            self.hw.dram.t_ras_ns = v;
+        }
+        if let Some(v) = doc.get_int("hw.cxl.devices") {
+            self.hw.cxl.devices = v as usize;
+        }
+        if self.tp == 0 || self.batch == 0 || self.devices == 0 {
+            return Err("tp, batch and devices must be positive".into());
+        }
+        if self.tp > self.devices {
+            return Err(format!("tp ({}) exceeds devices ({})", self.tp, self.devices));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::toml;
+
+    #[test]
+    fn arch_names_roundtrip() {
+        for a in [
+            ArchKind::Cent,
+            ArchKind::CentCurry,
+            ArchKind::CompAirBase,
+            ArchKind::CompAirOpt,
+            ArchKind::SramStack,
+            ArchKind::AttAcc,
+        ] {
+            assert_eq!(ArchKind::by_name(&a.label().to_ascii_lowercase()), Some(a));
+        }
+    }
+
+    #[test]
+    fn capability_flags() {
+        assert!(!ArchKind::Cent.has_sram());
+        assert!(!ArchKind::Cent.has_curry());
+        assert!(ArchKind::CentCurry.has_curry());
+        assert!(ArchKind::CompAirOpt.has_sram());
+        assert!(ArchKind::CompAirOpt.has_curry());
+    }
+
+    #[test]
+    fn doc_overrides_apply() {
+        let doc = toml::parse(
+            r#"
+[run]
+model = "llama2-13b"
+arch = "compair-opt"
+phase = "prefill"
+batch = 32
+seqlen = 8192
+tp = 4
+sram_gang = "512x8"
+fc_mapping = "input-split"
+[hw.sram]
+voltage = 0.7
+"#,
+        )
+        .unwrap();
+        let mut rc = RunConfig::new(ArchKind::Cent, ModelConfig::llama2_7b());
+        rc.apply_doc(&doc).unwrap();
+        assert_eq!(rc.model.name, "llama2-13b");
+        assert_eq!(rc.arch, ArchKind::CompAirOpt);
+        assert_eq!(rc.phase, Phase::Prefill);
+        assert_eq!(rc.batch, 32);
+        assert_eq!(rc.seq_len, 8192);
+        assert_eq!(rc.tp, 4);
+        assert_eq!(rc.sram_gang, SramGang::In512Out8);
+        assert_eq!(rc.fc_mapping, FcMapping::InputSplit);
+        assert!((rc.hw.sram.voltage.0 - 0.7).abs() < 1e-9);
+        // CompAirOpt upgrade switched the decoder.
+        assert_eq!(
+            rc.hw.dram.column_decoder,
+            crate::config::hw::ColumnDecoder::Decoupled8and4
+        );
+    }
+
+    #[test]
+    fn doc_rejects_bad_values() {
+        let mut rc = RunConfig::new(ArchKind::Cent, ModelConfig::llama2_7b());
+        let doc = toml::parse("[run]\nmodel = \"nope\"").unwrap();
+        assert!(rc.apply_doc(&doc).is_err());
+        let doc = toml::parse("[run]\ntp = 64\ndevices = 8").unwrap();
+        assert!(rc.apply_doc(&doc).is_err());
+    }
+}

@@ -1,0 +1,289 @@
+//! A small TOML-subset parser for user-facing run configuration files.
+//!
+//! No serde/toml crates are vendored offline, so the launcher carries its
+//! own parser. Supported subset (sufficient for run configs):
+//!
+//! * `[section]` and `[section.sub]` headers
+//! * `key = value` with value ∈ {integer, float, bool, "string", [array of
+//!   scalars]}
+//! * `#` comments, blank lines
+//!
+//! Keys are exposed flattened as `section.sub.key`.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// A parsed document: flattened `section.key → value`.
+#[derive(Debug, Default, Clone)]
+pub struct Doc {
+    pub values: BTreeMap<String, Value>,
+}
+
+impl Doc {
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    pub fn get_int(&self, key: &str) -> Option<i64> {
+        self.get(key).and_then(Value::as_int)
+    }
+
+    pub fn get_float(&self, key: &str) -> Option<f64> {
+        self.get(key).and_then(Value::as_float)
+    }
+
+    pub fn get_bool(&self, key: &str) -> Option<bool> {
+        self.get(key).and_then(Value::as_bool)
+    }
+
+    pub fn get_str(&self, key: &str) -> Option<&str> {
+        self.get(key).and_then(Value::as_str)
+    }
+
+    /// Keys under a section prefix, e.g. `keys_under("run")`.
+    pub fn keys_under<'a>(&'a self, prefix: &'a str) -> impl Iterator<Item = &'a str> + 'a {
+        let pfx = format!("{prefix}.");
+        self.values.keys().filter(move |k| k.starts_with(&pfx)).map(|k| k.as_str())
+    }
+}
+
+/// Parse a TOML-subset document.
+pub fn parse(text: &str) -> Result<Doc, ParseError> {
+    let mut doc = Doc::default();
+    let mut section = String::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let lineno = idx + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| err(lineno, "unterminated section header"))?
+                .trim();
+            if name.is_empty() || !name.chars().all(|c| c.is_alphanumeric() || "._-".contains(c)) {
+                return Err(err(lineno, &format!("bad section name '{name}'")));
+            }
+            section = name.to_string();
+            continue;
+        }
+        let eq = line.find('=').ok_or_else(|| err(lineno, "expected 'key = value'"))?;
+        let key = line[..eq].trim();
+        if key.is_empty() || !key.chars().all(|c| c.is_alphanumeric() || "._-".contains(c)) {
+            return Err(err(lineno, &format!("bad key '{key}'")));
+        }
+        let vtext = line[eq + 1..].trim();
+        let value = parse_value(vtext).map_err(|m| err(lineno, &m))?;
+        let full = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+        doc.values.insert(full, value);
+    }
+    Ok(doc)
+}
+
+fn err(line: usize, msg: &str) -> ParseError {
+    ParseError { line, msg: msg.to_string() }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    let s = s.trim();
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let body = body.strip_suffix(']').ok_or("unterminated array")?;
+        let mut items = Vec::new();
+        let trimmed = body.trim();
+        if !trimmed.is_empty() {
+            for part in split_top_level(trimmed) {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    if let Some(body) = s.strip_prefix('"') {
+        let body = body.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(Value::Str(body.to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value '{s}'"))
+}
+
+/// Split an array body on commas (no nested arrays in the subset, but
+/// strings may contain commas).
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut start = 0usize;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_document() {
+        let doc = parse(
+            r#"
+# run configuration
+top = 1
+[run]
+model = "llama2-7b"   # the model
+batch = 64
+seqlen = 4096
+tp = 8
+use_sram = true
+ratio = 0.75
+sweep = [1, 2, 4, 8]
+[hw.dram]
+t_ras_ns = 27.0
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_int("top"), Some(1));
+        assert_eq!(doc.get_str("run.model"), Some("llama2-7b"));
+        assert_eq!(doc.get_int("run.batch"), Some(64));
+        assert_eq!(doc.get_bool("run.use_sram"), Some(true));
+        assert_eq!(doc.get_float("run.ratio"), Some(0.75));
+        assert_eq!(doc.get_float("hw.dram.t_ras_ns"), Some(27.0));
+        let arr = doc.get("run.sweep").unwrap().as_array().unwrap();
+        assert_eq!(arr.len(), 4);
+        assert_eq!(arr[3].as_int(), Some(8));
+    }
+
+    #[test]
+    fn int_coerces_to_float() {
+        let doc = parse("x = 3").unwrap();
+        assert_eq!(doc.get_float("x"), Some(3.0));
+    }
+
+    #[test]
+    fn string_with_hash_and_comma() {
+        let doc = parse(r#"s = "a#b,c""#).unwrap();
+        assert_eq!(doc.get_str("s"), Some("a#b,c"));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse("a = 1\nbad line\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = parse("[unterminated\n").unwrap_err();
+        assert_eq!(e.line, 1);
+    }
+
+    #[test]
+    fn rejects_garbage_values() {
+        assert!(parse("a = @@").is_err());
+        assert!(parse("a = \"open").is_err());
+        assert!(parse("a = [1, 2").is_err());
+    }
+
+    #[test]
+    fn empty_array_ok() {
+        let doc = parse("a = []").unwrap();
+        assert_eq!(doc.get("a").unwrap().as_array().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn keys_under_prefix() {
+        let doc = parse("[s]\na = 1\nb = 2\n[t]\nc = 3").unwrap();
+        let keys: Vec<_> = doc.keys_under("s").collect();
+        assert_eq!(keys, vec!["s.a", "s.b"]);
+    }
+}

@@ -1,0 +1,215 @@
+//! Continuous batching: requests join the running batch as slots free up
+//! (Orca-style iteration-level scheduling), bounded by a batch-size cap and
+//! a KV-capacity budget.
+
+use std::collections::VecDeque;
+
+/// One inference request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt_len: usize,
+    pub gen_len: usize,
+    pub arrived_ns: u64,
+}
+
+/// Lifecycle state of an admitted request.
+#[derive(Debug, Clone)]
+pub struct RequestState {
+    pub req: Request,
+    pub generated: usize,
+    pub prefilled: bool,
+    pub admitted_ns: u64,
+    pub first_token_ns: Option<u64>,
+}
+
+impl RequestState {
+    pub fn kv_tokens(&self) -> usize {
+        self.req.prompt_len + self.generated
+    }
+
+    pub fn done(&self) -> bool {
+        self.prefilled && self.generated >= self.req.gen_len
+    }
+}
+
+/// Batcher configuration.
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    /// Total KV tokens the fabric can hold (capacity budget).
+    pub max_kv_tokens: usize,
+    /// Bounded admission queue (backpressure: excess arrivals are rejected).
+    pub queue_cap: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self { max_batch: 64, max_kv_tokens: 1 << 22, queue_cap: 1024 }
+    }
+}
+
+/// The continuous batcher.
+#[derive(Debug)]
+pub struct Batcher {
+    pub cfg: BatcherConfig,
+    queue: VecDeque<Request>,
+    pub active: Vec<RequestState>,
+    pub rejected: u64,
+    pub completed: Vec<(RequestState, u64)>, // (state, finished_ns)
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        Self { cfg, queue: VecDeque::new(), active: Vec::new(), rejected: 0, completed: Vec::new() }
+    }
+
+    /// Offer a new request; returns false (and counts a rejection) when the
+    /// admission queue is full — the backpressure signal.
+    pub fn offer(&mut self, req: Request) -> bool {
+        if self.queue.len() >= self.cfg.queue_cap {
+            self.rejected += 1;
+            return false;
+        }
+        self.queue.push_back(req);
+        true
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    fn kv_in_use(&self) -> usize {
+        self.active.iter().map(|s| s.kv_tokens()).sum()
+    }
+
+    /// Admit queued requests while batch and KV budgets allow (called at
+    /// every iteration boundary — continuous batching).
+    pub fn admit(&mut self, now_ns: u64) -> usize {
+        let mut admitted = 0;
+        while self.active.len() < self.cfg.max_batch {
+            let Some(front) = self.queue.front() else { break };
+            let need = front.prompt_len + front.gen_len;
+            if self.kv_in_use() + need > self.cfg.max_kv_tokens {
+                break;
+            }
+            let req = self.queue.pop_front().unwrap();
+            self.active.push(RequestState {
+                req,
+                generated: 0,
+                prefilled: false,
+                admitted_ns: now_ns,
+                first_token_ns: None,
+            });
+            admitted += 1;
+        }
+        admitted
+    }
+
+    /// Requests needing prefill this iteration.
+    pub fn prefill_set(&self) -> Vec<usize> {
+        (0..self.active.len()).filter(|&i| !self.active[i].prefilled).collect()
+    }
+
+    /// Mark prefill complete.
+    pub fn finish_prefill(&mut self, idx: &[usize], now_ns: u64) {
+        for &i in idx {
+            self.active[i].prefilled = true;
+            self.active[i].first_token_ns.get_or_insert(now_ns);
+        }
+    }
+
+    /// One decode iteration over all prefilled requests; retires finished
+    /// ones. Returns (decoded count, max KV length in the step batch).
+    pub fn decode_step(&mut self, now_ns: u64) -> (usize, usize) {
+        let mut n = 0;
+        let mut max_kv = 0;
+        for s in self.active.iter_mut().filter(|s| s.prefilled && !s.done()) {
+            s.generated += 1;
+            n += 1;
+            max_kv = max_kv.max(s.kv_tokens());
+        }
+        let done: Vec<usize> =
+            (0..self.active.len()).rev().filter(|&i| self.active[i].done()).collect();
+        for i in done {
+            let s = self.active.swap_remove(i);
+            self.completed.push((s, now_ns));
+        }
+        (n, max_kv)
+    }
+
+    pub fn idle(&self) -> bool {
+        self.queue.is_empty() && self.active.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, p: usize, g: usize) -> Request {
+        Request { id, prompt_len: p, gen_len: g, arrived_ns: 0 }
+    }
+
+    #[test]
+    fn admits_up_to_batch_cap() {
+        let mut b = Batcher::new(BatcherConfig { max_batch: 2, ..Default::default() });
+        for i in 0..5 {
+            assert!(b.offer(req(i, 16, 4)));
+        }
+        assert_eq!(b.admit(0), 2);
+        assert_eq!(b.active.len(), 2);
+        assert_eq!(b.queued(), 3);
+    }
+
+    #[test]
+    fn kv_budget_limits_admission() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_batch: 64,
+            max_kv_tokens: 100,
+            queue_cap: 16,
+        });
+        b.offer(req(0, 60, 10));
+        b.offer(req(1, 60, 10));
+        assert_eq!(b.admit(0), 1, "second request would blow the KV budget");
+    }
+
+    #[test]
+    fn queue_backpressure_rejects() {
+        let mut b = Batcher::new(BatcherConfig { queue_cap: 2, ..Default::default() });
+        assert!(b.offer(req(0, 1, 1)));
+        assert!(b.offer(req(1, 1, 1)));
+        assert!(!b.offer(req(2, 1, 1)));
+        assert_eq!(b.rejected, 1);
+    }
+
+    #[test]
+    fn lifecycle_prefill_decode_retire() {
+        let mut b = Batcher::new(BatcherConfig::default());
+        b.offer(req(0, 8, 2));
+        b.admit(0);
+        assert_eq!(b.prefill_set(), vec![0]);
+        b.finish_prefill(&[0], 100);
+        let (n, kv) = b.decode_step(200);
+        assert_eq!((n, kv), (1, 9));
+        assert!(b.completed.is_empty());
+        b.decode_step(300);
+        assert_eq!(b.completed.len(), 1);
+        assert!(b.idle());
+        let (s, t) = &b.completed[0];
+        assert_eq!(*t, 300);
+        assert_eq!(s.first_token_ns, Some(100));
+    }
+
+    #[test]
+    fn continuous_admission_as_slots_free() {
+        let mut b = Batcher::new(BatcherConfig { max_batch: 1, ..Default::default() });
+        b.offer(req(0, 4, 1));
+        b.offer(req(1, 4, 1));
+        b.admit(0);
+        b.finish_prefill(&[0], 0);
+        b.decode_step(10); // request 0 done, slot frees
+        assert_eq!(b.admit(10), 1);
+        assert_eq!(b.active[0].req.id, 1);
+    }
+}

@@ -1,0 +1,133 @@
+//! DRAM-PIM channel: 16 banks sharing a global buffer and (in CompAir) the
+//! per-channel CompAir-NoC. The channel is the SIMD issue unit — all banks
+//! receive the same row-level instruction.
+
+use crate::config::DramConfig;
+use crate::sim::{CostCounts, OpCost};
+
+use super::bank::PimBank;
+
+/// A channel of `banks_per_channel` PIM banks.
+#[derive(Debug, Clone)]
+pub struct Channel {
+    pub cfg: DramConfig,
+    pub bank: PimBank,
+}
+
+impl Channel {
+    pub fn new(cfg: &DramConfig) -> Self {
+        Self { cfg: cfg.clone(), bank: PimBank::new(cfg) }
+    }
+
+    pub fn n_banks(&self) -> usize {
+        self.cfg.banks_per_channel
+    }
+
+    /// All banks execute the same per-bank op in lockstep (SIMD): channel
+    /// latency is the bank latency; events multiply by the bank count.
+    pub fn simd(&self, per_bank: OpCost) -> OpCost {
+        per_bank.replicate(self.n_banks() as u64)
+    }
+
+    /// Like [`simd`] but only `active` banks participate (mask).
+    pub fn simd_masked(&self, per_bank: OpCost, active: usize) -> OpCost {
+        assert!(active <= self.n_banks());
+        per_bank.replicate(active as u64)
+    }
+
+    /// Broadcast `bytes` from the channel controller to every bank through
+    /// the global buffer. AiM's GB drives a shared bus: a single serialized
+    /// pass of the payload reaches all banks.
+    pub fn gb_broadcast(&self, bytes: u64) -> OpCost {
+        let lat = bytes as f64 / self.cfg.global_buffer_gbs; // GB/s == B/ns
+        OpCost { latency_ns: lat, counts: CostCounts { gb_bytes: bytes, ..Default::default() } }
+    }
+
+    /// Gather per-bank payloads (`bytes_per_bank` from each of `banks`)
+    /// through the global buffer — serialized bank by bank (§3.3: "requires
+    /// serializing the access of the DRAM banks").
+    pub fn gb_gather(&self, bytes_per_bank: u64, banks: usize) -> OpCost {
+        let total = bytes_per_bank * banks as u64;
+        OpCost {
+            latency_ns: total as f64 / self.cfg.global_buffer_gbs,
+            counts: CostCounts { gb_bytes: total, ..Default::default() },
+        }
+    }
+
+    /// Baseline inter-bank reduction through the global buffer: gather all
+    /// partials to one bank, which then accumulates them with its MAC lanes.
+    pub fn gb_reduce(&self, elems: usize, banks: usize) -> OpCost {
+        let bytes_per_bank = (elems * 2) as u64;
+        let gather = self.gb_gather(bytes_per_bank, banks.saturating_sub(1));
+        // Accumulation: (banks-1) passes of `elems` adds on the target bank's
+        // MAC lanes at 16 lanes / tCCD.
+        let adds = (banks.saturating_sub(1) * elems) as u64;
+        let acc_lat = adds as f64 / 16.0 * self.cfg.t_ccd_ns;
+        let acc = OpCost {
+            latency_ns: acc_lat,
+            counts: CostCounts { dram_mac: adds, ..Default::default() },
+        };
+        gather.then(&acc)
+    }
+
+    /// Move `bytes` from this channel to the device controller (external
+    /// I/O), e.g. for centralized-NLU processing in the CENT baseline.
+    pub fn to_controller(&self, bytes: u64) -> OpCost {
+        let per_ch = self.cfg.external_gbs_per_channel;
+        OpCost {
+            latency_ns: bytes as f64 / per_ch,
+            counts: CostCounts { gb_bytes: bytes, ..Default::default() },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ch() -> Channel {
+        Channel::new(&DramConfig::default())
+    }
+
+    #[test]
+    fn simd_multiplies_counts_not_latency() {
+        let c = ch();
+        let per_bank = c.bank.gemv(10, 1024, 1);
+        let all = c.simd(per_bank);
+        assert_eq!(all.latency_ns, per_bank.latency_ns);
+        assert_eq!(all.counts.dram_mac, 16 * per_bank.counts.dram_mac);
+    }
+
+    #[test]
+    fn gb_broadcast_rate() {
+        // 32 KB at 32 GB/s = 1024 ns
+        let c = ch().gb_broadcast(32 << 10);
+        assert!((c.latency_ns - 1024.0).abs() < 1e-9);
+        assert_eq!(c.counts.gb_bytes, 32 << 10);
+    }
+
+    #[test]
+    fn gb_reduce_serializes_banks() {
+        let c = ch();
+        let r2 = c.gb_reduce(4096, 2);
+        let r16 = c.gb_reduce(4096, 16);
+        // 15 gathers vs 1 gather → ~15x the gather time
+        assert!(r16.latency_ns > 10.0 * r2.latency_ns);
+        assert_eq!(r16.counts.dram_mac, 15 * 4096);
+    }
+
+    #[test]
+    fn masked_simd_bounds() {
+        let c = ch();
+        let per_bank = c.bank.read(1024);
+        let m = c.simd_masked(per_bank, 4);
+        assert_eq!(m.counts.dram_act, 4 * per_bank.counts.dram_act);
+    }
+
+    #[test]
+    #[should_panic]
+    fn masked_simd_overflow_panics() {
+        let c = ch();
+        c.simd_masked(OpCost::zero(), 17);
+    }
+}

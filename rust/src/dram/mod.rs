@@ -1,0 +1,9 @@
+//! DRAM-PIM substrate: GDDR6 command-level timing, the AiM-style compute
+//! bank, and the channel (SIMD issue unit + global buffer).
+pub mod bank;
+pub mod channel;
+pub mod timing;
+
+pub use bank::{PimBank, MAC_BYTES_PER_CCD};
+pub use channel::Channel;
+pub use timing::{stream_latency_ns, write_latency_ns, BankTimer, Cmd};

@@ -1,0 +1,4 @@
+//! Energy accounting: prices `CostCounts` into picojoules.
+pub mod model;
+
+pub use model::{EnergyBreakdown, EnergyModel};

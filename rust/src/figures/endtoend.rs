@@ -1,0 +1,253 @@
+//! End-to-end evaluation figures: Fig 15 (vs CENT & AttAcc), Fig 16 (decode
+//! ablation), Fig 17 (prefill), Fig 18 (TP), Fig 19 (long context).
+
+use crate::arch::{attacc, simulate, AttAccConfig};
+use crate::config::{ArchKind, ModelConfig, Phase, RunConfig};
+use crate::util::table::{fenergy_pj, fnum, ftime_ns, fx, Table};
+
+fn rc(arch: ArchKind, m: ModelConfig) -> RunConfig {
+    RunConfig::new(arch, m)
+}
+
+/// Fig 15: GPT3-175B, batch 64, decode @128K — latency/throughput/energy of
+/// CompAir vs CENT (32/96 devices, TP=8) vs AttAcc (4 A100 + 4 HBM-PIM).
+pub fn fig15() -> String {
+    let mut t = Table::new(
+        "Fig 15 — GPT3-175B decode (batch=64, seqlen=128K, TP=8)",
+        &["system", "devices", "lat/token", "tok/s", "energy/token"],
+    );
+    for (arch, devices) in [
+        (ArchKind::Cent, 32usize),
+        (ArchKind::CompAirOpt, 32),
+        (ArchKind::Cent, 96),
+        (ArchKind::CompAirOpt, 96),
+    ] {
+        let mut c = rc(arch, ModelConfig::gpt3_175b());
+        c.batch = 64;
+        c.seq_len = 128 * 1024;
+        c.tp = 8;
+        c.devices = devices;
+        let r = simulate(c);
+        t.rowv(vec![
+            arch.label().into(),
+            devices.to_string(),
+            ftime_ns(r.latency_ns),
+            fnum(r.throughput_tok_s),
+            fenergy_pj(r.energy.total_pj()),
+        ]);
+    }
+    // AttAcc (4K-context point per the paper's comparison)
+    let mut c = rc(ArchKind::AttAcc, ModelConfig::gpt3_175b());
+    c.batch = 64;
+    c.seq_len = 4096;
+    let r = attacc::simulate(&c, &AttAccConfig::default());
+    t.rowv(vec![
+        "AttAcc-4-A100-HBM (4K ctx)".into(),
+        "4+4".into(),
+        ftime_ns(r.latency_ns),
+        fnum(r.throughput_tok_s),
+        fenergy_pj(r.energy.total_pj()),
+    ]);
+    // CompAir at the same 4K point for the 3.52x energy headline
+    let mut c2 = rc(ArchKind::CompAirOpt, ModelConfig::gpt3_175b());
+    c2.batch = 64;
+    c2.seq_len = 4096;
+    c2.devices = 96;
+    let r2 = simulate(c2);
+    t.rowv(vec![
+        "CompAir_Opt (4K ctx, 96dev)".into(),
+        "96".into(),
+        ftime_ns(r2.latency_ns),
+        fnum(r2.throughput_tok_s),
+        fenergy_pj(r2.energy.total_pj()),
+    ]);
+    t.render()
+}
+
+/// Fig 16: decode throughput ablation over batch × seqlen (Llama2-70B/7B):
+/// CENT → CENT+CurryALU → CompAir_Base → CompAir_Opt.
+pub fn fig16() -> String {
+    let mut out = String::new();
+    for model in [ModelConfig::llama2_70b(), ModelConfig::llama2_7b()] {
+        let mut t = Table::new(
+            &format!("Fig 16 — {} decode throughput (tok/s), TP=8, 32 devices", model.name),
+            &["batch", "seqlen", "CENT", "+CurryALU", "CompAir_Base", "CompAir_Opt", "best-vs-CENT"],
+        );
+        for batch in [1usize, 16, 64] {
+            for seq in [4096usize, 16384, 32768] {
+                let mut row = vec![batch.to_string(), seq.to_string()];
+                let mut thr = Vec::new();
+                for arch in [
+                    ArchKind::Cent,
+                    ArchKind::CentCurry,
+                    ArchKind::CompAirBase,
+                    ArchKind::CompAirOpt,
+                ] {
+                    let mut c = rc(arch, model.clone());
+                    c.batch = batch;
+                    c.seq_len = seq;
+                    let r = simulate(c);
+                    thr.push(r.throughput_tok_s);
+                    row.push(fnum(r.throughput_tok_s));
+                }
+                row.push(fx(thr[3] / thr[0]));
+                t.rowv(row);
+            }
+        }
+        out.push_str(&t.render());
+        out.push('\n');
+    }
+    out
+}
+
+/// Fig 17: prefill latency speedups across the model zoo (0.5K prompt).
+pub fn fig17() -> String {
+    let mut t = Table::new(
+        "Fig 17 — prefill (0.5K) latency, speedup over CENT",
+        &["model", "CENT(ms)", "Base", "Opt", "Opt-speedup"],
+    );
+    for m in ModelConfig::zoo() {
+        let run = |arch: ArchKind| {
+            let mut c = rc(arch, m.clone());
+            c.phase = Phase::Prefill;
+            c.batch = 1;
+            c.seq_len = 512;
+            simulate(c).latency_ns
+        };
+        let cent = run(ArchKind::Cent);
+        let base = run(ArchKind::CompAirBase);
+        let opt = run(ArchKind::CompAirOpt);
+        t.rowv(vec![
+            m.name.into(),
+            fnum(cent / 1e6),
+            fx(cent / base),
+            fx(cent / opt),
+            fx(cent / opt),
+        ]);
+    }
+    t.render()
+}
+
+/// Fig 18: tensor-parallel sweep — bank utilization and latency.
+pub fn fig18() -> String {
+    let mut t = Table::new(
+        "Fig 18 — TP sweep, Llama2-13B (batch=64, decode, 4K)",
+        &["tp", "bank-util", "CENT lat", "CompAir lat", "CompAir speedup"],
+    );
+    for tp in [1usize, 2, 4, 8, 16, 32] {
+        let mut a = rc(ArchKind::Cent, ModelConfig::llama2_13b());
+        a.batch = 64;
+        a.seq_len = 4096;
+        a.tp = tp;
+        a.devices = 32;
+        let mut b = a.clone();
+        b.arch = ArchKind::CompAirOpt;
+        b.hw = crate::config::HwConfig::paper_opt();
+        let ra = simulate(a);
+        let rb = simulate(b);
+        t.rowv(vec![
+            tp.to_string(),
+            format!("{:.1}%", rb.bank_util * 100.0),
+            ftime_ns(ra.latency_ns),
+            ftime_ns(rb.latency_ns),
+            fx(ra.latency_ns / rb.latency_ns),
+        ]);
+    }
+    t.render()
+}
+
+/// Fig 19: very long context (128K ctx, 8K generation) on Qwen-72B and
+/// GPT3-175B, with non-linear share.
+pub fn fig19() -> String {
+    let mut t = Table::new(
+        "Fig 19 — long context (seq=128K), decode, batch=16, TP=8",
+        &["model", "arch", "lat/token", "tok/s", "nonlin %", "speedup"],
+    );
+    for m in [ModelConfig::qwen_72b(), ModelConfig::gpt3_175b()] {
+        let mut results = Vec::new();
+        for arch in [ArchKind::Cent, ArchKind::CompAirOpt] {
+            let mut c = rc(arch, m.clone());
+            c.batch = 16;
+            c.seq_len = 128 * 1024;
+            c.gen_len = 8192;
+            let r = simulate(c);
+            results.push((arch, r));
+        }
+        let base = results[0].1.latency_ns;
+        for (arch, r) in results {
+            t.rowv(vec![
+                m.name.into(),
+                arch.label().into(),
+                ftime_ns(r.latency_ns),
+                fnum(r.throughput_tok_s),
+                format!("{:.1}%", r.nonlinear_frac * 100.0),
+                fx(base / r.latency_ns),
+            ]);
+        }
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn speedups(s: &str) -> Vec<f64> {
+        s.lines()
+            .filter_map(|l| l.split_whitespace().last()?.strip_suffix('x')?.parse().ok())
+            .collect()
+    }
+
+    #[test]
+    fn fig15_compair_beats_cent_and_attacc_energy() {
+        let s = fig15();
+        assert!(s.contains("CompAir_Opt") && s.contains("AttAcc"));
+        assert!(s.contains("CENT"));
+    }
+
+    #[test]
+    fn fig16_best_speedup_band() {
+        // paper: 1.95-6.28x decode improvement at batch 64; allow wider sim band
+        let s = fig16();
+        let sp = speedups(&s);
+        assert!(!sp.is_empty());
+        let max = sp.iter().cloned().fold(0.0, f64::max);
+        assert!((1.9..14.0).contains(&max), "max decode speedup {max}");
+    }
+
+    #[test]
+    fn fig17_band() {
+        // paper: 3.29-5.46x (Base) → 4.1-7.89x (Opt)
+        let s = fig17();
+        let sp = speedups(&s);
+        for v in &sp {
+            assert!((1.5..12.0).contains(v), "prefill speedup {v} out of band:\n{s}");
+        }
+    }
+
+    #[test]
+    fn fig18_util_monotone_nonincreasing() {
+        let s = fig18();
+        let utils: Vec<f64> = s
+            .lines()
+            .filter_map(|l| {
+                l.split_whitespace().nth(1)?.strip_suffix('%')?.parse().ok()
+            })
+            .collect();
+        assert!(utils.len() >= 4);
+        for w in utils.windows(2) {
+            assert!(w[1] <= w[0] + 1e-9, "bank util must not grow with TP: {utils:?}");
+        }
+    }
+
+    #[test]
+    fn fig19_long_context_speedup() {
+        // paper: 2.13-2.73x decode improvement at 128K
+        let s = fig19();
+        let sp: Vec<f64> = speedups(&s).into_iter().filter(|v| *v > 1.01).collect();
+        assert!(!sp.is_empty());
+        for v in &sp {
+            assert!((1.3..8.0).contains(v), "128K speedup {v}:\n{s}");
+        }
+    }
+}

@@ -1,0 +1,137 @@
+//! Discussion figures (paper §8): Fig 24 (GQA attention — SRAM-stack vs
+//! DRAM-PIM latency ratio) and Fig 25 (energy delta of using SRAM for it).
+//!
+//! For GQA, K/V are shared by `group` query heads, so the K^T / V tiles do
+//! get reuse (effective batch = batch × group), unlike MHA attention.
+
+use crate::config::{HwConfig, ModelConfig, SramGang};
+use crate::dram::PimBank;
+use crate::energy::EnergyModel;
+use crate::sram::bank::{SramBank, WeightPolicy};
+use crate::util::table::{fnum, Table};
+
+struct GqaPoint {
+    dram_ns: f64,
+    sram_ns: f64,
+    dram_pj: f64,
+    sram_pj: f64,
+}
+
+fn gqa_point(m: &ModelConfig, seq: usize, tp: usize, qk: bool) -> GqaPoint {
+    let hw = HwConfig::paper();
+    let em = EnergyModel::new(&hw.sram, hw.hb.pj_per_bit);
+    let dram = PimBank::new(&hw.dram);
+    let sram = SramBank::new(&hw.sram, SramGang::In256Out16, &hw.dram);
+    let group = m.gqa_group();
+    let batch = 16usize;
+    // TP splits the K^T / V matrices along seq (paper §8)
+    let seq_shard = seq.div_ceil(tp);
+    // per bank: seq shard spread over the banks serving one kv head
+    let banks = hw.dram.banks_per_device();
+    let kv_pairs = batch * m.n_kv_heads / tp.min(m.n_kv_heads);
+    let banks_per_pair = (banks / kv_pairs.max(1)).max(1);
+    let seq_tile = seq_shard.div_ceil(banks_per_pair).max(1);
+
+    // QK^T: "weights" = K^T (seq_tile x d_head), inputs = group*batch queries
+    // SV: "weights" = V (d_head x seq_tile), same reuse
+    let (out_t, in_t) = if qk { (seq_tile, m.d_head()) } else { (m.d_head(), seq_tile) };
+    let reuse = group * batch / batch; // group-fold reuse per kv head
+    let eff_batch = batch.max(1) * reuse.max(1) / batch.max(1) * batch; // = batch*group
+
+    let d = dram.gemv(out_t, in_t, eff_batch);
+    let s = sram.gemm(out_t, in_t, eff_batch, WeightPolicy::Reload);
+    GqaPoint {
+        dram_ns: d.latency_ns,
+        sram_ns: s.latency_ns,
+        dram_pj: em.dynamic(&d.counts).total_pj(),
+        sram_pj: em.dynamic(&s.counts).total_pj(),
+    }
+}
+
+/// Fig 24: latency ratio map (SRAM-stack / DRAM-PIM); < 1 = SRAM wins.
+pub fn fig24() -> String {
+    let m = ModelConfig::llama2_70b();
+    let mut out = String::new();
+    for (qk, label) in [(true, "QK^T"), (false, "SV")] {
+        let mut t = Table::new(
+            &format!("Fig 24 — GQA {label} latency ratio SRAM/DRAM (Llama2-70B, group=8; <1 = SRAM wins)"),
+            &["seqlen", "TP=1", "TP=2", "TP=4", "TP=8"],
+        );
+        for seq in [2048usize, 8192, 32768, 131072] {
+            let mut row = vec![seq.to_string()];
+            for tp in [1usize, 2, 4, 8] {
+                let p = gqa_point(&m, seq, tp, qk);
+                row.push(fnum(p.sram_ns / p.dram_ns));
+            }
+            t.rowv(row);
+        }
+        out.push_str(&t.render());
+        out.push('\n');
+    }
+    out
+}
+
+/// Fig 25: energy ratio map (SRAM-stack / DRAM-PIM); > 1 = SRAM costs more.
+pub fn fig25() -> String {
+    let m = ModelConfig::llama2_70b();
+    let mut out = String::new();
+    for (qk, label) in [(true, "QK^T"), (false, "SV")] {
+        let mut t = Table::new(
+            &format!("Fig 25 — GQA {label} energy ratio SRAM/DRAM (Llama2-70B)"),
+            &["seqlen", "TP=1", "TP=2", "TP=4", "TP=8"],
+        );
+        for seq in [2048usize, 8192, 32768, 131072] {
+            let mut row = vec![seq.to_string()];
+            for tp in [1usize, 2, 4, 8] {
+                let p = gqa_point(&m, seq, tp, qk);
+                row.push(fnum(p.sram_pj / p.dram_pj));
+            }
+            t.rowv(row);
+        }
+        out.push_str(&t.render());
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig24_qk_sram_wins_at_long_seq_low_tp() {
+        // §8: "longer sequence and fewer TPs lead to better reusing of
+        // SRAM-PIM" for QK^T
+        let m = ModelConfig::llama2_70b();
+        let long_low = gqa_point(&m, 131072, 1, true);
+        assert!(
+            long_low.sram_ns < long_low.dram_ns,
+            "SRAM should win QK^T at 128K/TP=1: {} vs {}",
+            long_low.sram_ns,
+            long_low.dram_ns
+        );
+    }
+
+    #[test]
+    fn fig24_renders_both_ops() {
+        let s = fig24();
+        assert!(s.contains("QK^T") && s.contains("SV"));
+    }
+
+    #[test]
+    fn fig25_reuse_governs_sram_energy_premium() {
+        // §8's core logic: SRAM's energy attractiveness comes from K/V
+        // reuse. MHA (group=1, Qwen) gives SRAM no reuse → its relative
+        // energy must be worse than under GQA (group=8, Llama2-70B).
+        let gqa = ModelConfig::llama2_70b();
+        let mha = ModelConfig::qwen_72b();
+        let p_gqa = gqa_point(&gqa, 32768, 4, true);
+        let p_mha = gqa_point(&mha, 32768, 4, true);
+        let r_gqa = p_gqa.sram_pj / p_gqa.dram_pj;
+        let r_mha = p_mha.sram_pj / p_mha.dram_pj;
+        assert!(
+            r_mha > r_gqa,
+            "MHA should make SRAM relatively costlier: mha={r_mha} gqa={r_gqa}"
+        );
+    }
+}

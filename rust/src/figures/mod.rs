@@ -1,0 +1,116 @@
+//! Figure/table regeneration harness: one entry per paper table and figure
+//! (DESIGN.md carries the experiment index). Each function re-runs the
+//! simulation fresh and renders the same rows/series the paper plots.
+
+pub mod endtoend;
+pub mod gqa;
+pub mod mapping;
+pub mod motivation;
+pub mod noc_eval;
+
+use crate::config::HwConfig;
+use crate::util::table::Table;
+
+/// Table 3: the hardware configuration, echoed from the config structs.
+pub fn table3() -> String {
+    let hw = HwConfig::paper();
+    let mut t = Table::new("Table 3 — hardware configuration", &["component", "spec"]);
+    t.rowv(vec![
+        "DRAM-PIM".into(),
+        format!(
+            "{}ch/dev, {} banks/ch, {}MB/bank, {} MACs/bank, tRCDWR={} tRCDRD={} tRAS={} tCL={} tRP={} ns",
+            hw.dram.channels_per_device,
+            hw.dram.banks_per_channel,
+            hw.dram.bank_mb,
+            hw.dram.macs_per_bank,
+            hw.dram.t_rcdwr_ns,
+            hw.dram.t_rcdrd_ns,
+            hw.dram.t_ras_ns,
+            hw.dram.t_cl_ns,
+            hw.dram.t_rp_ns
+        ),
+    ]);
+    t.rowv(vec![
+        "SRAM-PIM".into(),
+        format!(
+            "{}kb/array, 4 arrays/bank, t_access {}-{} ns, {}-{} TFLOPS/W (0.9-0.6V)",
+            hw.sram.array_kb,
+            hw.sram.t_access_fast_ns,
+            hw.sram.t_access_slow_ns,
+            hw.sram.tflops_w_fast,
+            hw.sram.tflops_w_slow
+        ),
+    ]);
+    t.rowv(vec![
+        "CompAir-NoC".into(),
+        format!(
+            "{}x{} 2D-mesh, {} Curry ALUs/router, flit {}b, DOR, SWIFT",
+            hw.noc.mesh_cols, hw.noc.mesh_rows, hw.noc.curry_alus_per_router, hw.noc.flit_bits
+        ),
+    ]);
+    t.rowv(vec![
+        "CXL".into(),
+        format!(
+            "{} devices, {} GB/s collective, {} GB/s p2p",
+            hw.cxl.devices, hw.cxl.collective_gbs, hw.cxl.p2p_gbs
+        ),
+    ]);
+    t.render()
+}
+
+/// All figures in paper order: (id, generator).
+pub fn registry() -> Vec<(&'static str, fn() -> String)> {
+    vec![
+        ("table3", table3 as fn() -> String),
+        ("fig4a", motivation::fig4a),
+        ("fig4bc", motivation::fig4bc),
+        ("fig5", motivation::fig5),
+        ("fig7b", motivation::fig7b),
+        ("fig8", mapping::fig8),
+        ("fig9", mapping::fig9),
+        ("fig15", endtoend::fig15),
+        ("fig16", endtoend::fig16),
+        ("fig17", endtoend::fig17),
+        ("fig18", endtoend::fig18),
+        ("fig19", endtoend::fig19),
+        ("fig20", mapping::fig20),
+        ("fig21", noc_eval::fig21),
+        ("fig22", noc_eval::fig22),
+        ("fig23", noc_eval::fig23),
+        ("fig24", gqa::fig24),
+        ("fig25", gqa::fig25),
+    ]
+}
+
+/// Run one figure by id.
+pub fn run(name: &str) -> Option<String> {
+    registry().into_iter().find(|(n, _)| *n == name).map(|(_, f)| f())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_all_paper_artifacts() {
+        let names: Vec<&str> = registry().iter().map(|(n, _)| *n).collect();
+        for expected in [
+            "table3", "fig4a", "fig4bc", "fig5", "fig7b", "fig8", "fig9", "fig15", "fig16",
+            "fig17", "fig18", "fig19", "fig20", "fig21", "fig22", "fig23", "fig24", "fig25",
+        ] {
+            assert!(names.contains(&expected), "missing {expected}");
+        }
+    }
+
+    #[test]
+    fn table3_echoes_config() {
+        let s = table3();
+        assert!(s.contains("tRCDWR=14"));
+        assert!(s.contains("4x16") || s.contains("4 arrays"));
+    }
+
+    #[test]
+    fn unknown_figure_is_none() {
+        assert!(run("fig99").is_none());
+    }
+}

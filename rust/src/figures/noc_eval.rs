@@ -1,0 +1,131 @@
+//! CompAir-NoC evaluation figures: Fig 21 (area), Fig 22 (Curry ALU latency
+//! profits), Fig 23 (path-generation profits).
+
+use crate::arch::collective as coll;
+use crate::config::{HwConfig, SramGang};
+use crate::isa::{Machine, RowProgram};
+use crate::noc::area::{curry_alus_resources, softmax_unit_resources, AreaModel};
+use crate::util::table::{fnum, Table};
+
+/// Fig 21: area of the per-bank logic stack and the Curry ALU share, plus
+/// the FPGA-resource comparison against a dedicated Softmax unit.
+pub fn fig21() -> String {
+    let a = AreaModel::default();
+    let mut t = Table::new("Fig 21A — per-bank logic-die area (UMC 28nm)", &["component", "mm^2"]);
+    t.rowv(vec!["4x SRAM-PIM macro".into(), fnum(4.0 * a.sram_macro_mm2)]);
+    t.rowv(vec!["4x router".into(), fnum(4.0 * a.router_mm2)]);
+    t.rowv(vec!["total (fits under 1mm^2 DRAM bank)".into(), fnum(a.bank_logic_mm2())]);
+    t.rowv(vec![
+        "Curry ALUs per router (2.94% of router)".into(),
+        fnum(a.curry_alu_mm2()),
+    ]);
+    let c = curry_alus_resources();
+    let s = softmax_unit_resources();
+    let mut t2 = Table::new(
+        "Fig 21B — FPGA resources: 4 Curry ALUs vs 16-input Softmax unit",
+        &["design", "LUTs", "FFs", "BRAM(KB)"],
+    );
+    t2.rowv(vec!["4x Curry ALU (stream)".into(), (4 * c.luts).to_string(), (4 * c.ffs).to_string(), c.bram_kb.to_string()]);
+    t2.rowv(vec!["Softmax-16 unit (buffered)".into(), s.luts.to_string(), s.ffs.to_string(), s.bram_kb.to_string()]);
+    t.render() + "\n" + &t2.render()
+}
+
+/// Fig 22: latency of the non-linear path — distributed Curry ALUs vs the
+/// centralized NLU round trip, per softmax batch.
+pub fn fig22() -> String {
+    let hw = HwConfig::paper();
+    let mut t = Table::new(
+        "Fig 22 — non-linear latency: centralized NLU vs Curry ALUs (softmax rows of seqlen)",
+        &["seqlen", "rows", "NLU(us)", "Curry(us)", "reduction"],
+    );
+    let banks: u64 = 512;
+    for (seq, rows) in [(4096u64, 512u64), (16384, 512), (65536, 512), (131072, 512)] {
+        let elems = seq * rows;
+        let nlu =
+            coll::nlu_roundtrip(elems * 2, elems * 2, 5 * elems, 32, &hw.dram).latency_ns;
+        let per_bank = elems.div_ceil(banks);
+        let curry = coll::noc_exp(per_bank, 8, &hw.noc)
+            .then(&coll::noc_reduce(rows.div_ceil(32), 16, &hw.noc))
+            .then(&coll::noc_scalar_stream(per_bank, &hw.noc))
+            .latency_ns;
+        t.rowv(vec![
+            seq.to_string(),
+            rows.to_string(),
+            fnum(nlu / 1e3),
+            fnum(curry / 1e3),
+            format!("{:.0}%", (1.0 - curry / nlu) * 100.0),
+        ]);
+    }
+    t.render()
+}
+
+/// Fig 23: path generation (instruction fusion) latency profits, measured
+/// on the real ISA machine executing the Fig 13 exponential program.
+pub fn fig23() -> String {
+    let hw = HwConfig::paper();
+    let mut t = Table::new(
+        "Fig 23 — path-generation profits (exp program on the ISA machine)",
+        &["elems/bank", "rounds", "base(us)", "fused(us)", "saving"],
+    );
+    for (len, rounds) in [(8usize, 4u32), (16, 6), (32, 6)] {
+        let run = |fuse: bool| {
+            let mut m = Machine::new(&hw, SramGang::In256Out16);
+            let xs: Vec<f32> = (0..len).map(|i| 0.05 * i as f32 - 0.4).collect();
+            m.write_row(0, 0, &xs);
+            let p = RowProgram::exp_program(0, 2000, len, rounds, 1);
+            m.run(&p, fuse).latency_ns
+        };
+        let base = run(false);
+        let fused = run(true);
+        t.rowv(vec![
+            len.to_string(),
+            rounds.to_string(),
+            fnum(base / 1e3),
+            fnum(fused / 1e3),
+            format!("{:.0}%", (1.0 - fused / base) * 100.0),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig21_curry_share_and_fit() {
+        let s = fig21();
+        assert!(s.contains("0.8195") || s.contains("0.819"));
+        assert!(s.contains("Curry ALU"));
+    }
+
+    #[test]
+    fn fig22_reduction_band() {
+        // paper: ~30% total non-linear compression, 25% long-text; the
+        // distributed path should win clearly at long context
+        let s = fig22();
+        let reductions: Vec<f64> = s
+            .lines()
+            .filter_map(|l| l.split_whitespace().last()?.strip_suffix('%')?.parse().ok())
+            .collect();
+        assert!(!reductions.is_empty());
+        assert!(
+            reductions.iter().any(|r| *r >= 25.0),
+            "expected >=25% somewhere: {reductions:?}"
+        );
+    }
+
+    #[test]
+    fn fig23_saving_band() {
+        // paper: 33-50% latency optimization from path generation
+        let s = fig23();
+        let savings: Vec<f64> = s
+            .lines()
+            .filter_map(|l| l.split_whitespace().last()?.strip_suffix('%')?.parse().ok())
+            .collect();
+        assert!(!savings.is_empty());
+        for v in &savings {
+            assert!((25.0..95.0).contains(v), "fusion saving {v}%:\n{s}");
+        }
+    }
+}

@@ -1,0 +1,587 @@
+//! The channel-level machine: a functional + timing interpreter for
+//! Row-Level programs, executing NoC traffic on the real mesh simulator and
+//! memory/matrix work through the substrate models.
+//!
+//! This is the reference semantics of the hierarchical ISA: integration
+//! tests run the same computation here, through the Pallas kernels (via the
+//! AOT HLO artifacts), and through the pure-jnp oracle, and require
+//! agreement.
+
+use crate::config::{HwConfig, SramGang};
+use crate::dram::PimBank;
+use crate::noc::packet::{Packet, PacketType, PathStep, RouterId, StepOp};
+use crate::noc::{exchange, trees, Mesh};
+use crate::sim::{CostCounts, OpCost};
+use crate::sram::bank::{SramBank, WeightPolicy};
+use crate::util::bf16::bf16_round;
+
+use super::row::{AccessDir, Addr, ArgSrc, ExchangeMode, RowInst, RowProgram};
+use super::translate::{plan, FusedChain, Plan};
+
+/// Per-bank memory capacity ceiling in elements (the interpreter is for
+/// validation-scale programs; storage grows lazily on first touch — §Perf:
+/// eagerly zeroing 16 banks x 64K elements dominated Machine::new with page
+/// faults).
+pub const BANK_MEM_ELEMS: usize = 1 << 16;
+
+/// The interpreter machine for one CompAir channel.
+pub struct Machine {
+    pub hw: HwConfig,
+    pub gang: SramGang,
+    pub n_banks: usize,
+    /// Flat per-bank element memory.
+    pub mem: Vec<Vec<f32>>,
+    pub mesh: Mesh,
+    /// Per-bank loaded SRAM gang weights: (out, in, row-major weights).
+    sram_loaded: Vec<Option<(usize, usize, Vec<f32>)>>,
+    dram: PimBank,
+    sram: SramBank,
+}
+
+impl Machine {
+    pub fn new(hw: &HwConfig, gang: SramGang) -> Self {
+        let n_banks = hw.dram.banks_per_channel;
+        Self {
+            hw: hw.clone(),
+            gang,
+            n_banks,
+            mem: vec![Vec::new(); n_banks],
+            mesh: Mesh::new(&hw.noc),
+            sram_loaded: vec![None; n_banks],
+            dram: PimBank::new(&hw.dram),
+            sram: SramBank::new(&hw.sram, gang, &hw.dram),
+        }
+    }
+
+    fn ensure(&mut self, bank: usize, end: Addr) {
+        assert!(end <= BANK_MEM_ELEMS, "address {end} beyond bank memory model");
+        if self.mem[bank].len() < end {
+            self.mem[bank].resize(end, 0.0);
+        }
+    }
+
+    pub fn write_row(&mut self, bank: usize, addr: Addr, data: &[f32]) {
+        self.ensure(bank, addr + data.len());
+        for (i, &v) in data.iter().enumerate() {
+            self.mem[bank][addr + i] = bf16_round(v);
+        }
+    }
+
+    pub fn read_row(&self, bank: usize, addr: Addr, len: usize) -> Vec<f32> {
+        // reads of never-written space see zeros (fresh DRAM model)
+        let mem = &self.mem[bank];
+        (addr..addr + len).map(|i| mem.get(i).copied().unwrap_or(0.0)).collect()
+    }
+
+    /// Read one element (hot path inside chain waves).
+    #[inline]
+    fn rd1(&self, bank: usize, addr: Addr) -> f32 {
+        self.mem[bank].get(addr).copied().unwrap_or(0.0)
+    }
+
+    /// Write one element (hot path inside chain waves).
+    #[inline]
+    fn wr1(&mut self, bank: usize, addr: Addr, v: f32) {
+        self.ensure(bank, addr + 1);
+        self.mem[bank][addr] = v;
+    }
+
+    fn active_banks(&self, mask: u64) -> Vec<usize> {
+        (0..self.n_banks).filter(|b| mask >> b & 1 == 1).collect()
+    }
+
+    /// Execute a program; `fuse` toggles path generation (Fig 23's levers).
+    pub fn run(&mut self, prog: &RowProgram, fuse: bool) -> OpCost {
+        let plans = plan(&prog.insts, fuse);
+        let mut cost = OpCost::zero();
+        for p in &plans {
+            let c = match p {
+                Plan::Chain(chain) => self.run_chain(chain),
+                Plan::Other(inst) => self.run_other(inst),
+            };
+            cost = cost.then(&c);
+        }
+        cost
+    }
+
+    /// Execute one fused scalar chain on the mesh, wave by wave.
+    fn run_chain(&mut self, chain: &FusedChain) -> OpCost {
+        let banks = self.active_banks(chain.mask);
+        if banks.is_empty() || chain.len == 0 {
+            return OpCost::zero();
+        }
+        let cols = self.hw.noc.mesh_cols;
+        let width = chain.lane_width();
+        let lanes_per_bank = (cols / width).max(1);
+        let configs = chain.alu_configs();
+
+        // DRAM: read the source row once per bank (fused chains hit DRAM at
+        // the endpoints only); per-element Row args are read in the same
+        // streaming pass.
+        let n_row_args =
+            chain.steps.iter().filter(|(_, a, ..)| matches!(a, ArgSrc::Row(_))).count();
+        let rd_bytes = (chain.len * 2 * (1 + n_row_args)) as u64;
+        let mut cost = self.dram.read(rd_bytes).replicate(banks.len() as u64);
+
+        // Static Imm configs: once per (bank, lane) over the local port.
+        let mut config_flits = 0u64;
+        for &b in &banks {
+            for lane in 0..lanes_per_bank {
+                let base = lane * width;
+                for (ci, alu, arg, iter_op, iter_arg) in &configs {
+                    if let ArgSrc::Imm(v) = arg {
+                        self.mesh.configure_alu(
+                            RouterId::new((base + ci) % cols, b),
+                            *alu,
+                            *v,
+                            *iter_op,
+                            *iter_arg,
+                        );
+                        config_flits += 1;
+                    }
+                }
+            }
+        }
+        cost = cost.then(&OpCost {
+            latency_ns: configs.len() as f64 * self.hw.noc.cycle_ns,
+            counts: CostCounts { noc_flit_hops: config_flits, ..Default::default() },
+        });
+
+        // Waves: one element per (bank, lane) per wave.
+        let needs_iter_reset = configs.iter().any(|(_, _, a, _, _)| {
+            matches!(a, ArgSrc::Imm(_))
+        }) && chain.steps.iter().any(|(_, _, it, _, _)| *it);
+        let waves = chain.len.div_ceil(lanes_per_bank);
+        for w in 0..waves {
+            let mut tags: Vec<(u64, usize, usize)> = Vec::new(); // (pkt, bank, elem)
+            for &b in &banks {
+                for lane in 0..lanes_per_bank {
+                    let e = w * lanes_per_bank + lane;
+                    if e >= chain.len {
+                        continue;
+                    }
+                    let base = lane * width;
+                    // Reset iterating Imm ArgRegs for this element.
+                    if w > 0 && needs_iter_reset {
+                        for (ci, alu, arg, iter_op, iter_arg) in &configs {
+                            if let ArgSrc::Imm(v) = arg {
+                                self.mesh.configure_alu(
+                                    RouterId::new((base + ci) % cols, b),
+                                    *alu,
+                                    *v,
+                                    *iter_op,
+                                    *iter_arg,
+                                );
+                            }
+                        }
+                    }
+                    // Per-element Row args: WrReg packets ahead of compute.
+                    for (ci, alu, arg, _, _) in &configs {
+                        if let ArgSrc::Row(row) = arg {
+                            let at = RouterId::new((base + ci) % cols, b);
+                            let val = self.rd1(b, *row + e);
+                            self.mesh.inject(Packet::new(
+                                PacketType::Write,
+                                at,
+                                val,
+                                vec![PathStep::write_reg(at, *alu as u8)],
+                            ));
+                        }
+                    }
+                    let path = chain.emit_path(b, base, cols);
+                    let data = self.rd1(b, chain.src + e);
+                    let pkt = Packet::new(PacketType::Scalar, path[0].at, data, path)
+                        .with_iter(chain.iter_num);
+                    tags.push((self.mesh.inject(pkt), b, e));
+                }
+            }
+            cost = cost.then(&self.mesh.run(1_000_000));
+            for d in self.mesh.take_deliveries() {
+                if let Some((_, b, e)) = tags.iter().find(|(id, _, _)| *id == d.packet_id) {
+                    self.wr1(*b, chain.dst + e, d.value);
+                }
+            }
+        }
+
+        // DRAM: write the destination row once per bank.
+        cost.then(&self.dram.write((chain.len * 2) as u64).replicate(banks.len() as u64))
+    }
+
+    fn run_other(&mut self, inst: &RowInst) -> OpCost {
+        match inst {
+            RowInst::Fill { dst, mask, len, value } => {
+                let banks = self.active_banks(*mask);
+                for &b in &banks {
+                    self.ensure(b, dst + *len);
+                    for i in 0..*len {
+                        self.mem[b][dst + i] = bf16_round(*value);
+                    }
+                }
+                self.dram.write((*len * 2) as u64).replicate(banks.len() as u64)
+            }
+            RowInst::NocAccess { dir, addr, mask, alu, value } => {
+                let banks = self.active_banks(*mask);
+                match dir {
+                    AccessDir::Wr => {
+                        for &b in &banks {
+                            for x in 0..self.hw.noc.mesh_cols {
+                                self.mesh.configure_alu(
+                                    RouterId::new(x, b),
+                                    *alu as usize,
+                                    *value,
+                                    StepOp::Sub,
+                                    0.0,
+                                );
+                            }
+                        }
+                    }
+                    AccessDir::Rd => {
+                        for &b in &banks {
+                            let v = self.mesh.alu_arg(RouterId::new(0, b), *alu as usize);
+                            self.wr1(b, *addr, v);
+                        }
+                    }
+                }
+                OpCost {
+                    latency_ns: self.hw.noc.cycle_ns,
+                    counts: CostCounts {
+                        noc_flit_hops: banks.len() as u64,
+                        ..Default::default()
+                    },
+                }
+            }
+            RowInst::NocBCast { src, dst, mask, src_bank, len } => {
+                let banks = self.active_banks(*mask);
+                let group = self.n_banks; // tree spans the channel
+                let mut cost = self.dram.read((*len * 2) as u64);
+                let cols = self.hw.noc.mesh_cols;
+                for chunk in (0..*len).collect::<Vec<_>>().chunks(cols) {
+                    let vals: Vec<f32> =
+                        chunk.iter().map(|&e| self.rd1(*src_bank, src + e)).collect();
+                    let r = trees::broadcast(&mut self.mesh, &vals, *src_bank, group);
+                    for (col, bank, v) in &r.deliveries {
+                        if banks.contains(bank) {
+                            self.wr1(*bank, dst + chunk[*col], *v);
+                        }
+                    }
+                    cost = cost.then(&r.cost);
+                }
+                // source bank keeps its own copy
+                for e in 0..*len {
+                    let v = self.rd1(*src_bank, src + e);
+                    self.wr1(*src_bank, dst + e, v);
+                }
+                cost.then(&self.dram.write((*len * 2) as u64).replicate(banks.len() as u64))
+            }
+            RowInst::NocReduce { op, src, dst, mask, dst_bank, len } => {
+                let banks = self.active_banks(*mask);
+                let identity = match op {
+                    StepOp::Add | StepOp::Sub => 0.0,
+                    StepOp::Mul | StepOp::Div => 1.0,
+                };
+                let group = self.n_banks;
+                let cols = self.hw.noc.mesh_cols;
+                let mut cost = self.dram.read((*len * 2) as u64).replicate(banks.len() as u64);
+                for chunk in (0..*len).collect::<Vec<_>>().chunks(cols) {
+                    let per_col: Vec<Vec<f32>> = chunk
+                        .iter()
+                        .map(|&e| {
+                            (0..group)
+                                .map(|b| {
+                                    if banks.contains(&b) {
+                                        self.rd1(b, src + e)
+                                    } else {
+                                        identity
+                                    }
+                                })
+                                .collect()
+                        })
+                        .collect();
+                    let r = trees::reduce(&mut self.mesh, &per_col, *op, *dst_bank, group);
+                    for (ci, &e) in chunk.iter().enumerate() {
+                        self.wr1(*dst_bank, dst + e, r.values[ci]);
+                    }
+                    cost = cost.then(&r.cost);
+                }
+                cost.then(&self.dram.write((*len * 2) as u64))
+            }
+            RowInst::NocExchange { mode, src, dst, mask, offset, group, len } => {
+                let banks = self.active_banks(*mask);
+                match mode {
+                    ExchangeMode::RMinus | ExchangeMode::RPlus => {
+                        assert_eq!((*offset, *group), (1, 2), "row exchange supports pair swap");
+                        for &b in &banks {
+                            let x = self.read_row(b, *src, *len);
+                            let out = if *mode == ExchangeMode::RMinus {
+                                exchange::rope_rearrange(&x)
+                            } else {
+                                // plain pair swap
+                                let mut o = x.clone();
+                                for p in 0..*len / 2 {
+                                    o.swap(2 * p, 2 * p + 1);
+                                }
+                                o
+                            };
+                            self.write_row(b, *dst, &out);
+                        }
+                        let per_bank = exchange::exchange_cost(*len, &self.hw.noc);
+                        per_bank
+                            .replicate(banks.len() as u64)
+                            .then(&self.dram.read((*len * 2) as u64).replicate(banks.len() as u64))
+                            .then(&self.dram.write((*len * 2) as u64).replicate(banks.len() as u64))
+                    }
+                    ExchangeMode::TMinus | ExchangeMode::TPlus => {
+                        // Inter-bank exchange: bank b swaps its row with bank
+                        // (b±offset) within groups of `group` banks.
+                        let mut new_rows: Vec<(usize, Vec<f32>)> = Vec::new();
+                        for &b in &banks {
+                            let gbase = b / group * group;
+                            let partner = gbase + (b - gbase + offset) % group;
+                            let mut row = self.read_row(partner, *src, *len);
+                            if *mode == ExchangeMode::TMinus && (b - gbase) % 2 == 0 {
+                                for v in row.iter_mut() {
+                                    *v = bf16_round(-*v);
+                                }
+                            }
+                            new_rows.push((b, row));
+                        }
+                        for (b, row) in new_rows {
+                            self.write_row(b, *dst, &row);
+                        }
+                        // cost: len scalars × hop distance `offset` through
+                        // the column mesh, 4 columns wide
+                        let hops = (*len as u64).div_ceil(4) * *offset as u64;
+                        OpCost {
+                            latency_ns: hops as f64 * self.hw.noc.cycle_ns,
+                            counts: CostCounts {
+                                noc_flit_hops: *len as u64 * *offset as u64 * banks.len() as u64,
+                                ..Default::default()
+                            },
+                        }
+                        .then(&self.dram.read((*len * 2) as u64).replicate(banks.len() as u64))
+                        .then(&self.dram.write((*len * 2) as u64).replicate(banks.len() as u64))
+                    }
+                }
+            }
+            RowInst::SramWrite { addr, mask, len } => {
+                let banks = self.active_banks(*mask);
+                let (gi, go) = self.gang.shape(&self.hw.sram);
+                assert!(*len <= gi * go, "gang holds {}x{} weights", go, gi);
+                for &b in &banks {
+                    let w = self.read_row(b, *addr, *len);
+                    // shape resolved at SRAM_Compute (fixed gang dataflow:
+                    // in = compute length, out = len / in)
+                    self.sram_loaded[b] = Some((0, 0, w));
+                }
+                self.dram
+                    .read_to_sram((*len * 2) as u64)
+                    .replicate(banks.len() as u64)
+            }
+            RowInst::SramCompute { src, dst, mask, len } => {
+                let banks = self.active_banks(*mask);
+                let mut total = OpCost::zero();
+                for &b in &banks {
+                    let (_, _, w) =
+                        self.sram_loaded[b].clone().expect("SRAM_Compute before SRAM_Write");
+                    assert!(
+                        w.len() % *len == 0,
+                        "weight count {} not divisible by input length {len}",
+                        w.len()
+                    );
+                    let (inp, out) = (*len, w.len() / *len);
+                    let x = self.read_row(b, *src, *len);
+                    let y = PimBank::gemv_f32(&w, &x, out, inp);
+                    self.write_row(b, *dst, &y);
+                    total = total.join(&self.sram.gemm(out, inp, 1, WeightPolicy::Resident));
+                }
+                total
+            }
+            RowInst::DramGemv { w, src, dst, mask, out_dim, in_dim } => {
+                let banks = self.active_banks(*mask);
+                let mut total = OpCost::zero();
+                for &b in &banks {
+                    let wm = self.read_row(b, *w, out_dim * in_dim);
+                    let x = self.read_row(b, *src, *in_dim);
+                    let y = PimBank::gemv_f32(&wm, &x, *out_dim, *in_dim);
+                    self.write_row(b, *dst, &y);
+                    total = total.join(&self.dram.gemv(*out_dim, *in_dim, 1));
+                }
+                total
+            }
+            RowInst::NocScalar { .. } => unreachable!("scalars are planned as chains"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::row::ALL_BANKS;
+    use crate::noc::curry::curry_exp;
+
+    fn machine() -> Machine {
+        Machine::new(&HwConfig::paper(), SramGang::In256Out16)
+    }
+
+    #[test]
+    fn fill_and_rows() {
+        let mut m = machine();
+        let c = m.run(
+            &{
+                let mut p = RowProgram::new();
+                p.push(RowInst::Fill { dst: 4, mask: 0b11, len: 3, value: 2.5 });
+                p
+            },
+            true,
+        );
+        assert_eq!(m.read_row(0, 4, 3), vec![2.5; 3]);
+        assert_eq!(m.read_row(1, 4, 3), vec![2.5; 3]);
+        assert_eq!(m.read_row(2, 4, 3), vec![0.0; 3]);
+        assert!(c.latency_ns > 0.0);
+    }
+
+    #[test]
+    fn scalar_add_applies_per_bank() {
+        let mut m = machine();
+        m.write_row(0, 0, &[1.0, 2.0, 3.0, 4.0]);
+        m.write_row(5, 0, &[10.0, 20.0, 30.0, 40.0]);
+        let mut p = RowProgram::new();
+        p.push(RowInst::scalar(StepOp::Add, 0, 100, 4, 0.5));
+        m.run(&p, true);
+        assert_eq!(m.read_row(0, 100, 4), vec![1.5, 2.5, 3.5, 4.5]);
+        assert_eq!(m.read_row(5, 100, 4), vec![10.5, 20.5, 30.5, 40.5]);
+    }
+
+    #[test]
+    fn exp_program_matches_curry_reference() {
+        let mut m = machine();
+        let xs = [0.5f32, -0.25, 1.0, 0.125];
+        m.write_row(2, 0, &xs);
+        let p = RowProgram::exp_program(0, 500, xs.len(), 6, 1 << 2);
+        m.run(&p, true);
+        let got = m.read_row(2, 500, xs.len());
+        for (i, &x) in xs.iter().enumerate() {
+            let expect = curry_exp(x, 6);
+            assert_eq!(got[i], expect, "elem {i}: x={x}");
+        }
+    }
+
+    #[test]
+    fn fused_and_unfused_agree_functionally() {
+        let xs = [0.3f32, -0.6, 0.9, -1.2, 0.1, 0.7];
+        let run = |fuse: bool| {
+            let mut m = machine();
+            m.write_row(1, 0, &xs);
+            let p = RowProgram::exp_program(0, 500, xs.len(), 5, 1 << 1);
+            let c = m.run(&p, fuse);
+            (m.read_row(1, 500, xs.len()), c)
+        };
+        let (v_fused, c_fused) = run(true);
+        let (v_base, c_base) = run(false);
+        assert_eq!(v_fused, v_base, "fusion must not change results");
+        // Fig 23: path generation saves 33-50% latency.
+        let saving = 1.0 - c_fused.latency_ns / c_base.latency_ns;
+        assert!(saving > 0.30, "path generation saving too small: {saving:.3}");
+    }
+
+    #[test]
+    fn reduce_program() {
+        let mut m = machine();
+        for b in 0..16 {
+            m.write_row(b, 0, &[b as f32, 1.0]);
+        }
+        let mut p = RowProgram::new();
+        p.push(RowInst::NocReduce {
+            op: StepOp::Add,
+            src: 0,
+            dst: 50,
+            mask: ALL_BANKS,
+            dst_bank: 3,
+            len: 2,
+        });
+        m.run(&p, true);
+        assert_eq!(m.read_row(3, 50, 2), vec![120.0, 16.0]);
+    }
+
+    #[test]
+    fn broadcast_program() {
+        let mut m = machine();
+        m.write_row(7, 10, &[3.25, -1.5, 8.0]);
+        let mut p = RowProgram::new();
+        p.push(RowInst::NocBCast { src: 10, dst: 20, mask: ALL_BANKS, src_bank: 7, len: 3 });
+        m.run(&p, true);
+        for b in 0..16 {
+            assert_eq!(m.read_row(b, 20, 3), vec![3.25, -1.5, 8.0], "bank {b}");
+        }
+    }
+
+    #[test]
+    fn rope_exchange_program() {
+        let mut m = machine();
+        let x: Vec<f32> = (1..=8).map(|i| i as f32).collect();
+        m.write_row(4, 0, &x);
+        let mut p = RowProgram::new();
+        p.push(RowInst::rope_exchange(0, 64, 8));
+        m.run(&p, true);
+        assert_eq!(m.read_row(4, 64, 8), exchange::rope_rearrange(&x));
+    }
+
+    #[test]
+    fn sram_write_then_compute() {
+        let mut m = machine();
+        // 4 outputs × 8 inputs weight tile in bank 0
+        let w: Vec<f32> = (0..32).map(|i| (i % 5) as f32 * 0.25).collect();
+        let x: Vec<f32> = (0..8).map(|i| i as f32 * 0.5).collect();
+        m.write_row(0, 0, &w);
+        m.write_row(0, 100, &x);
+        let mut p = RowProgram::new();
+        p.push(RowInst::SramWrite { addr: 0, mask: 1, len: 32 });
+        p.push(RowInst::SramCompute { src: 100, dst: 200, mask: 1, len: 8 });
+        m.run(&p, true);
+        let got = m.read_row(0, 200, 4);
+        let expect = PimBank::gemv_f32(&w, &x, 4, 8);
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    #[should_panic(expected = "SRAM_Compute before SRAM_Write")]
+    fn sram_compute_requires_weights() {
+        let mut m = machine();
+        let mut p = RowProgram::new();
+        p.push(RowInst::SramCompute { src: 0, dst: 8, mask: 1, len: 8 });
+        m.run(&p, true);
+    }
+
+    #[test]
+    fn dram_gemv_program() {
+        let mut m = machine();
+        let w = vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0]; // 3x2
+        let x = vec![2.0, 3.0];
+        m.write_row(0, 0, &w);
+        m.write_row(0, 10, &x);
+        let mut p = RowProgram::new();
+        p.push(RowInst::DramGemv { w: 0, src: 10, dst: 20, mask: 1, out_dim: 3, in_dim: 2 });
+        m.run(&p, true);
+        assert_eq!(m.read_row(0, 20, 3), vec![2.0, 3.0, 5.0]);
+    }
+
+    #[test]
+    fn inter_bank_exchange() {
+        let mut m = machine();
+        m.write_row(0, 0, &[1.0, 2.0]);
+        m.write_row(1, 0, &[3.0, 4.0]);
+        let mut p = RowProgram::new();
+        p.push(RowInst::NocExchange {
+            mode: ExchangeMode::TPlus,
+            src: 0,
+            dst: 32,
+            mask: 0b11,
+            offset: 1,
+            group: 2,
+            len: 2,
+        });
+        m.run(&p, true);
+        assert_eq!(m.read_row(0, 32, 2), vec![3.0, 4.0]);
+        assert_eq!(m.read_row(1, 32, 2), vec![1.0, 2.0]);
+    }
+}

@@ -1,0 +1,11 @@
+//! Hierarchical ISA (paper §5): the SIMD Row-Level programming interface
+//! (Table 1), the Packet-Level execution format (Table 2, in `noc::packet`),
+//! the autonomous translator with path-generation fusion (§5.2), and the
+//! channel-level machine interpreting programs functionally + in time.
+pub mod interp;
+pub mod row;
+pub mod translate;
+
+pub use interp::Machine;
+pub use row::{AccessDir, Addr, ArgSrc, ExchangeMode, Mask, RowInst, RowProgram, ALL_BANKS};
+pub use translate::{plan, FusedChain, Plan};

@@ -1,0 +1,252 @@
+//! Row-Level ISA (paper Table 1) — the SIMD programming interface exposed to
+//! the user. Instructions are issued at DRAM-bank granularity: every masked
+//! bank executes the same instruction on its own rows.
+
+use crate::noc::StepOp;
+
+/// Where a NoC_Scalar's ArgReg value comes from: an immediate shared by all
+/// elements (the Config/Const NUM2 field), or a per-element value loaded
+/// from a bank row (the exponential's per-scalar `x`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArgSrc {
+    Imm(f32),
+    Row(usize),
+}
+
+/// A bank-relative scalar address (flattened DRAM row/column offset in
+/// elements; the interpreter gives each bank a flat BF16 element space).
+pub type Addr = usize;
+
+/// Read/Write selector of NoC_Access.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccessDir {
+    Rd,
+    Wr,
+}
+
+/// NoC_Exchange mode: T = inter-bank, R = intra-row; +/- = whether the
+/// value landing on the even slot is negated (RoPE needs '-').
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExchangeMode {
+    TPlus,
+    TMinus,
+    RPlus,
+    RMinus,
+}
+
+/// Bank participation mask (bit b = bank b of the channel; the paper's
+/// 64-bit router mask at 4 routers/bank collapses to 16 bank bits here,
+/// with router fan-out chosen by the translator).
+pub type Mask = u64;
+
+pub const ALL_BANKS: Mask = 0xFFFF;
+
+/// One Row-Level instruction (Table 1).
+#[derive(Debug, Clone, PartialEq)]
+pub enum RowInst {
+    /// One in-transit computation per masked bank:
+    /// `dst[i] = src[i] (op) arg` for `len` scalars, through the bank's
+    /// routers. `iter_tag` requests the ArgReg-update mode with
+    /// (`iter_op`, `iter_arg`) — Fig 13's dynamic arguments.
+    NocScalar {
+        op: StepOp,
+        src: Addr,
+        dst: Addr,
+        mask: Mask,
+        len: usize,
+        arg: ArgSrc,
+        iter_tag: bool,
+        iter_op: StepOp,
+        iter_arg: f32,
+    },
+    /// Read or write Curry-ALU registers directly.
+    NocAccess { dir: AccessDir, addr: Addr, mask: Mask, alu: u8, value: f32 },
+    /// Broadcast `len` scalars from `src_bank`'s `src` to every masked
+    /// bank's `dst` through the broadcast tree.
+    NocBCast { src: Addr, dst: Addr, mask: Mask, src_bank: usize, len: usize },
+    /// Reduce `len` scalars element-wise across masked banks into
+    /// `dst_bank`'s `dst` through the reduce tree.
+    NocReduce { op: StepOp, src: Addr, dst: Addr, mask: Mask, dst_bank: usize, len: usize },
+    /// Data exchange: position x swaps with (x+offset)%group; '-' modes
+    /// negate the value landing on the lower slot (RoPE: offset=1, group=2).
+    NocExchange { mode: ExchangeMode, src: Addr, dst: Addr, mask: Mask, offset: usize, group: usize, len: usize },
+    /// Load `len` BF16 weights from `addr` into the bank's SRAM-PIM gang
+    /// (row-major `out × in` for the gang shape).
+    SramWrite { addr: Addr, mask: Mask, len: usize },
+    /// Feed `len` inputs from `src` through the gang, write the gang's
+    /// outputs at `dst`.
+    SramCompute { src: Addr, dst: Addr, mask: Mask, len: usize },
+    /// DRAM-PIM bank-local GeMV (the baseline MAC path): weights at `w`
+    /// (`out×in` row-major), input vector at `src`, result at `dst`.
+    DramGemv { w: Addr, src: Addr, dst: Addr, mask: Mask, out_dim: usize, in_dim: usize },
+    /// Fill `len` elements at `dst` with a constant (bank-local write).
+    Fill { dst: Addr, mask: Mask, len: usize, value: f32 },
+}
+
+impl RowInst {
+    /// Convenience: a simple NoC_Scalar with a static immediate ArgReg.
+    pub fn scalar(op: StepOp, src: Addr, dst: Addr, len: usize, arg: f32) -> RowInst {
+        RowInst::NocScalar {
+            op,
+            src,
+            dst,
+            mask: ALL_BANKS,
+            len,
+            arg: ArgSrc::Imm(arg),
+            iter_tag: false,
+            iter_op: StepOp::Sub,
+            iter_arg: 0.0,
+        }
+    }
+
+    /// The RoPE rearrangement as written in the paper (§5.1):
+    /// `NoC_Exchange(R-, SrcRow, DstRow, 1, 2)`.
+    pub fn rope_exchange(src: Addr, dst: Addr, len: usize) -> RowInst {
+        RowInst::NocExchange {
+            mode: ExchangeMode::RMinus,
+            src,
+            dst,
+            mask: ALL_BANKS,
+            offset: 1,
+            group: 2,
+            len,
+        }
+    }
+
+    pub fn mask(&self) -> Mask {
+        match self {
+            RowInst::NocScalar { mask, .. }
+            | RowInst::NocAccess { mask, .. }
+            | RowInst::NocBCast { mask, .. }
+            | RowInst::NocReduce { mask, .. }
+            | RowInst::NocExchange { mask, .. }
+            | RowInst::SramWrite { mask, .. }
+            | RowInst::SramCompute { mask, .. }
+            | RowInst::DramGemv { mask, .. }
+            | RowInst::Fill { mask, .. } => *mask,
+        }
+    }
+
+    pub fn is_noc_scalar(&self) -> bool {
+        matches!(self, RowInst::NocScalar { .. })
+    }
+}
+
+/// A row-level program.
+#[derive(Debug, Clone, Default)]
+pub struct RowProgram {
+    pub insts: Vec<RowInst>,
+}
+
+impl RowProgram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, i: RowInst) -> &mut Self {
+        self.insts.push(i);
+        self
+    }
+
+    /// The Fig 13 / Fig 14B exponential over `len` scalars at `x_row`:
+    /// result = exp(x) via `rounds` Horner iterations of
+    /// {*=x → /=k (k−=1) → +=1}, written as 3×rounds chained NoC_Scalar
+    /// instructions — the conservative SIMD form the user writes, which the
+    /// translator's path generation fuses into one iterated packet.
+    /// The running value `t` starts at 1.0 (a Fill) and ping-pongs through
+    /// scratch rows; the Mul's ArgReg is loaded per element from `x_row`.
+    pub fn exp_program(x_row: Addr, dst: Addr, len: usize, rounds: u32, mask: Mask) -> RowProgram {
+        let mut p = RowProgram::new();
+        let scratch = |i: usize| dst + 1024 + i * 16;
+        p.push(RowInst::Fill { dst: scratch(0), mask, len, value: 1.0 });
+        let mut cur = scratch(0);
+        let mut k = rounds as f32;
+        let mut idx = 1;
+        for r in 0..rounds {
+            let last = r + 1 == rounds;
+            let nxt = scratch(idx);
+            p.push(RowInst::NocScalar {
+                op: StepOp::Mul,
+                src: cur,
+                dst: nxt,
+                mask,
+                len,
+                arg: ArgSrc::Row(x_row),
+                iter_tag: false,
+                iter_op: StepOp::Sub,
+                iter_arg: 0.0,
+            });
+            cur = nxt;
+            idx += 1;
+            let nxt = scratch(idx);
+            p.push(RowInst::NocScalar {
+                op: StepOp::Div,
+                src: cur,
+                dst: nxt,
+                mask,
+                len,
+                arg: ArgSrc::Imm(k),
+                iter_tag: true,
+                iter_op: StepOp::Sub,
+                iter_arg: 1.0,
+            });
+            cur = nxt;
+            idx += 1;
+            let nxt = if last { dst } else { scratch(idx) };
+            p.push(RowInst::NocScalar {
+                op: StepOp::Add,
+                src: cur,
+                dst: nxt,
+                mask,
+                len,
+                arg: ArgSrc::Imm(1.0),
+                iter_tag: false,
+                iter_op: StepOp::Sub,
+                iter_arg: 0.0,
+            });
+            cur = nxt;
+            idx += 1;
+            k -= 1.0;
+        }
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exp_program_shape() {
+        let p = RowProgram::exp_program(0, 100, 4, 6, ALL_BANKS);
+        assert_eq!(p.insts.len(), 19); // Fill + 18 scalars
+        assert!(p.insts[1..].iter().all(|i| i.is_noc_scalar()));
+        // chain property: dst of i == src of i+1
+        for w in p.insts[1..].windows(2) {
+            let (d1, s2) = match (&w[0], &w[1]) {
+                (RowInst::NocScalar { dst, .. }, RowInst::NocScalar { src, .. }) => (*dst, *src),
+                _ => unreachable!(),
+            };
+            assert_eq!(d1, s2);
+        }
+    }
+
+    #[test]
+    fn rope_exchange_encoding() {
+        let i = RowInst::rope_exchange(5, 9, 128);
+        match i {
+            RowInst::NocExchange { mode, offset, group, .. } => {
+                assert_eq!(mode, ExchangeMode::RMinus);
+                assert_eq!(offset, 1);
+                assert_eq!(group, 2);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn masks_accessible() {
+        let i = RowInst::scalar(StepOp::Add, 0, 1, 4, 2.0);
+        assert_eq!(i.mask(), ALL_BANKS);
+    }
+}

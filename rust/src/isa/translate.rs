@@ -1,0 +1,393 @@
+//! Autonomous Row-Level → Packet-Level translation (paper §5.2, Fig 14).
+//!
+//! Two mechanisms:
+//! * **Reduce/BCast instantiation** (Fig 14A): one SIMD NoC_Reduce row
+//!   instruction expands to per-bank packets following the fixed binary-tree
+//!   pattern (handled by `noc::trees`).
+//! * **Path generation** (Fig 14B): consecutive NoC_Scalar instructions
+//!   forming a producer-consumer chain (dst of one = src of the next) are
+//!   fused into a single packet whose path encodes the whole computation,
+//!   eliminating the conservative DRAM write-back between steps. Periodic
+//!   chains (the exponential's {*=x, /=k, +=1} blocks) compress further via
+//!   the packet's IterNum field.
+
+use crate::noc::packet::{PathStep, RouterId, StepOp};
+
+use super::row::{ArgSrc, RowInst};
+
+/// One fused (or single) scalar stage ready for packet emission.
+#[derive(Debug, Clone)]
+pub struct FusedChain {
+    /// Per-traversal steps (≤ 4): the ops and their ArgReg sources.
+    pub steps: Vec<(StepOp, ArgSrc, bool, StepOp, f32)>, // (op, arg, iter_tag, iter_op, iter_arg)
+    /// Path traversals encoded in IterNum (1 = non-periodic chain).
+    pub iter_num: u8,
+    pub src: usize,
+    pub dst: usize,
+    pub mask: u64,
+    pub len: usize,
+    /// How many row instructions this chain absorbed.
+    pub absorbed: usize,
+}
+
+impl FusedChain {
+    /// Distinct router columns this chain's lane occupies, honoring the
+    /// ALU-binding rule (Mul/Div → ALU0, Add/Sub → ALU1): two steps may
+    /// share a column only if they bind different ALUs or are the same
+    /// (op, arg) assignment.
+    pub fn lane_width(&self) -> usize {
+        // slot assignment: per column, track what each ALU is bound to.
+        let mut cols: Vec<[Option<(StepOp, String)>; 2]> = Vec::new();
+        for (op, arg, _, _, _) in &self.steps {
+            let alu = match op {
+                StepOp::Mul | StepOp::Div => 0usize,
+                StepOp::Add | StepOp::Sub => 1,
+            };
+            let key = (*op, format!("{arg:?}"));
+            let mut placed = false;
+            for c in cols.iter_mut() {
+                match &c[alu] {
+                    Some(k) if *k == key => {
+                        placed = true;
+                        break;
+                    }
+                    None => {
+                        c[alu] = Some(key.clone());
+                        placed = true;
+                        break;
+                    }
+                    _ => {}
+                }
+            }
+            if !placed {
+                let mut slot: [Option<(StepOp, String)>; 2] = [None, None];
+                slot[alu] = Some(key);
+                cols.push(slot);
+            }
+        }
+        cols.len().max(1)
+    }
+
+    /// Emit the path steps for a given bank row, mapping chain steps onto
+    /// router columns the same way `lane_width` does. `col_base` offsets the
+    /// column allocation so multiple lanes coexist in one bank.
+    pub fn emit_path(&self, bank: usize, col_base: usize, mesh_cols: usize) -> Vec<PathStep> {
+        let mut cols: Vec<[Option<(StepOp, String)>; 2]> = Vec::new();
+        let mut path = Vec::new();
+        for (op, arg, iter_tag, _, _) in &self.steps {
+            let alu = match op {
+                StepOp::Mul | StepOp::Div => 0usize,
+                StepOp::Add | StepOp::Sub => 1,
+            };
+            let key = (*op, format!("{arg:?}"));
+            let mut col_idx = None;
+            for (ci, c) in cols.iter_mut().enumerate() {
+                match &c[alu] {
+                    Some(k) if *k == key => {
+                        col_idx = Some(ci);
+                        break;
+                    }
+                    None => {
+                        c[alu] = Some(key.clone());
+                        col_idx = Some(ci);
+                        break;
+                    }
+                    _ => {}
+                }
+            }
+            let ci = col_idx.unwrap_or_else(|| {
+                let mut slot: [Option<(StepOp, String)>; 2] = [None, None];
+                slot[alu] = Some(key);
+                cols.push(slot);
+                cols.len() - 1
+            });
+            let at = RouterId::new((col_base + ci) % mesh_cols, bank);
+            let mut step =
+                if *iter_tag { PathStep::compute_iter(at, *op) } else { PathStep::compute(at, *op) };
+            step.at = at;
+            path.push(step);
+        }
+        path
+    }
+
+    /// The ALU configurations this chain requires for a bank/lane, as
+    /// (column offset, alu, arg-source, iter_op, iter_arg).
+    pub fn alu_configs(&self) -> Vec<(usize, usize, ArgSrc, StepOp, f32)> {
+        let mut cols: Vec<[Option<(StepOp, String)>; 2]> = Vec::new();
+        let mut out = Vec::new();
+        for (op, arg, _, iter_op, iter_arg) in &self.steps {
+            let alu = match op {
+                StepOp::Mul | StepOp::Div => 0usize,
+                StepOp::Add | StepOp::Sub => 1,
+            };
+            let key = (*op, format!("{arg:?}"));
+            let mut found = None;
+            for (ci, c) in cols.iter_mut().enumerate() {
+                match &c[alu] {
+                    Some(k) if *k == key => {
+                        found = Some((ci, true));
+                        break;
+                    }
+                    None => {
+                        c[alu] = Some(key.clone());
+                        found = Some((ci, false));
+                        break;
+                    }
+                    _ => {}
+                }
+            }
+            let (ci, dup) = found.unwrap_or_else(|| {
+                let mut slot: [Option<(StepOp, String)>; 2] = [None, None];
+                slot[alu] = Some(key);
+                cols.push(slot);
+                (cols.len() - 1, false)
+            });
+            if !dup {
+                out.push((ci, alu, arg.clone(), *iter_op, *iter_arg));
+            }
+        }
+        out
+    }
+}
+
+/// Split a row program into maximal fusable NoC_Scalar chains plus
+/// pass-through instructions. `fuse=false` reproduces the Fig 23 "Base"
+/// (every NoC_Scalar is its own chain with a DRAM round-trip).
+pub fn plan(insts: &[RowInst], fuse: bool) -> Vec<Plan> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < insts.len() {
+        match &insts[i] {
+            RowInst::NocScalar { .. } => {
+                let start = i;
+                let mut end = i + 1;
+                if fuse {
+                    while end < insts.len() && chains(&insts[end - 1], &insts[end]) {
+                        end += 1;
+                    }
+                }
+                out.extend(fuse_run(&insts[start..end]));
+                i = end;
+            }
+            other => {
+                out.push(Plan::Other(other.clone()));
+                i += 1;
+            }
+        }
+    }
+    out
+}
+
+/// Planned execution unit.
+#[derive(Debug, Clone)]
+pub enum Plan {
+    Chain(FusedChain),
+    Other(RowInst),
+}
+
+/// Can instruction `b` fuse behind `a`? (producer-consumer, same shape.)
+fn chains(a: &RowInst, b: &RowInst) -> bool {
+    match (a, b) {
+        (
+            RowInst::NocScalar { dst: d1, mask: m1, len: l1, .. },
+            RowInst::NocScalar { src: s2, mask: m2, len: l2, .. },
+        ) => d1 == s2 && m1 == m2 && l1 == l2,
+        _ => false,
+    }
+}
+
+fn scalar_parts(i: &RowInst) -> (StepOp, ArgSrc, bool, StepOp, f32, usize, usize, u64, usize) {
+    match i {
+        RowInst::NocScalar { op, src, dst, mask, len, arg, iter_tag, iter_op, iter_arg } => {
+            (*op, arg.clone(), *iter_tag, *iter_op, *iter_arg, *src, *dst, *mask, *len)
+        }
+        _ => unreachable!(),
+    }
+}
+
+/// Fuse one maximal chain run, detecting periodic blocks for IterNum
+/// compression. Emits one or more chains, each with ≤ 4 path steps.
+fn fuse_run(run: &[RowInst]) -> Vec<Plan> {
+    // Try period detection over the whole run first: period p such that the
+    // run is b identical-op blocks; args match the ArgReg recurrence.
+    for p in 1..=4usize.min(run.len()) {
+        if run.len() % p != 0 {
+            continue;
+        }
+        let blocks = run.len() / p;
+        if blocks < 2 || blocks > 15 {
+            continue;
+        }
+        if period_matches(run, p) {
+            let (_, _, _, _, _, src0, _, mask, len) = scalar_parts(&run[0]);
+            let (.., dst_last, _, _) = last_dst(run);
+            let steps = (0..p).map(|j| {
+                let (op, arg, it, iop, ia, ..) = scalar_parts(&run[j]);
+                (op, arg, it, iop, ia)
+            });
+            return vec![Plan::Chain(FusedChain {
+                steps: steps.collect(),
+                iter_num: blocks as u8,
+                src: src0,
+                dst: dst_last,
+                mask,
+                len,
+                absorbed: run.len(),
+            })];
+        }
+    }
+    // No periodicity: greedy 4-step windows.
+    run.chunks(4)
+        .map(|w| {
+            let (_, _, _, _, _, src0, _, mask, len) = scalar_parts(&w[0]);
+            let (.., dst_last, _, _) = last_dst(w);
+            Plan::Chain(FusedChain {
+                steps: w
+                    .iter()
+                    .map(|i| {
+                        let (op, arg, it, iop, ia, ..) = scalar_parts(i);
+                        (op, arg, it, iop, ia)
+                    })
+                    .collect(),
+                iter_num: 1,
+                src: src0,
+                dst: dst_last,
+                mask,
+                len,
+                absorbed: w.len(),
+            })
+        })
+        .collect()
+}
+
+fn last_dst(run: &[RowInst]) -> (StepOp, ArgSrc, usize, u64, usize) {
+    let (op, arg, _, _, _, _, dst, mask, len) = scalar_parts(run.last().unwrap());
+    (op, arg, dst, mask, len)
+}
+
+/// Does `run` consist of identical blocks of period `p`, where iterating
+/// steps follow their declared ArgReg recurrence and static steps repeat
+/// verbatim?
+fn period_matches(run: &[RowInst], p: usize) -> bool {
+    let blocks = run.len() / p;
+    for j in 0..p {
+        let (op0, arg0, it0, iop0, ia0, ..) = scalar_parts(&run[j]);
+        let mut expect = arg0.clone();
+        for b in 1..blocks {
+            let (op, arg, it, iop, ia, ..) = scalar_parts(&run[b * p + j]);
+            if op != op0 || it != it0 || iop != iop0 || ia != ia0 {
+                return false;
+            }
+            match (&expect, &arg) {
+                (ArgSrc::Row(r0), ArgSrc::Row(r)) if r0 == r => {}
+                (ArgSrc::Imm(v0), ArgSrc::Imm(v)) => {
+                    let want = if it0 { iop0.apply(*v0, ia0) } else { *v0 };
+                    if (want - *v).abs() > 1e-6 {
+                        return false;
+                    }
+                    expect = ArgSrc::Imm(*v);
+                }
+                _ => return false,
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::row::{RowProgram, ALL_BANKS};
+
+    #[test]
+    fn exp_program_fuses_to_one_iterated_packet() {
+        let p = RowProgram::exp_program(0, 100, 4, 6, ALL_BANKS);
+        let plans = plan(&p.insts, true);
+        // Fill passes through; the 18 scalars fuse to one chain.
+        assert_eq!(plans.len(), 2, "Fill + one fused chain expected");
+        match &plans[1] {
+            Plan::Chain(c) => {
+                assert_eq!(c.steps.len(), 3);
+                assert_eq!(c.iter_num, 6);
+                assert_eq!(c.absorbed, 18);
+                // Fig 13 layout: 2 router columns per lane
+                assert_eq!(c.lane_width(), 2);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn unfused_plan_is_one_chain_per_inst() {
+        let p = RowProgram::exp_program(0, 100, 4, 6, ALL_BANKS);
+        let plans = plan(&p.insts, false);
+        assert_eq!(plans.len(), 19); // Fill + 18 single-step chains
+        for pl in &plans[1..] {
+            match pl {
+                Plan::Chain(c) => {
+                    assert_eq!(c.steps.len(), 1);
+                    assert_eq!(c.iter_num, 1);
+                }
+                _ => panic!(),
+            }
+        }
+    }
+
+    #[test]
+    fn non_chained_scalars_do_not_fuse() {
+        use crate::noc::StepOp;
+        let mut p = RowProgram::new();
+        p.push(RowInst::scalar(StepOp::Add, 0, 10, 4, 1.0));
+        p.push(RowInst::scalar(StepOp::Add, 50, 60, 4, 1.0)); // src != prev dst
+        let plans = plan(&p.insts, true);
+        assert_eq!(plans.len(), 2);
+    }
+
+    #[test]
+    fn long_aperiodic_chain_splits_at_4_steps() {
+        use crate::noc::StepOp;
+        let mut p = RowProgram::new();
+        for k in 0..6 {
+            p.push(RowInst::scalar(StepOp::Add, k * 10, (k + 1) * 10, 4, k as f32 * 3.0 + 1.0));
+        }
+        let plans = plan(&p.insts, true);
+        assert_eq!(plans.len(), 2);
+        match (&plans[0], &plans[1]) {
+            (Plan::Chain(a), Plan::Chain(b)) => {
+                assert_eq!(a.steps.len(), 4);
+                assert_eq!(b.steps.len(), 2);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn emit_path_respects_alu_binding() {
+        let p = RowProgram::exp_program(0, 100, 1, 6, 1);
+        let plans = plan(&p.insts, true);
+        let c = match &plans[1] {
+            Plan::Chain(c) => c,
+            _ => panic!(),
+        };
+        let path = c.emit_path(3, 0, 4);
+        assert_eq!(path.len(), 3);
+        // Mul and Div are both ALU0-class with different args → different
+        // columns; Add shares Mul's column on ALU1.
+        assert_ne!(path[0].at, path[1].at);
+        assert_eq!(path[2].at, path[0].at);
+        assert!(path[1].iter_tag);
+        assert!(path.iter().all(|s| s.at.y == 3));
+    }
+
+    #[test]
+    fn mixed_program_passthrough() {
+        use crate::noc::StepOp;
+        let mut p = RowProgram::new();
+        p.push(RowInst::scalar(StepOp::Add, 0, 8, 4, 1.0));
+        p.push(RowInst::rope_exchange(8, 16, 16));
+        p.push(RowInst::scalar(StepOp::Mul, 16, 24, 4, 2.0));
+        let plans = plan(&p.insts, true);
+        assert_eq!(plans.len(), 3);
+        assert!(matches!(plans[1], Plan::Other(RowInst::NocExchange { .. })));
+    }
+}

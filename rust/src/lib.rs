@@ -1,0 +1,25 @@
+//! CompAir full-system reproduction library.
+//!
+//! Three-layer architecture:
+//! * L3 (this crate): cycle-approximate simulators for every hardware
+//!   substrate in the paper + the serving coordinator;
+//! * L2 (python/compile/model.py): JAX transformer block, AOT-lowered to HLO
+//!   text under `artifacts/`;
+//! * L1 (python/compile/kernels/): Pallas kernels for the compute hot-spots,
+//!   validated against a pure-jnp oracle.
+//!
+//! See DESIGN.md for the module inventory and the per-experiment index.
+pub mod arch;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod runtime;
+pub mod energy;
+pub mod figures;
+pub mod workload;
+pub mod isa;
+pub mod noc;
+pub mod dram;
+pub mod sim;
+pub mod sram;
+pub mod util;

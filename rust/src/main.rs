@@ -1,0 +1,186 @@
+//! The `compair` launcher: figure regeneration, one-shot simulation,
+//! serving simulation, and the hierarchical-ISA demo.
+
+use compair::arch;
+use compair::cli::{Args, USAGE};
+use compair::config::{ArchKind, ModelConfig, Phase, RunConfig};
+use compair::coordinator::{ServeConfig, Server};
+use compair::figures;
+use compair::isa::{Machine, RowProgram};
+use compair::util::table::{fenergy_pj, fnum, ftime_ns, Table};
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.command.as_str() {
+        "figures" => cmd_figures(&args),
+        "simulate" => cmd_simulate(&args),
+        "serve" => cmd_serve(&args),
+        "isa-demo" => cmd_isa_demo(&args),
+        "config" => {
+            println!("{}", figures::table3());
+            Ok(())
+        }
+        "list" => {
+            println!("figures:");
+            for (n, _) in figures::registry() {
+                println!("  {n}");
+            }
+            println!("models:");
+            for m in ModelConfig::zoo() {
+                println!("  {}", m.name);
+            }
+            println!("archs: cent cent-curry compair-base compair-opt");
+            Ok(())
+        }
+        "" | "help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => Err(format!("unknown command '{other}'\n{USAGE}")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_figures(args: &Args) -> Result<(), String> {
+    let names: Vec<String> = if args.has("all") || args.positional.is_empty() {
+        figures::registry().iter().map(|(n, _)| n.to_string()).collect()
+    } else {
+        args.positional.clone()
+    };
+    for n in names {
+        match figures::run(&n) {
+            Some(s) => println!("{s}"),
+            None => return Err(format!("unknown figure '{n}' (see `compair list`)")),
+        }
+    }
+    Ok(())
+}
+
+fn build_rc(args: &Args) -> Result<RunConfig, String> {
+    let arch = ArchKind::by_name(args.flag("arch").unwrap_or("compair-opt"))
+        .ok_or("unknown --arch")?;
+    let model = ModelConfig::by_name(args.flag("model").unwrap_or("llama2-7b"))
+        .ok_or("unknown --model")?;
+    let mut rc = RunConfig::new(arch, model);
+    rc.phase = match args.flag("phase").unwrap_or("decode") {
+        "decode" => Phase::Decode,
+        "prefill" => Phase::Prefill,
+        p => return Err(format!("unknown --phase '{p}'")),
+    };
+    rc.batch = args.flag_usize("batch", 16)?;
+    rc.seq_len = args.flag_usize("seqlen", 4096)?;
+    rc.gen_len = args.flag_usize("genlen", 1)?;
+    rc.tp = args.flag_usize("tp", 8)?;
+    rc.devices = args.flag_usize("devices", 32)?;
+    if let Some(path) = args.flag("config") {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
+        let doc = compair::config::toml::parse(&text).map_err(|e| e.to_string())?;
+        rc.apply_doc(&doc)?;
+    }
+    Ok(rc)
+}
+
+fn cmd_simulate(args: &Args) -> Result<(), String> {
+    let rc = build_rc(args)?;
+    let label = format!(
+        "{} | {} | {:?} batch={} seqlen={} tp={} devices={}",
+        rc.arch.label(),
+        rc.model.name,
+        rc.phase,
+        rc.batch,
+        rc.seq_len,
+        rc.tp,
+        rc.devices
+    );
+    let r = arch::simulate(rc);
+    println!("== simulate: {label} ==");
+    println!("latency:            {}", ftime_ns(r.latency_ns));
+    println!("throughput:         {} tok/s", fnum(r.throughput_tok_s));
+    println!("energy/token:       {}", fenergy_pj(r.energy.total_pj()));
+    println!("nonlinear fraction: {:.1}%", r.nonlinear_frac * 100.0);
+    println!("collective fraction:{:.1}%", r.collective_frac * 100.0);
+    println!("FC bank util:       {:.1}%", r.bank_util * 100.0);
+    let mut t = Table::new("per-op (one layer)", &["op", "latency", "share"]);
+    let total = r.layer_cost.latency_ns.max(1e-9);
+    for op in &r.ops {
+        t.rowv(vec![
+            op.name.clone(),
+            ftime_ns(op.cost.latency_ns),
+            format!("{:.1}%", op.cost.latency_ns / total * 100.0),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    let rc = build_rc(args)?;
+    let cfg = ServeConfig {
+        arrival_rate: args.flag_f64("rate", 32.0)?,
+        n_requests: args.flag_usize("requests", 64)?,
+        prompt_len: args.flag_usize("prompt", 512)?,
+        gen_len: args.flag_usize("gen", 32)?,
+        seed: args.flag_usize("seed", 42)? as u64,
+        ..Default::default()
+    };
+    println!(
+        "== serve: {} {} rate={}r/s n={} prompt={} gen={} ==",
+        rc.arch.label(),
+        rc.model.name,
+        cfg.arrival_rate,
+        cfg.n_requests,
+        cfg.prompt_len,
+        cfg.gen_len
+    );
+    let r = Server::new(rc, cfg).run();
+    println!("completed:      {}", r.completed);
+    println!("rejected:       {}", r.rejected);
+    println!("makespan:       {}", ftime_ns(r.makespan_ns as f64));
+    println!("throughput:     {} tok/s", fnum(r.throughput_tok_s));
+    println!("TTFT p50/p99:   {} / {}", ftime_ns(r.ttft_p50_ns), ftime_ns(r.ttft_p99_ns));
+    println!(
+        "req lat p50/p99:{} / {}",
+        ftime_ns(r.req_latency_p50_ns),
+        ftime_ns(r.req_latency_p99_ns)
+    );
+    println!("energy total:   {}", fenergy_pj(r.energy.total_pj()));
+    Ok(())
+}
+
+fn cmd_isa_demo(args: &Args) -> Result<(), String> {
+    let len = args.flag_usize("len", 8)?;
+    let rounds = args.flag_usize("rounds", 6)? as u32;
+    let hw = compair::config::HwConfig::paper();
+    println!("== hierarchical-ISA demo: exp over {len} scalars, {rounds} Horner rounds ==");
+    let xs: Vec<f32> = (0..len).map(|i| -1.0 + 2.0 * i as f32 / len as f32).collect();
+    let run = |fuse: bool| {
+        let mut m = Machine::new(&hw, compair::config::SramGang::In256Out16);
+        m.write_row(0, 0, &xs);
+        let p = RowProgram::exp_program(0, 4096, len, rounds, 1);
+        let c = m.run(&p, fuse);
+        (m.read_row(0, 4096, len), c)
+    };
+    let (vals, fused) = run(true);
+    let (_, base) = run(false);
+    let mut t = Table::new("results", &["x", "noc exp(x)", "true exp(x)"]);
+    for (i, &x) in xs.iter().enumerate() {
+        t.rowv(vec![fnum(x as f64), fnum(vals[i] as f64), fnum((x as f64).exp())]);
+    }
+    t.print();
+    println!(
+        "fused: {}   unfused: {}   path-generation saving: {:.0}%",
+        ftime_ns(fused.latency_ns),
+        ftime_ns(base.latency_ns),
+        (1.0 - fused.latency_ns / base.latency_ns) * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,174 @@
+//! The Curry ALU (paper §4.2, Fig 11D).
+//!
+//! A unary, single-operand ALU: the flit carries a currying function
+//! (`InputOp` + left value), the ALU statically holds the right value in
+//! `ArgReg`. `IterArg`/`IterOp` allow the ArgReg itself to be updated after
+//! each application (the dynamic-argument mode driving Fig 13's iterative
+//! exponential).
+
+use crate::util::bf16::bf16_round;
+
+use super::packet::StepOp;
+
+/// One Curry ALU instance (two live in every router).
+#[derive(Debug, Clone)]
+pub struct CurryAlu {
+    /// The statically-held right operand.
+    pub arg_reg: f32,
+    /// Update applied to ArgReg when a flit carries IterTag.
+    pub iter_op: StepOp,
+    pub iter_arg: f32,
+    /// Operations executed (for energy/utilization accounting).
+    pub ops_executed: u64,
+}
+
+impl Default for CurryAlu {
+    fn default() -> Self {
+        Self { arg_reg: 0.0, iter_op: StepOp::Sub, iter_arg: 0.0, ops_executed: 0 }
+    }
+}
+
+impl CurryAlu {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Configure the static state (NoC_Access Wr at program setup).
+    pub fn configure(&mut self, arg_reg: f32, iter_op: StepOp, iter_arg: f32) {
+        self.arg_reg = bf16_round(arg_reg);
+        self.iter_op = iter_op;
+        self.iter_arg = bf16_round(iter_arg);
+    }
+
+    /// Write the ArgReg from a flit payload (WrReg path-step bit).
+    pub fn write_reg(&mut self, value: f32) {
+        self.arg_reg = bf16_round(value);
+    }
+
+    /// Apply the flit's InputOp against ArgReg; if `iter_tag`, then update
+    /// ArgReg with IterOp/IterArg afterwards. Returns the transformed
+    /// payload.
+    pub fn apply(&mut self, op: StepOp, value: f32, iter_tag: bool) -> f32 {
+        let out = op.apply(value, self.arg_reg);
+        self.ops_executed += 1;
+        if iter_tag {
+            self.arg_reg = self.iter_op.apply(self.arg_reg, self.iter_arg);
+            self.ops_executed += 1;
+        }
+        out
+    }
+}
+
+/// Reference software implementation of the Fig 13 iterative exponential:
+/// Horner-form Taylor series evaluated exactly as the NoC executes it —
+/// per iteration: `t *= x; t /= k; t += 1; k -= 1`, ArgReg k counting
+/// down from `rounds`, everything rounded through BF16.
+pub fn curry_exp(x: f32, rounds: u32) -> f32 {
+    let mut t = 1.0f32;
+    let mut k = rounds as f32;
+    for _ in 0..rounds {
+        t = StepOp::Mul.apply(t, x);
+        t = StepOp::Div.apply(t, k);
+        t = StepOp::Add.apply(t, 1.0);
+        k = StepOp::Sub.apply(k, 1.0);
+    }
+    t
+}
+
+/// Range-reduced Curry exponential: `exp(x) = exp(x/2^s)^(2^s)`.
+///
+/// The Horner chain only converges for |x| ≲ 2 in BF16; the softmax path
+/// clamps scores to [-8, 0] and runs the chain on x/4 followed by two
+/// squaring passes through the Mul ALU. Must match
+/// `python/compile/kernels/ref.curry_exp_rr_ref` exactly.
+pub fn curry_exp_rr(x: f32, rounds: u32, squarings: u32) -> f32 {
+    let mut t = curry_exp(bf16_round(x) / (1u32 << squarings) as f32, rounds);
+    for _ in 0..squarings {
+        t = StepOp::Mul.apply(t, t);
+    }
+    t
+}
+
+/// Newton-iteration square root as the NoC executes it:
+/// `y ← (y + x/y) / 2`, seeded at `x.max(1.0)`, BF16-rounded per step.
+pub fn curry_sqrt(x: f32, rounds: u32) -> f32 {
+    if x <= 0.0 {
+        return 0.0;
+    }
+    let mut y = bf16_round(x.max(1.0));
+    for _ in 0..rounds {
+        let q = StepOp::Div.apply(x, y);
+        let s = StepOp::Add.apply(y, q);
+        y = StepOp::Div.apply(s, 2.0);
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn input_op_mode() {
+        // Fig 11D left: InputVal += ArgReg with ArgReg=2
+        let mut alu = CurryAlu::new();
+        alu.configure(2.0, StepOp::Add, 0.0);
+        assert_eq!(alu.apply(StepOp::Add, 5.0, false), 7.0);
+        assert_eq!(alu.arg_reg, 2.0);
+    }
+
+    #[test]
+    fn iter_op_mode() {
+        // Fig 11D right: ArgReg += IterArg → ArgReg goes 2 → 3
+        let mut alu = CurryAlu::new();
+        alu.configure(2.0, StepOp::Add, 1.0);
+        let _ = alu.apply(StepOp::Add, 0.0, true);
+        assert_eq!(alu.arg_reg, 3.0);
+        assert_eq!(alu.ops_executed, 2);
+    }
+
+    #[test]
+    fn exp_taylor_converges() {
+        for &x in &[0.0f32, 0.25, 0.5, 1.0, -0.5, -1.0] {
+            let approx = curry_exp(x, 6);
+            let exact = x.exp();
+            let rel = ((approx - exact) / exact).abs();
+            assert!(rel < 0.01, "x={x}: approx={approx} exact={exact} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn exp_iter_rounds_improve_accuracy() {
+        let x = 1.0f32;
+        let e3 = (curry_exp(x, 3) - x.exp()).abs();
+        let e6 = (curry_exp(x, 6) - x.exp()).abs();
+        assert!(e6 <= e3);
+    }
+
+    #[test]
+    fn exp_rr_converges_over_wide_range() {
+        for i in 0..=64 {
+            let x = -8.0 + i as f32 * 0.125;
+            let approx = curry_exp_rr(x, 8, 2);
+            let abs = (approx - x.exp()).abs();
+            assert!(abs < 0.02, "x={x}: approx={approx} exp={} abs={abs}", x.exp());
+        }
+    }
+
+    #[test]
+    fn sqrt_newton_converges() {
+        for &x in &[0.25f32, 1.0, 2.0, 9.0, 100.0] {
+            let approx = curry_sqrt(x, 8);
+            let rel = ((approx - x.sqrt()) / x.sqrt()).abs();
+            assert!(rel < 0.01, "x={x}: approx={approx} rel={rel}");
+        }
+        assert_eq!(curry_sqrt(0.0, 8), 0.0);
+    }
+
+    #[test]
+    fn write_reg_rounds_bf16() {
+        let mut alu = CurryAlu::new();
+        alu.write_reg(1.0 + f32::EPSILON);
+        assert_eq!(alu.arg_reg, 1.0);
+    }
+}

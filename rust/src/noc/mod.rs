@@ -1,0 +1,18 @@
+//! CompAir-NoC: the in-transit-computable network-on-chip (paper §4).
+//!
+//! * `packet` — the Packet-Level ISA execution format (Table 2);
+//! * `curry` — the Curry ALU and reference iterative non-linear functions;
+//! * `mesh` — flit-level cycle simulation of the 4×16 per-channel mesh;
+//! * `trees` — reduce/broadcast tree schedules over banks (§4.3.3);
+//! * `exchange` — RoPE neighbour-swap schedules (§4.3.1);
+//! * `area` — the Fig 21 area model (Synopsys DC numbers encoded).
+pub mod area;
+pub mod curry;
+pub mod exchange;
+pub mod mesh;
+pub mod packet;
+pub mod trees;
+
+pub use curry::{curry_exp, curry_exp_rr, curry_sqrt, CurryAlu};
+pub use mesh::{Delivery, Mesh};
+pub use packet::{Packet, PacketType, PathStep, RouterId, StepOp};

@@ -1,0 +1,227 @@
+//! Packet-Level ISA (paper Table 2) — the NoC's execution format.
+//!
+//! One packet fits one 72-bit flit:
+//! `Type(4b) | Data(16b, BF16) | IterNum(4b) | Path[0..3](12b each)`
+//! and each path step is
+//! `x(4b) | y(4b) | WrReg(1b) | IterTag(1b) | Opcode(2b)`.
+//!
+//! The simulator carries the payload as f32 rounded through BF16 at every
+//! ALU touch, so functional results match the 16-bit datapath.
+
+use crate::util::bf16::bf16_round;
+
+/// Router coordinate in the per-channel mesh (4 cols × 16 rows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct RouterId {
+    pub x: u8,
+    pub y: u8,
+}
+
+impl RouterId {
+    pub fn new(x: usize, y: usize) -> Self {
+        Self { x: x as u8, y: y as u8 }
+    }
+
+    pub fn manhattan(&self, o: &RouterId) -> u64 {
+        (self.x.abs_diff(o.x) + self.y.abs_diff(o.y)) as u64
+    }
+}
+
+/// The 2-bit in-transit opcode of a path step (paper: +=, -=, *=, /=).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+}
+
+impl StepOp {
+    /// `value (op)= arg` — the unary Currying application.
+    pub fn apply(&self, value: f32, arg: f32) -> f32 {
+        let v = bf16_round(value);
+        let a = bf16_round(arg);
+        bf16_round(match self {
+            StepOp::Add => v + a,
+            StepOp::Sub => v - a,
+            StepOp::Mul => v * a,
+            StepOp::Div => v / a,
+        })
+    }
+}
+
+/// One waypoint of a packet's computational path.
+#[derive(Debug, Clone, Copy, PartialEq)]
+/// ALU binding rule (each router has two Curry ALUs): multiplicative ops
+/// ({Mul, Div}) execute on ALU0, additive ops ({Add, Sub}) on ALU1. This is
+/// how Fig 13's exponential binds three distinct ArgRegs (x, k, 1) onto two
+/// routers. WrReg steps address the target ALU through the (otherwise
+/// unused) opcode bits, surfaced here as `wr_alu`.
+pub struct PathStep {
+    pub at: RouterId,
+    /// Write the flit payload into an ArgReg instead of computing.
+    pub wr_reg: bool,
+    /// Which ALU a WrReg step writes (encoded in the opcode bits).
+    pub wr_alu: u8,
+    /// After computing, update ArgReg with IterOp/IterArg (dynamic args).
+    pub iter_tag: bool,
+    /// In-transit operation; None = pure relay waypoint.
+    pub op: Option<StepOp>,
+}
+
+impl PathStep {
+    pub fn relay(at: RouterId) -> Self {
+        Self { at, wr_reg: false, wr_alu: 0, iter_tag: false, op: None }
+    }
+
+    pub fn compute(at: RouterId, op: StepOp) -> Self {
+        Self { at, wr_reg: false, wr_alu: 0, iter_tag: false, op: Some(op) }
+    }
+
+    pub fn compute_iter(at: RouterId, op: StepOp) -> Self {
+        Self { at, wr_reg: false, wr_alu: 0, iter_tag: true, op: Some(op) }
+    }
+
+    pub fn write_reg(at: RouterId, alu: u8) -> Self {
+        assert!(alu < 2);
+        Self { at, wr_reg: true, wr_alu: alu, iter_tag: false, op: None }
+    }
+
+    /// WrReg + Opcode together: `ArgReg ← payload (op) ArgReg` — the
+    /// order-insensitive accumulation mode the reduce trees use (§4.3.3:
+    /// "use ArgReg as the result of reduction for each non-leaf node").
+    /// Flits arriving in any order fold into the accumulator without
+    /// operand matching.
+    pub fn accumulate(at: RouterId, op: StepOp) -> Self {
+        Self { at, wr_reg: true, wr_alu: op_alu(op), iter_tag: false, op: Some(op) }
+    }
+
+    /// The ALU this step engages at its router.
+    pub fn alu_index(&self) -> usize {
+        if self.wr_reg && self.op.is_none() {
+            self.wr_alu as usize
+        } else {
+            match self.op {
+                Some(op) => op_alu(op) as usize,
+                None => 0,
+            }
+        }
+    }
+}
+
+/// The ALU-binding rule: multiplicative ops on ALU0, additive on ALU1.
+fn op_alu(op: StepOp) -> u8 {
+    match op {
+        StepOp::Mul | StepOp::Div => 0,
+        StepOp::Add | StepOp::Sub => 1,
+    }
+}
+
+/// Packet type (4b).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PacketType {
+    None,
+    Scalar,
+    Reduce,
+    Exchange,
+    Broadcast,
+    Read,
+    Write,
+}
+
+/// A single-flit packet executing a (possibly iterated) path.
+#[derive(Debug, Clone)]
+pub struct Packet {
+    pub ptype: PacketType,
+    /// BF16 payload (kept as f32, rounded at each touch).
+    pub data: f32,
+    /// Times the path is traversed (≥1). IterNum field, 4b → ≤ 15.
+    pub iter_num: u8,
+    /// Up to 4 waypoints per traversal.
+    pub path: Vec<PathStep>,
+    /// Injection router (the bank-local port it enters from).
+    pub src: RouterId,
+    /// Monotonic id for tracing/arbitration fairness.
+    pub id: u64,
+}
+
+impl Packet {
+    pub fn new(ptype: PacketType, src: RouterId, data: f32, path: Vec<PathStep>) -> Self {
+        assert!(!path.is_empty(), "packet needs at least one waypoint");
+        assert!(path.len() <= 4, "packet-level ISA supports up to 4 relay nodes per loop");
+        Self { ptype, data: bf16_round(data), iter_num: 1, path, src, id: 0 }
+    }
+
+    pub fn with_iter(mut self, n: u8) -> Self {
+        assert!((1..=15).contains(&n), "IterNum is a 4-bit field (1..=15)");
+        self.iter_num = n;
+        self
+    }
+
+    /// Final delivery router.
+    pub fn dest(&self) -> RouterId {
+        self.path.last().unwrap().at
+    }
+
+    /// Total waypoint visits (path length × iterations).
+    pub fn total_steps(&self) -> usize {
+        self.path.len() * self.iter_num as usize
+    }
+
+    /// Serialized bit width (Table 2) — checked against the flit budget.
+    pub fn bits(&self) -> usize {
+        4 + 16 + 4 + 4 * 12
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_ops_bf16() {
+        assert_eq!(StepOp::Add.apply(1.0, 2.0), 3.0);
+        assert_eq!(StepOp::Sub.apply(1.0, 2.0), -1.0);
+        assert_eq!(StepOp::Mul.apply(3.0, 2.0), 6.0);
+        assert_eq!(StepOp::Div.apply(3.0, 2.0), 1.5);
+    }
+
+    #[test]
+    fn packet_fits_flit_budget() {
+        let r = RouterId::new(0, 0);
+        let p = Packet::new(PacketType::Scalar, r, 1.0, vec![PathStep::relay(r)]);
+        assert!(p.bits() <= 72, "packet {}b exceeds 72b flit", p.bits());
+    }
+
+    #[test]
+    #[should_panic(expected = "4 relay nodes")]
+    fn path_longer_than_4_rejected() {
+        let r = RouterId::new(0, 0);
+        Packet::new(PacketType::Scalar, r, 0.0, vec![PathStep::relay(r); 5]);
+    }
+
+    #[test]
+    #[should_panic(expected = "4-bit field")]
+    fn iter_num_bounds() {
+        let r = RouterId::new(0, 0);
+        let _ = Packet::new(PacketType::Scalar, r, 0.0, vec![PathStep::relay(r)]).with_iter(16);
+    }
+
+    #[test]
+    fn manhattan_distance() {
+        assert_eq!(RouterId::new(0, 0).manhattan(&RouterId::new(3, 15)), 18);
+    }
+
+    #[test]
+    fn total_steps_counts_iterations() {
+        let r = RouterId::new(1, 1);
+        let p = Packet::new(
+            PacketType::Scalar,
+            r,
+            0.0,
+            vec![PathStep::relay(r), PathStep::relay(r)],
+        )
+        .with_iter(6);
+        assert_eq!(p.total_steps(), 12);
+    }
+}

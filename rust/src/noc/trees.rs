@@ -1,0 +1,274 @@
+//! Reduce / broadcast trees over banks (paper §4.3.3).
+//!
+//! A width-16 reduction is a 4-level binary tree mapped onto one mesh
+//! column (the bank-local routers); the four columns run four parallel
+//! trees. Non-leaf routers accumulate into their ALU1 ArgReg using the
+//! order-insensitive accumulate step, so no operand matching is needed.
+//!
+//! Stages are dependency-ordered (a parent's partial must include its
+//! subtree before being forwarded up), so the schedule injects stage by
+//! stage and the mesh runs to idle in between — the same bank-controller
+//! sequencing real hardware would use.
+
+use crate::sim::OpCost;
+use crate::util::bf16::bf16_round;
+
+use super::mesh::Mesh;
+use super::packet::{Packet, PacketType, PathStep, RouterId, StepOp};
+
+/// Result of a tree collective.
+#[derive(Debug, Clone)]
+pub struct TreeResult {
+    pub cost: OpCost,
+    /// Per-column reduced value (reduce) or delivered values (broadcast).
+    pub values: Vec<f32>,
+    /// Raw deliveries with positions: (column, bank, value). Empty for
+    /// reduce (the result lives in the root's ArgReg).
+    pub deliveries: Vec<(usize, usize, f32)>,
+}
+
+/// Reduce `values[col][bank]` down each column's tree to `root_bank`,
+/// running all `values.len()` column-trees in parallel. `op` is typically
+/// Add (Softmax denominators, partial-sum folds).
+///
+/// Returns the per-column reduction results and the total cost.
+pub fn reduce(
+    mesh: &mut Mesh,
+    values: &[Vec<f32>],
+    op: StepOp,
+    root_bank: usize,
+    banks: usize,
+) -> TreeResult {
+    assert!(banks.is_power_of_two(), "tree reduction needs a power-of-two bank count");
+    assert!(values.len() <= mesh.cfg.mesh_cols);
+    assert!(banks <= mesh.cfg.mesh_rows);
+    assert!(root_bank < banks);
+    let n_cols = values.len();
+
+    for v in values {
+        assert_eq!(v.len(), banks);
+    }
+
+    // Relabel banks so the tree roots at `root_bank`: node id = bank XOR root.
+    let relabel = |logical: usize| logical ^ root_bank;
+
+    // Mirror of each *logical* node's running partial (what the ArgRegs at
+    // the corresponding physical routers will hold).
+    let mut partial: Vec<Vec<f32>> = values
+        .iter()
+        .map(|v| (0..banks).map(|l| bf16_round(v[relabel(l)])).collect())
+        .collect();
+
+    // Accumulation binds to the ALU the op class selects.
+    let alu = PathStep::accumulate(RouterId::new(0, 0), op).alu_index();
+
+    // Initialize every router's accumulator ArgReg with its own value (the
+    // bank writes its local router through the local port; 1 cycle, 0 hops).
+    for (col, vals) in values.iter().enumerate() {
+        for bank in 0..banks {
+            mesh.configure_alu(RouterId::new(col, bank), alu, vals[bank], StepOp::Add, 0.0);
+        }
+    }
+
+    let mut cost = OpCost::zero();
+    let levels = banks.trailing_zeros();
+    for s in 0..levels {
+        let stride = 1usize << s;
+        // Senders: logical ids that are odd multiples of `stride`.
+        for col in 0..n_cols {
+            for logical in (stride..banks).step_by(2 * stride) {
+                let sender = relabel(logical);
+                let receiver = relabel(logical - stride);
+                let val = partial[col][logical];
+                let p = Packet::new(
+                    PacketType::Reduce,
+                    RouterId::new(col, sender),
+                    val,
+                    vec![PathStep::accumulate(RouterId::new(col, receiver), op)],
+                );
+                mesh.inject(p);
+                let acc = op.apply(val, partial[col][logical - stride]);
+                partial[col][logical - stride] = acc;
+            }
+        }
+        cost = cost.then(&mesh.run(1_000_000));
+        mesh.take_deliveries();
+    }
+
+    let values_out: Vec<f32> = (0..n_cols)
+        .map(|col| {
+            let got = mesh.alu_arg(RouterId::new(col, root_bank), alu);
+            debug_assert_eq!(got, partial[col][0], "ArgReg mirror divergence");
+            got
+        })
+        .collect();
+    TreeResult { cost, values: values_out, deliveries: Vec::new() }
+}
+
+/// Broadcast `values[col]` from `src_bank` to all `banks` banks of each
+/// column — the reduce tree run in reverse. Delivered flits eject at each
+/// bank's local port.
+pub fn broadcast(
+    mesh: &mut Mesh,
+    values: &[f32],
+    src_bank: usize,
+    banks: usize,
+) -> TreeResult {
+    assert!(banks.is_power_of_two());
+    assert!(values.len() <= mesh.cfg.mesh_cols);
+    assert!(src_bank < banks);
+    let n_cols = values.len();
+    let relabel = |logical: usize| logical ^ src_bank;
+
+    let mut cost = OpCost::zero();
+    let levels = banks.trailing_zeros();
+    // Walk levels top-down: at level s (from high), holders forward to the
+    // partner `stride` away.
+    for s in (0..levels).rev() {
+        let stride = 1usize << s;
+        for col in 0..n_cols {
+            for logical in (0..banks).step_by(2 * stride) {
+                let holder = relabel(logical);
+                let target = relabel(logical + stride);
+                let p = Packet::new(
+                    PacketType::Broadcast,
+                    RouterId::new(col, holder),
+                    values[col],
+                    vec![PathStep::relay(RouterId::new(col, target))],
+                );
+                mesh.inject(p);
+            }
+        }
+        cost = cost.then(&mesh.run(1_000_000));
+    }
+    let delivered = mesh.take_deliveries();
+    // every bank except src receives a copy, per column
+    debug_assert_eq!(delivered.len(), n_cols * (banks - 1));
+    TreeResult {
+        cost,
+        values: delivered.iter().map(|d| d.value).collect(),
+        deliveries: delivered
+            .iter()
+            .map(|d| (d.at.x as usize, d.at.y as usize, d.value))
+            .collect(),
+    }
+}
+
+/// Closed-form stage count of a tree collective (for analytic sizing):
+/// log2(banks) stages, each bounded by the longest hop at that stage.
+pub fn tree_stage_hops(banks: usize) -> u64 {
+    let mut total = 0u64;
+    let mut stride = 1usize;
+    while stride < banks {
+        total += stride as u64;
+        stride <<= 1;
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NocConfig;
+
+    fn mesh() -> Mesh {
+        Mesh::new(&NocConfig::default())
+    }
+
+    #[test]
+    fn reduce_16_banks_sums_exactly() {
+        let mut m = mesh();
+        let vals: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        let r = reduce(&mut m, &[vals.clone()], StepOp::Add, 0, 16);
+        assert_eq!(r.values[0], 120.0);
+        assert!(r.cost.latency_ns > 0.0);
+        assert!(r.cost.counts.noc_alu_ops >= 15, "15 accumulations needed");
+    }
+
+    #[test]
+    fn reduce_rooted_anywhere() {
+        for root in [0usize, 5, 15] {
+            let mut m = mesh();
+            let vals: Vec<f32> = (0..16).map(|i| (i + 1) as f32).collect();
+            let r = reduce(&mut m, &[vals], StepOp::Add, root, 16);
+            assert_eq!(r.values[0], 136.0, "root={root}");
+        }
+    }
+
+    #[test]
+    fn four_parallel_trees() {
+        let mut m = mesh();
+        let cols: Vec<Vec<f32>> =
+            (0..4).map(|c| (0..16).map(|i| (c * 16 + i) as f32).collect()).collect();
+        let r = reduce(&mut m, &cols, StepOp::Add, 0, 16);
+        for (c, v) in r.values.iter().enumerate() {
+            let expect: f32 = (0..16).map(|i| (c * 16 + i) as f32).sum();
+            assert_eq!(*v, expect);
+        }
+    }
+
+    #[test]
+    fn parallel_trees_cheaper_than_serial() {
+        // 4 trees in parallel should take much less than 4× one tree.
+        let one = {
+            let mut m = mesh();
+            reduce(&mut m, &[vec![1.0; 16]], StepOp::Add, 0, 16).cost.latency_ns
+        };
+        let four = {
+            let mut m = mesh();
+            reduce(&mut m, &vec![vec![1.0; 16]; 4], StepOp::Add, 0, 16).cost.latency_ns
+        };
+        assert!(four < 2.0 * one, "four={four} one={one}");
+    }
+
+    #[test]
+    fn tree_scaling_is_logarithmic_not_linear() {
+        // The §3.3/§4.1 claim: NoC tree reduction avoids the global buffer's
+        // bank-serialized gather. A serialized reduce over 16 banks costs
+        // 15× the 2-bank transfer; the tree must scale ≪ that.
+        let t2 = {
+            let mut m = mesh();
+            reduce(&mut m, &[vec![1.0; 2]], StepOp::Add, 0, 2).cost.latency_ns
+        };
+        let t16 = {
+            let mut m = mesh();
+            reduce(&mut m, &[vec![1.0; 16]], StepOp::Add, 0, 16).cost.latency_ns
+        };
+        assert!(t16 < 15.0 * t2 / 1.5, "t16={t16} t2={t2} — not logarithmic");
+    }
+
+    #[test]
+    fn broadcast_reaches_all_banks() {
+        let mut m = mesh();
+        let r = broadcast(&mut m, &[3.5, 4.5], 2, 16);
+        assert_eq!(r.values.len(), 2 * 15);
+        assert!(r.values.iter().all(|&v| v == 3.5 || v == 4.5));
+    }
+
+    #[test]
+    fn broadcast_smaller_groups() {
+        let mut m = mesh();
+        let r = broadcast(&mut m, &[1.0], 0, 4);
+        assert_eq!(r.values.len(), 3);
+    }
+
+    #[test]
+    fn stage_hops_closed_form() {
+        assert_eq!(tree_stage_hops(16), 1 + 2 + 4 + 8);
+        assert_eq!(tree_stage_hops(2), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "power-of-two")]
+    fn non_pow2_rejected() {
+        let mut m = mesh();
+        reduce(&mut m, &[vec![1.0; 12]], StepOp::Add, 0, 12);
+    }
+
+    #[test]
+    fn reduce_with_mul() {
+        let mut m = mesh();
+        let r = reduce(&mut m, &[vec![2.0, 2.0, 2.0, 2.0]], StepOp::Mul, 0, 4);
+        assert_eq!(r.values[0], 16.0);
+    }
+}

@@ -1,0 +1,163 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! Python runs once at build time (`make artifacts`); this module is the
+//! only consumer of its output and the only place numerics execute at
+//! request time. Interchange is HLO *text* (not serialized protos): jax
+//! ≥ 0.5 emits 64-bit instruction ids the crate's xla_extension 0.5.1
+//! rejects, while the text parser reassigns ids cleanly.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// The artifacts directory (override with COMPAIR_ARTIFACTS).
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("COMPAIR_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// A loaded, compiled computation.
+pub struct LoadedModel {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// An f32 tensor travelling in/out of the runtime.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub data: Vec<f32>,
+    pub dims: Vec<usize>,
+}
+
+impl Tensor {
+    pub fn new(data: Vec<f32>, dims: &[usize]) -> Self {
+        assert_eq!(data.len(), dims.iter().product::<usize>(), "shape/len mismatch");
+        Self { data, dims: dims.to_vec() }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self { data: vec![v], dims: vec![] }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&self.data);
+        let dims: Vec<i64> = self.dims.iter().map(|&d| d as i64).collect();
+        Ok(lit.reshape(&dims)?)
+    }
+}
+
+impl LoadedModel {
+    /// Execute with f32 inputs; returns all tuple outputs as f32 tensors.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let lits: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        self.run_literals(lits)
+    }
+
+    /// Execute with f32 tensors plus one trailing i32 scalar (the decode
+    /// step's `pos` argument).
+    pub fn run_with_i32_scalar(&self, inputs: &[Tensor], scalar: i32) -> Result<Vec<Tensor>> {
+        let mut lits: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        lits.push(xla::Literal::scalar(scalar));
+        self.run_literals(lits)
+    }
+
+    fn run_literals(&self, lits: Vec<xla::Literal>) -> Result<Vec<Tensor>> {
+        let result = self.exe.execute::<xla::Literal>(&lits)?;
+        let out = result[0][0].to_literal_sync()?;
+        let parts = out.to_tuple()?;
+        parts
+            .into_iter()
+            .map(|lit| {
+                let shape = lit.array_shape()?;
+                let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+                let data = lit.to_vec::<f32>()?;
+                Ok(Tensor { data, dims })
+            })
+            .collect()
+    }
+}
+
+/// The PJRT runtime with a model cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: HashMap<String, LoadedModel>,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, dir: artifacts_dir(), cache: HashMap::new() })
+    }
+
+    pub fn with_dir(dir: &Path) -> Result<Self> {
+        let mut rt = Self::cpu()?;
+        rt.dir = dir.to_path_buf();
+        Ok(rt)
+    }
+
+    pub fn artifact_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+
+    /// Load (compile) an artifact by name, e.g. "decode_step".
+    pub fn load(&mut self, name: &str) -> Result<&LoadedModel> {
+        if !self.cache.contains_key(name) {
+            let path = self.artifact_path(name);
+            if !path.exists() {
+                bail!(
+                    "artifact '{}' not found at {} — run `make artifacts` first",
+                    name,
+                    path.display()
+                );
+            }
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )
+            .with_context(|| format!("parsing HLO text for '{name}'"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).with_context(|| format!("compiling '{name}'"))?;
+            self.cache.insert(name.to_string(), LoadedModel { name: name.to_string(), exe });
+        }
+        Ok(&self.cache[name])
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_shape_checked() {
+        let t = Tensor::new(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]);
+        assert_eq!(t.dims, vec![2, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/len mismatch")]
+    fn tensor_bad_shape_panics() {
+        Tensor::new(vec![1.0; 3], &[2, 2]);
+    }
+
+    #[test]
+    fn missing_artifact_is_a_clean_error() {
+        let mut rt = match Runtime::cpu() {
+            Ok(r) => r,
+            Err(_) => return, // no PJRT in this environment — skip
+        };
+        let err = match rt.load("definitely_not_there") {
+            Err(e) => e,
+            Ok(_) => panic!("expected a missing-artifact error"),
+        };
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

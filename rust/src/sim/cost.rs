@@ -1,0 +1,229 @@
+//! Unified latency + event-count accounting for every simulated operation.
+//!
+//! Substrate models (DRAM, SRAM, HB, NoC, CXL, NLU) report *what happened*
+//! (`CostCounts`) and *how long it took* (`latency_ns`); the energy model
+//! prices counts into pJ separately. Costs compose with serial/parallel
+//! combinators, mirroring how the mapper composes hardware phases.
+
+/// Raw event counts accumulated during an operation.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CostCounts {
+    /// DRAM row activations.
+    pub dram_act: u64,
+    /// DRAM column reads (32B-class accesses).
+    pub dram_col_rd: u64,
+    /// DRAM column writes.
+    pub dram_col_wr: u64,
+    /// BF16 MAC operations performed by DRAM-PIM lanes.
+    pub dram_mac: u64,
+    /// SRAM-PIM macro accesses (each = inputs×outputs MACs).
+    pub sram_access: u64,
+    /// BF16 MAC operations performed inside SRAM-PIM macros.
+    pub sram_mac: u64,
+    /// SRAM-PIM weight-row writes (reload traffic).
+    pub sram_row_write: u64,
+    /// Bytes crossing the hybrid-bonding die-to-die interface.
+    pub hb_bytes: u64,
+    /// Flit-hops traversed in the CompAir-NoC (1 flit over 1 link).
+    pub noc_flit_hops: u64,
+    /// Curry-ALU operations executed in routers.
+    pub noc_alu_ops: u64,
+    /// Bytes moved through a channel's global buffer (baseline collectives).
+    pub gb_bytes: u64,
+    /// Bytes over the CXL fabric.
+    pub cxl_bytes: u64,
+    /// Scalar non-linear ops executed on a centralized NLU/CPU (baselines).
+    pub nlu_ops: u64,
+    /// FLOPs executed on a GPU (AttAcc baseline).
+    pub gpu_flop: u64,
+    /// Bytes moved over GPU HBM (AttAcc baseline).
+    pub gpu_hbm_bytes: u64,
+}
+
+macro_rules! for_each_count {
+    ($self:ident, $other:ident, $op:tt) => {{
+        CostCounts {
+            dram_act: $self.dram_act $op $other.dram_act,
+            dram_col_rd: $self.dram_col_rd $op $other.dram_col_rd,
+            dram_col_wr: $self.dram_col_wr $op $other.dram_col_wr,
+            dram_mac: $self.dram_mac $op $other.dram_mac,
+            sram_access: $self.sram_access $op $other.sram_access,
+            sram_mac: $self.sram_mac $op $other.sram_mac,
+            sram_row_write: $self.sram_row_write $op $other.sram_row_write,
+            hb_bytes: $self.hb_bytes $op $other.hb_bytes,
+            noc_flit_hops: $self.noc_flit_hops $op $other.noc_flit_hops,
+            noc_alu_ops: $self.noc_alu_ops $op $other.noc_alu_ops,
+            gb_bytes: $self.gb_bytes $op $other.gb_bytes,
+            cxl_bytes: $self.cxl_bytes $op $other.cxl_bytes,
+            nlu_ops: $self.nlu_ops $op $other.nlu_ops,
+            gpu_flop: $self.gpu_flop $op $other.gpu_flop,
+            gpu_hbm_bytes: $self.gpu_hbm_bytes $op $other.gpu_hbm_bytes,
+        }
+    }};
+}
+
+impl CostCounts {
+    pub fn add(&self, o: &CostCounts) -> CostCounts {
+        for_each_count!(self, o, +)
+    }
+
+    pub fn scale(&self, k: u64) -> CostCounts {
+        let o = CostCounts {
+            dram_act: k,
+            dram_col_rd: k,
+            dram_col_wr: k,
+            dram_mac: k,
+            sram_access: k,
+            sram_mac: k,
+            sram_row_write: k,
+            hb_bytes: k,
+            noc_flit_hops: k,
+            noc_alu_ops: k,
+            gb_bytes: k,
+            cxl_bytes: k,
+            nlu_ops: k,
+            gpu_flop: k,
+            gpu_hbm_bytes: k,
+        };
+        for_each_count!(self, o, *)
+    }
+
+    pub fn total_events(&self) -> u64 {
+        self.dram_act
+            + self.dram_col_rd
+            + self.dram_col_wr
+            + self.dram_mac
+            + self.sram_access
+            + self.sram_mac
+            + self.sram_row_write
+            + self.hb_bytes
+            + self.noc_flit_hops
+            + self.noc_alu_ops
+            + self.gb_bytes
+            + self.cxl_bytes
+            + self.nlu_ops
+            + self.gpu_flop
+            + self.gpu_hbm_bytes
+    }
+}
+
+/// Latency + counts of one operation (or composed phase).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct OpCost {
+    pub latency_ns: f64,
+    pub counts: CostCounts,
+}
+
+impl OpCost {
+    pub fn zero() -> OpCost {
+        OpCost::default()
+    }
+
+    pub fn latency(ns: f64) -> OpCost {
+        OpCost { latency_ns: ns, counts: CostCounts::default() }
+    }
+
+    /// Sequential composition: latencies add, counts add.
+    pub fn then(&self, o: &OpCost) -> OpCost {
+        OpCost { latency_ns: self.latency_ns + o.latency_ns, counts: self.counts.add(&o.counts) }
+    }
+
+    /// Parallel composition: latency is the max, counts add.
+    pub fn join(&self, o: &OpCost) -> OpCost {
+        OpCost {
+            latency_ns: self.latency_ns.max(o.latency_ns),
+            counts: self.counts.add(&o.counts),
+        }
+    }
+
+    /// Repeat serially k times.
+    pub fn repeat(&self, k: u64) -> OpCost {
+        OpCost { latency_ns: self.latency_ns * k as f64, counts: self.counts.scale(k) }
+    }
+
+    /// k identical units running in parallel: same latency, k× the events.
+    pub fn replicate(&self, k: u64) -> OpCost {
+        OpCost { latency_ns: self.latency_ns, counts: self.counts.scale(k) }
+    }
+
+    pub fn serial_all<I: IntoIterator<Item = OpCost>>(items: I) -> OpCost {
+        items.into_iter().fold(OpCost::zero(), |a, b| a.then(&b))
+    }
+
+    pub fn parallel_all<I: IntoIterator<Item = OpCost>>(items: I) -> OpCost {
+        items.into_iter().fold(OpCost::zero(), |a, b| a.join(&b))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn c(act: u64, mac: u64) -> OpCost {
+        OpCost {
+            latency_ns: 10.0,
+            counts: CostCounts { dram_act: act, dram_mac: mac, ..Default::default() },
+        }
+    }
+
+    #[test]
+    fn serial_adds() {
+        let r = c(1, 100).then(&c(2, 200));
+        assert_eq!(r.latency_ns, 20.0);
+        assert_eq!(r.counts.dram_act, 3);
+        assert_eq!(r.counts.dram_mac, 300);
+    }
+
+    #[test]
+    fn parallel_maxes_latency_adds_counts() {
+        let a = OpCost { latency_ns: 5.0, ..c(1, 10) };
+        let b = OpCost { latency_ns: 9.0, ..c(1, 10) };
+        let r = a.join(&b);
+        assert_eq!(r.latency_ns, 9.0);
+        assert_eq!(r.counts.dram_act, 2);
+    }
+
+    #[test]
+    fn repeat_and_replicate() {
+        let r = c(1, 10).repeat(4);
+        assert_eq!(r.latency_ns, 40.0);
+        assert_eq!(r.counts.dram_mac, 40);
+        let p = c(1, 10).replicate(16);
+        assert_eq!(p.latency_ns, 10.0);
+        assert_eq!(p.counts.dram_mac, 160);
+    }
+
+    #[test]
+    fn fold_helpers() {
+        let s = OpCost::serial_all((0..3).map(|_| c(1, 1)));
+        assert_eq!(s.latency_ns, 30.0);
+        assert_eq!(s.counts.dram_act, 3);
+        let p = OpCost::parallel_all((0..3).map(|_| c(1, 1)));
+        assert_eq!(p.latency_ns, 10.0);
+        assert_eq!(p.counts.dram_act, 3);
+    }
+
+    #[test]
+    fn scale_covers_every_field() {
+        let all_ones = CostCounts {
+            dram_act: 1,
+            dram_col_rd: 1,
+            dram_col_wr: 1,
+            dram_mac: 1,
+            sram_access: 1,
+            sram_mac: 1,
+            sram_row_write: 1,
+            hb_bytes: 1,
+            noc_flit_hops: 1,
+            noc_alu_ops: 1,
+            gb_bytes: 1,
+            cxl_bytes: 1,
+            nlu_ops: 1,
+            gpu_flop: 1,
+            gpu_hbm_bytes: 1,
+        };
+        assert_eq!(all_ones.total_events(), 15);
+        let s = all_ones.scale(3);
+        assert_eq!(s.total_events(), 45);
+    }
+}

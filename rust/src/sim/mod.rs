@@ -1,0 +1,7 @@
+//! Simulation core: the cost/counts algebra every substrate reports in, and
+//! the discrete-event engine behind the serving coordinator.
+pub mod cost;
+pub mod engine;
+
+pub use cost::{CostCounts, OpCost};
+pub use engine::{EventQueue, SimTime};

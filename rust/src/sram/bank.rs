@@ -1,0 +1,245 @@
+//! The SRAM-PIM bank: four macros hybrid-bonded under one DRAM-PIM bank,
+//! ganged as (512,8) or (256,16) (§3.3), executing batched GeMM tiles with
+//! weights streamed from the DRAM bank above.
+//!
+//! The per-bank GeMM latency is a roofline over two rates:
+//! * compute: `accesses × t_access` (one 128×8 MAC array access per tile
+//!   column per batch element);
+//! * feed: DRAM read-out through the column decoder's SRAM path + HB (weights
+//!   once per tile, inputs once per batch, outputs written back).
+//!
+//! Double-buffering overlaps feed and compute, so the bank runs at
+//! `max(compute, feed)` — the divergence-point behaviour of the Fig 20 DSE.
+
+use crate::config::{DramConfig, SramConfig, SramGang};
+use crate::dram::PimBank;
+use crate::sim::{CostCounts, OpCost};
+
+use super::macro_unit::SramMacro;
+
+/// Weight residency across calls: decode loops reuse the same FC weights
+/// every token, but a bank tile rarely fits, so `Reload` is the common case.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WeightPolicy {
+    /// Stream weights from DRAM for every tile (default).
+    Reload,
+    /// Weights already resident in the macros (single-tile workloads).
+    Resident,
+}
+
+/// The per-bank SRAM-PIM compute unit.
+#[derive(Debug, Clone)]
+pub struct SramBank {
+    pub sram: SramConfig,
+    pub gang: SramGang,
+    dram: PimBank,
+}
+
+/// Cost breakdown of one bank-level GeMM (returned alongside the total).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct GemmBreakdown {
+    pub compute_ns: f64,
+    pub feed_ns: f64,
+    pub writeback_ns: f64,
+    pub reload_ns: f64,
+    pub accesses: u64,
+    pub weight_bytes: u64,
+    pub io_bytes: u64,
+}
+
+impl SramBank {
+    pub fn new(sram: &SramConfig, gang: SramGang, dram: &DramConfig) -> Self {
+        Self { sram: sram.clone(), gang, dram: PimBank::new(dram) }
+    }
+
+    /// Logical ganged shape (inputs, outputs).
+    pub fn shape(&self) -> (usize, usize) {
+        self.gang.shape(&self.sram)
+    }
+
+    /// Batched GeMM of a `out_tile × in_dim` weight tile against `batch`
+    /// input vectors, all bank-local.
+    pub fn gemm(&self, out_tile: usize, in_dim: usize, batch: usize, policy: WeightPolicy) -> OpCost {
+        self.gemm_detailed(out_tile, in_dim, batch, policy).0
+    }
+
+    pub fn gemm_detailed(
+        &self,
+        out_tile: usize,
+        in_dim: usize,
+        batch: usize,
+        policy: WeightPolicy,
+    ) -> (OpCost, GemmBreakdown) {
+        if out_tile == 0 || in_dim == 0 || batch == 0 {
+            return (OpCost::zero(), GemmBreakdown::default());
+        }
+        let (gi, go) = self.shape();
+        let n_in_tiles = in_dim.div_ceil(gi) as u64;
+        let n_out_tiles = out_tile.div_ceil(go) as u64;
+        let n_tiles = n_in_tiles * n_out_tiles;
+        let accesses = n_tiles * batch as u64;
+
+        // Compute: one array access per (tile, batch element); partial sums
+        // across in-tiles accumulate in the macro's accumulator registers.
+        let compute_ns = accesses as f64 * self.sram.t_access_ns();
+        let macs = (out_tile * in_dim * batch) as u64;
+
+        // Feed: weights once per tile (unless resident) + inputs once per
+        // batch element, through the DRAM column decoder's SRAM path.
+        let weight_bytes = match policy {
+            WeightPolicy::Reload => (in_dim * out_tile * 2) as u64,
+            WeightPolicy::Resident => 0,
+        };
+        let input_bytes = (in_dim * batch * 2) as u64;
+        let feed = self.dram.read_to_sram(weight_bytes + input_bytes);
+        // Results land back in the DRAM bank.
+        let output_bytes = (out_tile * batch * 2) as u64;
+        let writeback = self.dram.write(output_bytes);
+
+        // Macro array weight-write time (per tile; overlaps poorly with the
+        // array's own compute, so serialize it).
+        let reload_ns = match policy {
+            WeightPolicy::Reload => {
+                n_tiles as f64 * SramMacro::new(&self.sram).load_weights_cost().latency_ns
+            }
+            WeightPolicy::Resident => 0.0,
+        };
+
+        let feed_total_ns = feed.latency_ns + writeback.latency_ns;
+        let latency_ns = compute_ns.max(feed_total_ns) + reload_ns;
+
+        let counts = CostCounts {
+            sram_access: accesses,
+            sram_mac: macs,
+            sram_row_write: if policy == WeightPolicy::Reload {
+                n_tiles * self.sram.macro_outputs as u64 * 4
+            } else {
+                0
+            },
+            ..Default::default()
+        }
+        .add(&feed.counts)
+        .add(&writeback.counts);
+        // Output write-back also crosses the HB interface (logic → DRAM die).
+        let counts = CostCounts { hb_bytes: counts.hb_bytes + output_bytes, ..counts };
+
+        (
+            OpCost { latency_ns, counts },
+            GemmBreakdown {
+                compute_ns,
+                feed_ns: feed.latency_ns,
+                writeback_ns: writeback.latency_ns,
+                reload_ns,
+                accesses,
+                weight_bytes,
+                io_bytes: input_bytes + output_bytes,
+            },
+        )
+    }
+
+    /// Is this GeMM compute-bound (past the Fig 20 divergence point)?
+    pub fn is_compute_bound(&self, out_tile: usize, in_dim: usize, batch: usize) -> bool {
+        let (_, b) = self.gemm_detailed(out_tile, in_dim, batch, WeightPolicy::Reload);
+        b.compute_ns > b.feed_ns + b.writeback_ns
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ColumnDecoder, HwConfig};
+
+    fn bank(gang: SramGang) -> SramBank {
+        let hw = HwConfig::paper();
+        SramBank::new(&hw.sram, gang, &hw.dram)
+    }
+
+    #[test]
+    fn batch_amortizes_weight_streaming() {
+        // The key §2.2 effect: DRAM-PIM re-streams weights per batch element;
+        // SRAM-PIM streams them once. Speedup must grow with batch.
+        let s = bank(SramGang::In256Out16);
+        let d = PimBank::new(&HwConfig::paper().dram);
+        let (o, i) = (10, 5120); // Llama2-13B per-bank Q tile (§3.3)
+        let t_d1 = d.gemv(o, i, 1).latency_ns;
+        let t_s1 = s.gemm(o, i, 1, WeightPolicy::Reload).latency_ns;
+        let t_d32 = d.gemv(o, i, 32).latency_ns;
+        let t_s32 = s.gemm(o, i, 32, WeightPolicy::Reload).latency_ns;
+        let sp1 = t_d1 / t_s1;
+        let sp32 = t_d32 / t_s32;
+        assert!(sp1 < 1.5, "batch=1 speedup should be marginal, got {sp1}");
+        assert!(sp32 > 4.0, "batch=32 speedup should be large, got {sp32}");
+        assert!(sp32 > sp1 * 3.0);
+    }
+
+    #[test]
+    fn balanced_gang_reduces_feed_pressure() {
+        // §3.3: (256,16) halves the weight tiles' dimensional imbalance and
+        // beats (512,8) when feed-bound.
+        let a = bank(SramGang::In512Out8);
+        let b = bank(SramGang::In256Out16);
+        let (_, ba) = a.gemm_detailed(16, 4096, 16, WeightPolicy::Reload);
+        let (_, bb) = b.gemm_detailed(16, 4096, 16, WeightPolicy::Reload);
+        // same MAC count, fewer accesses for the balanced gang on a
+        // 16-output tile (it covers 16 outputs per access sweep).
+        assert!(bb.accesses <= ba.accesses, "{} vs {}", bb.accesses, ba.accesses);
+    }
+
+    #[test]
+    fn resident_weights_skip_reload() {
+        let s = bank(SramGang::In256Out16);
+        let (i, o) = (256, 16); // exactly one tile
+        let reload = s.gemm(o, i, 4, WeightPolicy::Reload);
+        let resident = s.gemm(o, i, 4, WeightPolicy::Resident);
+        assert!(resident.latency_ns < reload.latency_ns);
+        assert_eq!(resident.counts.sram_row_write, 0);
+    }
+
+    #[test]
+    fn decoupled_decoder_speeds_feed_bound_gemm() {
+        let hw = HwConfig::paper();
+        let mut dram_opt = hw.dram.clone();
+        dram_opt.column_decoder = ColumnDecoder::Decoupled8and4;
+        let base = SramBank::new(&hw.sram, SramGang::In256Out16, &hw.dram);
+        let opt = SramBank::new(&hw.sram, SramGang::In256Out16, &dram_opt);
+        // Large feed-bound GeMM (batch small → feed dominates)
+        let t_base = base.gemm(16, 8192, 2, WeightPolicy::Reload).latency_ns;
+        let t_opt = opt.gemm(16, 8192, 2, WeightPolicy::Reload).latency_ns;
+        assert!(t_opt < t_base, "opt {t_opt} should beat base {t_base}");
+    }
+
+    #[test]
+    fn large_batch_becomes_compute_bound() {
+        let s = bank(SramGang::In256Out16);
+        // skinny output tile at batch 1: feed-bound (left of the Fig 20
+        // divergence point)
+        assert!(!s.is_compute_bound(16, 4096, 1));
+        // balanced tile at large batch: compute-bound (right of it)
+        assert!(s.is_compute_bound(256, 2048, 512));
+    }
+
+    #[test]
+    fn mac_counts_exact() {
+        let s = bank(SramGang::In256Out16);
+        let c = s.gemm(16, 512, 3, WeightPolicy::Reload);
+        assert_eq!(c.counts.sram_mac, 16 * 512 * 3);
+        // 2 in-tiles × 1 out-tile × 3 batch = 6 accesses
+        assert_eq!(c.counts.sram_access, 6);
+    }
+
+    #[test]
+    fn zero_dims_are_free() {
+        let s = bank(SramGang::In512Out8);
+        assert_eq!(s.gemm(0, 128, 1, WeightPolicy::Reload), OpCost::zero());
+    }
+
+    #[test]
+    fn hb_traffic_includes_writeback() {
+        let s = bank(SramGang::In256Out16);
+        let c = s.gemm(16, 256, 2, WeightPolicy::Reload);
+        let weight = 16 * 256 * 2;
+        let input = 256 * 2 * 2;
+        let output = 16 * 2 * 2;
+        assert_eq!(c.counts.hb_bytes, (weight + input + output) as u64);
+    }
+}

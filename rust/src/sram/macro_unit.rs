@@ -1,0 +1,136 @@
+//! One SRAM-PIM macro: a 64 kb digital CIM array computing a 128-input ×
+//! 8-output BF16 MAC per access, with voltage-scaled latency/efficiency.
+
+use crate::config::SramConfig;
+use crate::sim::{CostCounts, OpCost};
+use crate::util::bf16::{bf16_mac, bf16_round};
+
+/// One macro. Stateless for timing (latency is per access); carries optional
+/// functional weights for numeric validation.
+#[derive(Debug, Clone)]
+pub struct SramMacro {
+    pub cfg: SramConfig,
+    /// Functional weight state, row-major `outputs × inputs` (None until
+    /// loaded). Timing paths never touch it.
+    weights: Option<Vec<f32>>,
+}
+
+impl SramMacro {
+    pub fn new(cfg: &SramConfig) -> Self {
+        Self { cfg: cfg.clone(), weights: None }
+    }
+
+    /// Cost of one MAC access: consumes `inputs` BF16 values, produces
+    /// `outputs` BF16 partial sums, performing inputs×outputs MACs.
+    pub fn access(&self) -> OpCost {
+        OpCost {
+            latency_ns: self.cfg.t_access_ns(),
+            counts: CostCounts {
+                sram_access: 1,
+                sram_mac: self.cfg.macs_per_access() as u64,
+                ..Default::default()
+            },
+        }
+    }
+
+    /// Cost of (re)loading the macro's full weight tile (128×8 BF16 rows
+    /// written through the write port). HB transfer cost is accounted by the
+    /// DRAM side (`read_to_sram`); this is the array-write time.
+    pub fn load_weights_cost(&self) -> OpCost {
+        let rows = self.cfg.macro_outputs as u64; // one output-column row per write
+        OpCost {
+            latency_ns: rows as f64 * self.cfg.t_write_row_ns,
+            counts: CostCounts { sram_row_write: rows, ..Default::default() },
+        }
+    }
+
+    /// Functionally load weights (row-major `outputs × inputs`).
+    pub fn load_weights(&mut self, w: &[f32]) {
+        assert_eq!(w.len(), self.cfg.macro_inputs * self.cfg.macro_outputs);
+        self.weights = Some(w.iter().map(|&v| bf16_round(v)).collect());
+    }
+
+    /// Functionally execute one access: `y[o] += Σ_i w[o,i]·x[i]` in BF16.
+    pub fn compute(&self, x: &[f32]) -> Vec<f32> {
+        let w = self.weights.as_ref().expect("weights not loaded");
+        let (i_n, o_n) = (self.cfg.macro_inputs, self.cfg.macro_outputs);
+        assert_eq!(x.len(), i_n);
+        (0..o_n)
+            .map(|o| {
+                let mut acc = 0.0f32;
+                for i in 0..i_n {
+                    acc = bf16_mac(acc, w[o * i_n + i], x[i]);
+                }
+                bf16_round(acc)
+            })
+            .collect()
+    }
+
+    /// Peak throughput in GFLOPS at the configured voltage.
+    pub fn gflops(&self) -> f64 {
+        2.0 * self.cfg.macs_per_access() as f64 / self.cfg.t_access_ns()
+    }
+
+    /// Power when continuously active, in W.
+    pub fn active_power_w(&self) -> f64 {
+        self.gflops() / 1e3 / self.cfg.tflops_w()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Voltage;
+
+    #[test]
+    fn access_cost_scales_with_voltage() {
+        let mut cfg = SramConfig::default();
+        cfg.voltage = Voltage(0.9);
+        let fast = SramMacro::new(&cfg).access();
+        cfg.voltage = Voltage(0.6);
+        let slow = SramMacro::new(&cfg).access();
+        assert!(slow.latency_ns > fast.latency_ns);
+        assert_eq!(fast.counts.sram_mac, 1024);
+    }
+
+    #[test]
+    fn throughput_and_power_sane() {
+        let m = SramMacro::new(&SramConfig::default());
+        // 2*1024 flops / 6.8ns ≈ 301 GFLOPS
+        assert!((m.gflops() - 301.17).abs() < 1.0, "gflops={}", m.gflops());
+        // at 14.4 TFLOPS/W → ~0.021 W, the §3.2 "8KB SRAM-PIMs consume
+        // merely 0.022W" figure.
+        let p = m.active_power_w();
+        assert!((0.015..0.03).contains(&p), "power={p}");
+    }
+
+    #[test]
+    fn functional_compute_matches_f32() {
+        use crate::util::XorShiftRng;
+        let cfg = SramConfig::default();
+        let mut m = SramMacro::new(&cfg);
+        let mut r = XorShiftRng::new(11);
+        let w = r.vec_f32(cfg.macro_inputs * cfg.macro_outputs, -1.0, 1.0);
+        let x = r.vec_f32(cfg.macro_inputs, -1.0, 1.0);
+        m.load_weights(&w);
+        let y = m.compute(&x);
+        for o in 0..cfg.macro_outputs {
+            let exact: f32 =
+                (0..cfg.macro_inputs).map(|i| w[o * cfg.macro_inputs + i] * x[i]).sum();
+            assert!((y[o] - exact).abs() < 0.3, "y={} exact={exact}", y[o]);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "weights not loaded")]
+    fn compute_without_weights_panics() {
+        let m = SramMacro::new(&SramConfig::default());
+        m.compute(&vec![0.0; 128]);
+    }
+
+    #[test]
+    fn weight_load_cost_counts_rows() {
+        let m = SramMacro::new(&SramConfig::default());
+        assert_eq!(m.load_weights_cost().counts.sram_row_write, 8);
+    }
+}

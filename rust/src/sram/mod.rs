@@ -1,0 +1,7 @@
+//! SRAM-PIM substrate: the 28nm fabricated digital CIM macro [Guo+ ISSCC'23]
+//! and the per-bank gang of four macros hybrid-bonded under a DRAM bank.
+pub mod bank;
+pub mod macro_unit;
+
+pub use bank::SramBank;
+pub use macro_unit::SramMacro;

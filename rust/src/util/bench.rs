@@ -1,0 +1,137 @@
+//! Minimal criterion-style benchmark harness.
+//!
+//! criterion is not vendored offline, so `cargo bench` targets use this:
+//! warmup, then timed batches until a wall-clock budget is spent, reporting
+//! mean ± stddev and throughput. Deliberately simple but honest: it measures
+//! whole-batch wall time and never reuses results across iterations.
+
+use std::time::{Duration, Instant};
+
+use super::stats::Stream;
+
+/// One benchmark result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub stddev_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<48} {:>12}/iter  (± {:>10}, min {}, max {}, n={})",
+            self.name,
+            super::table::ftime_ns(self.mean_ns),
+            super::table::ftime_ns(self.stddev_ns),
+            super::table::ftime_ns(self.min_ns),
+            super::table::ftime_ns(self.max_ns),
+            self.iters,
+        )
+    }
+}
+
+/// Benchmark runner with a per-benchmark time budget.
+pub struct Bencher {
+    warmup: Duration,
+    budget: Duration,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new(Duration::from_millis(200), Duration::from_secs(2))
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup: Duration, budget: Duration) -> Self {
+        Self { warmup, budget, results: Vec::new() }
+    }
+
+    /// Quick-mode bencher honoring COMPAIR_BENCH_FAST=1 (used in CI).
+    pub fn from_env() -> Self {
+        if std::env::var("COMPAIR_BENCH_FAST").as_deref() == Ok("1") {
+            Self::new(Duration::from_millis(20), Duration::from_millis(200))
+        } else {
+            Self::default()
+        }
+    }
+
+    /// Time `f`, which must return a value (consumed via `black_box`-like
+    /// volatile read) so the compiler cannot elide the work.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // Warmup and batch-size calibration.
+        let w0 = Instant::now();
+        let mut warm_iters: u64 = 0;
+        while w0.elapsed() < self.warmup {
+            sink(f());
+            warm_iters += 1;
+        }
+        let per_iter = self.warmup.as_secs_f64() / warm_iters.max(1) as f64;
+        // Aim for ~50 samples over the budget, at least 1 iter per sample.
+        let batch = ((self.budget.as_secs_f64() / 50.0 / per_iter.max(1e-9)) as u64).max(1);
+
+        let mut s = Stream::new();
+        let mut iters = 0u64;
+        let t0 = Instant::now();
+        while t0.elapsed() < self.budget {
+            let b0 = Instant::now();
+            for _ in 0..batch {
+                sink(f());
+            }
+            let dt = b0.elapsed().as_nanos() as f64 / batch as f64;
+            s.push(dt);
+            iters += batch;
+        }
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            iters,
+            mean_ns: s.mean(),
+            stddev_ns: s.stddev(),
+            min_ns: s.min(),
+            max_ns: s.max(),
+        });
+        let r = self.results.last().unwrap();
+        println!("{}", r.report());
+        r
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn sink<T>(x: T) -> T {
+    // Volatile read of a stack byte derived from the value's address: cheap
+    // and sufficient to anchor the computation without inline asm.
+    let r = &x;
+    unsafe {
+        std::ptr::read_volatile(&(r as *const T as usize));
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut b = Bencher::new(Duration::from_millis(5), Duration::from_millis(30));
+        let r = b.bench("noop-ish", || 1u64 + 1).clone();
+        assert!(r.iters > 0);
+        assert!(r.mean_ns >= 0.0);
+        assert!(r.report().contains("noop-ish"));
+    }
+
+    #[test]
+    fn sink_returns_value() {
+        assert_eq!(sink(42), 42);
+    }
+}

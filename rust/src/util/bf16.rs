@@ -1,0 +1,86 @@
+//! BF16 rounding helpers.
+//!
+//! The paper's datapaths are BF16 end-to-end (DRAM-PIM MACs, SRAM-PIM macros,
+//! Curry ALUs, 16-bit flit payloads). The simulator computes in f32 but
+//! rounds through BF16 at the same points the hardware would, so that the
+//! functional results seen by the ISA interpreter carry hardware-faithful
+//! precision.
+
+/// Round an f32 to the nearest BF16 (round-to-nearest-even), returned as f32.
+#[inline]
+pub fn bf16_round(x: f32) -> f32 {
+    if x.is_nan() {
+        return f32::from_bits(0x7FC0_0000); // canonical quiet NaN, bf16-representable
+    }
+    let bits = x.to_bits();
+    // round-to-nearest-even on the low 16 bits
+    let rounded = bits.wrapping_add(0x7FFF + ((bits >> 16) & 1));
+    f32::from_bits(rounded & 0xFFFF_0000)
+}
+
+/// Round every element of a slice through BF16.
+pub fn bf16_round_slice(xs: &mut [f32]) {
+    for x in xs.iter_mut() {
+        *x = bf16_round(*x);
+    }
+}
+
+/// BF16 fused multiply-accumulate as the PIM MAC units perform it:
+/// inputs are BF16, the product/accumulate is kept in f32 (hardware keeps a
+/// wider accumulator), callers round the final result.
+#[inline]
+pub fn bf16_mac(acc: f32, a: f32, b: f32) -> f32 {
+    acc + bf16_round(a) * bf16_round(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_values_unchanged() {
+        for v in [0.0f32, 1.0, -2.0, 0.5, 256.0] {
+            assert_eq!(bf16_round(v), v);
+        }
+    }
+
+    #[test]
+    fn rounds_to_16_bit_mantissa() {
+        let x = 1.0f32 + f32::EPSILON; // not representable in bf16
+        let r = bf16_round(x);
+        assert_eq!(r.to_bits() & 0xFFFF, 0);
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 1 + 2^-8 is exactly halfway between two bf16 values around 1.0.
+        let x = f32::from_bits(0x3F80_8000);
+        let r = bf16_round(x);
+        // ties to even → mantissa low bit of the bf16 result is 0
+        assert_eq!((r.to_bits() >> 16) & 1, 0);
+    }
+
+    #[test]
+    fn nan_stays_nan() {
+        assert!(bf16_round(f32::NAN).is_nan());
+    }
+
+    #[test]
+    fn relative_error_bounded() {
+        let mut worst = 0.0f32;
+        for i in 1..10_000 {
+            let v = i as f32 * 0.37;
+            let e = ((bf16_round(v) - v) / v).abs();
+            worst = worst.max(e);
+        }
+        // bf16 has 7 mantissa bits → rel err ≤ 2^-8 (matches jnp.bfloat16:
+        // worst case on this sweep is 64.75 → 65.0, rel err 0.00386)
+        assert!(worst <= 1.0 / 256.0 + 1e-7, "worst={worst}");
+    }
+
+    #[test]
+    fn infinity_preserved() {
+        assert_eq!(bf16_round(f32::INFINITY), f32::INFINITY);
+        assert_eq!(bf16_round(f32::NEG_INFINITY), f32::NEG_INFINITY);
+    }
+}

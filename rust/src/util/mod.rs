@@ -1,0 +1,10 @@
+//! Small self-contained utilities (PRNG, stats, tables, bench/prop harnesses,
+//! BF16 rounding). Nothing here depends on the rest of the library.
+pub mod bench;
+pub mod bf16;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+pub use rng::XorShiftRng;

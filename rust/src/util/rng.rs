@@ -1,0 +1,121 @@
+//! Deterministic xorshift64* PRNG.
+//!
+//! No external `rand` crate is vendored in this environment, so the library
+//! carries its own small, seedable generator. It is used by the workload
+//! generators, the property-test harness, and the serving-traffic models —
+//! everywhere determinism per seed matters for reproducibility.
+
+/// xorshift64* generator (Marsaglia / Vigna). Passes BigCrush for our needs.
+#[derive(Debug, Clone)]
+pub struct XorShiftRng {
+    state: u64,
+}
+
+impl XorShiftRng {
+    /// Create a generator from a non-zero seed (0 is remapped).
+    pub fn new(seed: u64) -> Self {
+        Self { state: if seed == 0 { 0x9E3779B97F4A7C15 } else { seed } }
+    }
+
+    /// Next raw 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform f32 in [lo, hi).
+    pub fn next_f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (self.next_f64() as f32) * (hi - lo)
+    }
+
+    /// Uniform usize in [0, n). n must be > 0.
+    pub fn next_below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Uniform usize in [lo, hi] inclusive.
+    pub fn next_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi >= lo);
+        lo + self.next_below(hi - lo + 1)
+    }
+
+    /// Random bool with probability p of true.
+    pub fn next_bool(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Fill a vector with n uniform f32 values in [lo, hi).
+    pub fn vec_f32(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n).map(|_| self.next_f32_in(lo, hi)).collect()
+    }
+
+    /// Sample an exponential inter-arrival time with the given rate (events/s).
+    pub fn next_exp(&mut self, rate: f64) -> f64 {
+        let u = self.next_f64().max(1e-12);
+        -u.ln() / rate
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = XorShiftRng::new(42);
+        let mut b = XorShiftRng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = XorShiftRng::new(1);
+        let mut b = XorShiftRng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = XorShiftRng::new(7);
+        for _ in 0..10_000 {
+            let v = r.next_f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn next_in_bounds() {
+        let mut r = XorShiftRng::new(9);
+        for _ in 0..10_000 {
+            let v = r.next_in(3, 17);
+            assert!((3..=17).contains(&v));
+        }
+    }
+
+    #[test]
+    fn zero_seed_remapped() {
+        let mut r = XorShiftRng::new(0);
+        assert_ne!(r.next_u64(), 0);
+    }
+
+    #[test]
+    fn exp_mean_close_to_inverse_rate() {
+        let mut r = XorShiftRng::new(1234);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| r.next_exp(4.0)).sum::<f64>() / n as f64;
+        assert!((mean - 0.25).abs() < 0.02, "mean={mean}");
+    }
+}

@@ -1,0 +1,152 @@
+//! ASCII table / series printers used by the figure-regeneration harness.
+//!
+//! Every paper table/figure is re-emitted as text rows so that runs are
+//! diffable and greppable in CI. `Table` renders aligned columns; `Series`
+//! renders (x, y...) sweeps the way the paper's line plots read.
+
+use std::fmt::Write as _;
+
+/// A simple aligned ASCII table.
+#[derive(Debug, Clone)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch in table '{}'", self.title);
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    /// Convenience: row from display-able values.
+    pub fn rowv(&mut self, cells: Vec<String>) -> &mut Self {
+        self.row(&cells)
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==", self.title);
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let _ = writeln!(out, "{}", line(&self.header, &widths));
+        let total: usize = widths.iter().sum::<usize>() + 2 * (widths.len() - 1);
+        let _ = writeln!(out, "{}", "-".repeat(total));
+        for r in &self.rows {
+            let _ = writeln!(out, "{}", line(r, &widths));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format a float compactly (3 significant-ish digits, engineering-friendly).
+pub fn fnum(x: f64) -> String {
+    if x == 0.0 {
+        return "0".into();
+    }
+    let a = x.abs();
+    if a >= 1e6 || a < 1e-3 {
+        format!("{x:.3e}")
+    } else if a >= 100.0 {
+        format!("{x:.1}")
+    } else if a >= 1.0 {
+        format!("{x:.3}")
+    } else {
+        format!("{x:.4}")
+    }
+}
+
+/// Format a ratio as "1.83x".
+pub fn fx(x: f64) -> String {
+    format!("{x:.2}x")
+}
+
+/// Format nanoseconds with an adaptive unit.
+pub fn ftime_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3}s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3}ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3}us", ns / 1e3)
+    } else {
+        format!("{ns:.1}ns")
+    }
+}
+
+/// Format picojoules with an adaptive unit.
+pub fn fenergy_pj(pj: f64) -> String {
+    if pj >= 1e12 {
+        format!("{:.3}J", pj / 1e12)
+    } else if pj >= 1e9 {
+        format!("{:.3}mJ", pj / 1e9)
+    } else if pj >= 1e6 {
+        format!("{:.3}uJ", pj / 1e6)
+    } else if pj >= 1e3 {
+        format!("{:.3}nJ", pj / 1e3)
+    } else {
+        format!("{pj:.1}pJ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["a", "long-col"]);
+        t.row(&["1".into(), "2".into()]);
+        t.row(&["100".into(), "x".into()]);
+        let s = t.render();
+        assert!(s.contains("== demo =="));
+        assert!(s.contains("long-col"));
+        assert_eq!(s.lines().count(), 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity mismatch")]
+    fn table_arity_checked() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(&["1".into()]);
+    }
+
+    #[test]
+    fn num_formats() {
+        assert_eq!(fnum(0.0), "0");
+        assert_eq!(fx(1.834), "1.83x");
+        assert_eq!(ftime_ns(1500.0), "1.500us");
+        assert_eq!(ftime_ns(2.5e9), "2.500s");
+        assert_eq!(fenergy_pj(2.0e9), "2.000mJ");
+    }
+}

@@ -1,0 +1,5 @@
+//! LLM workload model: transformer op-graphs per phase, FLOP/byte math, and
+//! KV-cache growth.
+pub mod ops;
+
+pub use ops::{layer_ops, LlmOp, OpClass};

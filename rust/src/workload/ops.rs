@@ -1,0 +1,193 @@
+//! Transformer operator decomposition (Fig 3): the op list one layer
+//! executes per phase, with exact shapes. The mapping layer lowers these
+//! onto the simulated hardware.
+
+use crate::config::{ModelConfig, Phase};
+
+/// Operator class, used for mapping decisions and figure breakdowns.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpClass {
+    Fc,
+    Attention,
+    NonLinear,
+    Collective,
+}
+
+/// One operator instance with concrete shapes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LlmOp {
+    /// Dense layer: `tokens × d_in → tokens × d_out` (weights `d_out×d_in`).
+    Fc { name: &'static str, d_in: usize, d_out: usize, tokens: usize },
+    /// Q·Kᵀ: per (batch, head): `rows_q × d_head` against a `seq × d_head`
+    /// K-cache (input-dependent matrix — no cross-batch reuse).
+    AttnQK { batch: usize, heads: usize, rows_q: usize, seq: usize, d_head: usize },
+    /// scores·V: per (batch, head): `rows_q × seq` against `seq × d_head`.
+    AttnSV { batch: usize, heads: usize, rows_q: usize, seq: usize, d_head: usize },
+    /// Row-wise softmax over `rows` rows of length `seq` (exp + reduce +
+    /// normalize).
+    Softmax { rows: usize, seq: usize },
+    /// RoPE on Q and K: `tokens × heads` head-vectors of `d_head`.
+    Rope { tokens: usize, heads: usize, d_head: usize },
+    /// RMSNorm over `tokens` vectors of `d_model` (square-sum reduce +
+    /// rsqrt + scale).
+    RmsNorm { tokens: usize, d_model: usize },
+    /// Element-wise activation/gating over `tokens × width` (SiLU·gate for
+    /// Llama, GELU for GPT).
+    Activation { name: &'static str, tokens: usize, width: usize },
+    /// Tensor-parallel all-reduce of `tokens × d_model` BF16 across `tp`
+    /// devices.
+    AllReduce { tokens: usize, d_model: usize },
+}
+
+impl LlmOp {
+    pub fn class(&self) -> OpClass {
+        match self {
+            LlmOp::Fc { .. } => OpClass::Fc,
+            LlmOp::AttnQK { .. } | LlmOp::AttnSV { .. } => OpClass::Attention,
+            LlmOp::Softmax { .. }
+            | LlmOp::Rope { .. }
+            | LlmOp::RmsNorm { .. }
+            | LlmOp::Activation { .. } => OpClass::NonLinear,
+            LlmOp::AllReduce { .. } => OpClass::Collective,
+        }
+    }
+
+    /// MAC count of this op (elementwise/nonlinear ops report their scalar
+    /// op count).
+    pub fn macs(&self) -> u64 {
+        match self {
+            LlmOp::Fc { d_in, d_out, tokens, .. } => (d_in * d_out * tokens) as u64,
+            LlmOp::AttnQK { batch, heads, rows_q, seq, d_head }
+            | LlmOp::AttnSV { batch, heads, rows_q, seq, d_head } => {
+                (batch * heads * rows_q * seq * d_head) as u64
+            }
+            LlmOp::Softmax { rows, seq } => (rows * seq) as u64,
+            LlmOp::Rope { tokens, heads, d_head } => (tokens * heads * d_head) as u64,
+            LlmOp::RmsNorm { tokens, d_model } => (tokens * d_model) as u64,
+            LlmOp::Activation { tokens, width, .. } => (tokens * width) as u64,
+            LlmOp::AllReduce { tokens, d_model } => (tokens * d_model) as u64,
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            LlmOp::Fc { name, .. } => format!("fc:{name}"),
+            LlmOp::AttnQK { .. } => "attn:qk".into(),
+            LlmOp::AttnSV { .. } => "attn:sv".into(),
+            LlmOp::Softmax { .. } => "nl:softmax".into(),
+            LlmOp::Rope { .. } => "nl:rope".into(),
+            LlmOp::RmsNorm { .. } => "nl:rmsnorm".into(),
+            LlmOp::Activation { name, .. } => format!("nl:{name}"),
+            LlmOp::AllReduce { .. } => "coll:allreduce".into(),
+        }
+    }
+}
+
+/// The op list of ONE transformer layer for the phase.
+///
+/// * decode: `rows_q = 1` new token per sequence, KV length = `seq`;
+/// * prefill: `rows_q = seq` (we model the full causal pass with the
+///   average effective KV length seq/2 for the quadratic terms).
+pub fn layer_ops(m: &ModelConfig, phase: Phase, batch: usize, seq: usize) -> Vec<LlmOp> {
+    let d = m.d_model;
+    let kv_dim = m.n_kv_heads * m.d_head();
+    let (tokens, rows_q, eff_seq) = match phase {
+        Phase::Decode => (batch, 1, seq),
+        Phase::Prefill => (batch * seq, seq, seq.div_ceil(2).max(1)),
+    };
+    let mut ops = vec![
+        LlmOp::RmsNorm { tokens, d_model: d },
+        LlmOp::Fc { name: "q", d_in: d, d_out: d, tokens },
+        LlmOp::Fc { name: "kv", d_in: d, d_out: 2 * kv_dim, tokens },
+        LlmOp::Rope { tokens, heads: m.n_heads + m.n_kv_heads, d_head: m.d_head() },
+        LlmOp::AttnQK { batch, heads: m.n_heads, rows_q, seq: eff_seq, d_head: m.d_head() },
+        LlmOp::Softmax { rows: batch * m.n_heads * rows_q, seq: eff_seq },
+        LlmOp::AttnSV { batch, heads: m.n_heads, rows_q, seq: eff_seq, d_head: m.d_head() },
+        LlmOp::Fc { name: "o", d_in: d, d_out: d, tokens },
+        LlmOp::AllReduce { tokens, d_model: d },
+        LlmOp::RmsNorm { tokens, d_model: d },
+    ];
+    if m.gated_ffn {
+        ops.push(LlmOp::Fc { name: "up", d_in: d, d_out: m.d_ffn, tokens });
+        ops.push(LlmOp::Fc { name: "gate", d_in: d, d_out: m.d_ffn, tokens });
+        ops.push(LlmOp::Activation { name: "silu_gate", tokens, width: m.d_ffn });
+    } else {
+        ops.push(LlmOp::Fc { name: "up", d_in: d, d_out: m.d_ffn, tokens });
+        ops.push(LlmOp::Activation { name: "gelu", tokens, width: m.d_ffn });
+    }
+    ops.push(LlmOp::Fc { name: "down", d_in: m.d_ffn, d_out: d, tokens });
+    ops.push(LlmOp::AllReduce { tokens, d_model: d });
+    ops
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decode_layer_macs_match_closed_form() {
+        let m = ModelConfig::llama2_7b();
+        let ops = layer_ops(&m, Phase::Decode, 1, 4096);
+        let fc_macs: u64 =
+            ops.iter().filter(|o| o.class() == OpClass::Fc).map(|o| o.macs()).sum();
+        // 7B layer FC: q(d²) + kv(2d·kv) + o(d²) + up/gate/down(3·d·f)
+        let d = 4096u64;
+        let f = 11008u64;
+        assert_eq!(fc_macs, d * d + 2 * d * d + d * d + 3 * d * f);
+        let attn_macs: u64 = ops
+            .iter()
+            .filter(|o| o.class() == OpClass::Attention)
+            .map(|o| o.macs())
+            .sum();
+        assert_eq!(attn_macs, 2 * 32 * 4096 * 128);
+    }
+
+    #[test]
+    fn prefill_scales_quadratically_in_attention() {
+        let m = ModelConfig::llama2_7b();
+        let a1: u64 = layer_ops(&m, Phase::Prefill, 1, 1024)
+            .iter()
+            .filter(|o| o.class() == OpClass::Attention)
+            .map(|o| o.macs())
+            .sum();
+        let a2: u64 = layer_ops(&m, Phase::Prefill, 1, 2048)
+            .iter()
+            .filter(|o| o.class() == OpClass::Attention)
+            .map(|o| o.macs())
+            .sum();
+        let ratio = a2 as f64 / a1 as f64;
+        assert!((3.8..4.2).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn gqa_shrinks_kv_projection() {
+        let mha = ModelConfig::qwen_72b();
+        let gqa = ModelConfig::llama2_70b();
+        let kv_of = |m: &ModelConfig| {
+            layer_ops(m, Phase::Decode, 1, 128)
+                .iter()
+                .find_map(|o| match o {
+                    LlmOp::Fc { name: "kv", d_out, .. } => Some(*d_out),
+                    _ => None,
+                })
+                .unwrap()
+        };
+        assert_eq!(kv_of(&mha), 2 * 8192);
+        assert_eq!(kv_of(&gqa), 2 * 1024);
+    }
+
+    #[test]
+    fn gpt_has_no_gate() {
+        let ops = layer_ops(&ModelConfig::gpt3_175b(), Phase::Decode, 4, 128);
+        assert!(ops.iter().all(|o| !matches!(o, LlmOp::Fc { name: "gate", .. })));
+        assert!(ops.iter().any(|o| matches!(o, LlmOp::Activation { name: "gelu", .. })));
+    }
+
+    #[test]
+    fn op_names_stable() {
+        let ops = layer_ops(&ModelConfig::tiny(), Phase::Decode, 1, 16);
+        let names: Vec<String> = ops.iter().map(|o| o.name()).collect();
+        assert!(names.contains(&"nl:softmax".to_string()));
+        assert!(names.contains(&"fc:down".to_string()));
+    }
+}

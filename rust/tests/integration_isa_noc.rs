@@ -1,0 +1,113 @@
+//! Integration: hierarchical-ISA programs driving the flit-level NoC,
+//! cross-checked against the analytical collective models and the Python
+//! reference semantics (through shared closed-form recurrences).
+
+use compair::config::{HwConfig, SramGang};
+use compair::isa::{plan, Machine, Plan, RowInst, RowProgram, ALL_BANKS};
+use compair::noc::{curry_exp, exchange, StepOp};
+use compair::util::bf16::bf16_round;
+
+fn machine() -> Machine {
+    Machine::new(&HwConfig::paper(), SramGang::In256Out16)
+}
+
+#[test]
+fn full_softmax_denominator_pipeline() {
+    // exp on every bank's score, reduce to bank 0, broadcast back, divide:
+    // the Fig 10 softmax dataflow end to end on the machine.
+    let mut m = machine();
+    let scores: Vec<f32> = (0..16).map(|b| -0.1 * b as f32).collect();
+    for (b, &s) in scores.iter().enumerate() {
+        m.write_row(b, 0, &[s]);
+    }
+    let mut p = RowProgram::new();
+    for i in RowProgram::exp_program(0, 10, 1, 6, ALL_BANKS).insts {
+        p.push(i);
+    }
+    p.push(RowInst::NocReduce {
+        op: StepOp::Add,
+        src: 10,
+        dst: 20,
+        mask: ALL_BANKS,
+        dst_bank: 0,
+        len: 1,
+    });
+    p.push(RowInst::NocBCast { src: 20, dst: 30, mask: ALL_BANKS, src_bank: 0, len: 1 });
+    let cost = m.run(&p, true);
+    assert!(cost.latency_ns > 0.0);
+    assert!(cost.counts.noc_alu_ops > 0);
+
+    let exps: Vec<f32> = scores.iter().map(|&s| curry_exp(bf16_round(s), 6)).collect();
+    let total: f32 = {
+        // tree fold order (bf16)
+        let mut v = exps.clone();
+        let mut stride = 1;
+        while stride < 16 {
+            for i in (0..16).step_by(2 * stride) {
+                v[i] = StepOp::Add.apply(v[i + stride], v[i]);
+            }
+            stride *= 2;
+        }
+        v[0]
+    };
+    for b in 0..16 {
+        let got = m.read_row(b, 30, 1)[0];
+        assert_eq!(got, total, "bank {b} denominator");
+    }
+}
+
+#[test]
+fn rope_pipeline_exchange_plus_ewmul_matches_reference() {
+    let mut m = machine();
+    let x: Vec<f32> = (0..32).map(|i| (i as f32 * 0.37).sin()).collect();
+    m.write_row(2, 0, &x);
+    let mut p = RowProgram::new();
+    p.push(RowInst::rope_exchange(0, 100, x.len()));
+    m.run(&p, true);
+    let got = m.read_row(2, 100, x.len());
+    // bank memory stores BF16 — compare against the rearrangement of the
+    // quantized vector
+    let xb: Vec<f32> = x.iter().map(|&v| bf16_round(v)).collect();
+    assert_eq!(got, exchange::rope_rearrange(&xb));
+}
+
+#[test]
+fn fused_plans_absorb_whole_programs() {
+    for rounds in [2u32, 4, 6] {
+        let p = RowProgram::exp_program(0, 50, 2, rounds, 1);
+        let plans = plan(&p.insts, true);
+        let chains: Vec<_> = plans
+            .iter()
+            .filter_map(|pl| match pl {
+                Plan::Chain(c) => Some(c),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(chains.len(), 1, "rounds={rounds}");
+        assert_eq!(chains[0].iter_num as u32, rounds);
+    }
+}
+
+#[test]
+fn mixed_program_costs_compose() {
+    let mut m = machine();
+    for b in 0..16 {
+        m.write_row(b, 0, &[1.0, 2.0, 3.0, 4.0]);
+    }
+    let mut p = RowProgram::new();
+    p.push(RowInst::scalar(StepOp::Mul, 0, 50, 4, 2.0));
+    p.push(RowInst::scalar(StepOp::Add, 50, 60, 4, -1.0));
+    p.push(RowInst::NocReduce {
+        op: StepOp::Add,
+        src: 60,
+        dst: 70,
+        mask: ALL_BANKS,
+        dst_bank: 5,
+        len: 4,
+    });
+    let c = m.run(&p, true);
+    // (x*2)-1 per bank, summed over 16 identical banks
+    assert_eq!(m.read_row(5, 70, 4), vec![16.0, 48.0, 80.0, 112.0]);
+    assert!(c.counts.noc_flit_hops > 0);
+    assert!(c.counts.dram_col_rd > 0, "DRAM endpoints must be accounted");
+}

@@ -1,0 +1,121 @@
+//! System-level integration: whole-pipeline behaviours spanning workload →
+//! mapping → substrates → energy, and the serving coordinator on top.
+
+use compair::arch::{attacc, simulate, AttAccConfig};
+use compair::config::{ArchKind, FcMapping, ModelConfig, Phase, RunConfig, SramGang};
+use compair::coordinator::{ServeConfig, Server};
+
+#[test]
+fn headline_decode_speedups_hold_across_models() {
+    // paper headline: 1.95-6.28x decode at batch 64 vs fully-PIM baseline
+    for m in [ModelConfig::llama2_7b(), ModelConfig::llama2_70b()] {
+        let mut cent = RunConfig::new(ArchKind::Cent, m.clone());
+        cent.batch = 64;
+        cent.seq_len = 4096;
+        let mut ca = cent.clone();
+        ca.arch = ArchKind::CompAirOpt;
+        ca.hw = compair::config::HwConfig::paper_opt();
+        let s = simulate(cent).latency_ns / simulate(ca).latency_ns;
+        assert!((1.5..14.0).contains(&s), "{}: decode speedup {s:.2}", m.name);
+    }
+}
+
+#[test]
+fn energy_vs_attacc_headline() {
+    // paper: CompAir 3.52x lower energy/token than AttAcc at comparable
+    // throughput (4K ctx). Our roofline reproduces the direction and a
+    // >2x factor (EXPERIMENTS.md records the exact paper-vs-measured gap).
+    let mut rc = RunConfig::new(ArchKind::CompAirOpt, ModelConfig::gpt3_175b());
+    rc.batch = 64;
+    rc.seq_len = 4096;
+    rc.devices = 96;
+    rc.tp = 8;
+    let compair_e = simulate(rc.clone()).energy.total_pj();
+    let mut ra = rc;
+    ra.arch = ArchKind::AttAcc;
+    let attacc_e = attacc::simulate(&ra, &AttAccConfig::default()).energy.total_pj();
+    let ratio = attacc_e / compair_e;
+    assert!(ratio > 2.0, "energy advantage only {ratio:.2}x");
+}
+
+#[test]
+fn input_split_beats_output_split_with_noc_reduction() {
+    // §3.3: with cheap inter-bank reduction, input-split mapping wins for
+    // SRAM-PIM FC layers at moderate batch.
+    let mut a = RunConfig::new(ArchKind::CompAirOpt, ModelConfig::llama2_13b());
+    a.batch = 16;
+    a.seq_len = 4096;
+    a.fc_mapping = FcMapping::OutputSplit;
+    let mut b = a.clone();
+    b.fc_mapping = FcMapping::InputSplit;
+    let ta = simulate(a).latency_ns;
+    let tb = simulate(b).latency_ns;
+    // input-split must at least be competitive (within 30%) and often wins
+    assert!(tb < ta * 1.3, "input-split {tb} vs output-split {ta}");
+}
+
+#[test]
+fn gang_shapes_tradeoff_visible() {
+    let mut a = RunConfig::new(ArchKind::CompAirOpt, ModelConfig::llama2_13b());
+    a.batch = 16;
+    a.sram_gang = SramGang::In512Out8;
+    let mut b = a.clone();
+    b.sram_gang = SramGang::In256Out16;
+    let (ta, tb) = (simulate(a).latency_ns, simulate(b).latency_ns);
+    // both must run; (256,16) should not be drastically worse
+    assert!(tb < ta * 1.5, "(256,16)={tb} vs (512,8)={ta}");
+}
+
+#[test]
+fn prefill_and_decode_internally_consistent() {
+    // a 1-token prefill and a decode step at seq 1 should be same order of
+    // magnitude (they execute near-identical op lists)
+    let mut d = RunConfig::new(ArchKind::CompAirOpt, ModelConfig::llama2_7b());
+    d.batch = 1;
+    d.seq_len = 1;
+    let mut p = d.clone();
+    p.phase = Phase::Prefill;
+    let (td, tp_) = (simulate(d).latency_ns, simulate(p).latency_ns);
+    let ratio = tp_ / td;
+    assert!((0.2..5.0).contains(&ratio), "prefill/decode ratio {ratio}");
+}
+
+#[test]
+fn serving_under_all_archs_completes() {
+    for arch in [ArchKind::Cent, ArchKind::CompAirOpt] {
+        let mut rc = RunConfig::new(arch, ModelConfig::llama2_7b());
+        rc.tp = 8;
+        let r = Server::new(
+            rc,
+            ServeConfig { n_requests: 10, gen_len: 4, prompt_len: 64, ..Default::default() },
+        )
+        .run();
+        assert_eq!(r.completed, 10, "{arch:?}");
+        assert!(r.ttft_p50_ns > 0.0);
+    }
+}
+
+#[test]
+fn kv_capacity_feasibility_gpt3_128k() {
+    // 32 devices x 512 banks x 32MB = 512GB/device-group; check the KV
+    // cache of the Fig 15 point actually fits in the modeled fabric
+    let m = ModelConfig::gpt3_175b();
+    // Capacity audit of the Fig 15 workload. A CompAir device holds
+    // 512 banks x 32 MB = 16 GB. GPT3-175B KV at 128K x batch 64 is ~36 TB
+    // — beyond ANY configuration in the paper (96 devices = 1.5 TB), so the
+    // 128K headline necessarily relies on KV streaming/paging; we document
+    // this in EXPERIMENTS.md. The 4K-context energy-comparison point plus
+    // weights must genuinely fit on 96 devices.
+    let hw = compair::config::HwConfig::paper();
+    let per_device: u64 = hw.dram.banks_per_device() as u64 * ((hw.dram.bank_mb as u64) << 20);
+    assert_eq!(per_device, 16 << 30);
+    let weights = m.total_fc_params() * 2;
+    let kv_4k = m.kv_bytes_per_token() * 4096 * 64;
+    assert!(
+        kv_4k + weights <= 96 * per_device,
+        "4K point must fit 96 devices: kv={kv_4k} w={weights} cap={}",
+        96 * per_device
+    );
+    let kv_128k = m.kv_bytes_per_token() * 128 * 1024 * 64;
+    assert!(kv_128k > 96 * per_device, "128K point relies on KV streaming (documented)");
+}

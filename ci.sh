@@ -1,0 +1,59 @@
+#!/usr/bin/env bash
+# CI gate for the CompAir repo. Run from the repository root:
+#
+#     ./ci.sh            # full gate
+#     ./ci.sh --fast     # skip the doc and fmt passes
+#
+# Steps (each must pass):
+#   1. cargo build --release        — the crate and all targets compile
+#   2. cargo test -q                — unit + integration tests (tier-1)
+#   3. cargo doc --no-deps          — rustdoc with warnings denied
+#   4. cargo fmt --check            — formatting (skipped if rustfmt absent)
+#   5. python tests                 — kernel/model oracles (skipped without jax)
+#
+# PJRT-dependent tests self-skip when built without the `pjrt` feature; see
+# rust/Cargo.toml for how to enable it with a vendored xla crate.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+FAST=0
+[[ "${1:-}" == "--fast" ]] && FAST=1
+
+say() { printf '\n== %s ==\n' "$*"; }
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "error: cargo not found on PATH — install a Rust toolchain (rustup.rs)" >&2
+    echo "       or enter the image that bakes one in; nothing was checked." >&2
+    exit 1
+fi
+
+say "cargo build --release"
+cargo build --release
+
+say "cargo test -q"
+cargo test -q
+
+if [[ "$FAST" == "0" ]]; then
+    say "cargo doc --no-deps (warnings are errors)"
+    RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
+    if command -v rustfmt >/dev/null 2>&1; then
+        say "cargo fmt --check"
+        cargo fmt --all --check
+    else
+        echo "skipping fmt: rustfmt not installed"
+    fi
+fi
+
+if python3 -c 'import jax' >/dev/null 2>&1; then
+    if python3 -c 'import pytest' >/dev/null 2>&1; then
+        say "python kernel/model tests"
+        (cd python && python3 -m pytest -q tests)
+    else
+        echo "skipping python tests: pytest not installed"
+    fi
+else
+    echo "skipping python tests: jax not installed"
+fi
+
+say "CI gate passed"

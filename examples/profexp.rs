@@ -1,5 +1,12 @@
+//! Profiling workload: hammers the hierarchical-ISA machine's exp program
+//! in a tight loop so `perf`/flamegraph sessions have a steady hot path to
+//! sample (the §Perf optimization loop's target binary).
+//!
+//! Run: `cargo run --release --example profexp`
+
 use compair::config::{HwConfig, SramGang};
 use compair::isa::{Machine, RowProgram};
+
 fn main() {
     let hw = HwConfig::paper();
     for _ in 0..500 {

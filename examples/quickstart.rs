@@ -14,7 +14,7 @@ use compair::runtime::{Runtime, Tensor};
 use compair::util::table::{fenergy_pj, fnum, ftime_ns};
 use compair::util::XorShiftRng;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> compair::runtime::Result<()> {
     // ---- numerics through the AOT artifacts ----
     let mut rt = Runtime::cpu()?;
     println!("PJRT platform: {}", rt.platform());

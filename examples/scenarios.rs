@@ -1,0 +1,51 @@
+//! Scenario sweep: every named serving scenario driven end to end through
+//! the SLO-aware continuous batcher on the CompAir hardware model, with
+//! per-class SLO breakdowns, followed by the CENT-vs-CompAir face-off on
+//! the mixed multi-tenant blend.
+//!
+//! Run: `cargo run --release --example scenarios`
+
+use compair::config::{ArchKind, ModelConfig, RunConfig};
+use compair::coordinator::{run_scenario, serving};
+use compair::util::table::{fenergy_pj, fnum, ftime_ns, Table};
+use compair::workload::Scenario;
+
+fn rc(arch: ArchKind) -> RunConfig {
+    let mut rc = RunConfig::new(arch, ModelConfig::llama2_7b());
+    rc.tp = 8;
+    rc.devices = 32;
+    rc
+}
+
+fn main() {
+    println!("==== scenario sweep: CompAir_Opt, llama2-7b, TP=8, 32 devices ====\n");
+    for sc in Scenario::all() {
+        let name = sc.name;
+        let desc = sc.description;
+        let n = sc.default_requests;
+        let sr = run_scenario(rc(ArchKind::CompAirOpt), sc, n, 42);
+        println!("-- {name}: {desc} --");
+        print!("{}", serving::render_summary(&sr.report));
+        sr.report.class_table("per-class").print();
+        println!();
+    }
+
+    println!("==== mixed multi-tenant blend across architectures ====");
+    let mut t = Table::new(
+        "same trace, same SLOs",
+        &["arch", "makespan", "tok/s", "ttft p99", "slo%", "energy/tok"],
+    );
+    for arch in [ArchKind::Cent, ArchKind::CentCurry, ArchKind::CompAirOpt] {
+        let sc = Scenario::by_name("mixed").unwrap();
+        let r = run_scenario(rc(arch), sc, 48, 42).report;
+        t.rowv(vec![
+            arch.label().to_string(),
+            ftime_ns(r.makespan_ns as f64),
+            fnum(r.throughput_tok_s),
+            ftime_ns(r.ttft_p99_ns),
+            format!("{:.1}%", r.slo_attainment * 100.0),
+            fenergy_pj(r.energy_per_token_pj),
+        ]);
+    }
+    t.print();
+}

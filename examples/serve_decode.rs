@@ -26,7 +26,7 @@ const S: usize = 64; // max_seq
 const DH: usize = 16;
 const D: usize = 64;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> compair::runtime::Result<()> {
     let mut rt = Runtime::cpu()?;
     let decode = rt.load("decode_step")?;
 
@@ -47,7 +47,7 @@ fn main() -> anyhow::Result<()> {
     let mut arrival = 0u64;
     for id in 0..n_requests {
         arrival += (rng.next_exp(2000.0) * 1e9) as u64;
-        pending.push(Request { id: id as u64, prompt_len, gen_len, arrived_ns: arrival });
+        pending.push(Request::new(id as u64, prompt_len, gen_len, arrival));
     }
 
     // Simulator for per-iteration timing (tiny model on CompAir).
@@ -86,7 +86,7 @@ fn main() -> anyhow::Result<()> {
         batcher.admit(now);
         let pre = batcher.prefill_set();
         batcher.finish_prefill(&pre, now);
-        let active = batcher.active.iter().filter(|s| s.prefilled && !s.done()).count();
+        let active = batcher.active.iter().filter(|s| s.is_prefilled() && !s.done()).count();
         if active == 0 {
             now += 1000;
             continue;

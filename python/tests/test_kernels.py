@@ -3,7 +3,30 @@ including hypothesis sweeps over shapes and value ranges."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline image without hypothesis: run the
+    # deterministic oracle tests, skip only the property sweeps
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            return pytest.mark.skip(
+                reason="hypothesis not installed; property sweep skipped"
+            )(fn)
+
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    class _StrategyStub:
+        """Evaluates strategy expressions like st.integers(1, 6) to None."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()
 
 from compile.kernels import curry, gemv_bank, ref, rmsnorm, rope, softmax, sram_macro
 

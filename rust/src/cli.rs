@@ -76,13 +76,17 @@ USAGE:
                    [--batch N] [--seqlen N] [--tp N] [--devices N]
                    [--config file.toml]   run one simulation, print report
   compair serve    [--arch A] [--model M] [--rate R] [--requests N]
-                   [--prompt N] [--gen N] continuous-batching serving sim
+                   [--prompt N] [--gen N] [--seed S]
+                   [--scenario NAME]      continuous-batching serving sim;
+                                          --scenario serves a named request
+                                          mix with per-class SLO reporting
   compair isa-demo [--len N] [--rounds N] run the hierarchical-ISA exp demo
   compair config show                     print the Table-3 hardware config
-  compair list                            list available figures/models/archs
+  compair list                            list figures/models/archs/scenarios
 
-ARCHS:  cent | cent-curry | compair-base | compair-opt
-MODELS: llama2-7b | llama2-13b | llama2-70b | qwen-72b | gpt3-175b | tiny
+ARCHS:     cent | cent-curry | compair-base | compair-opt
+MODELS:    llama2-7b | llama2-13b | llama2-70b | qwen-72b | gpt3-175b | tiny
+SCENARIOS: chat | rag | long-context | batch | bursty | mixed
 ";
 
 #[cfg(test)]

@@ -1,73 +1,175 @@
 //! Continuous batching: requests join the running batch as slots free up
 //! (Orca-style iteration-level scheduling), bounded by a batch-size cap and
 //! a KV-capacity budget.
+//!
+//! The batcher is SLO-aware: admission is earliest-deadline-first over the
+//! queue (deadline = arrival + TTFT target) with KV-budget backfill, urgent
+//! arrivals may preempt looser-SLO active requests (recompute-on-resume
+//! eviction), and prefill is chunked so a long prompt cannot monopolize an
+//! iteration and starve the decode batch.
 
 use std::collections::VecDeque;
 
-/// One inference request.
+use crate::workload::Slo;
+
+/// One inference request as emitted by a workload trace.
 #[derive(Debug, Clone)]
 pub struct Request {
+    /// Trace-unique id (stable across preemptions).
     pub id: u64,
+    /// Index into the scenario's request classes (0 for homogeneous runs).
+    pub class: usize,
+    /// Prompt tokens to prefill.
     pub prompt_len: usize,
+    /// Tokens to generate after prefill.
     pub gen_len: usize,
+    /// Arrival time on the simulated clock (ns).
     pub arrived_ns: u64,
+    /// Latency objective for this request's class.
+    pub slo: Slo,
+    /// Times this request was preempted (survives requeueing, so the count
+    /// is visible on the completed request).
+    pub preemptions: u32,
+}
+
+impl Request {
+    /// A single-class request with a relaxed SLO (the homogeneous-workload
+    /// constructor the pre-scenario callers use).
+    pub fn new(id: u64, prompt_len: usize, gen_len: usize, arrived_ns: u64) -> Self {
+        Self { id, class: 0, prompt_len, gen_len, arrived_ns, slo: Slo::default(), preemptions: 0 }
+    }
+
+    /// Admission deadline: the latest time prefill may complete while still
+    /// meeting the TTFT target.
+    pub fn deadline_ns(&self) -> u64 {
+        self.arrived_ns.saturating_add(self.slo.ttft_ns)
+    }
 }
 
 /// Lifecycle state of an admitted request.
 #[derive(Debug, Clone)]
 pub struct RequestState {
+    /// The underlying request.
     pub req: Request,
+    /// Decode tokens produced so far.
     pub generated: usize,
-    pub prefilled: bool,
+    /// Prompt tokens prefilled so far (chunked prefill advances this).
+    pub prefilled_tokens: usize,
+    /// When the request was (last) admitted into the running batch (ns).
     pub admitted_ns: u64,
+    /// When the first output token was produced (ns), once prefill finishes.
     pub first_token_ns: Option<u64>,
 }
 
 impl RequestState {
+    /// Has the whole prompt been prefilled?
+    pub fn is_prefilled(&self) -> bool {
+        self.prefilled_tokens >= self.req.prompt_len
+    }
+
+    /// KV tokens physically resident right now (grows chunk by chunk).
     pub fn kv_tokens(&self) -> usize {
+        self.prefilled_tokens + self.generated
+    }
+
+    /// KV tokens this request accounts for in the admission budget: the
+    /// full prompt is reserved up front so a half-prefilled request can
+    /// always finish.
+    pub fn kv_footprint(&self) -> usize {
         self.req.prompt_len + self.generated
     }
 
+    /// Prompt tokens still to prefill.
+    pub fn prefill_remaining(&self) -> usize {
+        self.req.prompt_len.saturating_sub(self.prefilled_tokens)
+    }
+
+    /// Fully served?
     pub fn done(&self) -> bool {
-        self.prefilled && self.generated >= self.req.gen_len
+        self.is_prefilled() && self.generated >= self.req.gen_len
+    }
+
+    /// Observed time-to-first-token (ns), once known.
+    pub fn ttft_ns(&self) -> Option<u64> {
+        self.first_token_ns.map(|t| t.saturating_sub(self.req.arrived_ns))
+    }
+
+    /// Observed average per-output-token latency (ns) given the finish
+    /// time; 0 for single-token generations.
+    pub fn tpot_ns(&self, finished_ns: u64) -> f64 {
+        match (self.first_token_ns, self.req.gen_len) {
+            (Some(first), g) if g >= 2 => {
+                finished_ns.saturating_sub(first) as f64 / (g - 1) as f64
+            }
+            _ => 0.0,
+        }
     }
 }
 
 /// Batcher configuration.
 #[derive(Debug, Clone)]
 pub struct BatcherConfig {
+    /// Max requests resident in the running batch.
     pub max_batch: usize,
     /// Total KV tokens the fabric can hold (capacity budget).
     pub max_kv_tokens: usize,
     /// Bounded admission queue (backpressure: excess arrivals are rejected).
     pub queue_cap: usize,
+    /// Max prompt tokens prefilled per iteration (chunked prefill);
+    /// `usize::MAX` disables chunking.
+    pub prefill_chunk: usize,
+    /// Allow urgent queued requests to preempt looser-SLO active ones.
+    pub slo_eviction: bool,
 }
 
 impl Default for BatcherConfig {
     fn default() -> Self {
-        Self { max_batch: 64, max_kv_tokens: 1 << 22, queue_cap: 1024 }
+        Self {
+            max_batch: 64,
+            max_kv_tokens: 1 << 22,
+            queue_cap: 1024,
+            prefill_chunk: 4096,
+            slo_eviction: true,
+        }
     }
 }
 
 /// The continuous batcher.
 #[derive(Debug)]
 pub struct Batcher {
+    /// Policy knobs.
     pub cfg: BatcherConfig,
     queue: VecDeque<Request>,
+    /// Requests currently in the running batch.
     pub active: Vec<RequestState>,
+    /// Arrivals dropped because the admission queue was full.
     pub rejected: u64,
-    pub completed: Vec<(RequestState, u64)>, // (state, finished_ns)
+    /// Evictions performed to admit tighter-SLO requests.
+    pub preempted: u64,
+    /// Finished requests as `(state, finished_ns)` pairs.
+    pub completed: Vec<(RequestState, u64)>,
 }
 
 impl Batcher {
     pub fn new(cfg: BatcherConfig) -> Self {
-        Self { cfg, queue: VecDeque::new(), active: Vec::new(), rejected: 0, completed: Vec::new() }
+        Self {
+            cfg,
+            queue: VecDeque::new(),
+            active: Vec::new(),
+            rejected: 0,
+            preempted: 0,
+            completed: Vec::new(),
+        }
     }
 
     /// Offer a new request; returns false (and counts a rejection) when the
-    /// admission queue is full — the backpressure signal.
+    /// admission queue is full — the backpressure signal — or when the
+    /// request can never fit the KV budget at all (it would otherwise sit
+    /// in the queue forever as unserved).
     pub fn offer(&mut self, req: Request) -> bool {
-        if self.queue.len() >= self.cfg.queue_cap {
+        if self.queue.len() >= self.cfg.queue_cap
+            || req.prompt_len + req.gen_len > self.cfg.max_kv_tokens
+        {
             self.rejected += 1;
             return false;
         }
@@ -80,24 +182,39 @@ impl Batcher {
     }
 
     fn kv_in_use(&self) -> usize {
-        self.active.iter().map(|s| s.kv_tokens()).sum()
+        self.active.iter().map(|s| s.kv_footprint()).sum()
     }
 
-    /// Admit queued requests while batch and KV budgets allow (called at
-    /// every iteration boundary — continuous batching).
+    /// Index of the queued request with the earliest deadline that fits the
+    /// KV budget (ties broken by queue order, i.e. arrival order).
+    fn best_admissible(&self) -> Option<usize> {
+        let head = self.cfg.max_kv_tokens.saturating_sub(self.kv_in_use());
+        let mut best: Option<usize> = None;
+        for (i, r) in self.queue.iter().enumerate() {
+            if r.prompt_len + r.gen_len > head {
+                continue;
+            }
+            match best {
+                Some(b) if self.queue[b].deadline_ns() <= r.deadline_ns() => {}
+                _ => best = Some(i),
+            }
+        }
+        best
+    }
+
+    /// Admit queued requests earliest-deadline-first while batch and KV
+    /// budgets allow (called at every iteration boundary — continuous
+    /// batching). Requests that do not fit the remaining KV budget are
+    /// skipped so smaller later arrivals can backfill.
     pub fn admit(&mut self, now_ns: u64) -> usize {
         let mut admitted = 0;
         while self.active.len() < self.cfg.max_batch {
-            let Some(front) = self.queue.front() else { break };
-            let need = front.prompt_len + front.gen_len;
-            if self.kv_in_use() + need > self.cfg.max_kv_tokens {
-                break;
-            }
-            let req = self.queue.pop_front().unwrap();
+            let Some(i) = self.best_admissible() else { break };
+            let req = self.queue.remove(i).expect("index from best_admissible");
             self.active.push(RequestState {
                 req,
                 generated: 0,
-                prefilled: false,
+                prefilled_tokens: 0,
                 admitted_ns: now_ns,
                 first_token_ns: None,
             });
@@ -106,17 +223,122 @@ impl Batcher {
         admitted
     }
 
-    /// Requests needing prefill this iteration.
-    pub fn prefill_set(&self) -> Vec<usize> {
-        (0..self.active.len()).filter(|&i| !self.active[i].prefilled).collect()
+    /// SLO-priority eviction: while the most urgent queued request cannot
+    /// be admitted for lack of KV room, preempt active requests of strictly
+    /// looser SLO classes (largest TTFT target first, least progress lost
+    /// as tiebreak). Evicted requests return to the queue and restart from
+    /// scratch on re-admission (recompute-on-resume). Returns the number of
+    /// evictions performed.
+    pub fn preempt_for_urgent(&mut self, _now_ns: u64) -> usize {
+        if !self.cfg.slo_eviction {
+            return 0;
+        }
+        let mut evictions = 0;
+        loop {
+            // the deadline-critical queued request, ignoring current KV
+            // headroom (offer() guarantees every queued request fits an
+            // empty fabric)
+            let Some(urgent) = self
+                .queue
+                .iter()
+                .min_by_key(|r| (r.deadline_ns(), r.id))
+                .map(|r| (r.deadline_ns(), r.slo.ttft_ns, r.prompt_len + r.gen_len))
+            else {
+                break;
+            };
+            let (urgent_deadline, urgent_ttft, need) = urgent;
+            let headroom = self.cfg.max_kv_tokens.saturating_sub(self.kv_in_use());
+            if need <= headroom && self.active.len() < self.cfg.max_batch {
+                break; // admit() will take it
+            }
+            // a victim must be BOTH of a strictly looser SLO class and
+            // behind the urgent request in deadline order — admit() is
+            // earliest-deadline-first, so evicting an earlier-deadline
+            // victim would just see it re-admitted ahead of the urgent
+            // request (evict/re-admit livelock)
+            let is_victim = |s: &RequestState| {
+                s.req.slo.ttft_ns > urgent_ttft && s.req.deadline_ns() > urgent_deadline
+            };
+            // feasibility first: only start evicting when preempting every
+            // eligible victim would actually make room — otherwise victims
+            // would thrash (evict, re-admit, recompute) without the urgent
+            // request ever fitting
+            let evictable: usize = self
+                .active
+                .iter()
+                .filter(|&s| is_victim(s))
+                .map(|s| s.kv_footprint())
+                .sum();
+            if headroom + evictable < need {
+                break;
+            }
+            // among victims: loosest SLO class first; ties evict the one
+            // with the least compute invested
+            let victim = self
+                .active
+                .iter()
+                .enumerate()
+                .filter(|&(_, s)| is_victim(s))
+                .max_by_key(|(_, s)| (s.req.slo.ttft_ns, std::cmp::Reverse(s.kv_tokens())))
+                .map(|(i, _)| i);
+            let Some(vi) = victim else { break };
+            let mut st = self.active.swap_remove(vi);
+            st.req.preemptions += 1;
+            self.preempted += 1;
+            // progress is discarded; the request re-enters the queue with
+            // its original arrival (deadline unchanged)
+            self.queue.push_front(st.req);
+            evictions += 1;
+        }
+        evictions
     }
 
-    /// Mark prefill complete.
-    pub fn finish_prefill(&mut self, idx: &[usize], now_ns: u64) {
-        for &i in idx {
-            self.active[i].prefilled = true;
-            self.active[i].first_token_ns.get_or_insert(now_ns);
+    /// Requests needing (more) prefill this iteration.
+    pub fn prefill_set(&self) -> Vec<usize> {
+        (0..self.active.len()).filter(|&i| !self.active[i].is_prefilled()).collect()
+    }
+
+    /// Plan this iteration's chunked prefill: `(active index, tokens)`
+    /// allocations in deadline order, totalling at most
+    /// `cfg.prefill_chunk` tokens. Long prompts advance chunk by chunk
+    /// across iterations instead of stalling the decode batch.
+    pub fn plan_prefill(&self) -> Vec<(usize, usize)> {
+        let mut order: Vec<usize> = self.prefill_set();
+        order.sort_by_key(|&i| (self.active[i].req.deadline_ns(), self.active[i].req.id));
+        let mut budget = self.cfg.prefill_chunk;
+        let mut plan = Vec::new();
+        for i in order {
+            if budget == 0 {
+                break;
+            }
+            let take = self.active[i].prefill_remaining().min(budget);
+            if take > 0 {
+                plan.push((i, take));
+                budget = budget.saturating_sub(take);
+            }
         }
+        plan
+    }
+
+    /// Apply a prefill plan: advance each request's prefilled prefix; a
+    /// request whose prompt completes records `now_ns` as its first-token
+    /// time (its first output token is produced by this same iteration).
+    pub fn advance_prefill(&mut self, plan: &[(usize, usize)], now_ns: u64) {
+        for &(i, tokens) in plan {
+            let s = &mut self.active[i];
+            s.prefilled_tokens = (s.prefilled_tokens + tokens).min(s.req.prompt_len);
+            if s.is_prefilled() {
+                s.first_token_ns.get_or_insert(now_ns);
+            }
+        }
+    }
+
+    /// Mark prefill fully complete for the given indices (the unchunked
+    /// path used by callers that plan whole prompts per iteration).
+    pub fn finish_prefill(&mut self, idx: &[usize], now_ns: u64) {
+        let plan: Vec<(usize, usize)> =
+            idx.iter().map(|&i| (i, self.active[i].prefill_remaining())).collect();
+        self.advance_prefill(&plan, now_ns);
     }
 
     /// One decode iteration over all prefilled requests; retires finished
@@ -124,7 +346,7 @@ impl Batcher {
     pub fn decode_step(&mut self, now_ns: u64) -> (usize, usize) {
         let mut n = 0;
         let mut max_kv = 0;
-        for s in self.active.iter_mut().filter(|s| s.prefilled && !s.done()) {
+        for s in self.active.iter_mut().filter(|s| s.is_prefilled() && !s.done()) {
             s.generated += 1;
             n += 1;
             max_kv = max_kv.max(s.kv_tokens());
@@ -141,6 +363,16 @@ impl Batcher {
     pub fn idle(&self) -> bool {
         self.queue.is_empty() && self.active.is_empty()
     }
+
+    /// Class indices of every request still queued or active — after the
+    /// serving loop drains, these are the stranded (unserved) requests.
+    pub fn unserved_classes(&self) -> Vec<usize> {
+        self.queue
+            .iter()
+            .map(|r| r.class)
+            .chain(self.active.iter().map(|s| s.req.class))
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -148,7 +380,11 @@ mod tests {
     use super::*;
 
     fn req(id: u64, p: usize, g: usize) -> Request {
-        Request { id, prompt_len: p, gen_len: g, arrived_ns: 0 }
+        Request::new(id, p, g, 0)
+    }
+
+    fn req_slo(id: u64, p: usize, g: usize, arrived: u64, ttft_ms: f64) -> Request {
+        Request { slo: Slo::from_ms(ttft_ms, 1e9), ..Request::new(id, p, g, arrived) }
     }
 
     #[test]
@@ -168,6 +404,7 @@ mod tests {
             max_batch: 64,
             max_kv_tokens: 100,
             queue_cap: 16,
+            ..Default::default()
         });
         b.offer(req(0, 60, 10));
         b.offer(req(1, 60, 10));
@@ -211,5 +448,206 @@ mod tests {
         b.decode_step(10); // request 0 done, slot frees
         assert_eq!(b.admit(10), 1);
         assert_eq!(b.active[0].req.id, 1);
+    }
+
+    #[test]
+    fn admission_is_earliest_deadline_first() {
+        let mut b = Batcher::new(BatcherConfig { max_batch: 1, ..Default::default() });
+        // id 0 arrives first but has a loose SLO; id 1 is urgent
+        b.offer(req_slo(0, 16, 4, 0, 10_000.0));
+        b.offer(req_slo(1, 16, 4, 100, 10.0));
+        b.admit(200);
+        assert_eq!(b.active[0].req.id, 1, "tighter deadline admitted first");
+    }
+
+    #[test]
+    fn kv_backfill_skips_oversized_head() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_kv_tokens: 100,
+            ..Default::default()
+        });
+        // same deadlines: queue order is the tiebreak; the 90-token head
+        // fits, the second 90-token one doesn't, the 8-token one backfills
+        b.offer(req(0, 80, 10));
+        b.offer(req(1, 80, 10));
+        b.offer(req(2, 4, 4));
+        assert_eq!(b.admit(0), 2);
+        let ids: Vec<u64> = b.active.iter().map(|s| s.req.id).collect();
+        assert_eq!(ids, vec![0, 2]);
+    }
+
+    #[test]
+    fn chunked_prefill_respects_budget_and_completes() {
+        let mut b = Batcher::new(BatcherConfig {
+            prefill_chunk: 100,
+            ..Default::default()
+        });
+        b.offer(req(0, 250, 1));
+        b.admit(0);
+        let mut total = 0;
+        let mut iters = 0;
+        while !b.active[0].is_prefilled() {
+            let plan = b.plan_prefill();
+            let tokens: usize = plan.iter().map(|&(_, t)| t).sum();
+            assert!(tokens <= 100, "chunk budget exceeded: {tokens}");
+            assert!(tokens > 0, "prefill must make progress");
+            total += tokens;
+            iters += 1;
+            b.advance_prefill(&plan, iters * 10);
+        }
+        assert_eq!(total, 250);
+        assert_eq!(iters, 3); // 100 + 100 + 50
+        assert_eq!(b.active[0].first_token_ns, Some(30));
+        // KV grows with the prefilled prefix, never past the prompt
+        assert_eq!(b.active[0].kv_tokens(), 250);
+    }
+
+    #[test]
+    fn chunk_budget_shared_across_requests_in_deadline_order() {
+        let mut b = Batcher::new(BatcherConfig {
+            prefill_chunk: 64,
+            ..Default::default()
+        });
+        b.offer(req_slo(0, 60, 1, 0, 10_000.0));
+        b.offer(req_slo(1, 60, 1, 0, 10.0));
+        b.admit(0);
+        let plan = b.plan_prefill();
+        // urgent request (id 1) drains first; only 4 tokens left for id 0
+        let by_id: Vec<(u64, usize)> =
+            plan.iter().map(|&(i, t)| (b.active[i].req.id, t)).collect();
+        assert_eq!(by_id, vec![(1, 60), (0, 4)]);
+    }
+
+    #[test]
+    fn urgent_request_preempts_loose_one() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_kv_tokens: 100,
+            ..Default::default()
+        });
+        b.offer(req_slo(0, 80, 10, 0, 60_000.0)); // loose batch-class job
+        b.admit(0);
+        b.finish_prefill(&[0], 10);
+        // an urgent request arrives; no KV room
+        b.offer(req_slo(1, 50, 10, 20, 10.0));
+        assert_eq!(b.admit(20), 0, "no room without eviction");
+        let evicted = b.preempt_for_urgent(20);
+        assert_eq!(evicted, 1);
+        assert_eq!(b.preempted, 1);
+        assert_eq!(b.admit(20), 1);
+        assert_eq!(b.active[0].req.id, 1);
+        // the victim went back to the queue and is re-served later, with
+        // the preemption visible on the request itself
+        assert_eq!(b.queued(), 1);
+        let victim = b.queue.front().unwrap();
+        assert_eq!(victim.id, 0);
+        assert_eq!(victim.preemptions, 1);
+    }
+
+    #[test]
+    fn no_eviction_when_it_cannot_make_room() {
+        // urgent needs 50 tokens; the only evictable (looser) victim frees
+        // 20 and headroom is 20 — evicting can never fit the urgent
+        // request, so nothing may be evicted (else the victim would thrash
+        // evict → re-admit → recompute while the urgent one still waits)
+        let mut b = Batcher::new(BatcherConfig {
+            max_kv_tokens: 100,
+            ..Default::default()
+        });
+        b.offer(req_slo(0, 60, 10, 0, 0.5)); // tighter than urgent: not evictable
+        b.offer(req_slo(1, 10, 5, 0, 60_000.0)); // loose: evictable, frees 10
+        b.admit(0);
+        assert_eq!(b.active.len(), 2);
+        // urgent needs 55 > headroom 30 + evictable 10
+        b.offer(req_slo(2, 45, 10, 5, 1.0));
+        assert_eq!(b.preempt_for_urgent(5), 0, "infeasible eviction must not start");
+        assert_eq!(b.preempted, 0);
+    }
+
+    #[test]
+    fn eviction_never_helps_equal_or_tighter_classes() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_kv_tokens: 100,
+            ..Default::default()
+        });
+        b.offer(req_slo(0, 80, 10, 0, 10.0));
+        b.admit(0);
+        b.offer(req_slo(1, 80, 10, 5, 10.0)); // same class tightness
+        assert_eq!(b.preempt_for_urgent(5), 0, "equal SLO classes never preempt");
+        b.offer(req_slo(2, 80, 10, 6, 100.0)); // looser than active
+        assert_eq!(b.preempt_for_urgent(6), 0, "looser arrivals never preempt");
+    }
+
+    #[test]
+    fn no_eviction_of_earlier_deadline_victims() {
+        // the victim is of a looser class but holds an EARLIER deadline
+        // than the urgent arrival; evicting it would livelock — EDF
+        // admission would put it straight back ahead of the urgent request
+        let mut b = Batcher::new(BatcherConfig {
+            max_kv_tokens: 100,
+            ..Default::default()
+        });
+        // loose class (2000ms) arrived at t=0 → deadline 2.0s
+        b.offer(req_slo(0, 80, 10, 0, 2_000.0));
+        b.admit(0);
+        // tight class (200ms) arrives at 1.9s → deadline 2.1s (later!)
+        b.offer(req_slo(1, 50, 10, 1_900_000_000, 200.0));
+        assert_eq!(b.preempt_for_urgent(1_900_000_000), 0);
+        assert_eq!(b.preempted, 0);
+        // the same tight request arriving early (deadline before the
+        // victim's) does preempt
+        let mut b2 = Batcher::new(BatcherConfig {
+            max_kv_tokens: 100,
+            ..Default::default()
+        });
+        b2.offer(req_slo(0, 80, 10, 0, 2_000.0));
+        b2.admit(0);
+        b2.offer(req_slo(1, 50, 10, 10, 200.0)); // deadline 0.2s < 2.0s
+        assert_eq!(b2.preempt_for_urgent(10), 1);
+    }
+
+    #[test]
+    fn oversized_request_rejected_up_front() {
+        // a request that can never fit the KV budget is refused at offer()
+        // instead of stranding in the queue forever
+        let mut b = Batcher::new(BatcherConfig {
+            max_kv_tokens: 100,
+            ..Default::default()
+        });
+        assert!(!b.offer(req(0, 200, 10)));
+        assert_eq!(b.rejected, 1);
+        assert_eq!(b.queued(), 0);
+        assert!(b.offer(req(1, 50, 10)));
+    }
+
+    #[test]
+    fn eviction_disabled_by_config() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_kv_tokens: 100,
+            slo_eviction: false,
+            ..Default::default()
+        });
+        b.offer(req_slo(0, 80, 10, 0, 60_000.0));
+        b.admit(0);
+        b.offer(req_slo(1, 50, 10, 20, 10.0));
+        assert_eq!(b.preempt_for_urgent(20), 0);
+    }
+
+    #[test]
+    fn tpot_and_ttft_accounting() {
+        let mut b = Batcher::new(BatcherConfig::default());
+        b.offer(Request::new(0, 8, 5, 100));
+        b.admit(100);
+        b.finish_prefill(&[0], 200);
+        let mut t = 200;
+        while b.completed.is_empty() {
+            t += 50;
+            b.decode_step(t);
+        }
+        let (s, fin) = &b.completed[0];
+        assert_eq!(s.ttft_ns(), Some(100)); // 200 - 100
+        // 5 tokens: first at 250, last at 450 → 4 gaps... first_token is the
+        // prefill-complete timestamp (200); finish at 450; tpot = 250/4
+        assert_eq!(*fin, 450);
+        assert!((s.tpot_ns(*fin) - 62.5).abs() < 1e-9);
     }
 }

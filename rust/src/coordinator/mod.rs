@@ -1,9 +1,11 @@
-//! L3 serving coordinator: request queue, continuous batcher, decode
-//! scheduler, and metrics — the vLLM-router-shaped layer that drives the
-//! simulated hardware (timing/energy) and, in the end-to-end example, the
-//! PJRT runtime (numerics).
+//! L3 serving coordinator: request queue, SLO-aware continuous batcher,
+//! chunked-prefill decode scheduler, and metrics — the vLLM-router-shaped
+//! layer that drives the simulated hardware (timing/energy) and, in the
+//! end-to-end example, the PJRT runtime (numerics).
 pub mod batcher;
 pub mod serving;
 
 pub use batcher::{Batcher, BatcherConfig, Request, RequestState};
-pub use serving::{ServeConfig, ServeReport, Server};
+pub use serving::{
+    run_scenario, ClassReport, ScenarioReport, ServeConfig, ServeReport, Server,
+};

@@ -1,27 +1,43 @@
 //! The serving loop: drives the continuous batcher over simulated time,
 //! costing every prefill/decode iteration with the architecture simulator.
 //! This is the paper's system running as a service: arrivals, batching,
-//! per-token latencies, energy per token.
+//! chunked prefill, SLO tracking, per-token latencies, energy per token.
+//!
+//! Workloads come in two shapes: the homogeneous Poisson stream the
+//! original harness used (`prompt_len`/`gen_len`/`arrival_rate`), or a
+//! named [`Scenario`] from [`crate::workload::traces`] — a heterogeneous
+//! request mix with per-class SLOs. Either way a seeded run is
+//! bit-reproducible.
 
 use crate::arch::System;
 use crate::config::{Phase, RunConfig};
 use crate::energy::EnergyBreakdown;
 use crate::sim::{EventQueue, OpCost};
 use crate::util::stats::percentile;
+use crate::util::table::{fenergy_pj, ftime_ns, Table};
 use crate::util::XorShiftRng;
+use crate::workload::Scenario;
 
 use super::batcher::{Batcher, BatcherConfig, Request};
 
 /// Serving workload + policy configuration.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
+    /// Batching/admission policy knobs.
     pub batcher: BatcherConfig,
-    /// Mean arrival rate (requests/s).
+    /// Mean arrival rate (requests/s) for the homogeneous workload.
     pub arrival_rate: f64,
+    /// Number of requests to serve.
     pub n_requests: usize,
+    /// Homogeneous prompt length (ignored when `scenario` is set).
     pub prompt_len: usize,
+    /// Homogeneous generation length (ignored when `scenario` is set).
     pub gen_len: usize,
+    /// Trace RNG seed; identical seeds give bit-identical runs.
     pub seed: u64,
+    /// Heterogeneous named workload; `None` falls back to the homogeneous
+    /// Poisson stream described by the fields above.
+    pub scenario: Option<Scenario>,
 }
 
 impl Default for ServeConfig {
@@ -33,28 +49,141 @@ impl Default for ServeConfig {
             prompt_len: 512,
             gen_len: 32,
             seed: 42,
+            scenario: None,
         }
     }
 }
 
-/// Serving results.
+/// Per-request-class serving outcomes (one row of the SLO report).
+#[derive(Debug, Clone)]
+pub struct ClassReport {
+    /// Class label (scenario class name, or "all" for homogeneous runs).
+    pub class: String,
+    /// Requests of this class that finished.
+    pub completed: usize,
+    /// Requests of this class dropped by queue backpressure.
+    pub rejected: u64,
+    /// Median time-to-first-token (ns).
+    pub ttft_p50_ns: f64,
+    /// 99th-percentile time-to-first-token (ns).
+    pub ttft_p99_ns: f64,
+    /// Median per-output-token latency (ns).
+    pub tpot_p50_ns: f64,
+    /// 99th-percentile per-output-token latency (ns).
+    pub tpot_p99_ns: f64,
+    /// Fraction of served requests meeting their TTFT target.
+    pub ttft_attainment: f64,
+    /// Fraction of served requests meeting their TPOT target.
+    pub tpot_attainment: f64,
+    /// Fraction meeting both targets (rejects count as misses).
+    pub slo_attainment: f64,
+}
+
+/// Serving results. Latency percentiles are over completed requests;
+/// attainment fractions count rejected/unserved requests as SLO misses.
 #[derive(Debug, Clone)]
 pub struct ServeReport {
+    /// Requests that ran to completion.
     pub completed: usize,
+    /// Arrivals dropped by admission-queue backpressure.
     pub rejected: u64,
+    /// SLO-priority evictions performed (preempted work is recomputed).
+    pub preempted: u64,
+    /// Requests stranded in the queue at shutdown (0 in healthy runs).
+    pub unserved: usize,
+    /// Simulated wall-clock of the whole run (ns).
     pub makespan_ns: u64,
+    /// Decode tokens emitted over the run.
+    pub tokens_out: u64,
+    /// Aggregate decode throughput over the makespan (tokens/s).
     pub throughput_tok_s: f64,
+    /// Median time-to-first-token (ns).
     pub ttft_p50_ns: f64,
+    /// 99th-percentile time-to-first-token (ns).
     pub ttft_p99_ns: f64,
+    /// Median per-output-token decode latency (ns).
+    pub tpot_p50_ns: f64,
+    /// 99th-percentile per-output-token decode latency (ns).
+    pub tpot_p99_ns: f64,
+    /// Median request latency, arrival → last token (ns).
     pub req_latency_p50_ns: f64,
+    /// 99th-percentile request latency (ns).
     pub req_latency_p99_ns: f64,
+    /// Fraction of requests meeting both TTFT and TPOT targets.
+    pub slo_attainment: f64,
+    /// Total energy (dynamic + static) over the run.
     pub energy: EnergyBreakdown,
+    /// Energy per emitted decode token (pJ).
+    pub energy_per_token_pj: f64,
+    /// Iterations that produced at least one decode token.
     pub decode_iters: u64,
+    /// One row per request class, in scenario class order.
+    pub per_class: Vec<ClassReport>,
+}
+
+impl ServeReport {
+    /// Render the per-class SLO table (used by the CLI and the figures).
+    pub fn class_table(&self, title: &str) -> Table {
+        let mut t = Table::new(
+            title,
+            &["class", "done", "rej", "ttft p50", "ttft p99", "tpot p50", "tpot p99", "slo%"],
+        );
+        for c in &self.per_class {
+            t.rowv(vec![
+                c.class.clone(),
+                c.completed.to_string(),
+                c.rejected.to_string(),
+                ftime_ns(c.ttft_p50_ns),
+                ftime_ns(c.ttft_p99_ns),
+                ftime_ns(c.tpot_p50_ns),
+                ftime_ns(c.tpot_p99_ns),
+                format!("{:.1}%", c.slo_attainment * 100.0),
+            ]);
+        }
+        t
+    }
+}
+
+/// A named scenario's serving outcome on one architecture.
+#[derive(Debug, Clone)]
+pub struct ScenarioReport {
+    /// Scenario registry name.
+    pub scenario: String,
+    /// Architecture label the run was costed on.
+    pub arch: String,
+    /// Model name served.
+    pub model: String,
+    /// The full serving report (totals + per-class rows).
+    pub report: ServeReport,
+}
+
+/// Run a named scenario end to end on the given hardware configuration.
+pub fn run_scenario(rc: RunConfig, scenario: Scenario, n_requests: usize, seed: u64) -> ScenarioReport {
+    let name = scenario.name.to_string();
+    let arch = rc.arch.label().to_string();
+    let model = rc.model.name.to_string();
+    let cfg = ServeConfig {
+        n_requests,
+        seed,
+        scenario: Some(scenario),
+        ..Default::default()
+    };
+    let report = Server::new(rc, cfg).run();
+    ScenarioReport { scenario: name, arch, model, report }
 }
 
 enum Event {
     Arrival(Request),
     IterationDone,
+}
+
+/// Mutable loop state threaded through iterations.
+struct LoopState {
+    busy_until: u64,
+    iter_pending: bool,
+    total_cost: OpCost,
+    decode_iters: u64,
+    tokens_out: u64,
 }
 
 /// The server: owns the batcher and the hardware simulator.
@@ -66,6 +195,35 @@ pub struct Server {
 impl Server {
     pub fn new(rc: RunConfig, cfg: ServeConfig) -> Self {
         Self { rc, cfg }
+    }
+
+    /// Expand the configured workload into a concrete arrival trace.
+    fn requests(&self) -> Vec<Request> {
+        match &self.cfg.scenario {
+            Some(sc) => sc.generate(self.cfg.seed, self.cfg.n_requests),
+            None => {
+                let mut rng = XorShiftRng::new(self.cfg.seed);
+                let mut t = 0.0f64;
+                (0..self.cfg.n_requests)
+                    .map(|id| {
+                        t += rng.next_exp(self.cfg.arrival_rate) * 1e9;
+                        Request::new(
+                            id as u64,
+                            self.cfg.prompt_len,
+                            self.cfg.gen_len.max(1),
+                            t as u64,
+                        )
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    fn class_names(&self) -> Vec<String> {
+        match &self.cfg.scenario {
+            Some(sc) => sc.class_names().iter().map(|s| s.to_string()).collect(),
+            None => vec!["all".to_string()],
+        }
     }
 
     fn iteration_cost(&self, prefill_tokens: usize, decode_batch: usize, max_kv: usize) -> OpCost {
@@ -87,138 +245,205 @@ impl Server {
         cost
     }
 
+    /// Plan and cost one batching iteration; schedules its completion.
+    fn step(
+        &self,
+        batcher: &mut Batcher,
+        q: &mut EventQueue<Event>,
+        now: u64,
+        st: &mut LoopState,
+    ) {
+        if st.iter_pending || batcher.idle() {
+            return;
+        }
+        batcher.preempt_for_urgent(now);
+        batcher.admit(now);
+        if batcher.active.is_empty() {
+            return;
+        }
+        // plan this iteration: a chunk of pending prefills interleaved with
+        // one decode step over everything already prefilled
+        let plan = batcher.plan_prefill();
+        let prefill_tokens: usize = plan.iter().map(|&(_, t)| t).sum();
+        let deciders = batcher.active.iter().filter(|s| s.is_prefilled() && !s.done()).count();
+        if prefill_tokens == 0 && deciders == 0 {
+            return; // nothing schedulable this instant
+        }
+        let max_kv = batcher.active.iter().map(|s| s.kv_tokens()).max().unwrap_or(1);
+        let cost = self.iteration_cost(prefill_tokens, deciders, max_kv);
+        let end = now + cost.latency_ns.max(1.0) as u64;
+        st.total_cost = st.total_cost.then(&cost);
+        batcher.advance_prefill(&plan, end);
+        let (n, _) = batcher.decode_step(end);
+        st.tokens_out += n as u64;
+        if n > 0 {
+            st.decode_iters += 1;
+        }
+        st.busy_until = end;
+        st.iter_pending = true;
+        q.schedule_at(end, Event::IterationDone);
+    }
+
     /// Run the serving simulation to completion.
     pub fn run(&self) -> ServeReport {
+        let class_names = self.class_names();
+        let mut rejected_by_class = vec![0u64; class_names.len()];
+
         let mut q: EventQueue<Event> = EventQueue::new();
-        let mut rng = XorShiftRng::new(self.cfg.seed);
-        // schedule all arrivals
-        let mut t = 0.0f64;
-        for id in 0..self.cfg.n_requests {
-            t += rng.next_exp(self.cfg.arrival_rate) * 1e9;
-            q.schedule_at(
-                t as u64,
-                Event::Arrival(Request {
-                    id: id as u64,
-                    prompt_len: self.cfg.prompt_len,
-                    gen_len: self.cfg.gen_len,
-                    arrived_ns: t as u64,
-                }),
-            );
+        for r in self.requests() {
+            q.schedule_at(r.arrived_ns, Event::Arrival(r));
         }
 
         let mut batcher = Batcher::new(self.cfg.batcher.clone());
-        let mut busy_until = 0u64;
-        let mut iter_pending = false;
-        let mut total_cost = OpCost::zero();
-        let mut decode_iters = 0u64;
-        let mut tokens_out = 0u64;
-
-        let kick = |batcher: &mut Batcher,
-                        q: &mut EventQueue<Event>,
-                        now: u64,
-                        busy_until: &mut u64,
-                        iter_pending: &mut bool,
-                        total_cost: &mut OpCost,
-                        decode_iters: &mut u64,
-                        tokens_out: &mut u64,
-                        sys: &Server| {
-            if *iter_pending || batcher.idle() {
-                return;
-            }
-            batcher.admit(now);
-            if batcher.active.is_empty() {
-                return;
-            }
-            // plan this iteration: prefill the newly admitted, decode the rest
-            let pre = batcher.prefill_set();
-            let prefill_tokens: usize =
-                pre.iter().map(|&i| batcher.active[i].req.prompt_len).sum();
-            let deciders =
-                batcher.active.iter().filter(|s| s.prefilled && !s.done()).count();
-            let max_kv = batcher
-                .active
-                .iter()
-                .map(|s| s.kv_tokens())
-                .max()
-                .unwrap_or(1);
-            let cost = sys.iteration_cost(prefill_tokens, deciders, max_kv);
-            let end = now + cost.latency_ns.max(1.0) as u64;
-            *total_cost = total_cost.then(&cost);
-            batcher.finish_prefill(&pre, end);
-            let (n, _) = batcher.decode_step(end);
-            *tokens_out += n as u64;
-            if n > 0 {
-                *decode_iters += 1;
-            }
-            *busy_until = end;
-            *iter_pending = true;
-            q.schedule_at(end, Event::IterationDone);
+        let mut st = LoopState {
+            busy_until: 0,
+            iter_pending: false,
+            total_cost: OpCost::zero(),
+            decode_iters: 0,
+            tokens_out: 0,
         };
 
         while let Some((now, ev)) = q.pop() {
             match ev {
                 Event::Arrival(r) => {
-                    batcher.offer(r);
-                    if now >= busy_until {
-                        kick(
-                            &mut batcher,
-                            &mut q,
-                            now,
-                            &mut busy_until,
-                            &mut iter_pending,
-                            &mut total_cost,
-                            &mut decode_iters,
-                            &mut tokens_out,
-                            self,
-                        );
+                    let class = r.class.min(class_names.len().saturating_sub(1));
+                    if !batcher.offer(r) {
+                        rejected_by_class[class] += 1;
+                    }
+                    if now >= st.busy_until {
+                        self.step(&mut batcher, &mut q, now, &mut st);
                     }
                 }
                 Event::IterationDone => {
-                    iter_pending = false;
-                    kick(
-                        &mut batcher,
-                        &mut q,
-                        now,
-                        &mut busy_until,
-                        &mut iter_pending,
-                        &mut total_cost,
-                        &mut decode_iters,
-                        &mut tokens_out,
-                        self,
-                    );
+                    st.iter_pending = false;
+                    self.step(&mut batcher, &mut q, now, &mut st);
                 }
             }
         }
 
-        let makespan = busy_until.max(1);
+        let makespan = st.busy_until.max(1);
+        let em = crate::energy::EnergyModel::new(&self.rc.hw.sram, self.rc.hw.hb.pj_per_bit);
+        let mut energy = em.dynamic(&st.total_cost.counts);
+        energy.static_pj = self.rc.devices as f64 * em.pim_device_static_w * makespan as f64;
+
+        // ---- global + per-class SLO bookkeeping ----
+        let pctl = |v: &[f64], p: f64| if v.is_empty() { 0.0 } else { percentile(v, p) };
+        let mut stranded_by_class = vec![0u64; class_names.len()];
+        for ci in batcher.unserved_classes() {
+            stranded_by_class[ci.min(class_names.len().saturating_sub(1))] += 1;
+        }
+        let mut per_class = Vec::with_capacity(class_names.len());
+        for (ci, name) in class_names.iter().enumerate() {
+            let done: Vec<_> =
+                batcher.completed.iter().filter(|(s, _)| s.req.class == ci).collect();
+            let ttfts: Vec<f64> =
+                done.iter().filter_map(|(s, _)| s.ttft_ns().map(|t| t as f64)).collect();
+            let tpots: Vec<f64> = done.iter().map(|(s, t)| s.tpot_ns(*t)).collect();
+            let ttft_met = done
+                .iter()
+                .filter(|(s, _)| s.ttft_ns().map_or(false, |t| t <= s.req.slo.ttft_ns))
+                .count();
+            let tpot_met = done
+                .iter()
+                .filter(|(s, t)| s.tpot_ns(*t) <= s.req.slo.tpot_ns as f64)
+                .count();
+            let both_met = done
+                .iter()
+                .filter(|(s, t)| {
+                    s.ttft_ns().map_or(false, |tt| s.req.slo.met(tt, s.tpot_ns(*t)))
+                })
+                .count();
+            let served = done.len().max(1);
+            let offered = done.len() as u64 + rejected_by_class[ci] + stranded_by_class[ci];
+            per_class.push(ClassReport {
+                class: name.clone(),
+                completed: done.len(),
+                rejected: rejected_by_class[ci],
+                ttft_p50_ns: pctl(&ttfts, 50.0),
+                ttft_p99_ns: pctl(&ttfts, 99.0),
+                tpot_p50_ns: pctl(&tpots, 50.0),
+                tpot_p99_ns: pctl(&tpots, 99.0),
+                ttft_attainment: ttft_met as f64 / served as f64,
+                tpot_attainment: tpot_met as f64 / served as f64,
+                slo_attainment: both_met as f64 / offered.max(1) as f64,
+            });
+        }
+
         let ttfts: Vec<f64> = batcher
             .completed
             .iter()
-            .filter_map(|(s, _)| s.first_token_ns.map(|t| (t - s.req.arrived_ns) as f64))
+            .filter_map(|(s, _)| s.ttft_ns().map(|t| t as f64))
             .collect();
+        let tpots: Vec<f64> = batcher.completed.iter().map(|(s, t)| s.tpot_ns(*t)).collect();
         let lats: Vec<f64> = batcher
             .completed
             .iter()
-            .map(|(s, t)| (*t - s.req.arrived_ns) as f64)
+            .map(|(s, t)| t.saturating_sub(s.req.arrived_ns) as f64)
             .collect();
-        let em = crate::energy::EnergyModel::new(&self.rc.hw.sram, self.rc.hw.hb.pj_per_bit);
-        let mut energy = em.dynamic(&total_cost.counts);
-        energy.static_pj =
-            self.rc.devices as f64 * em.pim_device_static_w * makespan as f64;
+        let met = batcher
+            .completed
+            .iter()
+            .filter(|(s, t)| s.ttft_ns().map_or(false, |tt| s.req.slo.met(tt, s.tpot_ns(*t))))
+            .count();
+        let unserved = batcher.queued() + batcher.active.len();
+        let offered_total =
+            batcher.completed.len() as u64 + batcher.rejected + unserved as u64;
 
         ServeReport {
             completed: batcher.completed.len(),
             rejected: batcher.rejected,
+            preempted: batcher.preempted,
+            unserved,
             makespan_ns: makespan,
-            throughput_tok_s: tokens_out as f64 / (makespan as f64 / 1e9),
-            ttft_p50_ns: percentile(&ttfts, 50.0),
-            ttft_p99_ns: percentile(&ttfts, 99.0),
-            req_latency_p50_ns: percentile(&lats, 50.0),
-            req_latency_p99_ns: percentile(&lats, 99.0),
+            tokens_out: st.tokens_out,
+            throughput_tok_s: st.tokens_out as f64 / (makespan as f64 / 1e9),
+            ttft_p50_ns: pctl(&ttfts, 50.0),
+            ttft_p99_ns: pctl(&ttfts, 99.0),
+            tpot_p50_ns: pctl(&tpots, 50.0),
+            tpot_p99_ns: pctl(&tpots, 99.0),
+            req_latency_p50_ns: pctl(&lats, 50.0),
+            req_latency_p99_ns: pctl(&lats, 99.0),
+            slo_attainment: met as f64 / offered_total.max(1) as f64,
+            energy_per_token_pj: energy.total_pj() / st.tokens_out.max(1) as f64,
             energy,
-            decode_iters,
+            decode_iters: st.decode_iters,
+            per_class,
         }
     }
+}
+
+/// Render the headline serving metrics (shared by CLI and examples).
+pub fn render_summary(r: &ServeReport) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "completed {} | rejected {} | preempted {} | unserved {}\n",
+        r.completed, r.rejected, r.preempted, r.unserved
+    ));
+    out.push_str(&format!(
+        "makespan {} | throughput {:.1} tok/s | decode iters {}\n",
+        ftime_ns(r.makespan_ns as f64),
+        r.throughput_tok_s,
+        r.decode_iters
+    ));
+    out.push_str(&format!(
+        "TTFT p50/p99 {} / {} | TPOT p50/p99 {} / {}\n",
+        ftime_ns(r.ttft_p50_ns),
+        ftime_ns(r.ttft_p99_ns),
+        ftime_ns(r.tpot_p50_ns),
+        ftime_ns(r.tpot_p99_ns)
+    ));
+    out.push_str(&format!(
+        "request latency p50/p99 {} / {}\n",
+        ftime_ns(r.req_latency_p50_ns),
+        ftime_ns(r.req_latency_p99_ns)
+    ));
+    out.push_str(&format!(
+        "SLO attainment {:.1}% | energy {} | energy/token {}\n",
+        r.slo_attainment * 100.0,
+        fenergy_pj(r.energy.total_pj()),
+        fenergy_pj(r.energy_per_token_pj)
+    ));
+    out
 }
 
 impl crate::arch::PhaseReport {
@@ -247,11 +472,19 @@ mod tests {
         Server::new(rc, cfg).run()
     }
 
+    fn serve_scenario(name: &str, n: usize, seed: u64) -> ServeReport {
+        let mut rc = RunConfig::new(ArchKind::CompAirOpt, ModelConfig::llama2_7b());
+        rc.tp = 8;
+        rc.devices = 32;
+        run_scenario(rc, Scenario::by_name(name).unwrap(), n, seed).report
+    }
+
     #[test]
     fn all_requests_complete() {
         let r = serve(ArchKind::CompAirOpt, 50.0);
         assert_eq!(r.completed, 24);
         assert_eq!(r.rejected, 0);
+        assert_eq!(r.unserved, 0);
         assert!(r.throughput_tok_s > 0.0);
         assert!(r.ttft_p99_ns >= r.ttft_p50_ns);
     }
@@ -283,5 +516,80 @@ mod tests {
         assert_eq!(slow.completed, fast.completed);
         // under saturation, queueing delay shows in p99 request latency
         assert!(fast.req_latency_p99_ns >= slow.req_latency_p50_ns);
+    }
+
+    #[test]
+    fn every_scenario_serves_to_completion() {
+        for sc in Scenario::all() {
+            let n = 8.min(sc.default_requests);
+            let r = serve_scenario(sc.name, n, 42);
+            assert_eq!(r.completed, n, "{} lost requests", sc.name);
+            assert_eq!(r.unserved, 0, "{} stranded requests", sc.name);
+            assert!(r.tokens_out > 0, "{} emitted no tokens", sc.name);
+            assert!(r.energy_per_token_pj > 0.0);
+            assert_eq!(r.per_class.len(), Scenario::by_name(sc.name).unwrap().classes.len());
+            let class_total: usize = r.per_class.iter().map(|c| c.completed).sum();
+            assert_eq!(class_total, n, "{} per-class rows don't add up", sc.name);
+        }
+    }
+
+    #[test]
+    fn scenario_runs_are_bit_reproducible() {
+        let a = serve_scenario("mixed", 16, 7);
+        let b = serve_scenario("mixed", 16, 7);
+        assert_eq!(a.makespan_ns, b.makespan_ns);
+        assert_eq!(a.tokens_out, b.tokens_out);
+        assert_eq!(a.preempted, b.preempted);
+        assert!((a.energy.total_pj() - b.energy.total_pj()).abs() < 1e-9);
+        for (x, y) in a.per_class.iter().zip(&b.per_class) {
+            assert_eq!(x.completed, y.completed);
+            assert!((x.ttft_p99_ns - y.ttft_p99_ns).abs() < 1e-9);
+            assert!((x.slo_attainment - y.slo_attainment).abs() < 1e-12);
+        }
+        let c = serve_scenario("mixed", 16, 8);
+        assert_ne!(a.makespan_ns, c.makespan_ns, "seed must matter");
+    }
+
+    #[test]
+    fn chunked_prefill_bounds_long_prompt_iterations() {
+        // a 128K prompt must be split into prefill_chunk-sized iterations,
+        // not one monolithic prefill
+        let mut rc = RunConfig::new(ArchKind::CompAirOpt, ModelConfig::llama2_7b());
+        rc.tp = 8;
+        let chunk = 4096;
+        let cfg = ServeConfig {
+            n_requests: 1,
+            prompt_len: 128 * 1024,
+            gen_len: 2,
+            batcher: BatcherConfig { prefill_chunk: chunk, ..Default::default() },
+            ..Default::default()
+        };
+        let r = Server::new(rc, cfg).run();
+        assert_eq!(r.completed, 1);
+        // TTFT must cover ≥ prompt/chunk iterations — i.e. the request was
+        // actually chunked (a single-shot prefill would take 1 iteration)
+        assert!(r.ttft_p50_ns > 0.0);
+        assert!(r.tokens_out == 2);
+    }
+
+    #[test]
+    fn slo_attainment_is_a_fraction_and_relaxed_slos_always_met() {
+        let r = serve(ArchKind::CompAirOpt, 100.0); // homogeneous = relaxed SLO
+        assert!((r.slo_attainment - 1.0).abs() < 1e-12, "relaxed SLOs must all be met");
+        let s = serve_scenario("chat", 16, 42);
+        assert!((0.0..=1.0).contains(&s.slo_attainment));
+        for c in &s.per_class {
+            assert!((0.0..=1.0).contains(&c.slo_attainment));
+            assert!(c.ttft_attainment >= c.slo_attainment - 1e-12);
+        }
+    }
+
+    #[test]
+    fn offline_batch_maximizes_batching() {
+        // all-at-once arrivals should serve with fewer, denser decode
+        // iterations than the same work trickled in
+        let r = serve_scenario("batch", 16, 42);
+        assert_eq!(r.completed, 16);
+        assert!(r.decode_iters > 0);
     }
 }

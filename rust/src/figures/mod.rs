@@ -7,6 +7,7 @@ pub mod gqa;
 pub mod mapping;
 pub mod motivation;
 pub mod noc_eval;
+pub mod serving;
 
 use crate::config::HwConfig;
 use crate::util::table::Table;
@@ -79,6 +80,9 @@ pub fn registry() -> Vec<(&'static str, fn() -> String)> {
         ("fig23", noc_eval::fig23),
         ("fig24", gqa::fig24),
         ("fig25", gqa::fig25),
+        // beyond-paper serving tables (trace-driven, SLO-aware)
+        ("scenarios", serving::scenarios),
+        ("scenario-archs", serving::scenario_archs),
     ]
 }
 

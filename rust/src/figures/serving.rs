@@ -1,0 +1,99 @@
+//! Serving-scenario comparison tables: the coordinator's SLO-aware
+//! continuous batcher driven by every named workload scenario, plus an
+//! architecture face-off on the mixed multi-tenant blend. These extend the
+//! paper's fixed-shape end-to-end tables toward the trace-driven,
+//! SLO-reporting evaluation style of the PIM-serving literature.
+
+use crate::config::{ArchKind, ModelConfig, RunConfig};
+use crate::coordinator::run_scenario;
+use crate::util::table::{fenergy_pj, fnum, ftime_ns, Table};
+use crate::workload::Scenario;
+
+fn rc(arch: ArchKind) -> RunConfig {
+    let mut rc = RunConfig::new(arch, ModelConfig::llama2_7b());
+    rc.tp = 8;
+    rc.devices = 32;
+    rc
+}
+
+/// Scenario sweep: every named scenario served on CompAir_Opt
+/// (llama2-7b, TP=8, 32 devices), reporting throughput, tail latencies,
+/// SLO attainment, and energy per token.
+pub fn scenarios() -> String {
+    let mut t = Table::new(
+        "Serving scenarios — CompAir_Opt, llama2-7b, TP=8, 32 devices, seed 42",
+        &[
+            "scenario", "done", "rej", "pre", "tok/s", "ttft p50", "ttft p99", "tpot p50",
+            "slo%", "energy/tok",
+        ],
+    );
+    for sc in Scenario::all() {
+        // cap request counts so full-figure regeneration stays fast
+        let name = sc.name;
+        let n = sc.default_requests.min(32);
+        let r = run_scenario(rc(ArchKind::CompAirOpt), sc, n, 42).report;
+        t.rowv(vec![
+            name.to_string(),
+            r.completed.to_string(),
+            r.rejected.to_string(),
+            r.preempted.to_string(),
+            fnum(r.throughput_tok_s),
+            ftime_ns(r.ttft_p50_ns),
+            ftime_ns(r.ttft_p99_ns),
+            ftime_ns(r.tpot_p50_ns),
+            format!("{:.1}%", r.slo_attainment * 100.0),
+            fenergy_pj(r.energy_per_token_pj),
+        ]);
+    }
+    t.render()
+}
+
+/// Architecture face-off on the mixed multi-tenant scenario: CENT vs the
+/// CompAir ablation steps, same trace, same SLOs.
+pub fn scenario_archs() -> String {
+    let sc = Scenario::by_name("mixed").expect("mixed scenario registered");
+    let mut t = Table::new(
+        "Mixed multi-tenant scenario across architectures — llama2-7b, TP=8, 32 devices",
+        &["arch", "makespan", "tok/s", "ttft p99", "tpot p99", "slo%", "energy/tok"],
+    );
+    for arch in [
+        ArchKind::Cent,
+        ArchKind::CentCurry,
+        ArchKind::CompAirBase,
+        ArchKind::CompAirOpt,
+    ] {
+        let r = run_scenario(rc(arch), sc.clone(), 32, 42).report;
+        t.rowv(vec![
+            arch.label().to_string(),
+            ftime_ns(r.makespan_ns as f64),
+            fnum(r.throughput_tok_s),
+            ftime_ns(r.ttft_p99_ns),
+            ftime_ns(r.tpot_p99_ns),
+            format!("{:.1}%", r.slo_attainment * 100.0),
+            fenergy_pj(r.energy_per_token_pj),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scenario_table_has_all_scenarios() {
+        let s = scenarios();
+        for name in Scenario::names() {
+            assert!(s.contains(name), "scenario table missing '{name}'");
+        }
+        assert!(s.contains("slo%") || s.contains("slo"), "SLO column present");
+    }
+
+    #[test]
+    fn arch_table_covers_ablation() {
+        let s = scenario_archs();
+        for label in ["CENT", "CompAir_Opt"] {
+            assert!(s.contains(label), "arch table missing '{label}'");
+        }
+    }
+}

@@ -2,13 +2,14 @@
 //!
 //! Three-layer architecture:
 //! * L3 (this crate): cycle-approximate simulators for every hardware
-//!   substrate in the paper + the serving coordinator;
+//!   substrate in the paper + the SLO-aware serving coordinator;
 //! * L2 (python/compile/model.py): JAX transformer block, AOT-lowered to HLO
 //!   text under `artifacts/`;
 //! * L1 (python/compile/kernels/): Pallas kernels for the compute hot-spots,
 //!   validated against a pure-jnp oracle.
 //!
-//! See DESIGN.md for the module inventory and the per-experiment index.
+//! See README.md for the module map and docs/ARCHITECTURE.md for the
+//! module-to-paper mapping and the request-lifecycle walkthrough.
 pub mod arch;
 pub mod cli;
 pub mod config;

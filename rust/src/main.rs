@@ -4,10 +4,11 @@
 use compair::arch;
 use compair::cli::{Args, USAGE};
 use compair::config::{ArchKind, ModelConfig, Phase, RunConfig};
-use compair::coordinator::{ServeConfig, Server};
+use compair::coordinator::{run_scenario, serving, ServeConfig, Server};
 use compair::figures;
 use compair::isa::{Machine, RowProgram};
 use compair::util::table::{fenergy_pj, fnum, ftime_ns, Table};
+use compair::workload::Scenario;
 
 fn main() {
     let args = match Args::parse(std::env::args().skip(1)) {
@@ -36,6 +37,10 @@ fn main() {
                 println!("  {}", m.name);
             }
             println!("archs: cent cent-curry compair-base compair-opt");
+            println!("scenarios:");
+            for s in Scenario::all() {
+                println!("  {:<13} {}", s.name, s.description);
+            }
             Ok(())
         }
         "" | "help" | "-h" => {
@@ -124,12 +129,31 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
 
 fn cmd_serve(args: &Args) -> Result<(), String> {
     let rc = build_rc(args)?;
+    let seed = args.flag_usize("seed", 42)? as u64;
+    if let Some(name) = args.flag("scenario") {
+        let sc = Scenario::by_name(name)
+            .ok_or_else(|| format!("unknown scenario '{name}' (see `compair list`)"))?;
+        let n = args.flag_usize("requests", sc.default_requests)?;
+        println!(
+            "== serve: {} {} scenario={} n={} seed={} ==",
+            rc.arch.label(),
+            rc.model.name,
+            sc.name,
+            n,
+            seed
+        );
+        println!("   {}", sc.description);
+        let sr = run_scenario(rc, sc, n, seed);
+        print!("{}", serving::render_summary(&sr.report));
+        sr.report.class_table("per-class SLO report").print();
+        return Ok(());
+    }
     let cfg = ServeConfig {
         arrival_rate: args.flag_f64("rate", 32.0)?,
         n_requests: args.flag_usize("requests", 64)?,
         prompt_len: args.flag_usize("prompt", 512)?,
         gen_len: args.flag_usize("gen", 32)?,
-        seed: args.flag_usize("seed", 42)? as u64,
+        seed,
         ..Default::default()
     };
     println!(
@@ -142,17 +166,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         cfg.gen_len
     );
     let r = Server::new(rc, cfg).run();
-    println!("completed:      {}", r.completed);
-    println!("rejected:       {}", r.rejected);
-    println!("makespan:       {}", ftime_ns(r.makespan_ns as f64));
-    println!("throughput:     {} tok/s", fnum(r.throughput_tok_s));
-    println!("TTFT p50/p99:   {} / {}", ftime_ns(r.ttft_p50_ns), ftime_ns(r.ttft_p99_ns));
-    println!(
-        "req lat p50/p99:{} / {}",
-        ftime_ns(r.req_latency_p50_ns),
-        ftime_ns(r.req_latency_p99_ns)
-    );
-    println!("energy total:   {}", fenergy_pj(r.energy.total_pj()));
+    print!("{}", serving::render_summary(&r));
     Ok(())
 }
 

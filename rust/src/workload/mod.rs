@@ -1,5 +1,8 @@
-//! LLM workload model: transformer op-graphs per phase, FLOP/byte math, and
-//! KV-cache growth.
+//! LLM workload model: transformer op-graphs per phase, FLOP/byte math,
+//! KV-cache growth, and the named serving scenarios (request-mix traces
+//! with per-class SLOs) the coordinator consumes.
 pub mod ops;
+pub mod traces;
 
 pub use ops::{layer_ops, LlmOp, OpClass};
+pub use traces::{Arrivals, LenDist, RequestClass, Scenario, Slo};

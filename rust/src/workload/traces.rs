@@ -1,0 +1,424 @@
+//! Named serving scenarios: heterogeneous request-mix traces with per-class
+//! SLOs, the workload side of the serving coordinator.
+//!
+//! Each [`Scenario`] bundles an arrival process (Poisson, bursty diurnal,
+//! or offline batch) with a weighted mix of [`RequestClass`]es, every class
+//! carrying its own prompt/generation length distributions and a
+//! TTFT/per-token latency [`Slo`]. `Scenario::generate` expands the
+//! scenario into a concrete, deterministic `Vec<Request>` trace — the same
+//! seed always yields the bit-identical trace, which keeps serving runs
+//! reproducible end to end.
+//!
+//! The built-in registry ([`Scenario::all`]) covers the request shapes the
+//! ROADMAP asks the coordinator to handle: interactive chat, RAG long
+//! prefill, 128K-context decode, offline batch summarization, bursty
+//! diurnal traffic, and a mixed multi-tenant blend.
+
+use crate::coordinator::batcher::Request;
+use crate::util::XorShiftRng;
+
+/// Per-class service-level objective on request latency.
+///
+/// A request meets its SLO when its time-to-first-token and its average
+/// per-output-token latency are both within target.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Slo {
+    /// Time-to-first-token target (ns): arrival → first decoded token.
+    pub ttft_ns: u64,
+    /// Average time-per-output-token target (ns) over the decode phase.
+    pub tpot_ns: u64,
+}
+
+impl Slo {
+    /// SLO from millisecond targets (the unit operators think in).
+    pub fn from_ms(ttft_ms: f64, tpot_ms: f64) -> Self {
+        Self { ttft_ns: (ttft_ms * 1e6) as u64, tpot_ns: (tpot_ms * 1e6) as u64 }
+    }
+
+    /// An effectively unbounded SLO (offline/best-effort traffic).
+    pub fn relaxed() -> Self {
+        Self { ttft_ns: u64::MAX, tpot_ns: u64::MAX }
+    }
+
+    /// Did a request with the given observed latencies meet this SLO?
+    pub fn met(&self, ttft_ns: u64, tpot_ns: f64) -> bool {
+        ttft_ns <= self.ttft_ns && tpot_ns <= self.tpot_ns as f64
+    }
+}
+
+impl Default for Slo {
+    fn default() -> Self {
+        Self::relaxed()
+    }
+}
+
+/// Token-length distribution for prompts and generations.
+#[derive(Debug, Clone, Copy)]
+pub enum LenDist {
+    /// Every request draws exactly this length.
+    Fixed(usize),
+    /// Uniform in `[lo, hi]` inclusive.
+    Uniform { lo: usize, hi: usize },
+    /// Bounded Pareto heavy tail: most requests near `min`, rare ones up to
+    /// `cap` (the shape real prompt-length logs show).
+    Pareto { min: usize, alpha: f64, cap: usize },
+}
+
+impl LenDist {
+    /// Draw one length (always ≥ 1).
+    pub fn sample(&self, rng: &mut XorShiftRng) -> usize {
+        let v = match *self {
+            LenDist::Fixed(n) => n,
+            LenDist::Uniform { lo, hi } => rng.next_in(lo, hi),
+            LenDist::Pareto { min, alpha, cap } => {
+                let u = rng.next_f64().max(1e-12);
+                ((min as f64 / u.powf(1.0 / alpha)) as usize).min(cap)
+            }
+        };
+        v.max(1)
+    }
+
+    /// Largest length this distribution can emit (KV-sizing aid).
+    pub fn max_len(&self) -> usize {
+        match *self {
+            LenDist::Fixed(n) => n.max(1),
+            LenDist::Uniform { hi, .. } => hi.max(1),
+            LenDist::Pareto { cap, .. } => cap.max(1),
+        }
+    }
+}
+
+/// One tenant/request class inside a scenario.
+#[derive(Debug, Clone)]
+pub struct RequestClass {
+    /// Class label used in per-class reports (e.g. "chat", "rag").
+    pub name: &'static str,
+    /// Relative sampling weight within the scenario mix.
+    pub weight: f64,
+    /// Prompt-length distribution (tokens).
+    pub prompt: LenDist,
+    /// Generation-length distribution (tokens).
+    pub gen: LenDist,
+    /// Latency objective for this class.
+    pub slo: Slo,
+}
+
+/// Request arrival process over simulated time.
+#[derive(Debug, Clone, Copy)]
+pub enum Arrivals {
+    /// Homogeneous Poisson arrivals at `rate` requests/s.
+    Poisson { rate: f64 },
+    /// On/off diurnal modulation: `duty` fraction of every `period_s`
+    /// window runs at `peak_rate`, the rest at `base_rate` — the bursty
+    /// traffic shape that stresses admission and eviction.
+    Bursty { base_rate: f64, peak_rate: f64, period_s: f64, duty: f64 },
+    /// Offline batch: every request is present at t = 0 (throughput-bound
+    /// scheduling, no arrival jitter).
+    Offline,
+}
+
+impl Arrivals {
+    /// Advance the clock from `now_s` to the next arrival (seconds).
+    fn next_after(&self, now_s: f64, rng: &mut XorShiftRng) -> f64 {
+        match *self {
+            Arrivals::Poisson { rate } => now_s + rng.next_exp(rate),
+            Arrivals::Bursty { base_rate, peak_rate, period_s, duty } => {
+                // piecewise-constant-rate Poisson: the rate in effect at the
+                // current instant drives the next inter-arrival draw
+                let phase = (now_s / period_s).fract();
+                let rate = if phase < duty { peak_rate } else { base_rate };
+                now_s + rng.next_exp(rate)
+            }
+            Arrivals::Offline => now_s,
+        }
+    }
+}
+
+/// A named serving scenario: arrival process + weighted class mix.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    /// Registry key (`serve --scenario <name>`).
+    pub name: &'static str,
+    /// One-line description printed by `compair list`.
+    pub description: &'static str,
+    /// Arrival process shared by all classes.
+    pub arrivals: Arrivals,
+    /// Weighted request-class mix (at least one class).
+    pub classes: Vec<RequestClass>,
+    /// Request count a default run uses (CLI `--requests` overrides).
+    pub default_requests: usize,
+}
+
+impl Scenario {
+    /// All built-in scenarios, in registry order.
+    pub fn all() -> Vec<Scenario> {
+        vec![
+            Scenario {
+                name: "chat",
+                description: "interactive chat: short prompts, short generations, tight TTFT",
+                arrivals: Arrivals::Poisson { rate: 32.0 },
+                classes: vec![RequestClass {
+                    name: "chat",
+                    weight: 1.0,
+                    prompt: LenDist::Uniform { lo: 64, hi: 512 },
+                    gen: LenDist::Uniform { lo: 16, hi: 128 },
+                    slo: Slo::from_ms(200.0, 50.0),
+                }],
+                default_requests: 64,
+            },
+            Scenario {
+                name: "rag",
+                description: "retrieval-augmented: long stuffed-context prefill, short answers",
+                arrivals: Arrivals::Poisson { rate: 8.0 },
+                classes: vec![RequestClass {
+                    name: "rag",
+                    weight: 1.0,
+                    prompt: LenDist::Pareto { min: 2048, alpha: 1.2, cap: 16384 },
+                    gen: LenDist::Uniform { lo: 32, hi: 128 },
+                    slo: Slo::from_ms(2000.0, 60.0),
+                }],
+                default_requests: 32,
+            },
+            Scenario {
+                name: "long-context",
+                description: "128K-context decode: the paper's Fig 19 shape as live traffic",
+                arrivals: Arrivals::Poisson { rate: 0.5 },
+                classes: vec![RequestClass {
+                    name: "long-ctx",
+                    weight: 1.0,
+                    prompt: LenDist::Fixed(128 * 1024),
+                    gen: LenDist::Uniform { lo: 32, hi: 128 },
+                    slo: Slo::from_ms(30_000.0, 100.0),
+                }],
+                default_requests: 8,
+            },
+            Scenario {
+                name: "batch",
+                description: "offline summarization: all requests queued at t=0, SLO-relaxed",
+                arrivals: Arrivals::Offline,
+                classes: vec![RequestClass {
+                    name: "summarize",
+                    weight: 1.0,
+                    prompt: LenDist::Uniform { lo: 1024, hi: 4096 },
+                    gen: LenDist::Uniform { lo: 64, hi: 256 },
+                    slo: Slo::relaxed(),
+                }],
+                default_requests: 48,
+            },
+            Scenario {
+                name: "bursty",
+                description: "diurnal bursts: 8x peak-to-base arrival swings over chat traffic",
+                arrivals: Arrivals::Bursty {
+                    base_rate: 8.0,
+                    peak_rate: 64.0,
+                    period_s: 2.0,
+                    duty: 0.25,
+                },
+                classes: vec![RequestClass {
+                    name: "chat",
+                    weight: 1.0,
+                    prompt: LenDist::Uniform { lo: 64, hi: 512 },
+                    gen: LenDist::Uniform { lo: 16, hi: 128 },
+                    slo: Slo::from_ms(400.0, 50.0),
+                }],
+                default_requests: 64,
+            },
+            Scenario {
+                name: "mixed",
+                description: "multi-tenant blend: chat + RAG + background batch sharing the fabric",
+                arrivals: Arrivals::Poisson { rate: 16.0 },
+                classes: vec![
+                    RequestClass {
+                        name: "chat",
+                        weight: 0.6,
+                        prompt: LenDist::Uniform { lo: 64, hi: 512 },
+                        gen: LenDist::Uniform { lo: 16, hi: 128 },
+                        slo: Slo::from_ms(200.0, 50.0),
+                    },
+                    RequestClass {
+                        name: "rag",
+                        weight: 0.25,
+                        prompt: LenDist::Pareto { min: 2048, alpha: 1.2, cap: 16384 },
+                        gen: LenDist::Uniform { lo: 32, hi: 128 },
+                        slo: Slo::from_ms(2000.0, 60.0),
+                    },
+                    RequestClass {
+                        name: "batch",
+                        weight: 0.15,
+                        prompt: LenDist::Uniform { lo: 1024, hi: 4096 },
+                        gen: LenDist::Uniform { lo: 64, hi: 256 },
+                        slo: Slo::relaxed(),
+                    },
+                ],
+                default_requests: 64,
+            },
+        ]
+    }
+
+    /// Registry names, in order.
+    pub fn names() -> Vec<&'static str> {
+        Self::all().into_iter().map(|s| s.name).collect()
+    }
+
+    /// Look a scenario up by its registry name.
+    pub fn by_name(name: &str) -> Option<Scenario> {
+        Self::all().into_iter().find(|s| s.name.eq_ignore_ascii_case(name))
+    }
+
+    /// Class names in index order (request `class` fields index into this).
+    pub fn class_names(&self) -> Vec<&'static str> {
+        self.classes.iter().map(|c| c.name).collect()
+    }
+
+    fn pick_class(&self, rng: &mut XorShiftRng) -> usize {
+        let total: f64 = self.classes.iter().map(|c| c.weight).sum();
+        let mut u = rng.next_f64() * total;
+        for (i, c) in self.classes.iter().enumerate() {
+            u -= c.weight;
+            if u < 0.0 {
+                return i;
+            }
+        }
+        self.classes.len() - 1
+    }
+
+    /// Expand the scenario into `n` concrete requests, sorted by arrival.
+    /// Deterministic: identical `(seed, n)` always produces the identical
+    /// trace.
+    pub fn generate(&self, seed: u64, n: usize) -> Vec<Request> {
+        let mut rng = XorShiftRng::new(seed);
+        let mut t_s = 0.0f64;
+        let mut out = Vec::with_capacity(n);
+        for id in 0..n {
+            t_s = self.arrivals.next_after(t_s, &mut rng);
+            let ci = self.pick_class(&mut rng);
+            let c = &self.classes[ci];
+            out.push(Request {
+                id: id as u64,
+                class: ci,
+                prompt_len: c.prompt.sample(&mut rng),
+                gen_len: c.gen.sample(&mut rng),
+                arrived_ns: (t_s * 1e9) as u64,
+                slo: c.slo,
+                preemptions: 0,
+            });
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_has_the_documented_scenarios() {
+        let names = Scenario::names();
+        for expected in ["chat", "rag", "long-context", "batch", "bursty", "mixed"] {
+            assert!(names.contains(&expected), "missing scenario '{expected}'");
+        }
+        assert!(names.len() >= 5);
+    }
+
+    #[test]
+    fn by_name_roundtrip_and_unknown() {
+        for s in Scenario::all() {
+            assert_eq!(Scenario::by_name(s.name).unwrap().name, s.name);
+        }
+        assert!(Scenario::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn generation_is_deterministic_per_seed() {
+        for sc in Scenario::all() {
+            let a = sc.generate(7, 40);
+            let b = sc.generate(7, 40);
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(
+                    (x.id, x.class, x.prompt_len, x.gen_len, x.arrived_ns),
+                    (y.id, y.class, y.prompt_len, y.gen_len, y.arrived_ns),
+                    "{} trace not deterministic",
+                    sc.name
+                );
+            }
+            let c = sc.generate(8, 40);
+            if !matches!(sc.arrivals, Arrivals::Offline) {
+                assert!(
+                    a.iter().zip(&c).any(|(x, y)| x.arrived_ns != y.arrived_ns),
+                    "{} trace ignores the seed",
+                    sc.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn arrivals_are_sorted_and_lengths_in_range() {
+        for sc in Scenario::all() {
+            let reqs = sc.generate(42, 64);
+            assert_eq!(reqs.len(), 64);
+            for w in reqs.windows(2) {
+                assert!(w[0].arrived_ns <= w[1].arrived_ns, "{} out of order", sc.name);
+            }
+            for r in &reqs {
+                assert!(r.class < sc.classes.len());
+                let c = &sc.classes[r.class];
+                assert!(r.prompt_len >= 1 && r.prompt_len <= c.prompt.max_len());
+                assert!(r.gen_len >= 1 && r.gen_len <= c.gen.max_len());
+                assert_eq!(r.slo, c.slo);
+            }
+        }
+    }
+
+    #[test]
+    fn offline_arrivals_all_at_zero() {
+        let sc = Scenario::by_name("batch").unwrap();
+        assert!(sc.generate(1, 16).iter().all(|r| r.arrived_ns == 0));
+    }
+
+    #[test]
+    fn bursty_is_burstier_than_poisson() {
+        // squared coefficient of variation of inter-arrivals: bursty >> 1,
+        // Poisson ≈ 1
+        let cv2 = |reqs: &[Request]| {
+            let gaps: Vec<f64> =
+                reqs.windows(2).map(|w| (w[1].arrived_ns - w[0].arrived_ns) as f64).collect();
+            let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+            let var =
+                gaps.iter().map(|g| (g - mean) * (g - mean)).sum::<f64>() / gaps.len() as f64;
+            var / (mean * mean)
+        };
+        let bursty = cv2(&Scenario::by_name("bursty").unwrap().generate(3, 400));
+        let chat = cv2(&Scenario::by_name("chat").unwrap().generate(3, 400));
+        assert!(bursty > chat, "bursty cv2={bursty:.2} vs poisson cv2={chat:.2}");
+    }
+
+    #[test]
+    fn pareto_is_heavy_tailed_but_capped() {
+        let d = LenDist::Pareto { min: 100, alpha: 1.2, cap: 1000 };
+        let mut rng = XorShiftRng::new(11);
+        let samples: Vec<usize> = (0..2000).map(|_| d.sample(&mut rng)).collect();
+        assert!(samples.iter().all(|&s| (100..=1000).contains(&s)));
+        assert!(samples.iter().filter(|&&s| s < 300).count() > 1000, "mass near min");
+        assert!(samples.iter().any(|&s| s > 600), "tail reaches toward cap");
+    }
+
+    #[test]
+    fn mixed_scenario_uses_every_class() {
+        let sc = Scenario::by_name("mixed").unwrap();
+        let reqs = sc.generate(5, 200);
+        for ci in 0..sc.classes.len() {
+            assert!(reqs.iter().any(|r| r.class == ci), "class {ci} never sampled");
+        }
+    }
+
+    #[test]
+    fn slo_met_logic() {
+        let slo = Slo::from_ms(200.0, 50.0);
+        assert!(slo.met(150_000_000, 40e6));
+        assert!(!slo.met(250_000_000, 40e6));
+        assert!(!slo.met(150_000_000, 60e6));
+        assert!(Slo::relaxed().met(u64::MAX - 1, 1e18));
+    }
+}

@@ -3,7 +3,8 @@
 
 use compair::arch::{attacc, simulate, AttAccConfig};
 use compair::config::{ArchKind, FcMapping, ModelConfig, Phase, RunConfig, SramGang};
-use compair::coordinator::{ServeConfig, Server};
+use compair::coordinator::{run_scenario, ServeConfig, Server};
+use compair::workload::Scenario;
 
 #[test]
 fn headline_decode_speedups_hold_across_models() {
@@ -93,6 +94,31 @@ fn serving_under_all_archs_completes() {
         assert_eq!(r.completed, 10, "{arch:?}");
         assert!(r.ttft_p50_ns > 0.0);
     }
+}
+
+#[test]
+fn mixed_scenario_compair_beats_cent_on_slo_and_energy_direction() {
+    // the scenario engine composed with the full hardware stack: the same
+    // multi-tenant trace must serve faster on CompAir than on the CENT
+    // baseline, with every request accounted for on both
+    let run = |arch: ArchKind| {
+        let mut rc = RunConfig::new(arch, ModelConfig::llama2_7b());
+        rc.tp = 8;
+        rc.devices = 32;
+        run_scenario(rc, Scenario::by_name("mixed").unwrap(), 24, 42).report
+    };
+    let ca = run(ArchKind::CompAirOpt);
+    let cent = run(ArchKind::Cent);
+    assert_eq!(ca.completed + ca.rejected as usize, 24);
+    assert_eq!(cent.completed + cent.rejected as usize, 24);
+    assert!(
+        ca.makespan_ns < cent.makespan_ns,
+        "CompAir {} vs CENT {}",
+        ca.makespan_ns,
+        cent.makespan_ns
+    );
+    assert!((0.0..=1.0).contains(&ca.slo_attainment));
+    assert!((0.0..=1.0).contains(&cent.slo_attainment));
 }
 
 #[test]

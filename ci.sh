@@ -7,9 +7,13 @@
 # Steps (each must pass):
 #   1. cargo build --release        — the crate and all targets compile
 #   2. cargo test -q                — unit + integration tests (tier-1)
-#   3. cargo doc --no-deps          — rustdoc with warnings denied
-#   4. cargo fmt --check            — formatting (skipped if rustfmt absent)
-#   5. python tests                 — kernel/model oracles (skipped without jax)
+#   3. cargo clippy --all-targets   — lints with warnings denied
+#   4. cargo doc --no-deps          — rustdoc with warnings denied
+#   5. cargo fmt --check            — formatting (skipped if rustfmt absent)
+#   6. python tests                 — kernel/model oracles (skipped without jax)
+#
+# A missing `cargo` is a hard failure, never a silent skip: a gate that
+# checked nothing must not look green.
 #
 # PJRT-dependent tests self-skip when built without the `pjrt` feature; see
 # rust/Cargo.toml for how to enable it with a vendored xla crate.
@@ -34,6 +38,15 @@ say "cargo test -q"
 cargo test -q
 
 if [[ "$FAST" == "0" ]]; then
+    say "cargo clippy --all-targets (warnings are errors)"
+    if cargo clippy --version >/dev/null 2>&1; then
+        cargo clippy -q --all-targets -- -D warnings
+    else
+        echo "error: clippy not installed (rustup component add clippy);" >&2
+        echo "       the lint gate cannot be skipped silently." >&2
+        exit 1
+    fi
+
     say "cargo doc --no-deps (warnings are errors)"
     RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 

@@ -1,0 +1,107 @@
+//! Cluster sweep: the serving scenarios driven across multi-replica
+//! deployments on the modeled CXL fabric — replica-count scaling, router
+//! policy face-off, and colocated vs disaggregated prefill/decode with
+//! priced KV migration.
+//!
+//! Run: `cargo run --release --example cluster`
+
+use compair::config::{ArchKind, ModelConfig, RunConfig};
+use compair::coordinator::{
+    cluster::render_cluster_summary, run_cluster_scenario, ClusterConfig, RouterPolicy,
+};
+use compair::util::table::{fbytes, fenergy_pj, fnum, ftime_ns, Table};
+use compair::workload::Scenario;
+
+fn rc() -> RunConfig {
+    let mut rc = RunConfig::new(ArchKind::CompAirOpt, ModelConfig::llama2_7b());
+    rc.tp = 8;
+    rc.devices = 32;
+    rc
+}
+
+fn main() {
+    // ---- replica scaling on the mixed multi-tenant blend ----
+    println!("==== replica scaling: mixed blend, CompAir_Opt, llama2-7b ====");
+    let mut t = Table::new(
+        "colocated, least-kv router, 32 requests, seed 42",
+        &["replicas", "makespan", "tok/s", "ttft p99", "slo%", "energy/tok"],
+    );
+    for replicas in [1usize, 2, 4, 8] {
+        let cfg = ClusterConfig { replicas, disagg: None, router: RouterPolicy::LeastLoadedKv };
+        let r = run_cluster_scenario(rc(), Scenario::by_name("mixed").unwrap(), 32, 42, cfg)
+            .cluster;
+        t.rowv(vec![
+            replicas.to_string(),
+            ftime_ns(r.report.makespan_ns as f64),
+            fnum(r.report.throughput_tok_s),
+            ftime_ns(r.report.ttft_p99_ns),
+            format!("{:.1}%", r.report.slo_attainment * 100.0),
+            fenergy_pj(r.report.energy_per_token_pj),
+        ]);
+    }
+    t.print();
+
+    // ---- router policy face-off under bursty traffic ----
+    println!("\n==== router policies: bursty diurnal traffic, 4 replicas ====");
+    let mut t = Table::new(
+        "colocated, 48 requests, seed 42",
+        &["router", "ttft p50", "ttft p99", "slo%", "rejected"],
+    );
+    for router in [
+        RouterPolicy::RoundRobin,
+        RouterPolicy::LeastLoadedKv,
+        RouterPolicy::DeadlineAware,
+    ] {
+        let cfg = ClusterConfig { replicas: 4, disagg: None, router };
+        let r = run_cluster_scenario(rc(), Scenario::by_name("bursty").unwrap(), 48, 42, cfg)
+            .cluster;
+        t.rowv(vec![
+            router.label().to_string(),
+            ftime_ns(r.report.ttft_p50_ns),
+            ftime_ns(r.report.ttft_p99_ns),
+            format!("{:.1}%", r.report.slo_attainment * 100.0),
+            r.report.rejected.to_string(),
+        ]);
+    }
+    t.print();
+
+    // ---- colocated vs disaggregated, with the migration bill ----
+    println!("\n==== colocated vs disaggregated (4 replicas) per scenario ====");
+    let mut t = Table::new(
+        "least-kv router, seed 42",
+        &["scenario", "mode", "tok/s", "ttft p99", "slo%", "energy/tok", "kv migrated"],
+    );
+    for sc in Scenario::all() {
+        let n = sc.default_requests.min(16);
+        for disagg in [None, Some((2usize, 2usize))] {
+            let cfg = ClusterConfig {
+                replicas: 4,
+                disagg,
+                router: RouterPolicy::LeastLoadedKv,
+            };
+            let r = run_cluster_scenario(rc(), sc.clone(), n, 42, cfg).cluster;
+            t.rowv(vec![
+                sc.name.to_string(),
+                r.mode(),
+                fnum(r.report.throughput_tok_s),
+                ftime_ns(r.report.ttft_p99_ns),
+                format!("{:.1}%", r.report.slo_attainment * 100.0),
+                fenergy_pj(r.report.energy_per_token_pj),
+                fbytes(r.migration_bytes),
+            ]);
+        }
+    }
+    t.print();
+
+    // ---- one full disaggregated run, with per-replica detail ----
+    println!("\n==== disaggregated chat serving, 2 prefill : 2 decode ====");
+    let cfg = ClusterConfig {
+        replicas: 4,
+        disagg: Some((2, 2)),
+        router: RouterPolicy::DeadlineAware,
+    };
+    let r = run_cluster_scenario(rc(), Scenario::by_name("chat").unwrap(), 32, 42, cfg).cluster;
+    print!("{}", render_cluster_summary(&r));
+    r.replica_table().print();
+    r.report.class_table("per-class SLO report").print();
+}

@@ -80,6 +80,11 @@ USAGE:
                    [--scenario NAME]      continuous-batching serving sim;
                                           --scenario serves a named request
                                           mix with per-class SLO reporting
+                   [--replicas N]         serve across N replicas on the
+                                          CXL fabric (cluster coordinator)
+                   [--disagg P:D]         disaggregate into P prefill + D
+                                          decode replicas w/ KV migration
+                   [--router POLICY]      arrival routing policy
   compair isa-demo [--len N] [--rounds N] run the hierarchical-ISA exp demo
   compair config show                     print the Table-3 hardware config
   compair list                            list figures/models/archs/scenarios
@@ -87,6 +92,7 @@ USAGE:
 ARCHS:     cent | cent-curry | compair-base | compair-opt
 MODELS:    llama2-7b | llama2-13b | llama2-70b | qwen-72b | gpt3-175b | tiny
 SCENARIOS: chat | rag | long-context | batch | bursty | mixed
+ROUTERS:   round-robin | least-kv | deadline
 ";
 
 #[cfg(test)]

@@ -72,11 +72,15 @@ impl RequestState {
         self.prefilled_tokens + self.generated
     }
 
-    /// KV tokens this request accounts for in the admission budget: the
-    /// full prompt is reserved up front so a half-prefilled request can
-    /// always finish.
+    /// Full-reservation KV footprint: the whole prompt *and* the whole
+    /// generation, so an admitted request can always run to completion.
+    /// Reserving only `prompt_len + generated` (the old accounting) let
+    /// admission hand the un-generated tokens of active requests to
+    /// newcomers, so resident KV could exceed `max_kv_tokens` mid-decode.
+    /// (A batcher with `reserve_gen: false` charges the prompt only — see
+    /// [`BatcherConfig::reserve_gen`].)
     pub fn kv_footprint(&self) -> usize {
-        self.req.prompt_len + self.generated
+        self.req.prompt_len + self.req.gen_len
     }
 
     /// Prompt tokens still to prefill.
@@ -120,6 +124,12 @@ pub struct BatcherConfig {
     pub prefill_chunk: usize,
     /// Allow urgent queued requests to preempt looser-SLO active ones.
     pub slo_eviction: bool,
+    /// Reserve `gen_len` KV at admission alongside the prompt. True for
+    /// colocated/decode batchers (decode KV materializes in place); the
+    /// cluster's prefill-pool batchers set false, since a request is
+    /// handed off at prefill completion and its generation KV never
+    /// resides there.
+    pub reserve_gen: bool,
 }
 
 impl Default for BatcherConfig {
@@ -130,6 +140,7 @@ impl Default for BatcherConfig {
             queue_cap: 1024,
             prefill_chunk: 4096,
             slo_eviction: true,
+            reserve_gen: true,
         }
     }
 }
@@ -166,9 +177,15 @@ impl Batcher {
     /// admission queue is full — the backpressure signal — or when the
     /// request can never fit the KV budget at all (it would otherwise sit
     /// in the queue forever as unserved).
+    /// KV tokens a request reserves under this batcher's policy: the full
+    /// prompt, plus the full generation when `cfg.reserve_gen` is set.
+    fn reservation(&self, prompt_len: usize, gen_len: usize) -> usize {
+        prompt_len + if self.cfg.reserve_gen { gen_len } else { 0 }
+    }
+
     pub fn offer(&mut self, req: Request) -> bool {
         if self.queue.len() >= self.cfg.queue_cap
-            || req.prompt_len + req.gen_len > self.cfg.max_kv_tokens
+            || self.reservation(req.prompt_len, req.gen_len) > self.cfg.max_kv_tokens
         {
             self.rejected += 1;
             return false;
@@ -181,8 +198,25 @@ impl Batcher {
         self.queue.len()
     }
 
-    fn kv_in_use(&self) -> usize {
-        self.active.iter().map(|s| s.kv_footprint()).sum()
+    /// KV tokens reserved by the running batch (`prompt + gen` per active
+    /// request, prompt only under `reserve_gen: false`). Public so cluster
+    /// routers can read replica load.
+    pub fn kv_in_use(&self) -> usize {
+        self.active.iter().map(|s| self.reservation(s.req.prompt_len, s.req.gen_len)).sum()
+    }
+
+    /// KV tokens the admission queue will eventually demand (router load
+    /// signal: work committed to this batcher but not yet resident).
+    pub fn queued_kv_demand(&self) -> usize {
+        self.queue.iter().map(|r| self.reservation(r.prompt_len, r.gen_len)).sum()
+    }
+
+    /// How many queued + active requests hold a deadline at or before
+    /// `deadline_ns` — the work an EDF scheduler will serve ahead of a
+    /// request with that deadline (deadline-aware router load signal).
+    pub fn deadline_pressure(&self, deadline_ns: u64) -> usize {
+        self.queue.iter().filter(|r| r.deadline_ns() <= deadline_ns).count()
+            + self.active.iter().filter(|s| s.req.deadline_ns() <= deadline_ns).count()
     }
 
     /// Index of the queued request with the earliest deadline that fits the
@@ -191,7 +225,7 @@ impl Batcher {
         let head = self.cfg.max_kv_tokens.saturating_sub(self.kv_in_use());
         let mut best: Option<usize> = None;
         for (i, r) in self.queue.iter().enumerate() {
-            if r.prompt_len + r.gen_len > head {
+            if self.reservation(r.prompt_len, r.gen_len) > head {
                 continue;
             }
             match best {
@@ -242,7 +276,7 @@ impl Batcher {
                 .queue
                 .iter()
                 .min_by_key(|r| (r.deadline_ns(), r.id))
-                .map(|r| (r.deadline_ns(), r.slo.ttft_ns, r.prompt_len + r.gen_len))
+                .map(|r| (r.deadline_ns(), r.slo.ttft_ns, self.reservation(r.prompt_len, r.gen_len)))
             else {
                 break;
             };
@@ -267,7 +301,7 @@ impl Batcher {
                 .active
                 .iter()
                 .filter(|&s| is_victim(s))
-                .map(|s| s.kv_footprint())
+                .map(|s| self.reservation(s.req.prompt_len, s.req.gen_len))
                 .sum();
             if headroom + evictable < need {
                 break;
@@ -545,8 +579,8 @@ mod tests {
 
     #[test]
     fn no_eviction_when_it_cannot_make_room() {
-        // urgent needs 50 tokens; the only evictable (looser) victim frees
-        // 20 and headroom is 20 — evicting can never fit the urgent
+        // urgent needs 55 tokens; the only evictable (looser) victim frees
+        // 15 and headroom is 15 — evicting can never fit the urgent
         // request, so nothing may be evicted (else the victim would thrash
         // evict → re-admit → recompute while the urgent one still waits)
         let mut b = Batcher::new(BatcherConfig {
@@ -557,7 +591,7 @@ mod tests {
         b.offer(req_slo(1, 10, 5, 0, 60_000.0)); // loose: evictable, frees 10
         b.admit(0);
         assert_eq!(b.active.len(), 2);
-        // urgent needs 55 > headroom 30 + evictable 10
+        // urgent needs 55 > headroom 15 + evictable 15
         b.offer(req_slo(2, 45, 10, 5, 1.0));
         assert_eq!(b.preempt_for_urgent(5), 0, "infeasible eviction must not start");
         assert_eq!(b.preempted, 0);
@@ -606,6 +640,29 @@ mod tests {
     }
 
     #[test]
+    fn prompt_only_reservation_admits_more() {
+        // a prefill-pool batcher (reserve_gen: false) charges the prompt
+        // only, so it packs more concurrent prefills into the same budget
+        let mut full = Batcher::new(BatcherConfig {
+            max_kv_tokens: 100,
+            ..Default::default()
+        });
+        let mut prompt_only = Batcher::new(BatcherConfig {
+            max_kv_tokens: 100,
+            reserve_gen: false,
+            ..Default::default()
+        });
+        for b in [&mut full, &mut prompt_only] {
+            for i in 0..4 {
+                assert!(b.offer(req(i, 30, 20)));
+            }
+        }
+        assert_eq!(full.admit(0), 2, "full reservation: 50 tokens each");
+        assert_eq!(prompt_only.admit(0), 3, "prompt-only: 30 tokens each");
+        assert_eq!(prompt_only.kv_in_use(), 90);
+    }
+
+    #[test]
     fn oversized_request_rejected_up_front() {
         // a request that can never fit the KV budget is refused at offer()
         // instead of stranding in the queue forever
@@ -630,6 +687,59 @@ mod tests {
         b.admit(0);
         b.offer(req_slo(1, 50, 10, 20, 10.0));
         assert_eq!(b.preempt_for_urgent(20), 0);
+    }
+
+    #[test]
+    fn resident_kv_never_exceeds_budget_under_bursty() {
+        // The KV-overcommit regression: admission used to reserve only
+        // `prompt + generated` for active requests, so the un-generated
+        // tokens of admitted requests were silently handed to newcomers and
+        // resident KV blew past `max_kv_tokens` mid-decode. Drive the
+        // bursty scenario trace through the batcher and check the resident
+        // invariant at every iteration boundary.
+        use crate::workload::Scenario;
+        let reqs = Scenario::by_name("bursty").unwrap().generate(42, 64);
+        let cfg = BatcherConfig {
+            max_batch: 64,
+            max_kv_tokens: 1024,
+            queue_cap: 1024,
+            prefill_chunk: 256,
+            ..Default::default()
+        };
+        let budget = cfg.max_kv_tokens;
+        let mut b = Batcher::new(cfg);
+        let mut pending = reqs.into_iter();
+        let mut exhausted = false;
+        let mut t = 0u64;
+        loop {
+            t += 1;
+            // trickle arrivals in (two per iteration keeps the queue hot)
+            for _ in 0..2 {
+                match pending.next() {
+                    Some(r) => {
+                        b.offer(r);
+                    }
+                    None => exhausted = true,
+                }
+            }
+            b.preempt_for_urgent(t);
+            b.admit(t);
+            let plan = b.plan_prefill();
+            b.advance_prefill(&plan, t);
+            b.decode_step(t);
+            let resident: usize = b.active.iter().map(|s| s.kv_tokens()).sum();
+            assert!(
+                resident <= budget,
+                "resident KV {resident} exceeds budget {budget} at iteration {t}"
+            );
+            // reservations must bound residency too
+            assert!(b.kv_in_use() <= budget, "reserved KV exceeds budget at iteration {t}");
+            if exhausted && b.idle() {
+                break;
+            }
+            assert!(t < 1_000_000, "batcher failed to drain");
+        }
+        assert!(!b.completed.is_empty(), "bursty trace must serve requests");
     }
 
     #[test]

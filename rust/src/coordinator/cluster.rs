@@ -1,0 +1,902 @@
+//! Cluster-scale serving: multiple batcher+simulator replicas on the
+//! modeled CXL fabric, with pluggable request routing and an optional
+//! disaggregated prefill/decode mode.
+//!
+//! The paper's topology (§3, §7.1) puts `devices` PIM devices behind one
+//! CXL switch, i.e. `devices / tp` independent tensor-parallel replicas.
+//! This module serves a workload trace across those replicas: each replica
+//! owns its own [`Batcher`] and is costed by its own `arch/system.rs`
+//! instance, a router assigns arrivals ([`RouterPolicy`]), and in
+//! disaggregated mode the replicas split into a prefill pool and a decode
+//! pool. A request prefills in the prefill pool, then its KV cache
+//! migrates over the fabric — `kv tokens × ModelConfig::kv_bytes_per_token`
+//! bytes priced by [`crate::arch::collective::cxl_p2p`], latency delaying
+//! the decode hand-off and bytes billed by the energy model — before
+//! decoding in the decode pool.
+//!
+//! Everything stays deterministic: one event queue drives all replicas,
+//! router tie-breaks are by replica index, and a `(scenario, seed,
+//! config)` triple reproduces the byte-identical [`ClusterReport`].
+
+use crate::arch::collective::cxl_p2p;
+use crate::config::RunConfig;
+use crate::sim::{EventQueue, OpCost};
+use crate::util::table::{fbytes, fenergy_pj, ftime_ns, Table};
+use crate::workload::Scenario;
+
+use super::batcher::{Batcher, Request, RequestState};
+use super::serving::{
+    build_report, iteration_cost, render_summary, RunTotals, ServeConfig, ServeReport,
+};
+
+/// How the cluster router assigns an arrival to a replica.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouterPolicy {
+    /// Arrivals rotate over the pool in order (oblivious baseline).
+    RoundRobin,
+    /// Send to the replica with the least KV committed (resident + queued
+    /// + in-flight migrations), ties to the lowest replica index.
+    LeastLoadedKv,
+    /// Send to the replica where the fewest requests hold a deadline at or
+    /// before the newcomer's — the EDF queue it will clear fastest; ties
+    /// fall back to least-loaded-KV, then lowest index.
+    DeadlineAware,
+}
+
+impl RouterPolicy {
+    pub fn label(&self) -> &'static str {
+        match self {
+            RouterPolicy::RoundRobin => "round-robin",
+            RouterPolicy::LeastLoadedKv => "least-kv",
+            RouterPolicy::DeadlineAware => "deadline",
+        }
+    }
+
+    pub fn by_name(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "round-robin" | "rr" => Some(RouterPolicy::RoundRobin),
+            "least-kv" | "least-loaded-kv" | "kv" => Some(RouterPolicy::LeastLoadedKv),
+            "deadline" | "deadline-aware" | "edf" => Some(RouterPolicy::DeadlineAware),
+            _ => None,
+        }
+    }
+}
+
+/// Cluster topology + routing configuration.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Replica count (each replica = `rc.devices` devices at `rc.tp`).
+    /// Ignored when `disagg` is set (then `replicas = prefill + decode`).
+    pub replicas: usize,
+    /// `Some((prefill, decode))` splits the replicas into a prefill pool
+    /// and a decode pool with KV migration between them; `None` serves
+    /// colocated (every replica prefills and decodes).
+    pub disagg: Option<(usize, usize)>,
+    /// Arrival / migration routing policy.
+    pub router: RouterPolicy,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self { replicas: 2, disagg: None, router: RouterPolicy::RoundRobin }
+    }
+}
+
+impl ClusterConfig {
+    /// Total replica count after applying the disaggregation split.
+    pub fn replica_count(&self) -> usize {
+        match self.disagg {
+            Some((p, d)) => p + d,
+            None => self.replicas.max(1),
+        }
+    }
+
+    /// Reject impossible topologies with an operator-readable message.
+    pub fn validate(&self) -> Result<(), String> {
+        if let Some((p, d)) = self.disagg {
+            if p == 0 || d == 0 {
+                return Err(format!(
+                    "--disagg needs at least one replica in each pool (got {p}:{d})"
+                ));
+            }
+        } else if self.replicas == 0 {
+            return Err("--replicas must be positive".into());
+        }
+        Ok(())
+    }
+}
+
+/// Per-replica outcome row of a cluster run.
+#[derive(Debug, Clone)]
+pub struct ReplicaReport {
+    /// Replica index on the fabric.
+    pub id: usize,
+    /// "mixed" (colocated), "prefill", or "decode".
+    pub role: &'static str,
+    /// Arrivals the router assigned here.
+    pub routed: u64,
+    /// Requests that ran to completion on this replica.
+    pub completed: usize,
+    /// Decode tokens this replica emitted.
+    pub tokens_out: u64,
+    /// KV migrations that left this replica (prefill pool).
+    pub migrations_out: u64,
+    /// KV migrations that landed here (decode pool).
+    pub migrations_in: u64,
+    /// Simulated time this replica's hardware was executing (ns).
+    pub busy_ns: u64,
+    /// `busy_ns / cluster makespan`.
+    pub utilization: f64,
+    /// Peak KV tokens reserved at any iteration boundary.
+    pub kv_peak: usize,
+}
+
+/// A cluster run's outcome: the aggregate serving report plus fabric-level
+/// accounting (per-replica utilization, KV-migration traffic and energy).
+#[derive(Debug, Clone)]
+pub struct ClusterReport {
+    /// Replica count the run used.
+    pub replicas: usize,
+    /// Router policy label.
+    pub router: &'static str,
+    /// The disaggregation split, if any.
+    pub disagg: Option<(usize, usize)>,
+    /// KV-cache migrations performed (disaggregated mode only).
+    pub migrations: u64,
+    /// Bytes of KV cache moved over the CXL fabric.
+    pub migration_bytes: u64,
+    /// Energy spent moving that KV (subset of `report.energy.cxl_pj`).
+    pub migration_energy_pj: f64,
+    /// One row per replica, in fabric order.
+    pub per_replica: Vec<ReplicaReport>,
+    /// The aggregate serving report (totals + per-class SLO rows).
+    pub report: ServeReport,
+}
+
+impl ClusterReport {
+    /// Human-readable mode label ("colocated" / "disaggregated P:D").
+    pub fn mode(&self) -> String {
+        match self.disagg {
+            Some((p, d)) => format!("disaggregated {p}p:{d}d"),
+            None => "colocated".to_string(),
+        }
+    }
+
+    /// Render the per-replica utilization table.
+    pub fn replica_table(&self) -> Table {
+        let mut t = Table::new(
+            "per-replica",
+            &["replica", "role", "routed", "done", "tokens", "migr in/out", "busy", "util", "kv peak"],
+        );
+        for r in &self.per_replica {
+            t.rowv(vec![
+                r.id.to_string(),
+                r.role.to_string(),
+                r.routed.to_string(),
+                r.completed.to_string(),
+                r.tokens_out.to_string(),
+                format!("{}/{}", r.migrations_in, r.migrations_out),
+                ftime_ns(r.busy_ns as f64),
+                format!("{:.1}%", r.utilization * 100.0),
+                r.kv_peak.to_string(),
+            ]);
+        }
+        t
+    }
+}
+
+/// A named scenario's cluster-serving outcome on one architecture — the
+/// cluster-level analogue of [`super::serving::ScenarioReport`].
+#[derive(Debug, Clone)]
+pub struct ClusterScenarioReport {
+    /// Scenario registry name.
+    pub scenario: String,
+    /// Architecture label the replicas were costed on.
+    pub arch: String,
+    /// Model name served.
+    pub model: String,
+    /// The full cluster report (aggregate + per-replica + migrations).
+    pub cluster: ClusterReport,
+}
+
+/// Run a named scenario across a replica cluster.
+pub fn run_cluster_scenario(
+    rc: RunConfig,
+    scenario: Scenario,
+    n_requests: usize,
+    seed: u64,
+    cfg: ClusterConfig,
+) -> ClusterScenarioReport {
+    let name = scenario.name.to_string();
+    let arch = rc.arch.label().to_string();
+    let model = rc.model.name.to_string();
+    let serve = ServeConfig { n_requests, seed, scenario: Some(scenario), ..Default::default() };
+    let cluster = Cluster::new(rc, serve, cfg).run();
+    ClusterScenarioReport { scenario: name, arch, model, cluster }
+}
+
+/// Render the headline cluster metrics (CLI and examples).
+pub fn render_cluster_summary(r: &ClusterReport) -> String {
+    let mut out = format!(
+        "replicas {} ({}) | router {}\n",
+        r.replicas,
+        r.mode(),
+        r.router
+    );
+    out.push_str(&render_summary(&r.report));
+    if r.disagg.is_some() {
+        out.push_str(&format!(
+            "KV migrations {} | migrated {} | migration energy {}\n",
+            r.migrations,
+            fbytes(r.migration_bytes),
+            fenergy_pj(r.migration_energy_pj)
+        ));
+    }
+    out
+}
+
+/// What a replica does in the pipeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Role {
+    /// Prefill + decode on the same replica (colocated mode).
+    Colocated,
+    /// Prefill only; hands finished prompts to the decode pool.
+    Prefill,
+    /// Decode only; receives prefilled requests via KV migration.
+    Decode,
+}
+
+impl Role {
+    fn label(&self) -> &'static str {
+        match self {
+            Role::Colocated => "mixed",
+            Role::Prefill => "prefill",
+            Role::Decode => "decode",
+        }
+    }
+}
+
+/// One replica: its batcher plus loop state.
+struct Replica {
+    role: Role,
+    batcher: Batcher,
+    /// Prefilled requests migrated here, awaiting decode admission.
+    landing: Vec<RequestState>,
+    /// KV tokens of migrations routed here but still crossing the fabric
+    /// (counted in `kv_load` so routers don't dogpile one destination).
+    inflight_kv: usize,
+    busy_until: u64,
+    iter_pending: bool,
+    busy_ns: u64,
+    routed: u64,
+    tokens_out: u64,
+    decode_iters: u64,
+    migrations_in: u64,
+    migrations_out: u64,
+    kv_peak: usize,
+}
+
+impl Replica {
+    fn new(role: Role, batcher: Batcher) -> Self {
+        Self {
+            role,
+            batcher,
+            landing: Vec::new(),
+            inflight_kv: 0,
+            busy_until: 0,
+            iter_pending: false,
+            busy_ns: 0,
+            routed: 0,
+            tokens_out: 0,
+            decode_iters: 0,
+            migrations_in: 0,
+            migrations_out: 0,
+            kv_peak: 0,
+        }
+    }
+
+    /// KV tokens committed to this replica (router load signal): resident
+    /// batch + admission queue + landed-but-unadmitted + in-flight
+    /// migrations.
+    fn kv_load(&self) -> usize {
+        self.batcher.kv_in_use()
+            + self.batcher.queued_kv_demand()
+            + self.inflight_kv
+            + self.landing.iter().map(|s| s.kv_footprint()).sum::<usize>()
+    }
+
+    /// Requests here holding a deadline at or before `deadline_ns`.
+    fn deadline_pressure(&self, deadline_ns: u64) -> usize {
+        self.batcher.deadline_pressure(deadline_ns)
+            + self.landing.iter().filter(|s| s.req.deadline_ns() <= deadline_ns).count()
+    }
+
+    /// Admit migrated requests into the decode batch, earliest deadline
+    /// first, while batch and KV budgets allow.
+    fn admit_landed(&mut self) {
+        while self.batcher.active.len() < self.batcher.cfg.max_batch {
+            let head =
+                self.batcher.cfg.max_kv_tokens.saturating_sub(self.batcher.kv_in_use());
+            let pick = self
+                .landing
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| s.kv_footprint() <= head)
+                .min_by_key(|(_, s)| (s.req.deadline_ns(), s.req.id))
+                .map(|(i, _)| i);
+            let Some(i) = pick else { break };
+            let s = self.landing.remove(i);
+            self.batcher.active.push(s);
+        }
+    }
+}
+
+enum Event {
+    Arrival(Request),
+    IterationDone(usize),
+    /// A migrated request landing at `(replica, state)` after its KV
+    /// finished crossing the fabric.
+    Migration(usize, RequestState),
+}
+
+/// Mutable cluster-wide accounting threaded through the event loop.
+struct ClusterState {
+    total_cost: OpCost,
+    migration_cost: OpCost,
+    migrations: u64,
+    migration_bytes: u64,
+    rr_arrival: usize,
+    rr_migration: usize,
+}
+
+/// Deterministically pick a replica from `pool = (start, len)`.
+fn pick_replica(
+    policy: RouterPolicy,
+    deadline_ns: u64,
+    pool: (usize, usize),
+    replicas: &[Replica],
+    rr: &mut usize,
+) -> usize {
+    let (start, len) = pool;
+    debug_assert!(len > 0, "routing into an empty pool");
+    match policy {
+        RouterPolicy::RoundRobin => {
+            let i = start + *rr % len;
+            *rr += 1;
+            i
+        }
+        RouterPolicy::LeastLoadedKv => (start..start + len)
+            .min_by_key(|&i| (replicas[i].kv_load(), i))
+            .expect("non-empty pool"),
+        RouterPolicy::DeadlineAware => (start..start + len)
+            .min_by_key(|&i| (replicas[i].deadline_pressure(deadline_ns), replicas[i].kv_load(), i))
+            .expect("non-empty pool"),
+    }
+}
+
+/// The cluster coordinator: owns the replicas and the shared event clock.
+pub struct Cluster {
+    rc: RunConfig,
+    serve: ServeConfig,
+    cfg: ClusterConfig,
+}
+
+impl Cluster {
+    pub fn new(rc: RunConfig, serve: ServeConfig, cfg: ClusterConfig) -> Self {
+        Self { rc, serve, cfg }
+    }
+
+    /// The pool arrivals route into.
+    fn arrival_pool(&self) -> (usize, usize) {
+        match self.cfg.disagg {
+            Some((p, _)) => (0, p),
+            None => (0, self.cfg.replica_count()),
+        }
+    }
+
+    /// The pool migrations route into (disaggregated mode only).
+    fn decode_pool(&self) -> (usize, usize) {
+        match self.cfg.disagg {
+            Some((p, d)) => (p, d),
+            None => (0, self.cfg.replica_count()),
+        }
+    }
+
+    /// Plan, cost, and execute one iteration on replica `ri`; returns the
+    /// prefilled requests a prefill-pool replica hands off, plus the
+    /// iteration end time.
+    fn step_replica(
+        &self,
+        ri: usize,
+        now: u64,
+        replicas: &mut [Replica],
+        q: &mut EventQueue<Event>,
+        st: &mut ClusterState,
+    ) {
+        let (handed, end) = {
+            let r = &mut replicas[ri];
+            if r.iter_pending {
+                return;
+            }
+            match r.role {
+                Role::Decode => r.admit_landed(),
+                _ => {
+                    r.batcher.preempt_for_urgent(now);
+                    r.batcher.admit(now);
+                }
+            }
+            if r.batcher.active.is_empty() {
+                return;
+            }
+            let plan = match r.role {
+                Role::Decode => Vec::new(),
+                _ => r.batcher.plan_prefill(),
+            };
+            let prefill_tokens: usize = plan.iter().map(|&(_, t)| t).sum();
+            let deciders = match r.role {
+                Role::Prefill => 0,
+                _ => r.batcher.active.iter().filter(|s| s.is_prefilled() && !s.done()).count(),
+            };
+            if prefill_tokens == 0 && deciders == 0 {
+                return;
+            }
+            let max_kv = r.batcher.active.iter().map(|s| s.kv_tokens()).max().unwrap_or(1);
+            let cost = iteration_cost(&self.rc, prefill_tokens, deciders, max_kv);
+            let end = now + cost.latency_ns.max(1.0) as u64;
+            st.total_cost = st.total_cost.then(&cost);
+            r.batcher.advance_prefill(&plan, end);
+            if r.role != Role::Prefill {
+                let (n, _) = r.batcher.decode_step(end);
+                r.tokens_out += n as u64;
+                if n > 0 {
+                    r.decode_iters += 1;
+                }
+            }
+            // a prefill-pool replica hands every finished prompt to the
+            // decode pool instead of decoding it locally
+            let mut handed = Vec::new();
+            if r.role == Role::Prefill {
+                let mut i = 0;
+                while i < r.batcher.active.len() {
+                    if r.batcher.active[i].is_prefilled() {
+                        handed.push(r.batcher.active.swap_remove(i));
+                    } else {
+                        i += 1;
+                    }
+                }
+                // deterministic hand-off order regardless of swap_remove
+                handed.sort_by_key(|s| s.req.id);
+                r.migrations_out += handed.len() as u64;
+            }
+            r.kv_peak = r.kv_peak.max(r.batcher.kv_in_use());
+            r.busy_ns += end - now;
+            r.busy_until = end;
+            r.iter_pending = true;
+            q.schedule_at(end, Event::IterationDone(ri));
+            (handed, end)
+        };
+        for s in handed {
+            let dest = pick_replica(
+                self.cfg.router,
+                s.req.deadline_ns(),
+                self.decode_pool(),
+                replicas,
+                &mut st.rr_migration,
+            );
+            // KV migration priced on the fabric: every resident KV token
+            // crosses once, latency delays the hand-off, bytes hit the
+            // energy model through the cxl_bytes count
+            let bytes = s.kv_tokens() as u64 * self.rc.model.kv_bytes_per_token();
+            let mcost = cxl_p2p(bytes, &self.rc.hw.cxl);
+            st.total_cost = st.total_cost.then(&mcost);
+            st.migration_cost = st.migration_cost.then(&mcost);
+            st.migrations += 1;
+            st.migration_bytes += bytes;
+            replicas[dest].migrations_in += 1;
+            replicas[dest].inflight_kv += s.kv_footprint();
+            q.schedule_at(end + mcost.latency_ns.max(1.0) as u64, Event::Migration(dest, s));
+        }
+    }
+
+    /// Run the cluster simulation to completion.
+    pub fn run(&self) -> ClusterReport {
+        self.cfg.validate().expect("invalid cluster config");
+        let n_replicas = self.cfg.replica_count();
+        let class_names = self.serve.class_names();
+        let mut rejected_by_class = vec![0u64; class_names.len()];
+
+        let mut replicas: Vec<Replica> = (0..n_replicas)
+            .map(|i| {
+                let role = match self.cfg.disagg {
+                    None => Role::Colocated,
+                    Some((p, _)) if i < p => Role::Prefill,
+                    Some(_) => Role::Decode,
+                };
+                let mut bcfg = self.serve.batcher.clone();
+                // generation KV never materializes on a prefill-pool
+                // replica (requests hand off at prefill completion), so
+                // reserving it would only throttle prefill concurrency
+                if role == Role::Prefill {
+                    bcfg.reserve_gen = false;
+                }
+                Replica::new(role, Batcher::new(bcfg))
+            })
+            .collect();
+
+        let mut q: EventQueue<Event> = EventQueue::new();
+        for r in self.serve.requests() {
+            q.schedule_at(r.arrived_ns, Event::Arrival(r));
+        }
+        let mut st = ClusterState {
+            total_cost: OpCost::zero(),
+            migration_cost: OpCost::zero(),
+            migrations: 0,
+            migration_bytes: 0,
+            rr_arrival: 0,
+            rr_migration: 0,
+        };
+
+        while let Some((now, ev)) = q.pop() {
+            match ev {
+                Event::Arrival(r) => {
+                    let ri = pick_replica(
+                        self.cfg.router,
+                        r.deadline_ns(),
+                        self.arrival_pool(),
+                        &replicas,
+                        &mut st.rr_arrival,
+                    );
+                    replicas[ri].routed += 1;
+                    let class = r.class.min(class_names.len().saturating_sub(1));
+                    // a prefill-pool batcher reserves the prompt only, so
+                    // screen the full footprint against the decode budget
+                    // here — otherwise an oversized request would prefill,
+                    // migrate, and strand unadmittable in a landing queue
+                    let fits_decode = self.cfg.disagg.is_none()
+                        || r.prompt_len + r.gen_len <= self.serve.batcher.max_kv_tokens;
+                    if !fits_decode {
+                        replicas[ri].batcher.rejected += 1;
+                        rejected_by_class[class] += 1;
+                    } else if !replicas[ri].batcher.offer(r) {
+                        rejected_by_class[class] += 1;
+                    }
+                    if now >= replicas[ri].busy_until {
+                        self.step_replica(ri, now, &mut replicas, &mut q, &mut st);
+                    }
+                }
+                Event::IterationDone(ri) => {
+                    replicas[ri].iter_pending = false;
+                    self.step_replica(ri, now, &mut replicas, &mut q, &mut st);
+                }
+                Event::Migration(ri, s) => {
+                    replicas[ri].inflight_kv =
+                        replicas[ri].inflight_kv.saturating_sub(s.kv_footprint());
+                    replicas[ri].landing.push(s);
+                    if now >= replicas[ri].busy_until {
+                        self.step_replica(ri, now, &mut replicas, &mut q, &mut st);
+                    }
+                }
+            }
+        }
+
+        // ---- assemble the cluster report ----
+        let makespan = replicas.iter().map(|r| r.busy_until).max().unwrap_or(0).max(1);
+        let mut stranded_by_class = vec![0u64; class_names.len()];
+        let mut completed: Vec<(RequestState, u64)> = Vec::new();
+        let mut per_replica = Vec::with_capacity(n_replicas);
+        let mut rejected = 0u64;
+        let mut preempted = 0u64;
+        let mut unserved = 0usize;
+        let mut tokens_out = 0u64;
+        let mut decode_iters = 0u64;
+        for (i, r) in replicas.iter_mut().enumerate() {
+            per_replica.push(ReplicaReport {
+                id: i,
+                role: r.role.label(),
+                routed: r.routed,
+                completed: r.batcher.completed.len(),
+                tokens_out: r.tokens_out,
+                migrations_out: r.migrations_out,
+                migrations_in: r.migrations_in,
+                busy_ns: r.busy_ns,
+                utilization: r.busy_ns as f64 / makespan as f64,
+                kv_peak: r.kv_peak,
+            });
+            let clamp = class_names.len().saturating_sub(1);
+            for ci in r.batcher.unserved_classes() {
+                stranded_by_class[ci.min(clamp)] += 1;
+            }
+            for s in &r.landing {
+                stranded_by_class[s.req.class.min(clamp)] += 1;
+            }
+            rejected += r.batcher.rejected;
+            preempted += r.batcher.preempted;
+            unserved += r.batcher.queued() + r.batcher.active.len() + r.landing.len();
+            tokens_out += r.tokens_out;
+            decode_iters += r.decode_iters;
+            completed.append(&mut r.batcher.completed);
+        }
+
+        let report = build_report(
+            &self.rc,
+            n_replicas,
+            &class_names,
+            &completed,
+            &rejected_by_class,
+            &stranded_by_class,
+            RunTotals {
+                makespan_ns: makespan,
+                tokens_out,
+                decode_iters,
+                cost: st.total_cost,
+                rejected,
+                preempted,
+                unserved,
+            },
+        );
+        let em = crate::energy::EnergyModel::new(&self.rc.hw.sram, self.rc.hw.hb.pj_per_bit);
+        ClusterReport {
+            replicas: n_replicas,
+            router: self.cfg.router.label(),
+            disagg: self.cfg.disagg,
+            migrations: st.migrations,
+            migration_bytes: st.migration_bytes,
+            migration_energy_pj: em.dynamic(&st.migration_cost.counts).total_pj(),
+            per_replica,
+            report,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ArchKind, ModelConfig};
+
+    fn rc() -> RunConfig {
+        let mut rc = RunConfig::new(ArchKind::CompAirOpt, ModelConfig::llama2_7b());
+        rc.tp = 8;
+        rc.devices = 32;
+        rc
+    }
+
+    fn run_cluster(
+        scenario: &str,
+        n: usize,
+        seed: u64,
+        cfg: ClusterConfig,
+    ) -> ClusterReport {
+        let serve = ServeConfig {
+            n_requests: n,
+            seed,
+            scenario: Some(Scenario::by_name(scenario).unwrap()),
+            ..Default::default()
+        };
+        Cluster::new(rc(), serve, cfg).run()
+    }
+
+    #[test]
+    fn colocated_cluster_serves_everything() {
+        let r = run_cluster("mixed", 16, 42, ClusterConfig {
+            replicas: 2,
+            ..Default::default()
+        });
+        assert_eq!(r.report.completed, 16);
+        assert_eq!(r.report.unserved, 0);
+        assert_eq!(r.per_replica.len(), 2);
+        assert_eq!(r.migrations, 0, "colocated mode never migrates");
+        let routed: u64 = r.per_replica.iter().map(|p| p.routed).sum();
+        assert_eq!(routed, 16);
+        let done: usize = r.per_replica.iter().map(|p| p.completed).sum();
+        assert_eq!(done, 16);
+        assert!(r.report.tokens_out > 0);
+        for p in &r.per_replica {
+            assert_eq!(p.role, "mixed");
+            assert!((0.0..=1.0).contains(&p.utilization));
+        }
+    }
+
+    #[test]
+    fn every_scenario_serves_on_the_cluster() {
+        for sc in Scenario::all() {
+            let n = 6.min(sc.default_requests);
+            for cfg in [
+                ClusterConfig { replicas: 2, ..Default::default() },
+                ClusterConfig { disagg: Some((1, 1)), ..Default::default() },
+            ] {
+                let mode = cfg.disagg.is_some();
+                let r = run_cluster(sc.name, n, 42, cfg);
+                assert_eq!(
+                    r.report.completed, n,
+                    "{} (disagg={mode}) lost requests", sc.name
+                );
+                assert_eq!(r.report.unserved, 0, "{} stranded requests", sc.name);
+                assert!(r.report.tokens_out > 0);
+                assert!(r.report.energy_per_token_pj > 0.0);
+                for c in &r.report.per_class {
+                    assert!(c.ttft_attainment.is_finite());
+                    assert!(c.slo_attainment.is_finite());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn router_policies_are_deterministic() {
+        for policy in [
+            RouterPolicy::RoundRobin,
+            RouterPolicy::LeastLoadedKv,
+            RouterPolicy::DeadlineAware,
+        ] {
+            let cfg = ClusterConfig { replicas: 3, router: policy, ..Default::default() };
+            let a = run_cluster("mixed", 24, 7, cfg.clone());
+            let b = run_cluster("mixed", 24, 7, cfg);
+            let routed_a: Vec<u64> = a.per_replica.iter().map(|p| p.routed).collect();
+            let routed_b: Vec<u64> = b.per_replica.iter().map(|p| p.routed).collect();
+            assert_eq!(routed_a, routed_b, "{policy:?} assignment not deterministic");
+            assert_eq!(a.report.makespan_ns, b.report.makespan_ns);
+            assert_eq!(a.report.tokens_out, b.report.tokens_out);
+        }
+    }
+
+    #[test]
+    fn round_robin_spreads_arrivals_evenly() {
+        let r = run_cluster("batch", 16, 42, ClusterConfig {
+            replicas: 4,
+            router: RouterPolicy::RoundRobin,
+            ..Default::default()
+        });
+        for p in &r.per_replica {
+            assert_eq!(p.routed, 4, "round-robin must deal 16 arrivals 4-way");
+        }
+    }
+
+    #[test]
+    fn disaggregation_conserves_requests_and_tokens() {
+        let n = 16;
+        let cfg = ClusterConfig { disagg: Some((2, 2)), router: RouterPolicy::LeastLoadedKv, ..Default::default() };
+        let r = run_cluster("mixed", n, 42, cfg);
+        assert_eq!(r.report.completed, n, "all requests must complete");
+        assert_eq!(r.report.unserved, 0);
+        assert_eq!(r.report.rejected, 0);
+        // every request prefills once and migrates exactly once
+        assert_eq!(r.migrations, n as u64);
+        assert!(r.migration_bytes > 0);
+        assert!(r.migration_energy_pj > 0.0, "migration energy must be billed");
+        assert!(
+            r.report.energy.cxl_pj >= r.migration_energy_pj,
+            "migration energy is part of the fabric total"
+        );
+        // prefill pool never decodes; decode pool emits every token
+        for p in &r.per_replica {
+            match p.role {
+                "prefill" => {
+                    assert_eq!(p.tokens_out, 0, "prefill replica {} decoded", p.id);
+                    assert_eq!(p.completed, 0, "prefill replica {} completed", p.id);
+                    assert_eq!(p.migrations_in, 0);
+                }
+                "decode" => assert_eq!(p.migrations_out, 0),
+                other => panic!("unexpected role {other}"),
+            }
+        }
+        let decode_tokens: u64 = r
+            .per_replica
+            .iter()
+            .filter(|p| p.role == "decode")
+            .map(|p| p.tokens_out)
+            .sum();
+        assert_eq!(decode_tokens, r.report.tokens_out);
+        let migrated_in: u64 =
+            r.per_replica.iter().map(|p| p.migrations_in).sum();
+        assert_eq!(migrated_in, n as u64, "every migration lands exactly once");
+        // gen-token conservation against the reproducible trace
+        let trace = ServeConfig {
+            n_requests: n,
+            seed: 42,
+            scenario: Some(Scenario::by_name("mixed").unwrap()),
+            ..Default::default()
+        }
+        .requests();
+        let want_tokens: u64 = trace.iter().map(|t| t.gen_len as u64).sum();
+        assert_eq!(r.report.tokens_out, want_tokens);
+        // migration traffic = sum of prompt KV priced per token
+        let kv = ModelConfig::llama2_7b().kv_bytes_per_token();
+        let want_bytes: u64 = trace.iter().map(|t| t.prompt_len as u64 * kv).sum();
+        assert_eq!(r.migration_bytes, want_bytes);
+    }
+
+    #[test]
+    fn cluster_reports_are_bit_reproducible() {
+        let cfg = ClusterConfig {
+            disagg: Some((1, 1)),
+            router: RouterPolicy::DeadlineAware,
+            ..Default::default()
+        };
+        let a = run_cluster("mixed", 12, 9, cfg.clone());
+        let b = run_cluster("mixed", 12, 9, cfg.clone());
+        assert_eq!(a.report.makespan_ns, b.report.makespan_ns);
+        assert_eq!(a.report.tokens_out, b.report.tokens_out);
+        assert_eq!(a.migrations, b.migrations);
+        assert_eq!(a.migration_bytes, b.migration_bytes);
+        assert!((a.report.energy.total_pj() - b.report.energy.total_pj()).abs() < 1e-9);
+        for (x, y) in a.per_replica.iter().zip(&b.per_replica) {
+            assert_eq!(x.routed, y.routed);
+            assert_eq!(x.completed, y.completed);
+            assert_eq!(x.busy_ns, y.busy_ns);
+        }
+        for (x, y) in a.report.per_class.iter().zip(&b.report.per_class) {
+            assert_eq!(x.completed, y.completed);
+            assert!((x.slo_attainment - y.slo_attainment).abs() < 1e-12);
+        }
+        let c = run_cluster("mixed", 12, 10, cfg);
+        assert_ne!(a.report.makespan_ns, c.report.makespan_ns, "seed must matter");
+    }
+
+    #[test]
+    fn more_replicas_cut_offline_makespan() {
+        let one = run_cluster("batch", 16, 42, ClusterConfig {
+            replicas: 1,
+            ..Default::default()
+        });
+        let four = run_cluster("batch", 16, 42, ClusterConfig {
+            replicas: 4,
+            ..Default::default()
+        });
+        assert_eq!(one.report.completed, 16);
+        assert_eq!(four.report.completed, 16);
+        assert!(
+            four.report.makespan_ns < one.report.makespan_ns,
+            "4 replicas {} must beat 1 replica {}",
+            four.report.makespan_ns,
+            one.report.makespan_ns
+        );
+    }
+
+    #[test]
+    fn config_validation_rejects_empty_pools() {
+        assert!(ClusterConfig { disagg: Some((0, 2)), ..Default::default() }
+            .validate()
+            .is_err());
+        assert!(ClusterConfig { disagg: Some((2, 0)), ..Default::default() }
+            .validate()
+            .is_err());
+        assert!(ClusterConfig { replicas: 0, disagg: None, router: RouterPolicy::RoundRobin }
+            .validate()
+            .is_err());
+        assert!(ClusterConfig::default().validate().is_ok());
+        assert_eq!(
+            ClusterConfig { disagg: Some((3, 5)), ..Default::default() }.replica_count(),
+            8
+        );
+    }
+
+    #[test]
+    fn router_names_roundtrip() {
+        for p in [
+            RouterPolicy::RoundRobin,
+            RouterPolicy::LeastLoadedKv,
+            RouterPolicy::DeadlineAware,
+        ] {
+            assert_eq!(RouterPolicy::by_name(p.label()), Some(p));
+        }
+        assert!(RouterPolicy::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn scenario_wrapper_labels_the_run() {
+        let sr = run_cluster_scenario(
+            rc(),
+            Scenario::by_name("chat").unwrap(),
+            4,
+            42,
+            ClusterConfig::default(),
+        );
+        assert_eq!(sr.scenario, "chat");
+        assert_eq!(sr.arch, "CompAir_Opt");
+        assert_eq!(sr.model, "llama2-7b");
+        assert_eq!(sr.cluster.report.completed, 4);
+        let s = render_cluster_summary(&sr.cluster);
+        assert!(s.contains("replicas 2"));
+        assert!(s.contains("router round-robin"));
+    }
+}

@@ -1,11 +1,18 @@
 //! L3 serving coordinator: request queue, SLO-aware continuous batcher,
 //! chunked-prefill decode scheduler, and metrics — the vLLM-router-shaped
 //! layer that drives the simulated hardware (timing/energy) and, in the
-//! end-to-end example, the PJRT runtime (numerics).
+//! end-to-end example, the PJRT runtime (numerics). `cluster` scales the
+//! same loop across multiple replicas on the CXL fabric, with optional
+//! disaggregated prefill/decode pools and priced KV migration.
 pub mod batcher;
+pub mod cluster;
 pub mod serving;
 
 pub use batcher::{Batcher, BatcherConfig, Request, RequestState};
+pub use cluster::{
+    run_cluster_scenario, Cluster, ClusterConfig, ClusterReport, ClusterScenarioReport,
+    ReplicaReport, RouterPolicy,
+};
 pub use serving::{
     run_scenario, ClassReport, ScenarioReport, ServeConfig, ServeReport, Server,
 };

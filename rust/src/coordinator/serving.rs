@@ -18,7 +18,7 @@ use crate::util::table::{fenergy_pj, ftime_ns, Table};
 use crate::util::XorShiftRng;
 use crate::workload::Scenario;
 
-use super::batcher::{Batcher, BatcherConfig, Request};
+use super::batcher::{Batcher, BatcherConfig, Request, RequestState};
 
 /// Serving workload + policy configuration.
 #[derive(Debug, Clone)]
@@ -50,6 +50,35 @@ impl Default for ServeConfig {
             gen_len: 32,
             seed: 42,
             scenario: None,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Expand the configured workload into a concrete arrival trace
+    /// (bit-reproducible per seed). Shared by the single-replica server
+    /// and the cluster coordinator.
+    pub fn requests(&self) -> Vec<Request> {
+        match &self.scenario {
+            Some(sc) => sc.generate(self.seed, self.n_requests),
+            None => {
+                let mut rng = XorShiftRng::new(self.seed);
+                let mut t = 0.0f64;
+                (0..self.n_requests)
+                    .map(|id| {
+                        t += rng.next_exp(self.arrival_rate) * 1e9;
+                        Request::new(id as u64, self.prompt_len, self.gen_len.max(1), t as u64)
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    /// Report class labels, in request-class index order.
+    pub fn class_names(&self) -> Vec<String> {
+        match &self.scenario {
+            Some(sc) => sc.class_names().iter().map(|s| s.to_string()).collect(),
+            None => vec!["all".to_string()],
         }
     }
 }
@@ -186,6 +215,134 @@ struct LoopState {
     tokens_out: u64,
 }
 
+/// Price one batching iteration on the architecture simulator: a chunk of
+/// prefill tokens (batch-of-1 prefill pass) composed with one decode step
+/// over `decode_batch` requests at KV length `max_kv`. Shared by the
+/// single-replica server and every cluster replica.
+pub(crate) fn iteration_cost(
+    rc: &RunConfig,
+    prefill_tokens: usize,
+    decode_batch: usize,
+    max_kv: usize,
+) -> OpCost {
+    let mut cost = OpCost::zero();
+    if prefill_tokens > 0 {
+        let mut prc = rc.clone();
+        prc.phase = Phase::Prefill;
+        prc.batch = 1;
+        prc.seq_len = prefill_tokens;
+        cost = cost.then(&System::new(prc).run().layer_cost_total());
+    }
+    if decode_batch > 0 {
+        let mut drc = rc.clone();
+        drc.phase = Phase::Decode;
+        drc.batch = decode_batch;
+        drc.seq_len = max_kv.max(1);
+        cost = cost.then(&System::new(drc).run().layer_cost_total());
+    }
+    cost
+}
+
+/// Aggregate loop counters a serving run hands to [`build_report`].
+pub(crate) struct RunTotals {
+    pub makespan_ns: u64,
+    pub tokens_out: u64,
+    pub decode_iters: u64,
+    pub cost: OpCost,
+    pub rejected: u64,
+    pub preempted: u64,
+    pub unserved: usize,
+}
+
+/// Assemble a [`ServeReport`] from completed requests and loop totals.
+/// `device_groups` scales static power (a cluster burns `replicas ×
+/// rc.devices` devices for the whole makespan). Attainment denominators
+/// are guarded (`max(1)`) so classes with zero served requests report 0,
+/// never NaN.
+pub(crate) fn build_report(
+    rc: &RunConfig,
+    device_groups: usize,
+    class_names: &[String],
+    completed: &[(RequestState, u64)],
+    rejected_by_class: &[u64],
+    stranded_by_class: &[u64],
+    totals: RunTotals,
+) -> ServeReport {
+    let makespan = totals.makespan_ns.max(1);
+    let em = crate::energy::EnergyModel::new(&rc.hw.sram, rc.hw.hb.pj_per_bit);
+    let mut energy = em.dynamic(&totals.cost.counts);
+    energy.static_pj =
+        (device_groups * rc.devices) as f64 * em.pim_device_static_w * makespan as f64;
+
+    let pctl = |v: &[f64], p: f64| if v.is_empty() { 0.0 } else { percentile(v, p) };
+    let mut per_class = Vec::with_capacity(class_names.len());
+    for (ci, name) in class_names.iter().enumerate() {
+        let done: Vec<_> = completed.iter().filter(|(s, _)| s.req.class == ci).collect();
+        let ttfts: Vec<f64> =
+            done.iter().filter_map(|(s, _)| s.ttft_ns().map(|t| t as f64)).collect();
+        let tpots: Vec<f64> = done.iter().map(|(s, t)| s.tpot_ns(*t)).collect();
+        let ttft_met = done
+            .iter()
+            .filter(|(s, _)| s.ttft_ns().map_or(false, |t| t <= s.req.slo.ttft_ns))
+            .count();
+        let tpot_met =
+            done.iter().filter(|(s, t)| s.tpot_ns(*t) <= s.req.slo.tpot_ns as f64).count();
+        let both_met = done
+            .iter()
+            .filter(|(s, t)| s.ttft_ns().map_or(false, |tt| s.req.slo.met(tt, s.tpot_ns(*t))))
+            .count();
+        // guard the denominator: a class with zero served requests must
+        // report 0.0 attainment, not NaN (regression: zero-weight classes
+        // and one-request traces put NaN in the scenario tables)
+        let served = done.len().max(1);
+        let offered = done.len() as u64 + rejected_by_class[ci] + stranded_by_class[ci];
+        per_class.push(ClassReport {
+            class: name.clone(),
+            completed: done.len(),
+            rejected: rejected_by_class[ci],
+            ttft_p50_ns: pctl(&ttfts, 50.0),
+            ttft_p99_ns: pctl(&ttfts, 99.0),
+            tpot_p50_ns: pctl(&tpots, 50.0),
+            tpot_p99_ns: pctl(&tpots, 99.0),
+            ttft_attainment: ttft_met as f64 / served as f64,
+            tpot_attainment: tpot_met as f64 / served as f64,
+            slo_attainment: both_met as f64 / offered.max(1) as f64,
+        });
+    }
+
+    let ttfts: Vec<f64> =
+        completed.iter().filter_map(|(s, _)| s.ttft_ns().map(|t| t as f64)).collect();
+    let tpots: Vec<f64> = completed.iter().map(|(s, t)| s.tpot_ns(*t)).collect();
+    let lats: Vec<f64> =
+        completed.iter().map(|(s, t)| t.saturating_sub(s.req.arrived_ns) as f64).collect();
+    let met = completed
+        .iter()
+        .filter(|(s, t)| s.ttft_ns().map_or(false, |tt| s.req.slo.met(tt, s.tpot_ns(*t))))
+        .count();
+    let offered_total = completed.len() as u64 + totals.rejected + totals.unserved as u64;
+
+    ServeReport {
+        completed: completed.len(),
+        rejected: totals.rejected,
+        preempted: totals.preempted,
+        unserved: totals.unserved,
+        makespan_ns: makespan,
+        tokens_out: totals.tokens_out,
+        throughput_tok_s: totals.tokens_out as f64 / (makespan as f64 / 1e9),
+        ttft_p50_ns: pctl(&ttfts, 50.0),
+        ttft_p99_ns: pctl(&ttfts, 99.0),
+        tpot_p50_ns: pctl(&tpots, 50.0),
+        tpot_p99_ns: pctl(&tpots, 99.0),
+        req_latency_p50_ns: pctl(&lats, 50.0),
+        req_latency_p99_ns: pctl(&lats, 99.0),
+        slo_attainment: met as f64 / offered_total.max(1) as f64,
+        energy_per_token_pj: energy.total_pj() / totals.tokens_out.max(1) as f64,
+        energy,
+        decode_iters: totals.decode_iters,
+        per_class,
+    }
+}
+
 /// The server: owns the batcher and the hardware simulator.
 pub struct Server {
     rc: RunConfig,
@@ -195,54 +352,6 @@ pub struct Server {
 impl Server {
     pub fn new(rc: RunConfig, cfg: ServeConfig) -> Self {
         Self { rc, cfg }
-    }
-
-    /// Expand the configured workload into a concrete arrival trace.
-    fn requests(&self) -> Vec<Request> {
-        match &self.cfg.scenario {
-            Some(sc) => sc.generate(self.cfg.seed, self.cfg.n_requests),
-            None => {
-                let mut rng = XorShiftRng::new(self.cfg.seed);
-                let mut t = 0.0f64;
-                (0..self.cfg.n_requests)
-                    .map(|id| {
-                        t += rng.next_exp(self.cfg.arrival_rate) * 1e9;
-                        Request::new(
-                            id as u64,
-                            self.cfg.prompt_len,
-                            self.cfg.gen_len.max(1),
-                            t as u64,
-                        )
-                    })
-                    .collect()
-            }
-        }
-    }
-
-    fn class_names(&self) -> Vec<String> {
-        match &self.cfg.scenario {
-            Some(sc) => sc.class_names().iter().map(|s| s.to_string()).collect(),
-            None => vec!["all".to_string()],
-        }
-    }
-
-    fn iteration_cost(&self, prefill_tokens: usize, decode_batch: usize, max_kv: usize) -> OpCost {
-        let mut cost = OpCost::zero();
-        if prefill_tokens > 0 {
-            let mut rc = self.rc.clone();
-            rc.phase = Phase::Prefill;
-            rc.batch = 1;
-            rc.seq_len = prefill_tokens;
-            cost = cost.then(&System::new(rc).run().layer_cost_total());
-        }
-        if decode_batch > 0 {
-            let mut rc = self.rc.clone();
-            rc.phase = Phase::Decode;
-            rc.batch = decode_batch;
-            rc.seq_len = max_kv.max(1);
-            cost = cost.then(&System::new(rc).run().layer_cost_total());
-        }
-        cost
     }
 
     /// Plan and cost one batching iteration; schedules its completion.
@@ -270,7 +379,7 @@ impl Server {
             return; // nothing schedulable this instant
         }
         let max_kv = batcher.active.iter().map(|s| s.kv_tokens()).max().unwrap_or(1);
-        let cost = self.iteration_cost(prefill_tokens, deciders, max_kv);
+        let cost = iteration_cost(&self.rc, prefill_tokens, deciders, max_kv);
         let end = now + cost.latency_ns.max(1.0) as u64;
         st.total_cost = st.total_cost.then(&cost);
         batcher.advance_prefill(&plan, end);
@@ -286,11 +395,11 @@ impl Server {
 
     /// Run the serving simulation to completion.
     pub fn run(&self) -> ServeReport {
-        let class_names = self.class_names();
+        let class_names = self.cfg.class_names();
         let mut rejected_by_class = vec![0u64; class_names.len()];
 
         let mut q: EventQueue<Event> = EventQueue::new();
-        for r in self.requests() {
+        for r in self.cfg.requests() {
             q.schedule_at(r.arrived_ns, Event::Arrival(r));
         }
 
@@ -321,94 +430,28 @@ impl Server {
             }
         }
 
-        let makespan = st.busy_until.max(1);
-        let em = crate::energy::EnergyModel::new(&self.rc.hw.sram, self.rc.hw.hb.pj_per_bit);
-        let mut energy = em.dynamic(&st.total_cost.counts);
-        energy.static_pj = self.rc.devices as f64 * em.pim_device_static_w * makespan as f64;
-
-        // ---- global + per-class SLO bookkeeping ----
-        let pctl = |v: &[f64], p: f64| if v.is_empty() { 0.0 } else { percentile(v, p) };
         let mut stranded_by_class = vec![0u64; class_names.len()];
         for ci in batcher.unserved_classes() {
             stranded_by_class[ci.min(class_names.len().saturating_sub(1))] += 1;
         }
-        let mut per_class = Vec::with_capacity(class_names.len());
-        for (ci, name) in class_names.iter().enumerate() {
-            let done: Vec<_> =
-                batcher.completed.iter().filter(|(s, _)| s.req.class == ci).collect();
-            let ttfts: Vec<f64> =
-                done.iter().filter_map(|(s, _)| s.ttft_ns().map(|t| t as f64)).collect();
-            let tpots: Vec<f64> = done.iter().map(|(s, t)| s.tpot_ns(*t)).collect();
-            let ttft_met = done
-                .iter()
-                .filter(|(s, _)| s.ttft_ns().map_or(false, |t| t <= s.req.slo.ttft_ns))
-                .count();
-            let tpot_met = done
-                .iter()
-                .filter(|(s, t)| s.tpot_ns(*t) <= s.req.slo.tpot_ns as f64)
-                .count();
-            let both_met = done
-                .iter()
-                .filter(|(s, t)| {
-                    s.ttft_ns().map_or(false, |tt| s.req.slo.met(tt, s.tpot_ns(*t)))
-                })
-                .count();
-            let served = done.len().max(1);
-            let offered = done.len() as u64 + rejected_by_class[ci] + stranded_by_class[ci];
-            per_class.push(ClassReport {
-                class: name.clone(),
-                completed: done.len(),
-                rejected: rejected_by_class[ci],
-                ttft_p50_ns: pctl(&ttfts, 50.0),
-                ttft_p99_ns: pctl(&ttfts, 99.0),
-                tpot_p50_ns: pctl(&tpots, 50.0),
-                tpot_p99_ns: pctl(&tpots, 99.0),
-                ttft_attainment: ttft_met as f64 / served as f64,
-                tpot_attainment: tpot_met as f64 / served as f64,
-                slo_attainment: both_met as f64 / offered.max(1) as f64,
-            });
-        }
-
-        let ttfts: Vec<f64> = batcher
-            .completed
-            .iter()
-            .filter_map(|(s, _)| s.ttft_ns().map(|t| t as f64))
-            .collect();
-        let tpots: Vec<f64> = batcher.completed.iter().map(|(s, t)| s.tpot_ns(*t)).collect();
-        let lats: Vec<f64> = batcher
-            .completed
-            .iter()
-            .map(|(s, t)| t.saturating_sub(s.req.arrived_ns) as f64)
-            .collect();
-        let met = batcher
-            .completed
-            .iter()
-            .filter(|(s, t)| s.ttft_ns().map_or(false, |tt| s.req.slo.met(tt, s.tpot_ns(*t))))
-            .count();
         let unserved = batcher.queued() + batcher.active.len();
-        let offered_total =
-            batcher.completed.len() as u64 + batcher.rejected + unserved as u64;
-
-        ServeReport {
-            completed: batcher.completed.len(),
-            rejected: batcher.rejected,
-            preempted: batcher.preempted,
-            unserved,
-            makespan_ns: makespan,
-            tokens_out: st.tokens_out,
-            throughput_tok_s: st.tokens_out as f64 / (makespan as f64 / 1e9),
-            ttft_p50_ns: pctl(&ttfts, 50.0),
-            ttft_p99_ns: pctl(&ttfts, 99.0),
-            tpot_p50_ns: pctl(&tpots, 50.0),
-            tpot_p99_ns: pctl(&tpots, 99.0),
-            req_latency_p50_ns: pctl(&lats, 50.0),
-            req_latency_p99_ns: pctl(&lats, 99.0),
-            slo_attainment: met as f64 / offered_total.max(1) as f64,
-            energy_per_token_pj: energy.total_pj() / st.tokens_out.max(1) as f64,
-            energy,
-            decode_iters: st.decode_iters,
-            per_class,
-        }
+        build_report(
+            &self.rc,
+            1,
+            &class_names,
+            &batcher.completed,
+            &rejected_by_class,
+            &stranded_by_class,
+            RunTotals {
+                makespan_ns: st.busy_until,
+                tokens_out: st.tokens_out,
+                decode_iters: st.decode_iters,
+                cost: st.total_cost,
+                rejected: batcher.rejected,
+                preempted: batcher.preempted,
+                unserved,
+            },
+        )
     }
 }
 
@@ -581,6 +624,26 @@ mod tests {
         for c in &s.per_class {
             assert!((0.0..=1.0).contains(&c.slo_attainment));
             assert!(c.ttft_attainment >= c.slo_attainment - 1e-12);
+        }
+    }
+
+    #[test]
+    fn zero_served_classes_report_finite_attainment() {
+        // regression: a one-request trace on a multi-class scenario leaves
+        // classes with zero served requests; their attainment fractions
+        // must be 0.0, never NaN (NaN leaked into the scenario tables)
+        let r = serve_scenario("mixed", 1, 42);
+        assert_eq!(r.completed, 1);
+        let with_work = r.per_class.iter().filter(|c| c.completed > 0).count();
+        assert_eq!(with_work, 1, "exactly one class served the single request");
+        for c in &r.per_class {
+            assert!(c.ttft_attainment.is_finite(), "{} ttft_attainment NaN", c.class);
+            assert!(c.tpot_attainment.is_finite(), "{} tpot_attainment NaN", c.class);
+            assert!(c.slo_attainment.is_finite(), "{} slo_attainment NaN", c.class);
+            if c.completed == 0 {
+                assert!(c.ttft_attainment.abs() < 1e-12);
+                assert!(c.tpot_attainment.abs() < 1e-12);
+            }
         }
     }
 

@@ -1,0 +1,79 @@
+//! Cluster-serving comparison table: every named scenario served colocated
+//! vs disaggregated (prefill/decode pools with priced KV migration) at two
+//! replica counts. This is the fabric-level evaluation the PIM-serving
+//! literature (Sangam, HPIM) runs — placement and phase separation on a
+//! CXL switch — layered over the paper's per-device model.
+
+use crate::config::{ArchKind, ModelConfig, RunConfig};
+use crate::coordinator::{run_cluster_scenario, ClusterConfig, RouterPolicy};
+use crate::util::table::{fbytes, fenergy_pj, fnum, ftime_ns, Table};
+use crate::workload::Scenario;
+
+fn rc() -> RunConfig {
+    let mut rc = RunConfig::new(ArchKind::CompAirOpt, ModelConfig::llama2_7b());
+    rc.tp = 8;
+    rc.devices = 32;
+    rc
+}
+
+/// Colocated vs disaggregated serving across all scenarios and replica
+/// counts {2, 4}: SLO attainment, energy/token, and the KV-migration
+/// traffic the disaggregated mode pays (priced through `cxl_p2p`).
+pub fn cluster() -> String {
+    let mut t = Table::new(
+        "Cluster serving — colocated vs disaggregated (CompAir_Opt, llama2-7b, TP=8, \
+         32 devices/replica, least-kv router, seed 42)",
+        &[
+            "scenario", "replicas", "mode", "done", "tok/s", "ttft p99", "slo%", "energy/tok",
+            "kv migrated",
+        ],
+    );
+    for sc in Scenario::all() {
+        let name = sc.name;
+        // cap request counts so full-figure regeneration stays fast
+        let n = sc.default_requests.min(12);
+        for replicas in [2usize, 4] {
+            for disagg in [None, Some((replicas / 2, replicas - replicas / 2))] {
+                let cfg = ClusterConfig {
+                    replicas,
+                    disagg,
+                    router: RouterPolicy::LeastLoadedKv,
+                };
+                let mode = match disagg {
+                    Some((p, d)) => format!("disagg {p}:{d}"),
+                    None => "colocated".to_string(),
+                };
+                let r = run_cluster_scenario(rc(), sc.clone(), n, 42, cfg).cluster;
+                t.rowv(vec![
+                    name.to_string(),
+                    replicas.to_string(),
+                    mode,
+                    r.report.completed.to_string(),
+                    fnum(r.report.throughput_tok_s),
+                    ftime_ns(r.report.ttft_p99_ns),
+                    format!("{:.1}%", r.report.slo_attainment * 100.0),
+                    fenergy_pj(r.report.energy_per_token_pj),
+                    fbytes(r.migration_bytes),
+                ]);
+            }
+        }
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cluster_table_covers_scenarios_and_modes() {
+        let s = cluster();
+        for name in Scenario::names() {
+            assert!(s.contains(name), "cluster table missing scenario '{name}'");
+        }
+        assert!(s.contains("colocated"), "colocated rows present");
+        assert!(s.contains("disagg 1:1"), "2-replica disaggregated rows present");
+        assert!(s.contains("disagg 2:2"), "4-replica disaggregated rows present");
+        assert!(s.contains("kv migrated"), "migration traffic column present");
+    }
+}

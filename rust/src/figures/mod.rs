@@ -2,6 +2,7 @@
 //! (DESIGN.md carries the experiment index). Each function re-runs the
 //! simulation fresh and renders the same rows/series the paper plots.
 
+pub mod cluster;
 pub mod endtoend;
 pub mod gqa;
 pub mod mapping;
@@ -83,6 +84,7 @@ pub fn registry() -> Vec<(&'static str, fn() -> String)> {
         // beyond-paper serving tables (trace-driven, SLO-aware)
         ("scenarios", serving::scenarios),
         ("scenario-archs", serving::scenario_archs),
+        ("cluster", cluster::cluster),
     ]
 }
 

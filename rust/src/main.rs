@@ -4,7 +4,9 @@
 use compair::arch;
 use compair::cli::{Args, USAGE};
 use compair::config::{ArchKind, ModelConfig, Phase, RunConfig};
-use compair::coordinator::{run_scenario, serving, ServeConfig, Server};
+use compair::coordinator::{
+    cluster, serving, Cluster, ClusterConfig, RouterPolicy, ServeConfig, Server,
+};
 use compair::figures;
 use compair::isa::{Machine, RowProgram};
 use compair::util::table::{fenergy_pj, fnum, ftime_ns, Table};
@@ -127,46 +129,102 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// Parse the cluster flags; `None` means single-replica serving.
+fn parse_cluster_flags(args: &Args) -> Result<Option<ClusterConfig>, String> {
+    let replicas = args.flag_usize("replicas", 0)?; // 0 = flag absent
+    if args.flag("replicas").is_some() && replicas == 0 {
+        return Err("--replicas must be positive".into());
+    }
+    let disagg = match args.flag("disagg") {
+        None => None,
+        Some(v) => {
+            let parse = |s: &str| -> Result<usize, String> {
+                s.trim().parse().map_err(|_| format!("--disagg expects P:D (e.g. 2:2), got '{v}'"))
+            };
+            let (p, d) = v
+                .split_once(':')
+                .ok_or_else(|| format!("--disagg expects P:D (e.g. 2:2), got '{v}'"))?;
+            Some((parse(p)?, parse(d)?))
+        }
+    };
+    let router = match args.flag("router") {
+        None => RouterPolicy::RoundRobin,
+        Some(r) => RouterPolicy::by_name(r)
+            .ok_or_else(|| format!("unknown --router '{r}' (round-robin | least-kv | deadline)"))?,
+    };
+    if disagg.is_none() && replicas <= 1 {
+        if args.flag("router").is_some() {
+            return Err("--router needs --replicas N (>1) or --disagg P:D".into());
+        }
+        if replicas == 1 {
+            // an explicit single replica still runs the cluster path so the
+            // per-replica utilization table is available
+            let cfg = ClusterConfig { replicas: 1, disagg: None, router };
+            return Ok(Some(cfg));
+        }
+        return Ok(None);
+    }
+    if let Some((p, d)) = disagg {
+        if replicas > 0 && replicas != p + d {
+            return Err(format!(
+                "--replicas {replicas} conflicts with --disagg {p}:{d} ({} replicas)",
+                p + d
+            ));
+        }
+    }
+    let cfg = ClusterConfig { replicas: replicas.max(1), disagg, router };
+    cfg.validate()?;
+    Ok(Some(cfg))
+}
+
 fn cmd_serve(args: &Args) -> Result<(), String> {
     let rc = build_rc(args)?;
     let seed = args.flag_usize("seed", 42)? as u64;
-    if let Some(name) = args.flag("scenario") {
+    let cluster_cfg = parse_cluster_flags(args)?;
+
+    let (cfg, label, desc) = if let Some(name) = args.flag("scenario") {
         let sc = Scenario::by_name(name)
             .ok_or_else(|| format!("unknown scenario '{name}' (see `compair list`)"))?;
         let n = args.flag_usize("requests", sc.default_requests)?;
-        println!(
-            "== serve: {} {} scenario={} n={} seed={} ==",
-            rc.arch.label(),
-            rc.model.name,
-            sc.name,
-            n,
-            seed
+        let label = format!("scenario={} n={} seed={}", sc.name, n, seed);
+        let desc = Some(sc.description.to_string());
+        (ServeConfig { n_requests: n, seed, scenario: Some(sc), ..Default::default() }, label, desc)
+    } else {
+        let cfg = ServeConfig {
+            arrival_rate: args.flag_f64("rate", 32.0)?,
+            n_requests: args.flag_usize("requests", 64)?,
+            prompt_len: args.flag_usize("prompt", 512)?,
+            gen_len: args.flag_usize("gen", 32)?,
+            seed,
+            ..Default::default()
+        };
+        let label = format!(
+            "rate={}r/s n={} prompt={} gen={}",
+            cfg.arrival_rate, cfg.n_requests, cfg.prompt_len, cfg.gen_len
         );
-        println!("   {}", sc.description);
-        let sr = run_scenario(rc, sc, n, seed);
-        print!("{}", serving::render_summary(&sr.report));
-        sr.report.class_table("per-class SLO report").print();
-        return Ok(());
-    }
-    let cfg = ServeConfig {
-        arrival_rate: args.flag_f64("rate", 32.0)?,
-        n_requests: args.flag_usize("requests", 64)?,
-        prompt_len: args.flag_usize("prompt", 512)?,
-        gen_len: args.flag_usize("gen", 32)?,
-        seed,
-        ..Default::default()
+        (cfg, label, None)
     };
-    println!(
-        "== serve: {} {} rate={}r/s n={} prompt={} gen={} ==",
-        rc.arch.label(),
-        rc.model.name,
-        cfg.arrival_rate,
-        cfg.n_requests,
-        cfg.prompt_len,
-        cfg.gen_len
-    );
-    let r = Server::new(rc, cfg).run();
-    print!("{}", serving::render_summary(&r));
+
+    println!("== serve: {} {} {} ==", rc.arch.label(), rc.model.name, label);
+    if let Some(d) = desc {
+        println!("   {d}");
+    }
+    match cluster_cfg {
+        Some(ccfg) => {
+            let r = Cluster::new(rc, cfg, ccfg).run();
+            print!("{}", cluster::render_cluster_summary(&r));
+            r.replica_table().print();
+            r.report.class_table("per-class SLO report").print();
+        }
+        None => {
+            let scenario_mode = cfg.scenario.is_some();
+            let r = Server::new(rc, cfg).run();
+            print!("{}", serving::render_summary(&r));
+            if scenario_mode {
+                r.class_table("per-class SLO report").print();
+            }
+        }
+    }
     Ok(())
 }
 

@@ -55,7 +55,9 @@ pub fn percentile(samples: &[f64], p: f64) -> f64 {
         return f64::NAN;
     }
     let mut v: Vec<f64> = samples.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp: NaNs sort to the end instead of panicking mid-report; a
+    // stray NaN in a latency vector must never take the whole run down.
+    v.sort_by(f64::total_cmp);
     let rank = (p / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -110,6 +112,18 @@ mod tests {
         assert!((percentile(&v, 0.0) - 1.0).abs() < 1e-9);
         assert!((percentile(&v, 100.0) - 100.0).abs() < 1e-9);
         assert!((percentile(&v, 50.0) - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_survives_nan_samples() {
+        // regression: partial_cmp(..).unwrap() panicked on NaN input.
+        // total_cmp orders (positive) NaN last, so the sorted sample is
+        // [1, 2, 3, NaN] and the finite percentiles are well-defined.
+        let v = vec![3.0, f64::NAN, 1.0, 2.0];
+        assert!((percentile(&v, 0.0) - 1.0).abs() < 1e-9);
+        assert!((percentile(&v, 25.0) - 1.75).abs() < 1e-9);
+        assert!((percentile(&v, 50.0) - 2.5).abs() < 1e-9);
+        assert!(percentile(&v, 100.0).is_nan(), "the NaN sorts to the top");
     }
 
     #[test]

@@ -104,6 +104,22 @@ pub fn ftime_ns(ns: f64) -> String {
     }
 }
 
+/// Format a byte count with an adaptive unit (decimal prefixes).
+pub fn fbytes(b: u64) -> String {
+    let b = b as f64;
+    if b >= 1e12 {
+        format!("{:.2}TB", b / 1e12)
+    } else if b >= 1e9 {
+        format!("{:.2}GB", b / 1e9)
+    } else if b >= 1e6 {
+        format!("{:.2}MB", b / 1e6)
+    } else if b >= 1e3 {
+        format!("{:.2}KB", b / 1e3)
+    } else {
+        format!("{b:.0}B")
+    }
+}
+
 /// Format picojoules with an adaptive unit.
 pub fn fenergy_pj(pj: f64) -> String {
     if pj >= 1e12 {

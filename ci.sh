@@ -7,10 +7,12 @@
 # Steps (each must pass):
 #   1. cargo build --release        — the crate and all targets compile
 #   2. cargo test -q                — unit + integration tests (tier-1)
-#   3. cargo clippy --all-targets   — lints with warnings denied
-#   4. cargo doc --no-deps          — rustdoc with warnings denied
-#   5. cargo fmt --check            — formatting (skipped if rustfmt absent)
-#   6. python tests                 — kernel/model oracles (skipped without jax)
+#   3. --format json gate           — one simulate + one list invocation must
+#                                     parse with `python3 -m json.tool`
+#   4. cargo clippy --all-targets   — lints with warnings denied
+#   5. cargo doc --no-deps          — rustdoc with warnings denied
+#   6. cargo fmt --check            — formatting (skipped if rustfmt absent)
+#   7. python tests                 — kernel/model oracles (skipped without jax)
 #
 # A missing `cargo` is a hard failure, never a silent skip: a gate that
 # checked nothing must not look green.
@@ -36,6 +38,21 @@ cargo build --release
 
 say "cargo test -q"
 cargo test -q
+
+say "JSON report gate (--format json must parse)"
+# every subcommand routes through the hand-rolled util/json.rs writer; one
+# simulate and one list invocation must produce parseable documents
+SIM_JSON=$(./target/release/compair simulate --arch compair-opt --model tiny --batch 2 --seqlen 256 --format json)
+LIST_JSON=$(./target/release/compair list --format json)
+if command -v python3 >/dev/null 2>&1; then
+    printf '%s\n' "$SIM_JSON" | python3 -m json.tool >/dev/null
+    printf '%s\n' "$LIST_JSON" | python3 -m json.tool >/dev/null
+    echo "ok: simulate + list --format json parse"
+else
+    echo "error: python3 not found — the JSON gate cannot validate anything," >&2
+    echo "       and a gate that checked nothing must not look green." >&2
+    exit 1
+fi
 
 if [[ "$FAST" == "0" ]]; then
     say "cargo clippy --all-targets (warnings are errors)"

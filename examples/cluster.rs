@@ -6,17 +6,16 @@
 //! Run: `cargo run --release --example cluster`
 
 use compair::config::{ArchKind, ModelConfig, RunConfig};
-use compair::coordinator::{
-    cluster::render_cluster_summary, run_cluster_scenario, ClusterConfig, RouterPolicy,
-};
+use compair::coordinator::{cluster::render_cluster_summary, ClusterConfig, RouterPolicy};
 use compair::util::table::{fbytes, fenergy_pj, fnum, ftime_ns, Table};
 use compair::workload::Scenario;
+use compair::Engine;
 
-fn rc() -> RunConfig {
+fn engine() -> Engine {
     let mut rc = RunConfig::new(ArchKind::CompAirOpt, ModelConfig::llama2_7b());
     rc.tp = 8;
     rc.devices = 32;
-    rc
+    Engine::new(rc)
 }
 
 fn main() {
@@ -28,7 +27,7 @@ fn main() {
     );
     for replicas in [1usize, 2, 4, 8] {
         let cfg = ClusterConfig { replicas, disagg: None, router: RouterPolicy::LeastLoadedKv };
-        let r = run_cluster_scenario(rc(), Scenario::by_name("mixed").unwrap(), 32, 42, cfg)
+        let r = engine().cluster_scenario(Scenario::by_name("mixed").unwrap(), 32, 42, cfg)
             .cluster;
         t.rowv(vec![
             replicas.to_string(),
@@ -53,7 +52,7 @@ fn main() {
         RouterPolicy::DeadlineAware,
     ] {
         let cfg = ClusterConfig { replicas: 4, disagg: None, router };
-        let r = run_cluster_scenario(rc(), Scenario::by_name("bursty").unwrap(), 48, 42, cfg)
+        let r = engine().cluster_scenario(Scenario::by_name("bursty").unwrap(), 48, 42, cfg)
             .cluster;
         t.rowv(vec![
             router.label().to_string(),
@@ -79,7 +78,7 @@ fn main() {
                 disagg,
                 router: RouterPolicy::LeastLoadedKv,
             };
-            let r = run_cluster_scenario(rc(), sc.clone(), n, 42, cfg).cluster;
+            let r = engine().cluster_scenario(sc.clone(), n, 42, cfg).cluster;
             t.rowv(vec![
                 sc.name.to_string(),
                 r.mode(),
@@ -100,7 +99,7 @@ fn main() {
         disagg: Some((2, 2)),
         router: RouterPolicy::DeadlineAware,
     };
-    let r = run_cluster_scenario(rc(), Scenario::by_name("chat").unwrap(), 32, 42, cfg).cluster;
+    let r = engine().cluster_scenario(Scenario::by_name("chat").unwrap(), 32, 42, cfg).cluster;
     print!("{}", render_cluster_summary(&r));
     r.replica_table().print();
     r.report.class_table("per-class SLO report").print();

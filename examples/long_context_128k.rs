@@ -4,8 +4,8 @@
 //!
 //! Run: `cargo run --release --example long_context_128k`
 
-use compair::arch::simulate;
 use compair::config::{ArchKind, ModelConfig, RunConfig};
+use compair::Engine;
 use compair::util::table::{fenergy_pj, fnum, ftime_ns, Table};
 use compair::workload::OpClass;
 
@@ -18,7 +18,7 @@ fn main() {
             rc.batch = 16;
             rc.seq_len = 128 * 1024;
             rc.gen_len = 8192;
-            let r = simulate(rc);
+            let r = Engine::new(rc).simulate();
             per_arch.push((arch, r));
         }
         let mut t = Table::new(

@@ -8,9 +8,9 @@
 //!
 //! Run: `make artifacts && cargo run --release --example quickstart`
 
-use compair::arch;
 use compair::config::{ArchKind, ModelConfig, RunConfig};
 use compair::runtime::{Runtime, Tensor};
+use compair::Engine;
 use compair::util::table::{fenergy_pj, fnum, ftime_ns};
 use compair::util::XorShiftRng;
 
@@ -50,7 +50,7 @@ fn main() -> compair::runtime::Result<()> {
         let mut rc = RunConfig::new(arch_kind, ModelConfig::llama2_7b());
         rc.batch = 16;
         rc.seq_len = 4096;
-        let r = arch::simulate(rc);
+        let r = Engine::new(rc).simulate();
         println!(
             "  {:<14} latency/token {}  throughput {} tok/s  energy/token {}",
             arch_kind.label(),

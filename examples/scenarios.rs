@@ -6,15 +6,16 @@
 //! Run: `cargo run --release --example scenarios`
 
 use compair::config::{ArchKind, ModelConfig, RunConfig};
-use compair::coordinator::{run_scenario, serving};
+use compair::coordinator::serving;
 use compair::util::table::{fenergy_pj, fnum, ftime_ns, Table};
 use compair::workload::Scenario;
+use compair::Engine;
 
-fn rc(arch: ArchKind) -> RunConfig {
+fn engine(arch: ArchKind) -> Engine {
     let mut rc = RunConfig::new(arch, ModelConfig::llama2_7b());
     rc.tp = 8;
     rc.devices = 32;
-    rc
+    Engine::new(rc)
 }
 
 fn main() {
@@ -23,7 +24,7 @@ fn main() {
         let name = sc.name;
         let desc = sc.description;
         let n = sc.default_requests;
-        let sr = run_scenario(rc(ArchKind::CompAirOpt), sc, n, 42);
+        let sr = engine(ArchKind::CompAirOpt).serve_scenario(sc, n, 42);
         println!("-- {name}: {desc} --");
         print!("{}", serving::render_summary(&sr.report));
         sr.report.class_table("per-class").print();
@@ -37,7 +38,7 @@ fn main() {
     );
     for arch in [ArchKind::Cent, ArchKind::CentCurry, ArchKind::CompAirOpt] {
         let sc = Scenario::by_name("mixed").unwrap();
-        let r = run_scenario(rc(arch), sc, 48, 42).report;
+        let r = engine(arch).serve_scenario(sc, 48, 42).report;
         t.rowv(vec![
             arch.label().to_string(),
             ftime_ns(r.makespan_ns as f64),

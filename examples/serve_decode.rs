@@ -11,7 +11,7 @@
 //!
 //! Run: `make artifacts && cargo run --release --example serve_decode`
 
-use compair::arch::System;
+use compair::arch::{CachedCostModel, CostModel, System};
 use compair::config::{ArchKind, ModelConfig, Phase, RunConfig};
 use compair::coordinator::{Batcher, BatcherConfig, Request};
 use compair::runtime::{Runtime, Tensor};
@@ -40,6 +40,7 @@ fn main() -> compair::runtime::Result<()> {
         max_batch: B,
         max_kv_tokens: 4096,
         queue_cap: 64,
+        ..Default::default()
     });
     // pre-draw arrivals; requests are offered to the batcher only once the
     // simulated clock passes their arrival time
@@ -50,11 +51,14 @@ fn main() -> compair::runtime::Result<()> {
         pending.push(Request::new(id as u64, prompt_len, gen_len, arrival));
     }
 
-    // Simulator for per-iteration timing (tiny model on CompAir).
+    // Simulator for per-iteration timing (tiny model on CompAir): a cached
+    // cost model, so repeated iteration shapes memoize instead of
+    // re-lowering the op-graph every decode step.
     let mut rc = RunConfig::new(ArchKind::CompAirOpt, ModelConfig::tiny());
     rc.tp = 1;
     rc.devices = 1;
     rc.phase = Phase::Decode;
+    let cm = CachedCostModel::new(System::new(rc));
 
     // Per-slot state: hidden vector + position; KV caches live as one
     // [L,B,H,S,DH] tensor pair the artifact threads through.
@@ -113,10 +117,7 @@ fn main() -> compair::runtime::Result<()> {
         pos += 1;
 
         // --- simulated hardware cost of the same iteration shape ---
-        let mut rci = rc.clone();
-        rci.batch = active;
-        rci.seq_len = pos.max(1);
-        let rep = System::new(rci).run();
+        let rep = cm.phase_report(Phase::Decode, active, pos.max(1));
         sim_ns_total += rep.latency_ns;
         energy_pj_total += rep.energy.total_pj() * active as f64;
 

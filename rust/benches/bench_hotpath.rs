@@ -1,16 +1,23 @@
 //! Hot-path micro-benchmarks for the §Perf optimization loop: the pieces
-//! profiling shows dominate figure regeneration and serving simulation.
+//! profiling shows dominate figure regeneration and serving simulation,
+//! plus the serving-loop face-off between the uncached `System` cost model
+//! and the memoizing `CachedCostModel` (the result seeds the
+//! `BENCH_serving.json` perf trajectory at the repository root).
 //!
 //! Run: `cargo bench --bench bench_hotpath`
 
 use compair::arch::collective as coll;
-use compair::config::{HwConfig, NocConfig, SramGang};
+use compair::arch::{CachedCostModel, System};
+use compair::config::{ArchKind, HwConfig, ModelConfig, NocConfig, RunConfig, SramGang};
+use compair::coordinator::{ServeConfig, Server};
 use compair::dram::{stream_latency_ns, PimBank};
 use compair::isa::{Machine, RowProgram};
 use compair::noc::packet::{Packet, PacketType, PathStep, RouterId, StepOp};
 use compair::noc::{trees, Mesh};
 use compair::sram::bank::{SramBank, WeightPolicy};
 use compair::util::bench::Bencher;
+use compair::util::json::{write_json_file, Json, ToJson};
+use compair::workload::Scenario;
 
 fn main() {
     let hw = HwConfig::paper();
@@ -61,12 +68,67 @@ fn main() {
 
     println!("\n== system-level ==");
     b.bench("system/llama7b-layer-cost", || {
-        let mut rc = compair::config::RunConfig::new(
-            compair::config::ArchKind::CompAirOpt,
-            compair::config::ModelConfig::llama2_7b(),
-        );
+        let mut rc = RunConfig::new(ArchKind::CompAirOpt, ModelConfig::llama2_7b());
         rc.batch = 64;
         rc.seq_len = 4096;
         compair::arch::simulate(rc).latency_ns
     });
+
+    // ---- serving loop: uncached System vs memoizing CachedCostModel ----
+    // The fixed scenario keeps the trace identical across both models
+    // (seeded), so the face-off isolates the costing path. `rag` is the
+    // cache's home turf: its 2K-16K prompts are chunked-prefilled, so the
+    // same (Prefill, 1, chunk) shape is re-priced on every iteration of a
+    // long prompt. Results land in BENCH_serving.json at the repository
+    // root (the perf trajectory).
+    println!("\n== serving loop: cached vs uncached cost model ==");
+    let scenario = "rag";
+    let n_requests = 12;
+    let serving_rc = || {
+        let mut rc = RunConfig::new(ArchKind::CompAirOpt, ModelConfig::llama2_7b());
+        rc.tp = 8;
+        rc.devices = 32;
+        rc
+    };
+    let server = Server::new(
+        serving_rc(),
+        ServeConfig {
+            n_requests,
+            seed: 42,
+            scenario: Some(Scenario::by_name(scenario).expect("rag scenario registered")),
+            ..Default::default()
+        },
+    );
+    let uncached_model = System::new(serving_rc());
+    let uncached = b
+        .bench("serve/rag-12req-uncached-system", || {
+            server.run_with_model(&uncached_model).tokens_out
+        })
+        .clone();
+    let cached = b
+        .bench("serve/rag-12req-cached-costmodel", || {
+            // a fresh cache per run: the measurement includes cold misses,
+            // exactly what one serving run pays
+            let cm = CachedCostModel::new(System::new(serving_rc()));
+            server.run_with_model(&cm).tokens_out
+        })
+        .clone();
+    let speedup = uncached.mean_ns / cached.mean_ns.max(1e-9);
+    println!("cached speedup over uncached: {speedup:.2}x");
+
+    let doc = Json::obj()
+        .field("bench", "serving_hotpath")
+        .field("scenario", scenario)
+        .field("requests", n_requests)
+        .field("arch", "compair-opt")
+        .field("model", "llama2-7b")
+        .field("uncached", uncached.to_json())
+        .field("cached", cached.to_json())
+        .field("cached_speedup", speedup)
+        .field("all_results", b.results_json());
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_serving.json");
+    match write_json_file(&path, &doc) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("warning: could not write {}: {e}", path.display()),
+    }
 }

@@ -1,0 +1,171 @@
+//! The `Engine` facade: one typed entry point for every evaluation mode.
+//!
+//! The four harnesses the repo grew — one-shot simulation
+//! (`arch::simulate`), the figure tables, the serving loop, and the
+//! cluster coordinator — used to each re-plumb `RunConfig → System →
+//! report` by hand. `Engine` owns that plumbing once: construct it from a
+//! [`RunConfig`] and ask for the lens you want.
+//!
+//! ```no_run
+//! use compair::config::{ArchKind, ModelConfig, RunConfig};
+//! use compair::coordinator::{ClusterConfig, ServeConfig};
+//! use compair::Engine;
+//!
+//! let rc = RunConfig::new(ArchKind::CompAirOpt, ModelConfig::llama2_7b());
+//! let engine = Engine::new(rc);
+//! let phase = engine.simulate();                     // one-shot phase report
+//! let serve = engine.serve(ServeConfig::default());  // SLO-aware serving sim
+//! let cluster = engine.cluster(ServeConfig::default(), ClusterConfig::default());
+//! # let _ = (phase, serve, cluster);
+//! ```
+//!
+//! Every report the facade returns implements
+//! [`ToJson`](crate::util::json::ToJson), which is what the CLI's
+//! `--format json` renders. Under the hood the serving and cluster paths
+//! drive a [`CachedCostModel`] (see `arch/cost_model.rs`), so repeated
+//! iteration shapes are memoized instead of re-lowering the op-graph.
+
+use crate::arch::{attacc, AttAccConfig, CachedCostModel, PhaseReport, System};
+use crate::config::{ArchKind, RunConfig};
+use crate::coordinator::{
+    Cluster, ClusterConfig, ClusterReport, ClusterScenarioReport, ScenarioReport, ServeConfig,
+    ServeReport, Server,
+};
+use crate::workload::Scenario;
+
+/// One architecture/model/fabric point, evaluated under any lens.
+#[derive(Debug, Clone)]
+pub struct Engine {
+    rc: RunConfig,
+}
+
+impl Engine {
+    pub fn new(rc: RunConfig) -> Self {
+        Self { rc }
+    }
+
+    /// Builder-style tweak of the underlying run configuration.
+    pub fn with(mut self, f: impl FnOnce(&mut RunConfig)) -> Self {
+        f(&mut self.rc);
+        self
+    }
+
+    /// The run configuration this engine evaluates.
+    pub fn rc(&self) -> &RunConfig {
+        &self.rc
+    }
+
+    /// A fresh, independent memoizing cost model over this configuration.
+    /// (The serving/cluster paths construct their own equivalent cache per
+    /// run — this one is for callers driving `CostModel` directly, e.g.
+    /// `run_with_model` or shape sweeps.) Panics for [`ArchKind::AttAcc`]
+    /// (own roofline simulator; a silent PIM-fabric answer would be
+    /// plausible-looking but wrong).
+    pub fn cost_model(&self) -> CachedCostModel<System> {
+        assert_ne!(self.rc.arch, ArchKind::AttAcc, "AttAcc has no PIM-fabric cost model");
+        CachedCostModel::new(System::new(self.rc.clone()))
+    }
+
+    /// One-shot simulation of the configured phase. Unlike the legacy
+    /// `arch::simulate`, this dispatches every architecture variant,
+    /// including the AttAcc roofline baseline.
+    pub fn simulate(&self) -> PhaseReport {
+        match self.rc.arch {
+            ArchKind::AttAcc => attacc::simulate(&self.rc, &AttAccConfig::default()),
+            _ => System::new(self.rc.clone()).run(),
+        }
+    }
+
+    /// Continuous-batching serving simulation on this hardware point.
+    /// Panics for [`ArchKind::AttAcc`]: the roofline baseline has no
+    /// PIM-fabric serving model, so a silent CENT-shaped answer would be
+    /// plausible-looking but wrong.
+    pub fn serve(&self, cfg: ServeConfig) -> ServeReport {
+        assert_ne!(self.rc.arch, ArchKind::AttAcc, "AttAcc has no serving model");
+        Server::new(self.rc.clone(), cfg).run()
+    }
+
+    /// Serve one named scenario end to end (labels the report with the
+    /// scenario/arch/model triple). Panics for [`ArchKind::AttAcc`]
+    /// (see [`Engine::serve`]).
+    pub fn serve_scenario(&self, sc: Scenario, n_requests: usize, seed: u64) -> ScenarioReport {
+        assert_ne!(self.rc.arch, ArchKind::AttAcc, "AttAcc has no serving model");
+        crate::coordinator::run_scenario(self.rc.clone(), sc, n_requests, seed)
+    }
+
+    /// Multi-replica serving over the modeled CXL fabric. Panics for
+    /// [`ArchKind::AttAcc`] (see [`Engine::serve`]).
+    pub fn cluster(&self, serve: ServeConfig, cfg: ClusterConfig) -> ClusterReport {
+        assert_ne!(self.rc.arch, ArchKind::AttAcc, "AttAcc has no serving model");
+        Cluster::new(self.rc.clone(), serve, cfg).run()
+    }
+
+    /// Cluster-serve one named scenario (labelled, for the figure tables).
+    /// Panics for [`ArchKind::AttAcc`] (see [`Engine::serve`]).
+    pub fn cluster_scenario(
+        &self,
+        scenario: Scenario,
+        n_requests: usize,
+        seed: u64,
+        cfg: ClusterConfig,
+    ) -> ClusterScenarioReport {
+        assert_ne!(self.rc.arch, ArchKind::AttAcc, "AttAcc has no serving model");
+        crate::coordinator::run_cluster_scenario(self.rc.clone(), scenario, n_requests, seed, cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::CostModel;
+    use crate::config::ModelConfig;
+
+    fn rc(arch: ArchKind) -> RunConfig {
+        let mut rc = RunConfig::new(arch, ModelConfig::llama2_7b());
+        rc.tp = 8;
+        rc.devices = 32;
+        rc
+    }
+
+    #[test]
+    fn simulate_covers_every_arch_kind() {
+        for arch in [
+            ArchKind::Cent,
+            ArchKind::CentCurry,
+            ArchKind::CompAirBase,
+            ArchKind::CompAirOpt,
+            ArchKind::SramStack,
+            ArchKind::AttAcc,
+        ] {
+            let r = Engine::new(rc(arch)).simulate();
+            assert!(r.latency_ns > 0.0, "{arch:?} produced no latency");
+            assert!(r.throughput_tok_s > 0.0, "{arch:?} produced no throughput");
+        }
+    }
+
+    #[test]
+    fn with_tweaks_the_config() {
+        let e = Engine::new(rc(ArchKind::CompAirOpt)).with(|rc| rc.batch = 64);
+        assert_eq!(e.rc().batch, 64);
+    }
+
+    #[test]
+    fn cost_model_matches_simulate() {
+        let e = Engine::new(rc(ArchKind::CompAirOpt));
+        let cm = e.cost_model();
+        let a = e.simulate();
+        let b = cm.phase_report(e.rc().phase, e.rc().batch, e.rc().seq_len);
+        assert_eq!(a.latency_ns.to_bits(), b.latency_ns.to_bits());
+    }
+
+    #[test]
+    fn serve_and_cluster_run_through_the_facade() {
+        let e = Engine::new(rc(ArchKind::CompAirOpt));
+        let cfg = ServeConfig { n_requests: 8, prompt_len: 64, gen_len: 4, ..Default::default() };
+        let s = e.serve(cfg.clone());
+        assert_eq!(s.completed, 8);
+        let c = e.cluster(cfg, ClusterConfig { replicas: 2, ..Default::default() });
+        assert_eq!(c.report.completed, 8);
+        assert_eq!(c.per_replica.len(), 2);
+    }
+}

@@ -1,0 +1,388 @@
+//! The costing interface every entry point drives.
+//!
+//! The paper's value is one coherent hardware model evaluated under many
+//! lenses; this module gives that model one stable API. [`CostModel`]
+//! exposes the two questions every harness asks — "what does a phase cost
+//! at this shape?" ([`CostModel::phase_report`]) and "what does one serving
+//! iteration cost?" ([`CostModel::iteration_cost`]) — with the base
+//! architecture/model/fabric fixed at construction and only the workload
+//! shape varying per call.
+//!
+//! [`System`] implements the trait directly (uncached: every call re-lowers
+//! the transformer op-graph). [`CachedCostModel`] wraps any model and
+//! memoizes both levels: full [`PhaseReport`]s by `(arch, phase, batch,
+//! seq_len)` and composed iteration [`OpCost`]s by `(prefill_tokens,
+//! decode_batch, max_kv)` — with the iteration key normalized to the cost
+//! function's true arguments (no decode half ⇒ `max_kv` is irrelevant and
+//! must not fragment the cache).
+//!
+//! What actually repeats: chunked prefill re-prices the same
+//! `(Prefill, 1, chunk)` shape on every iteration of a long prompt — the
+//! dominant cost of the rag/long-context scenarios — and cluster replicas
+//! retrace each other's shapes through the shared cache. Decode shapes
+//! drift as the KV cache grows (`max_kv` rises every decode step), so the
+//! iteration path deliberately retains only the `Copy` whole-pass
+//! [`OpCost`] per shape, never the full per-op report, and every map is
+//! capped (drop-all eviction) so a long run's memory stays bounded.
+//! Memoization is sound because the simulator is a pure function of
+//! `(base config, shape)`; the golden tests in
+//! `tests/integration_engine.rs` assert cached ≡ uncached bit-for-bit.
+
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
+
+use crate::config::{ArchKind, Phase, RunConfig};
+use crate::sim::OpCost;
+
+use super::system::{PhaseReport, System};
+
+/// Memoization key for a phase-level costing call. The wrapped model's
+/// hardware/model config is fixed, so the shape (plus the arch, for
+/// defense against key reuse across models) identifies the result.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ShapeKey {
+    pub arch: ArchKind,
+    pub phase: Phase,
+    pub batch: usize,
+    pub seq_len: usize,
+}
+
+/// Memoization key for one serving iteration (a chunk of prefill tokens
+/// composed with one decode step).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct IterKey {
+    pub prefill_tokens: usize,
+    pub decode_batch: usize,
+    pub max_kv: usize,
+}
+
+/// Cache effectiveness counters (see [`CachedCostModel::stats`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl CacheStats {
+    /// Fraction of lookups served from the cache (0 when nothing was asked).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// One architecture point's costing interface: the base configuration is
+/// fixed, the workload shape varies per call. Object-safe, so harness
+/// loops take `&dyn CostModel` and run cached or uncached transparently.
+pub trait CostModel {
+    /// The base run configuration (arch / model / hardware / tp / devices).
+    fn base(&self) -> &RunConfig;
+
+    /// Full phase report for the base configuration at the given shape.
+    /// For decode, `seq_len` is the KV length; for prefill, the prompt
+    /// length.
+    fn phase_report(&self, phase: Phase, batch: usize, seq_len: usize) -> PhaseReport;
+
+    /// Cost of one batching iteration: a chunk of prefill tokens
+    /// (batch-of-1 prefill pass) composed with one decode step over
+    /// `decode_batch` requests at KV length `max_kv`. Shared by the
+    /// single-replica server and every cluster replica.
+    fn iteration_cost(&self, prefill_tokens: usize, decode_batch: usize, max_kv: usize) -> OpCost {
+        compose_iteration(
+            &|phase, batch, seq| self.phase_report(phase, batch, seq).layer_cost_total(),
+            prefill_tokens,
+            decode_batch,
+            max_kv,
+        )
+    }
+}
+
+/// The one composition rule for a serving iteration — the trait default
+/// and the cached override both call it (with their own way of producing
+/// a phase total), so the two paths cannot drift apart.
+fn compose_iteration(
+    phase_total: &dyn Fn(Phase, usize, usize) -> OpCost,
+    prefill_tokens: usize,
+    decode_batch: usize,
+    max_kv: usize,
+) -> OpCost {
+    let mut cost = OpCost::zero();
+    if prefill_tokens > 0 {
+        cost = cost.then(&phase_total(Phase::Prefill, 1, prefill_tokens));
+    }
+    if decode_batch > 0 {
+        cost = cost.then(&phase_total(Phase::Decode, decode_batch, max_kv.max(1)));
+    }
+    cost
+}
+
+impl CostModel for System {
+    fn base(&self) -> &RunConfig {
+        &self.rc
+    }
+
+    fn phase_report(&self, phase: Phase, batch: usize, seq_len: usize) -> PhaseReport {
+        self.run_shape(phase, batch, seq_len)
+    }
+}
+
+/// Full per-op reports are heavyweight (a `Vec<OpReport>` with a `String`
+/// per op), so their map stays small; the `Copy` total/iteration maps can
+/// afford far more entries before eviction.
+const PHASE_CAP: usize = 1024;
+const TOTAL_CAP: usize = 1 << 16;
+const ITER_CAP: usize = 1 << 16;
+
+/// Insert with drop-all eviction at `cap`. Decode shapes drift
+/// monotonically (the KV length rises every step), so LRU would buy
+/// little over clearing; bounding memory is what matters, and
+/// recomputation after a clear is always sound.
+fn insert_capped<K: std::hash::Hash + Eq, V>(map: &RefCell<HashMap<K, V>>, cap: usize, k: K, v: V) {
+    let mut m = map.borrow_mut();
+    if m.len() >= cap {
+        m.clear();
+    }
+    m.insert(k, v);
+}
+
+/// Memoizing wrapper around any [`CostModel`]. Interior mutability keeps
+/// the trait's `&self` signature, so the serving/cluster loops stay
+/// borrow-friendly; the simulators are single-threaded, so `RefCell` is
+/// sufficient.
+pub struct CachedCostModel<M: CostModel> {
+    inner: M,
+    /// Full reports, for direct [`CostModel::phase_report`] callers.
+    phases: RefCell<HashMap<ShapeKey, PhaseReport>>,
+    /// Whole-pass totals only (`Copy`), for the iteration hot path — a
+    /// drifting decode shape costs one small entry here, not a report.
+    totals: RefCell<HashMap<ShapeKey, OpCost>>,
+    iters: RefCell<HashMap<IterKey, OpCost>>,
+    hits: Cell<u64>,
+    misses: Cell<u64>,
+}
+
+impl<M: CostModel> CachedCostModel<M> {
+    pub fn new(inner: M) -> Self {
+        Self {
+            inner,
+            phases: RefCell::new(HashMap::new()),
+            totals: RefCell::new(HashMap::new()),
+            iters: RefCell::new(HashMap::new()),
+            hits: Cell::new(0),
+            misses: Cell::new(0),
+        }
+    }
+
+    pub fn inner(&self) -> &M {
+        &self.inner
+    }
+
+    /// Lookup counters over all cache levels.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats { hits: self.hits.get(), misses: self.misses.get() }
+    }
+
+    /// Distinct memoized entries (phase reports + totals + iteration
+    /// costs).
+    pub fn entries(&self) -> usize {
+        self.phases.borrow().len() + self.totals.borrow().len() + self.iters.borrow().len()
+    }
+
+    fn hit(&self) {
+        self.hits.set(self.hits.get() + 1);
+    }
+
+    fn miss(&self) {
+        self.misses.set(self.misses.get() + 1);
+    }
+
+    /// Whole-pass cost of one phase shape, retaining only the `Copy`
+    /// total. A full report priced earlier through `phase_report` already
+    /// carries the total, so that map is consulted before re-lowering.
+    fn phase_total(&self, phase: Phase, batch: usize, seq_len: usize) -> OpCost {
+        let key = ShapeKey { arch: self.inner.base().arch, phase, batch, seq_len };
+        if let Some(c) = self.totals.borrow().get(&key) {
+            self.hit();
+            return *c;
+        }
+        let from_report = self.phases.borrow().get(&key).map(|r| r.layer_cost_total());
+        let total = match from_report {
+            Some(t) => {
+                self.hit();
+                t
+            }
+            None => {
+                self.miss();
+                self.inner.phase_report(phase, batch, seq_len).layer_cost_total()
+            }
+        };
+        insert_capped(&self.totals, TOTAL_CAP, key, total);
+        total
+    }
+}
+
+impl<M: CostModel> CostModel for CachedCostModel<M> {
+    fn base(&self) -> &RunConfig {
+        self.inner.base()
+    }
+
+    fn phase_report(&self, phase: Phase, batch: usize, seq_len: usize) -> PhaseReport {
+        let key = ShapeKey { arch: self.inner.base().arch, phase, batch, seq_len };
+        // A hit clones the stored report (per-op vec included) — far
+        // cheaper than re-lowering, and the serving/cluster hot loops
+        // never pay it: they go through `iteration_cost`, whose memoized
+        // `OpCost` is `Copy`.
+        if let Some(r) = self.phases.borrow().get(&key) {
+            self.hit();
+            return r.clone();
+        }
+        self.miss();
+        let r = self.inner.phase_report(phase, batch, seq_len);
+        insert_capped(&self.phases, PHASE_CAP, key, r.clone());
+        // the total is a free by-product — seed the iteration path's map
+        insert_capped(&self.totals, TOTAL_CAP, key, r.layer_cost_total());
+        r
+    }
+
+    fn iteration_cost(&self, prefill_tokens: usize, decode_batch: usize, max_kv: usize) -> OpCost {
+        // Key on the cost function's true arguments: with no decode half
+        // the cost is independent of `max_kv` (and a decode half clamps it
+        // to ≥ 1), so kv-irrelevant variation — e.g. the growing prefill
+        // progress of a chunked long prompt — must not fragment the cache.
+        let kv = if decode_batch == 0 { 0 } else { max_kv.max(1) };
+        let key = IterKey { prefill_tokens, decode_batch, max_kv: kv };
+        if let Some(c) = self.iters.borrow().get(&key) {
+            self.hit();
+            return *c;
+        }
+        // Composed-entry miss; the totals cache underneath still serves
+        // repeated prefill/decode halves of novel combinations, without
+        // retaining a full report per drifting decode shape.
+        let cost = compose_iteration(
+            &|phase, batch, seq| self.phase_total(phase, batch, seq),
+            prefill_tokens,
+            decode_batch,
+            max_kv,
+        );
+        insert_capped(&self.iters, ITER_CAP, key, cost);
+        cost
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ArchKind, ModelConfig};
+
+    fn rc() -> RunConfig {
+        let mut rc = RunConfig::new(ArchKind::CompAirOpt, ModelConfig::llama2_7b());
+        rc.tp = 8;
+        rc.devices = 32;
+        rc
+    }
+
+    #[test]
+    fn cached_phase_report_is_bit_identical() {
+        let sys = System::new(rc());
+        let cached = CachedCostModel::new(System::new(rc()));
+        for (phase, batch, seq) in
+            [(Phase::Decode, 16, 4096), (Phase::Prefill, 1, 512), (Phase::Decode, 16, 4096)]
+        {
+            let a = sys.phase_report(phase, batch, seq);
+            let b = cached.phase_report(phase, batch, seq);
+            assert_eq!(a.latency_ns.to_bits(), b.latency_ns.to_bits());
+            assert_eq!(a.throughput_tok_s.to_bits(), b.throughput_tok_s.to_bits());
+            assert_eq!(a.energy.total_pj().to_bits(), b.energy.total_pj().to_bits());
+            assert_eq!(a.layer_cost, b.layer_cost);
+            assert_eq!(a.ops.len(), b.ops.len());
+        }
+    }
+
+    #[test]
+    fn repeated_shapes_hit_the_cache() {
+        let cached = CachedCostModel::new(System::new(rc()));
+        let a = cached.iteration_cost(0, 16, 4096);
+        assert_eq!(cached.stats().hits, 0);
+        let misses_after_first = cached.stats().misses;
+        assert!(misses_after_first >= 1);
+        let b = cached.iteration_cost(0, 16, 4096);
+        assert_eq!(a, b);
+        assert_eq!(cached.stats().hits, 1, "second identical iteration must be a hit");
+        assert_eq!(cached.stats().misses, misses_after_first);
+        // a different shape misses again
+        let _ = cached.iteration_cost(0, 16, 4097);
+        assert!(cached.stats().misses > misses_after_first);
+        assert!(cached.stats().hit_rate() > 0.0);
+        assert!(cached.entries() >= 2);
+    }
+
+    #[test]
+    fn iteration_cost_matches_manual_composition() {
+        let sys = System::new(rc());
+        let cached = CachedCostModel::new(System::new(rc()));
+        for (pf, db, kv) in [(256usize, 8usize, 2048usize), (0, 4, 512), (128, 0, 1), (0, 0, 0)] {
+            let mut want = OpCost::zero();
+            if pf > 0 {
+                want = want.then(&sys.phase_report(Phase::Prefill, 1, pf).layer_cost_total());
+            }
+            if db > 0 {
+                let d = sys.phase_report(Phase::Decode, db, kv.max(1));
+                want = want.then(&d.layer_cost_total());
+            }
+            assert_eq!(sys.iteration_cost(pf, db, kv), want);
+            assert_eq!(cached.iteration_cost(pf, db, kv), want);
+        }
+    }
+
+    #[test]
+    fn phase_report_seeds_the_iteration_path() {
+        let cached = CachedCostModel::new(System::new(rc()));
+        let r = cached.phase_report(Phase::Decode, 16, 4096); // miss, seeds totals
+        let misses = cached.stats().misses;
+        let c = cached.iteration_cost(0, 16, 4096); // totals hit — no re-lowering
+        assert_eq!(cached.stats().misses, misses, "already-priced shape must not re-lower");
+        assert!(cached.stats().hits >= 1);
+        assert_eq!(c, r.layer_cost_total());
+    }
+
+    #[test]
+    fn prefill_only_iterations_share_one_key_regardless_of_kv() {
+        // a chunked long prompt advances `max_kv` every pure-prefill
+        // iteration, but the cost is kv-independent when nothing decodes —
+        // the normalized key must turn those into hits
+        let cached = CachedCostModel::new(System::new(rc()));
+        let a = cached.iteration_cost(4096, 0, 5);
+        let hits_before = cached.stats().hits;
+        let b = cached.iteration_cost(4096, 0, 9999);
+        assert_eq!(a, b);
+        assert_eq!(cached.stats().hits, hits_before + 1, "kv-irrelevant variation must hit");
+        // kv=0 and kv=1 with a decode half are the same clamped shape
+        let c = cached.iteration_cost(0, 4, 0);
+        let d = cached.iteration_cost(0, 4, 1);
+        assert_eq!(c, d);
+    }
+
+    #[test]
+    fn capped_insert_bounds_the_map() {
+        let map: RefCell<HashMap<usize, usize>> = RefCell::new(HashMap::new());
+        for i in 0..10 {
+            insert_capped(&map, 4, i, i);
+        }
+        // every insert lands; the map never exceeds the cap
+        assert!(map.borrow().len() <= 4);
+        assert_eq!(map.borrow().get(&9), Some(&9));
+    }
+
+    #[test]
+    fn system_run_is_phase_report_at_configured_shape() {
+        let sys = System::new(rc());
+        let a = sys.run();
+        let b = sys.phase_report(sys.rc.phase, sys.rc.batch, sys.rc.seq_len);
+        assert_eq!(a.latency_ns.to_bits(), b.latency_ns.to_bits());
+        assert_eq!(a.layer_cost, b.layer_cost);
+    }
+}

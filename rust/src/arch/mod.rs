@@ -1,8 +1,11 @@
-//! Architecture compositions: CompAir and the paper's baselines, plus the
-//! analytic collective/non-linear cost library they share.
+//! Architecture compositions: CompAir and the paper's baselines, the
+//! analytic collective/non-linear cost library they share, and the
+//! [`CostModel`] interface every harness drives them through.
 pub mod attacc;
 pub mod collective;
+pub mod cost_model;
 pub mod system;
 
 pub use attacc::{pure_sram_requirements, AttAccConfig};
+pub use cost_model::{CacheStats, CachedCostModel, CostModel, IterKey, ShapeKey};
 pub use system::{simulate, OpReport, PhaseReport, System};

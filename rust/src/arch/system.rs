@@ -14,6 +14,7 @@ use crate::energy::{EnergyBreakdown, EnergyModel};
 use crate::noc::exchange;
 use crate::sim::OpCost;
 use crate::sram::bank::{SramBank, WeightPolicy};
+use crate::util::json::{Json, ToJson};
 use crate::workload::{layer_ops, LlmOp, OpClass};
 
 use super::collective as coll;
@@ -45,6 +46,38 @@ pub struct PhaseReport {
     pub bank_util: f64,
     /// One layer's composed cost (per device; counts cover all tp devices).
     pub layer_cost: OpCost,
+}
+
+impl PhaseReport {
+    /// Whole-pass cost reconstructed from the report: the full-pass latency
+    /// with one layer's event counts, exactly as the serving iteration
+    /// costing has always billed it.
+    pub fn layer_cost_total(&self) -> OpCost {
+        OpCost { latency_ns: self.latency_ns, counts: self.layer_cost.counts }
+    }
+}
+
+impl ToJson for OpReport {
+    fn to_json(&self) -> Json {
+        Json::obj()
+            .field("name", self.name.as_str())
+            .field("class", self.class.label())
+            .field("cost", self.cost.to_json())
+    }
+}
+
+impl ToJson for PhaseReport {
+    fn to_json(&self) -> Json {
+        Json::obj()
+            .field("latency_ns", self.latency_ns)
+            .field("throughput_tok_s", self.throughput_tok_s)
+            .field("nonlinear_frac", self.nonlinear_frac)
+            .field("collective_frac", self.collective_frac)
+            .field("bank_util", self.bank_util)
+            .field("energy", self.energy.to_json())
+            .field("layer_cost", self.layer_cost.to_json())
+            .field("ops", Json::arr(self.ops.iter().map(|o| o.to_json())))
+    }
 }
 
 /// The simulator facade.
@@ -308,10 +341,20 @@ impl System {
         (c.replicate(tp), util)
     }
 
-    /// Simulate the configured phase.
+    /// Simulate the configured phase (`rc.phase` / `rc.batch` /
+    /// `rc.seq_len`).
     pub fn run(&self) -> PhaseReport {
+        self.run_shape(self.rc.phase, self.rc.batch, self.rc.seq_len)
+    }
+
+    /// Simulate one phase at an explicit workload shape, leaving the base
+    /// configuration (arch/model/hardware/tp/devices) untouched. This is
+    /// the [`super::CostModel`] entry: callers that sweep shapes (the
+    /// serving loop, the cached model) avoid cloning a `RunConfig` per
+    /// call.
+    pub fn run_shape(&self, phase: Phase, batch: usize, seq_len: usize) -> PhaseReport {
         let rc = &self.rc;
-        let ops = layer_ops(&rc.model, rc.phase, rc.batch, rc.seq_len);
+        let ops = layer_ops(&rc.model, phase, batch, seq_len);
         let mut layer = OpCost::zero();
         let mut reports = Vec::new();
         let mut nl_ns = 0.0;
@@ -332,12 +375,12 @@ impl System {
         let pp = (rc.devices / rc.tp).max(1) as u64;
         // stage handoff between pipeline stages (activations move once per
         // stage boundary)
-        let handoff = coll::cxl_p2p((rc.batch * rc.model.d_model * 2) as u64, &rc.hw.cxl);
+        let handoff = coll::cxl_p2p((batch * rc.model.d_model * 2) as u64, &rc.hw.cxl);
         let total = layer.repeat(layers).then(&handoff.repeat(pp.saturating_sub(1)));
 
-        let (latency_ns, tokens_per_pass) = match rc.phase {
-            Phase::Decode => (total.latency_ns, rc.batch as f64),
-            Phase::Prefill => (total.latency_ns, (rc.batch * rc.seq_len) as f64),
+        let (latency_ns, tokens_per_pass) = match phase {
+            Phase::Decode => (total.latency_ns, batch as f64),
+            Phase::Prefill => (total.latency_ns, (batch * seq_len) as f64),
         };
         // pipeline-full throughput
         let stage_ns = latency_ns / pp as f64;

@@ -31,11 +31,21 @@ impl Args {
                     out.flags.insert(k.to_string(), v.to_string());
                 } else if KNOWN_SWITCHES.contains(&name) {
                     out.switches.push(name.to_string());
-                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
-                    let v = it.next().unwrap();
-                    out.flags.insert(name.to_string(), v);
                 } else {
-                    out.switches.push(name.to_string());
+                    // every non-switch flag takes a value; a missing one is
+                    // a parse error, not a silent switch (a trailing
+                    // `--batch` used to be dropped without complaint)
+                    match it.next() {
+                        Some(v) if !v.starts_with("--") => {
+                            out.flags.insert(name.to_string(), v);
+                        }
+                        Some(v) => {
+                            return Err(format!(
+                                "flag --{name} expects a value, found flag '{v}'"
+                            ));
+                        }
+                        None => return Err(format!("flag --{name} expects a value")),
+                    }
                 }
             } else {
                 out.positional.push(a);
@@ -65,6 +75,25 @@ impl Args {
     pub fn has(&self, switch: &str) -> bool {
         self.switches.iter().any(|s| s == switch)
     }
+
+    /// The `--format` flag, shared by every subcommand.
+    pub fn format(&self) -> Result<OutputFormat, String> {
+        match self.flag("format") {
+            None | Some("text") => Ok(OutputFormat::Text),
+            Some("json") => Ok(OutputFormat::Json),
+            Some(o) => Err(format!("unknown --format '{o}' (text | json)")),
+        }
+    }
+}
+
+/// How a subcommand renders its report.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum OutputFormat {
+    /// Human-readable tables (the default).
+    #[default]
+    Text,
+    /// One machine-readable JSON document on stdout.
+    Json,
 }
 
 pub const USAGE: &str = "\
@@ -89,7 +118,10 @@ USAGE:
   compair config show                     print the Table-3 hardware config
   compair list                            list figures/models/archs/scenarios
 
-ARCHS:     cent | cent-curry | compair-base | compair-opt
+Every command accepts `--format text|json`; json emits one machine-readable
+report document on stdout.
+
+ARCHS:     cent | cent-curry | compair-base | compair-opt | sram-stack | attacc
 MODELS:    llama2-7b | llama2-13b | llama2-70b | qwen-72b | gpt3-175b | tiny
 SCENARIOS: chat | rag | long-context | batch | bursty | mixed
 ROUTERS:   round-robin | least-kv | deadline
@@ -130,5 +162,36 @@ mod tests {
         let a = parse("simulate");
         assert_eq!(a.flag_usize("batch", 7).unwrap(), 7);
         assert_eq!(a.flag_f64("rate", 1.5).unwrap(), 1.5);
+    }
+
+    #[test]
+    fn trailing_flag_without_value_is_an_error() {
+        // regression: `serve --scenario` used to silently become a switch
+        // (and before that, risked a panic on the value pull)
+        let e = Args::parse("serve --scenario".split_whitespace().map(String::from));
+        assert!(e.is_err());
+        assert!(e.unwrap_err().contains("--scenario expects a value"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag_is_an_error() {
+        let e = Args::parse("serve --batch --model x".split_whitespace().map(String::from));
+        assert!(e.is_err());
+        assert!(e.unwrap_err().contains("--batch expects a value"));
+    }
+
+    #[test]
+    fn trailing_known_switch_still_parses() {
+        let a = parse("figures fig15 --all");
+        assert!(a.has("all"));
+        assert_eq!(a.positional, vec!["fig15"]);
+    }
+
+    #[test]
+    fn format_flag_parses() {
+        assert_eq!(parse("simulate").format().unwrap(), OutputFormat::Text);
+        assert_eq!(parse("simulate --format text").format().unwrap(), OutputFormat::Text);
+        assert_eq!(parse("simulate --format json").format().unwrap(), OutputFormat::Json);
+        assert!(parse("simulate --format yaml").format().is_err());
     }
 }

@@ -1,12 +1,15 @@
 //! Run configuration: which architecture variant, model, and workload shape a
 //! simulation executes. Constructed from CLI flags or a TOML-subset file.
 
+use crate::util::json::{Json, ToJson};
+
 use super::hw::{HwConfig, SramGang, Voltage};
 use super::model::ModelConfig;
 use super::toml::Doc;
 
 /// Architecture variants evaluated in the paper (§7.1 ablation).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// `Hash` lets the cached cost model key memo entries by variant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum ArchKind {
     /// CENT: pure DRAM-PIM, centralized NLU in the CXL controller.
     Cent,
@@ -46,6 +49,31 @@ impl ArchKind {
         }
     }
 
+    /// Every variant, in the paper's ablation order. The single source the
+    /// CLI's `list` output derives its arch names from.
+    pub fn all() -> [ArchKind; 6] {
+        [
+            ArchKind::Cent,
+            ArchKind::CentCurry,
+            ArchKind::CompAirBase,
+            ArchKind::CompAirOpt,
+            ArchKind::SramStack,
+            ArchKind::AttAcc,
+        ]
+    }
+
+    /// The canonical CLI spelling ([`ArchKind::by_name`] accepts it).
+    pub fn cli_name(&self) -> &'static str {
+        match self {
+            ArchKind::Cent => "cent",
+            ArchKind::CentCurry => "cent-curry",
+            ArchKind::CompAirBase => "compair-base",
+            ArchKind::CompAirOpt => "compair-opt",
+            ArchKind::SramStack => "sram-stack",
+            ArchKind::AttAcc => "attacc",
+        }
+    }
+
     /// Does this variant have SRAM-PIM under the DRAM banks?
     pub fn has_sram(&self) -> bool {
         matches!(self, ArchKind::CompAirBase | ArchKind::CompAirOpt | ArchKind::SramStack)
@@ -77,11 +105,21 @@ impl FcMapping {
     }
 }
 
-/// Inference phase.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// Inference phase. `Hash` lets the cached cost model key memo entries by
+/// phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Phase {
     Prefill,
     Decode,
+}
+
+impl Phase {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Phase::Prefill => "prefill",
+            Phase::Decode => "decode",
+        }
+    }
 }
 
 /// One simulation run request.
@@ -196,6 +234,23 @@ impl RunConfig {
     }
 }
 
+/// The run-shape summary echoed into every JSON report so a result is
+/// self-describing without the command line that produced it.
+impl ToJson for RunConfig {
+    fn to_json(&self) -> Json {
+        Json::obj()
+            .field("arch", self.arch.label())
+            .field("model", self.model.name)
+            .field("phase", self.phase.label())
+            .field("batch", self.batch)
+            .field("seq_len", self.seq_len)
+            .field("gen_len", self.gen_len)
+            .field("tp", self.tp)
+            .field("devices", self.devices)
+            .field("fc_mapping", self.fc_mapping.label())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -203,15 +258,9 @@ mod tests {
 
     #[test]
     fn arch_names_roundtrip() {
-        for a in [
-            ArchKind::Cent,
-            ArchKind::CentCurry,
-            ArchKind::CompAirBase,
-            ArchKind::CompAirOpt,
-            ArchKind::SramStack,
-            ArchKind::AttAcc,
-        ] {
+        for a in ArchKind::all() {
             assert_eq!(ArchKind::by_name(&a.label().to_ascii_lowercase()), Some(a));
+            assert_eq!(ArchKind::by_name(a.cli_name()), Some(a), "cli_name must parse");
         }
     }
 

@@ -145,6 +145,23 @@ impl Default for BatcherConfig {
     }
 }
 
+impl crate::util::json::ToJson for BatcherConfig {
+    fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        // usize::MAX means "chunking disabled" — serialize as null rather
+        // than a nonsense integer
+        let chunk =
+            if self.prefill_chunk == usize::MAX { Json::Null } else { self.prefill_chunk.into() };
+        Json::obj()
+            .field("max_batch", self.max_batch)
+            .field("max_kv_tokens", self.max_kv_tokens)
+            .field("queue_cap", self.queue_cap)
+            .field("prefill_chunk", chunk)
+            .field("slo_eviction", self.slo_eviction)
+            .field("reserve_gen", self.reserve_gen)
+    }
+}
+
 /// The continuous batcher.
 #[derive(Debug)]
 pub struct Batcher {

@@ -5,8 +5,10 @@
 //! The paper's topology (§3, §7.1) puts `devices` PIM devices behind one
 //! CXL switch, i.e. `devices / tp` independent tensor-parallel replicas.
 //! This module serves a workload trace across those replicas: each replica
-//! owns its own [`Batcher`] and is costed by its own `arch/system.rs`
-//! instance, a router assigns arrivals ([`RouterPolicy`]), and in
+//! owns its own [`Batcher`], all replicas are costed through one shared
+//! [`CachedCostModel`] (identical hardware, so any replica's iteration
+//! shape is a cache hit on every other), a router assigns arrivals
+//! ([`RouterPolicy`]), and in
 //! disaggregated mode the replicas split into a prefill pool and a decode
 //! pool. A request prefills in the prefill pool, then its KV cache
 //! migrates over the fabric — `kv tokens × ModelConfig::kv_bytes_per_token`
@@ -19,15 +21,15 @@
 //! config)` triple reproduces the byte-identical [`ClusterReport`].
 
 use crate::arch::collective::cxl_p2p;
+use crate::arch::{CachedCostModel, CostModel, System};
 use crate::config::RunConfig;
 use crate::sim::{EventQueue, OpCost};
+use crate::util::json::{Json, ToJson};
 use crate::util::table::{fbytes, fenergy_pj, ftime_ns, Table};
 use crate::workload::Scenario;
 
 use super::batcher::{Batcher, Request, RequestState};
-use super::serving::{
-    build_report, iteration_cost, render_summary, RunTotals, ServeConfig, ServeReport,
-};
+use super::serving::{build_report, render_summary, RunTotals, ServeConfig, ServeReport};
 
 /// How the cluster router assigns an arrival to a replica.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -235,6 +237,50 @@ pub fn render_cluster_summary(r: &ClusterReport) -> String {
     out
 }
 
+impl ToJson for ReplicaReport {
+    fn to_json(&self) -> Json {
+        Json::obj()
+            .field("id", self.id)
+            .field("role", self.role)
+            .field("routed", self.routed)
+            .field("completed", self.completed)
+            .field("tokens_out", self.tokens_out)
+            .field("migrations_out", self.migrations_out)
+            .field("migrations_in", self.migrations_in)
+            .field("busy_ns", self.busy_ns)
+            .field("utilization", self.utilization)
+            .field("kv_peak", self.kv_peak)
+    }
+}
+
+impl ToJson for ClusterReport {
+    fn to_json(&self) -> Json {
+        let disagg = self.disagg.map(|(p, d)| {
+            Json::obj().field("prefill", p).field("decode", d)
+        });
+        Json::obj()
+            .field("replicas", self.replicas)
+            .field("router", self.router)
+            .field("mode", self.mode())
+            .field("disagg", disagg)
+            .field("migrations", self.migrations)
+            .field("migration_bytes", self.migration_bytes)
+            .field("migration_energy_pj", self.migration_energy_pj)
+            .field("per_replica", Json::arr(self.per_replica.iter().map(|r| r.to_json())))
+            .field("report", self.report.to_json())
+    }
+}
+
+impl ToJson for ClusterScenarioReport {
+    fn to_json(&self) -> Json {
+        Json::obj()
+            .field("scenario", self.scenario.as_str())
+            .field("arch", self.arch.as_str())
+            .field("model", self.model.as_str())
+            .field("cluster", self.cluster.to_json())
+    }
+}
+
 /// What a replica does in the pipeline.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum Role {
@@ -407,6 +453,7 @@ impl Cluster {
     /// iteration end time.
     fn step_replica(
         &self,
+        cm: &dyn CostModel,
         ri: usize,
         now: u64,
         replicas: &mut [Replica],
@@ -441,7 +488,7 @@ impl Cluster {
                 return;
             }
             let max_kv = r.batcher.active.iter().map(|s| s.kv_tokens()).max().unwrap_or(1);
-            let cost = iteration_cost(&self.rc, prefill_tokens, deciders, max_kv);
+            let cost = cm.iteration_cost(prefill_tokens, deciders, max_kv);
             let end = now + cost.latency_ns.max(1.0) as u64;
             st.total_cost = st.total_cost.then(&cost);
             r.batcher.advance_prefill(&plan, end);
@@ -498,8 +545,21 @@ impl Cluster {
         }
     }
 
-    /// Run the cluster simulation to completion.
+    /// Run the cluster simulation to completion. All replicas share one
+    /// [`CachedCostModel`] (they cost identical hardware), so an iteration
+    /// shape priced on any replica is a cache hit on every other.
     pub fn run(&self) -> ClusterReport {
+        let cm = CachedCostModel::new(System::new(self.rc.clone()));
+        self.run_with_model(&cm)
+    }
+
+    /// Run against an explicit [`CostModel`] over the same `RunConfig`
+    /// (benchmarks and golden tests compare cached vs uncached here).
+    pub fn run_with_model(&self, cm: &dyn CostModel) -> ClusterReport {
+        // a mismatched model would label the report with one config while
+        // pricing every iteration on another — catch it early
+        debug_assert_eq!(cm.base().arch, self.rc.arch, "cost model arch != cluster arch");
+        debug_assert_eq!(cm.base().model.name, self.rc.model.name, "cost model != cluster model");
         self.cfg.validate().expect("invalid cluster config");
         let n_replicas = self.cfg.replica_count();
         let class_names = self.serve.class_names();
@@ -561,19 +621,19 @@ impl Cluster {
                         rejected_by_class[class] += 1;
                     }
                     if now >= replicas[ri].busy_until {
-                        self.step_replica(ri, now, &mut replicas, &mut q, &mut st);
+                        self.step_replica(cm, ri, now, &mut replicas, &mut q, &mut st);
                     }
                 }
                 Event::IterationDone(ri) => {
                     replicas[ri].iter_pending = false;
-                    self.step_replica(ri, now, &mut replicas, &mut q, &mut st);
+                    self.step_replica(cm, ri, now, &mut replicas, &mut q, &mut st);
                 }
                 Event::Migration(ri, s) => {
                     replicas[ri].inflight_kv =
                         replicas[ri].inflight_kv.saturating_sub(s.kv_footprint());
                     replicas[ri].landing.push(s);
                     if now >= replicas[ri].busy_until {
-                        self.step_replica(ri, now, &mut replicas, &mut q, &mut st);
+                        self.step_replica(cm, ri, now, &mut replicas, &mut q, &mut st);
                     }
                 }
             }
@@ -830,6 +890,32 @@ mod tests {
         }
         let c = run_cluster("mixed", 12, 10, cfg);
         assert_ne!(a.report.makespan_ns, c.report.makespan_ns, "seed must matter");
+    }
+
+    #[test]
+    fn shared_cached_model_matches_uncached_bit_for_bit() {
+        let serve = ServeConfig {
+            n_requests: 12,
+            seed: 42,
+            scenario: Some(Scenario::by_name("mixed").unwrap()),
+            ..Default::default()
+        };
+        let cfg = ClusterConfig { disagg: Some((1, 1)), ..Default::default() };
+        let cluster = Cluster::new(rc(), serve, cfg);
+        let uncached = cluster.run_with_model(&System::new(rc()));
+        let cached = cluster.run();
+        assert_eq!(uncached.report.makespan_ns, cached.report.makespan_ns);
+        assert_eq!(uncached.report.tokens_out, cached.report.tokens_out);
+        assert_eq!(uncached.migrations, cached.migrations);
+        assert_eq!(uncached.migration_bytes, cached.migration_bytes);
+        assert_eq!(
+            uncached.report.energy.total_pj().to_bits(),
+            cached.report.energy.total_pj().to_bits()
+        );
+        for (a, b) in uncached.per_replica.iter().zip(&cached.per_replica) {
+            assert_eq!(a.busy_ns, b.busy_ns);
+            assert_eq!(a.tokens_out, b.tokens_out);
+        }
     }
 
     #[test]

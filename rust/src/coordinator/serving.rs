@@ -9,10 +9,11 @@
 //! request mix with per-class SLOs. Either way a seeded run is
 //! bit-reproducible.
 
-use crate::arch::System;
-use crate::config::{Phase, RunConfig};
+use crate::arch::{CachedCostModel, CostModel, System};
+use crate::config::RunConfig;
 use crate::energy::EnergyBreakdown;
 use crate::sim::{EventQueue, OpCost};
+use crate::util::json::{Json, ToJson};
 use crate::util::stats::percentile;
 use crate::util::table::{fenergy_pj, ftime_ns, Table};
 use crate::util::XorShiftRng;
@@ -215,34 +216,6 @@ struct LoopState {
     tokens_out: u64,
 }
 
-/// Price one batching iteration on the architecture simulator: a chunk of
-/// prefill tokens (batch-of-1 prefill pass) composed with one decode step
-/// over `decode_batch` requests at KV length `max_kv`. Shared by the
-/// single-replica server and every cluster replica.
-pub(crate) fn iteration_cost(
-    rc: &RunConfig,
-    prefill_tokens: usize,
-    decode_batch: usize,
-    max_kv: usize,
-) -> OpCost {
-    let mut cost = OpCost::zero();
-    if prefill_tokens > 0 {
-        let mut prc = rc.clone();
-        prc.phase = Phase::Prefill;
-        prc.batch = 1;
-        prc.seq_len = prefill_tokens;
-        cost = cost.then(&System::new(prc).run().layer_cost_total());
-    }
-    if decode_batch > 0 {
-        let mut drc = rc.clone();
-        drc.phase = Phase::Decode;
-        drc.batch = decode_batch;
-        drc.seq_len = max_kv.max(1);
-        cost = cost.then(&System::new(drc).run().layer_cost_total());
-    }
-    cost
-}
-
 /// Aggregate loop counters a serving run hands to [`build_report`].
 pub(crate) struct RunTotals {
     pub makespan_ns: u64,
@@ -357,6 +330,7 @@ impl Server {
     /// Plan and cost one batching iteration; schedules its completion.
     fn step(
         &self,
+        cm: &dyn CostModel,
         batcher: &mut Batcher,
         q: &mut EventQueue<Event>,
         now: u64,
@@ -379,7 +353,7 @@ impl Server {
             return; // nothing schedulable this instant
         }
         let max_kv = batcher.active.iter().map(|s| s.kv_tokens()).max().unwrap_or(1);
-        let cost = iteration_cost(&self.rc, prefill_tokens, deciders, max_kv);
+        let cost = cm.iteration_cost(prefill_tokens, deciders, max_kv);
         let end = now + cost.latency_ns.max(1.0) as u64;
         st.total_cost = st.total_cost.then(&cost);
         batcher.advance_prefill(&plan, end);
@@ -393,8 +367,24 @@ impl Server {
         q.schedule_at(end, Event::IterationDone);
     }
 
-    /// Run the serving simulation to completion.
+    /// Run the serving simulation to completion. The loop drives a
+    /// [`CachedCostModel`], so every repeated iteration shape — chunked
+    /// prefill re-prices the same `(Prefill, 1, chunk)` pass on each
+    /// iteration of a long prompt — becomes a table lookup instead of an
+    /// op-graph lowering.
     pub fn run(&self) -> ServeReport {
+        let cm = CachedCostModel::new(System::new(self.rc.clone()));
+        self.run_with_model(&cm)
+    }
+
+    /// Run the loop against an explicit [`CostModel`] over the same
+    /// `RunConfig` — benchmarks compare cached vs uncached here, and the
+    /// golden tests assert the two are bit-identical.
+    pub fn run_with_model(&self, cm: &dyn CostModel) -> ServeReport {
+        // a mismatched model would label the report with one config while
+        // pricing every iteration on another — catch it early
+        debug_assert_eq!(cm.base().arch, self.rc.arch, "cost model arch != server arch");
+        debug_assert_eq!(cm.base().model.name, self.rc.model.name, "cost model != server model");
         let class_names = self.cfg.class_names();
         let mut rejected_by_class = vec![0u64; class_names.len()];
 
@@ -420,12 +410,12 @@ impl Server {
                         rejected_by_class[class] += 1;
                     }
                     if now >= st.busy_until {
-                        self.step(&mut batcher, &mut q, now, &mut st);
+                        self.step(cm, &mut batcher, &mut q, now, &mut st);
                     }
                 }
                 Event::IterationDone => {
                     st.iter_pending = false;
-                    self.step(&mut batcher, &mut q, now, &mut st);
+                    self.step(cm, &mut batcher, &mut q, now, &mut st);
                 }
             }
         }
@@ -489,10 +479,66 @@ pub fn render_summary(r: &ServeReport) -> String {
     out
 }
 
-impl crate::arch::PhaseReport {
-    /// Whole-pass cost (all layers) reconstructed from the report.
-    pub fn layer_cost_total(&self) -> OpCost {
-        OpCost { latency_ns: self.latency_ns, counts: self.layer_cost.counts }
+impl ToJson for ServeConfig {
+    fn to_json(&self) -> Json {
+        Json::obj()
+            .field("arrival_rate", self.arrival_rate)
+            .field("n_requests", self.n_requests)
+            .field("prompt_len", self.prompt_len)
+            .field("gen_len", self.gen_len)
+            .field("seed", self.seed)
+            .field("scenario", self.scenario.as_ref().map(|s| s.name))
+            .field("batcher", self.batcher.to_json())
+    }
+}
+
+impl ToJson for ClassReport {
+    fn to_json(&self) -> Json {
+        Json::obj()
+            .field("class", self.class.as_str())
+            .field("completed", self.completed)
+            .field("rejected", self.rejected)
+            .field("ttft_p50_ns", self.ttft_p50_ns)
+            .field("ttft_p99_ns", self.ttft_p99_ns)
+            .field("tpot_p50_ns", self.tpot_p50_ns)
+            .field("tpot_p99_ns", self.tpot_p99_ns)
+            .field("ttft_attainment", self.ttft_attainment)
+            .field("tpot_attainment", self.tpot_attainment)
+            .field("slo_attainment", self.slo_attainment)
+    }
+}
+
+impl ToJson for ServeReport {
+    fn to_json(&self) -> Json {
+        Json::obj()
+            .field("completed", self.completed)
+            .field("rejected", self.rejected)
+            .field("preempted", self.preempted)
+            .field("unserved", self.unserved)
+            .field("makespan_ns", self.makespan_ns)
+            .field("tokens_out", self.tokens_out)
+            .field("throughput_tok_s", self.throughput_tok_s)
+            .field("ttft_p50_ns", self.ttft_p50_ns)
+            .field("ttft_p99_ns", self.ttft_p99_ns)
+            .field("tpot_p50_ns", self.tpot_p50_ns)
+            .field("tpot_p99_ns", self.tpot_p99_ns)
+            .field("req_latency_p50_ns", self.req_latency_p50_ns)
+            .field("req_latency_p99_ns", self.req_latency_p99_ns)
+            .field("slo_attainment", self.slo_attainment)
+            .field("energy", self.energy.to_json())
+            .field("energy_per_token_pj", self.energy_per_token_pj)
+            .field("decode_iters", self.decode_iters)
+            .field("per_class", Json::arr(self.per_class.iter().map(|c| c.to_json())))
+    }
+}
+
+impl ToJson for ScenarioReport {
+    fn to_json(&self) -> Json {
+        Json::obj()
+            .field("scenario", self.scenario.as_str())
+            .field("arch", self.arch.as_str())
+            .field("model", self.model.as_str())
+            .field("report", self.report.to_json())
     }
 }
 
@@ -645,6 +691,30 @@ mod tests {
                 assert!(c.tpot_attainment.abs() < 1e-12);
             }
         }
+    }
+
+    #[test]
+    fn cached_cost_model_matches_uncached_bit_for_bit() {
+        let mut rc = RunConfig::new(ArchKind::CompAirOpt, ModelConfig::llama2_7b());
+        rc.tp = 8;
+        rc.devices = 32;
+        let cfg = ServeConfig {
+            n_requests: 12,
+            prompt_len: 128,
+            gen_len: 8,
+            ..Default::default()
+        };
+        let server = Server::new(rc.clone(), cfg);
+        let uncached = server.run_with_model(&System::new(rc));
+        let cached = server.run();
+        assert_eq!(uncached.makespan_ns, cached.makespan_ns);
+        assert_eq!(uncached.tokens_out, cached.tokens_out);
+        assert_eq!(uncached.decode_iters, cached.decode_iters);
+        assert_eq!(uncached.ttft_p99_ns.to_bits(), cached.ttft_p99_ns.to_bits());
+        assert_eq!(
+            uncached.energy.total_pj().to_bits(),
+            cached.energy.total_pj().to_bits()
+        );
     }
 
     #[test]

@@ -24,6 +24,7 @@
 
 use crate::config::SramConfig;
 use crate::sim::{CostCounts, OpCost};
+use crate::util::json::{Json, ToJson};
 
 /// Energy broken down by component (pJ).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -78,6 +79,22 @@ impl EnergyBreakdown {
             gpu_pj: self.gpu_pj * k,
             static_pj: self.static_pj * k,
         }
+    }
+}
+
+impl ToJson for EnergyBreakdown {
+    fn to_json(&self) -> Json {
+        Json::obj()
+            .field("dram_pj", self.dram_pj)
+            .field("sram_pj", self.sram_pj)
+            .field("hb_pj", self.hb_pj)
+            .field("noc_pj", self.noc_pj)
+            .field("gb_pj", self.gb_pj)
+            .field("cxl_pj", self.cxl_pj)
+            .field("nlu_pj", self.nlu_pj)
+            .field("gpu_pj", self.gpu_pj)
+            .field("static_pj", self.static_pj)
+            .field("total_pj", self.total_pj())
     }
 }
 

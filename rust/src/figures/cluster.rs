@@ -4,16 +4,17 @@
 //! literature (Sangam, HPIM) runs — placement and phase separation on a
 //! CXL switch — layered over the paper's per-device model.
 
+use crate::api::Engine;
 use crate::config::{ArchKind, ModelConfig, RunConfig};
-use crate::coordinator::{run_cluster_scenario, ClusterConfig, RouterPolicy};
+use crate::coordinator::{ClusterConfig, RouterPolicy};
 use crate::util::table::{fbytes, fenergy_pj, fnum, ftime_ns, Table};
 use crate::workload::Scenario;
 
-fn rc() -> RunConfig {
+fn engine() -> Engine {
     let mut rc = RunConfig::new(ArchKind::CompAirOpt, ModelConfig::llama2_7b());
     rc.tp = 8;
     rc.devices = 32;
-    rc
+    Engine::new(rc)
 }
 
 /// Colocated vs disaggregated serving across all scenarios and replica
@@ -43,7 +44,7 @@ pub fn cluster() -> String {
                     Some((p, d)) => format!("disagg {p}:{d}"),
                     None => "colocated".to_string(),
                 };
-                let r = run_cluster_scenario(rc(), sc.clone(), n, 42, cfg).cluster;
+                let r = engine().cluster_scenario(sc.clone(), n, 42, cfg).cluster;
                 t.rowv(vec![
                     name.to_string(),
                     replicas.to_string(),

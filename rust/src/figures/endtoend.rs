@@ -1,7 +1,7 @@
 //! End-to-end evaluation figures: Fig 15 (vs CENT & AttAcc), Fig 16 (decode
 //! ablation), Fig 17 (prefill), Fig 18 (TP), Fig 19 (long context).
 
-use crate::arch::{attacc, simulate, AttAccConfig};
+use crate::api::Engine;
 use crate::config::{ArchKind, ModelConfig, Phase, RunConfig};
 use crate::util::table::{fenergy_pj, fnum, ftime_ns, fx, Table};
 
@@ -27,7 +27,7 @@ pub fn fig15() -> String {
         c.seq_len = 128 * 1024;
         c.tp = 8;
         c.devices = devices;
-        let r = simulate(c);
+        let r = Engine::new(c).simulate();
         t.rowv(vec![
             arch.label().into(),
             devices.to_string(),
@@ -40,7 +40,7 @@ pub fn fig15() -> String {
     let mut c = rc(ArchKind::AttAcc, ModelConfig::gpt3_175b());
     c.batch = 64;
     c.seq_len = 4096;
-    let r = attacc::simulate(&c, &AttAccConfig::default());
+    let r = Engine::new(c).simulate();
     t.rowv(vec![
         "AttAcc-4-A100-HBM (4K ctx)".into(),
         "4+4".into(),
@@ -53,7 +53,7 @@ pub fn fig15() -> String {
     c2.batch = 64;
     c2.seq_len = 4096;
     c2.devices = 96;
-    let r2 = simulate(c2);
+    let r2 = Engine::new(c2).simulate();
     t.rowv(vec![
         "CompAir_Opt (4K ctx, 96dev)".into(),
         "96".into(),
@@ -86,7 +86,7 @@ pub fn fig16() -> String {
                     let mut c = rc(arch, model.clone());
                     c.batch = batch;
                     c.seq_len = seq;
-                    let r = simulate(c);
+                    let r = Engine::new(c).simulate();
                     thr.push(r.throughput_tok_s);
                     row.push(fnum(r.throughput_tok_s));
                 }
@@ -112,7 +112,7 @@ pub fn fig17() -> String {
             c.phase = Phase::Prefill;
             c.batch = 1;
             c.seq_len = 512;
-            simulate(c).latency_ns
+            Engine::new(c).simulate().latency_ns
         };
         let cent = run(ArchKind::Cent);
         let base = run(ArchKind::CompAirBase);
@@ -143,8 +143,8 @@ pub fn fig18() -> String {
         let mut b = a.clone();
         b.arch = ArchKind::CompAirOpt;
         b.hw = crate::config::HwConfig::paper_opt();
-        let ra = simulate(a);
-        let rb = simulate(b);
+        let ra = Engine::new(a).simulate();
+        let rb = Engine::new(b).simulate();
         t.rowv(vec![
             tp.to_string(),
             format!("{:.1}%", rb.bank_util * 100.0),
@@ -170,7 +170,7 @@ pub fn fig19() -> String {
             c.batch = 16;
             c.seq_len = 128 * 1024;
             c.gen_len = 8192;
-            let r = simulate(c);
+            let r = Engine::new(c).simulate();
             results.push((arch, r));
         }
         let base = results[0].1.latency_ns;

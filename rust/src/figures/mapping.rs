@@ -65,8 +65,8 @@ pub fn fig9() -> String {
         let mut opt = base.clone();
         opt.arch = ArchKind::CompAirOpt;
         opt.hw.dram.column_decoder = ColumnDecoder::Decoupled8and4;
-        let tb = crate::arch::simulate(base).latency_ns;
-        let to = crate::arch::simulate(opt).latency_ns;
+        let tb = crate::api::Engine::new(base).simulate().latency_ns;
+        let to = crate::api::Engine::new(opt).simulate().latency_ns;
         t.rowv(vec![
             format!("{phase:?}"),
             batch.to_string(),

@@ -82,7 +82,7 @@ pub fn fig5() -> String {
         let mut rc = RunConfig::new(ArchKind::Cent, ModelConfig::llama2_7b());
         rc.batch = 16;
         rc.seq_len = seq;
-        let r = crate::arch::simulate(rc);
+        let r = crate::api::Engine::new(rc).simulate();
         t.rowv(vec![
             seq.to_string(),
             fnum(r.layer_cost.latency_ns / 1e3),

@@ -4,16 +4,16 @@
 //! paper's fixed-shape end-to-end tables toward the trace-driven,
 //! SLO-reporting evaluation style of the PIM-serving literature.
 
+use crate::api::Engine;
 use crate::config::{ArchKind, ModelConfig, RunConfig};
-use crate::coordinator::run_scenario;
 use crate::util::table::{fenergy_pj, fnum, ftime_ns, Table};
 use crate::workload::Scenario;
 
-fn rc(arch: ArchKind) -> RunConfig {
+fn engine(arch: ArchKind) -> Engine {
     let mut rc = RunConfig::new(arch, ModelConfig::llama2_7b());
     rc.tp = 8;
     rc.devices = 32;
-    rc
+    Engine::new(rc)
 }
 
 /// Scenario sweep: every named scenario served on CompAir_Opt
@@ -31,7 +31,7 @@ pub fn scenarios() -> String {
         // cap request counts so full-figure regeneration stays fast
         let name = sc.name;
         let n = sc.default_requests.min(32);
-        let r = run_scenario(rc(ArchKind::CompAirOpt), sc, n, 42).report;
+        let r = engine(ArchKind::CompAirOpt).serve_scenario(sc, n, 42).report;
         t.rowv(vec![
             name.to_string(),
             r.completed.to_string(),
@@ -62,7 +62,7 @@ pub fn scenario_archs() -> String {
         ArchKind::CompAirBase,
         ArchKind::CompAirOpt,
     ] {
-        let r = run_scenario(rc(arch), sc.clone(), 32, 42).report;
+        let r = engine(arch).serve_scenario(sc.clone(), 32, 42).report;
         t.rowv(vec![
             arch.label().to_string(),
             ftime_ns(r.makespan_ns as f64),

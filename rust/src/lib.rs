@@ -10,6 +10,14 @@
 //!
 //! See README.md for the module map and docs/ARCHITECTURE.md for the
 //! module-to-paper mapping and the request-lifecycle walkthrough.
+//!
+//! The public API funnels through two layers (see docs/ARCHITECTURE.md
+//! §"API surface"): the [`arch::CostModel`] trait prices workload shapes on
+//! one hardware point (with [`arch::CachedCostModel`] memoizing the serving
+//! hot path), and the [`Engine`] facade dispatches every evaluation mode —
+//! one-shot simulation, serving, cluster runs — returning report structs
+//! that serialize via [`util::json::ToJson`].
+pub mod api;
 pub mod arch;
 pub mod cli;
 pub mod config;
@@ -24,3 +32,5 @@ pub mod dram;
 pub mod sim;
 pub mod sram;
 pub mod util;
+
+pub use api::Engine;

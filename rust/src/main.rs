@@ -1,16 +1,17 @@
 //! The `compair` launcher: figure regeneration, one-shot simulation,
-//! serving simulation, and the hierarchical-ISA demo.
+//! serving simulation, and the hierarchical-ISA demo — all through the
+//! [`Engine`] facade, with `--format json` emitting machine-readable
+//! reports on every subcommand.
 
-use compair::arch;
-use compair::cli::{Args, USAGE};
+use compair::cli::{Args, OutputFormat, USAGE};
 use compair::config::{ArchKind, ModelConfig, Phase, RunConfig};
-use compair::coordinator::{
-    cluster, serving, Cluster, ClusterConfig, RouterPolicy, ServeConfig, Server,
-};
+use compair::coordinator::{cluster, serving, ClusterConfig, RouterPolicy, ServeConfig};
 use compair::figures;
 use compair::isa::{Machine, RowProgram};
+use compair::util::json::{Json, ToJson};
 use compair::util::table::{fenergy_pj, fnum, ftime_ns, Table};
 use compair::workload::Scenario;
+use compair::Engine;
 
 fn main() {
     let args = match Args::parse(std::env::args().skip(1)) {
@@ -25,26 +26,8 @@ fn main() {
         "simulate" => cmd_simulate(&args),
         "serve" => cmd_serve(&args),
         "isa-demo" => cmd_isa_demo(&args),
-        "config" => {
-            println!("{}", figures::table3());
-            Ok(())
-        }
-        "list" => {
-            println!("figures:");
-            for (n, _) in figures::registry() {
-                println!("  {n}");
-            }
-            println!("models:");
-            for m in ModelConfig::zoo() {
-                println!("  {}", m.name);
-            }
-            println!("archs: cent cent-curry compair-base compair-opt");
-            println!("scenarios:");
-            for s in Scenario::all() {
-                println!("  {:<13} {}", s.name, s.description);
-            }
-            Ok(())
-        }
+        "config" => cmd_config(&args),
+        "list" => cmd_list(&args),
         "" | "help" | "-h" => {
             println!("{USAGE}");
             Ok(())
@@ -58,15 +41,37 @@ fn main() {
 }
 
 fn cmd_figures(args: &Args) -> Result<(), String> {
+    let format = args.format()?;
+    let registry = figures::registry();
     let names: Vec<String> = if args.has("all") || args.positional.is_empty() {
-        figures::registry().iter().map(|(n, _)| n.to_string()).collect()
+        registry.iter().map(|(n, _)| n.to_string()).collect()
     } else {
         args.positional.clone()
     };
-    for n in names {
-        match figures::run(&n) {
-            Some(s) => println!("{s}"),
-            None => return Err(format!("unknown figure '{n}' (see `compair list`)")),
+    // validate up front so a typo errors before any table is computed
+    for n in &names {
+        if !registry.iter().any(|(id, _)| *id == n.as_str()) {
+            return Err(format!("unknown figure '{n}' (see `compair list`)"));
+        }
+    }
+    match format {
+        // stream: the scenario/cluster tables each run full serving sims,
+        // so print each as it completes
+        OutputFormat::Text => {
+            for n in &names {
+                println!("{}", figures::run(n).expect("validated above"));
+            }
+        }
+        // figure tables are text artifacts by design (diffable in CI);
+        // their JSON carries the id + rendered rows
+        OutputFormat::Json => {
+            let arr = Json::arr(names.iter().map(|n| {
+                Json::obj()
+                    .field("figure", n.as_str())
+                    .field("output", figures::run(n).expect("validated above"))
+            }));
+            let doc = Json::obj().field("command", "figures").field("figures", arr);
+            println!("{}", doc.render());
         }
     }
     Ok(())
@@ -97,7 +102,18 @@ fn build_rc(args: &Args) -> Result<RunConfig, String> {
 }
 
 fn cmd_simulate(args: &Args) -> Result<(), String> {
-    let rc = build_rc(args)?;
+    let format = args.format()?;
+    let engine = Engine::new(build_rc(args)?);
+    let r = engine.simulate();
+    if format == OutputFormat::Json {
+        let doc = Json::obj()
+            .field("command", "simulate")
+            .field("config", engine.rc().to_json())
+            .field("report", r.to_json());
+        println!("{}", doc.render());
+        return Ok(());
+    }
+    let rc = engine.rc();
     let label = format!(
         "{} | {} | {:?} batch={} seqlen={} tp={} devices={}",
         rc.arch.label(),
@@ -108,7 +124,6 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
         rc.tp,
         rc.devices
     );
-    let r = arch::simulate(rc);
     println!("== simulate: {label} ==");
     println!("latency:            {}", ftime_ns(r.latency_ns));
     println!("throughput:         {} tok/s", fnum(r.throughput_tok_s));
@@ -178,7 +193,15 @@ fn parse_cluster_flags(args: &Args) -> Result<Option<ClusterConfig>, String> {
 }
 
 fn cmd_serve(args: &Args) -> Result<(), String> {
-    let rc = build_rc(args)?;
+    let format = args.format()?;
+    let engine = Engine::new(build_rc(args)?);
+    if engine.rc().arch == ArchKind::AttAcc {
+        return Err(
+            "serve does not support --arch attacc: the AttAcc roofline baseline has no \
+             PIM-fabric serving model (use `simulate --arch attacc`)"
+                .into(),
+        );
+    }
     let seed = args.flag_usize("seed", 42)? as u64;
     let cluster_cfg = parse_cluster_flags(args)?;
 
@@ -205,20 +228,34 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         (cfg, label, None)
     };
 
+    if format == OutputFormat::Json {
+        let doc = Json::obj()
+            .field("command", "serve")
+            .field("config", engine.rc().to_json())
+            .field("serve", cfg.to_json());
+        let doc = match cluster_cfg {
+            Some(ccfg) => doc.field("cluster", engine.cluster(cfg, ccfg).to_json()),
+            None => doc.field("report", engine.serve(cfg).to_json()),
+        };
+        println!("{}", doc.render());
+        return Ok(());
+    }
+
+    let rc = engine.rc();
     println!("== serve: {} {} {} ==", rc.arch.label(), rc.model.name, label);
     if let Some(d) = desc {
         println!("   {d}");
     }
     match cluster_cfg {
         Some(ccfg) => {
-            let r = Cluster::new(rc, cfg, ccfg).run();
+            let r = engine.cluster(cfg, ccfg);
             print!("{}", cluster::render_cluster_summary(&r));
             r.replica_table().print();
             r.report.class_table("per-class SLO report").print();
         }
         None => {
             let scenario_mode = cfg.scenario.is_some();
-            let r = Server::new(rc, cfg).run();
+            let r = engine.serve(cfg);
             print!("{}", serving::render_summary(&r));
             if scenario_mode {
                 r.class_table("per-class SLO report").print();
@@ -229,10 +266,10 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
 }
 
 fn cmd_isa_demo(args: &Args) -> Result<(), String> {
+    let format = args.format()?;
     let len = args.flag_usize("len", 8)?;
     let rounds = args.flag_usize("rounds", 6)? as u32;
     let hw = compair::config::HwConfig::paper();
-    println!("== hierarchical-ISA demo: exp over {len} scalars, {rounds} Horner rounds ==");
     let xs: Vec<f32> = (0..len).map(|i| -1.0 + 2.0 * i as f32 / len as f32).collect();
     let run = |fuse: bool| {
         let mut m = Machine::new(&hw, compair::config::SramGang::In256Out16);
@@ -243,6 +280,26 @@ fn cmd_isa_demo(args: &Args) -> Result<(), String> {
     };
     let (vals, fused) = run(true);
     let (_, base) = run(false);
+    let saving = 1.0 - fused.latency_ns / base.latency_ns;
+    if format == OutputFormat::Json {
+        let rows = Json::arr(xs.iter().enumerate().map(|(i, &x)| {
+            Json::obj()
+                .field("x", x as f64)
+                .field("noc_exp", vals[i] as f64)
+                .field("true_exp", (x as f64).exp())
+        }));
+        let doc = Json::obj()
+            .field("command", "isa-demo")
+            .field("len", len)
+            .field("rounds", rounds as u64)
+            .field("results", rows)
+            .field("fused", fused.to_json())
+            .field("unfused", base.to_json())
+            .field("path_generation_saving", saving);
+        println!("{}", doc.render());
+        return Ok(());
+    }
+    println!("== hierarchical-ISA demo: exp over {len} scalars, {rounds} Horner rounds ==");
     let mut t = Table::new("results", &["x", "noc exp(x)", "true exp(x)"]);
     for (i, &x) in xs.iter().enumerate() {
         t.rowv(vec![fnum(x as f64), fnum(vals[i] as f64), fnum((x as f64).exp())]);
@@ -252,7 +309,58 @@ fn cmd_isa_demo(args: &Args) -> Result<(), String> {
         "fused: {}   unfused: {}   path-generation saving: {:.0}%",
         ftime_ns(fused.latency_ns),
         ftime_ns(base.latency_ns),
-        (1.0 - fused.latency_ns / base.latency_ns) * 100.0
+        saving * 100.0
     );
+    Ok(())
+}
+
+fn cmd_config(args: &Args) -> Result<(), String> {
+    let table = figures::table3();
+    match args.format()? {
+        OutputFormat::Text => println!("{table}"),
+        OutputFormat::Json => {
+            let doc = Json::obj().field("command", "config").field("output", table);
+            println!("{}", doc.render());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_list(args: &Args) -> Result<(), String> {
+    let archs: Vec<&'static str> = ArchKind::all().iter().map(|a| a.cli_name()).collect();
+    match args.format()? {
+        OutputFormat::Text => {
+            println!("figures:");
+            for (n, _) in figures::registry() {
+                println!("  {n}");
+            }
+            println!("models:");
+            for m in ModelConfig::zoo() {
+                println!("  {}", m.name);
+            }
+            println!("archs: {}", archs.join(" "));
+            println!("scenarios:");
+            for s in Scenario::all() {
+                println!("  {:<13} {}", s.name, s.description);
+            }
+        }
+        OutputFormat::Json => {
+            let doc = Json::obj()
+                .field("command", "list")
+                .field(
+                    "figures",
+                    Json::arr(figures::registry().iter().map(|(n, _)| Json::from(*n))),
+                )
+                .field("models", Json::arr(ModelConfig::zoo().iter().map(|m| Json::from(m.name))))
+                .field("archs", Json::arr(archs.iter().map(|a| Json::from(*a))))
+                .field(
+                    "scenarios",
+                    Json::arr(Scenario::all().into_iter().map(|s| {
+                        Json::obj().field("name", s.name).field("description", s.description)
+                    })),
+                );
+            println!("{}", doc.render());
+        }
+    }
     Ok(())
 }

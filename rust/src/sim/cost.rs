@@ -5,6 +5,8 @@
 //! prices counts into pJ separately. Costs compose with serial/parallel
 //! combinators, mirroring how the mapper composes hardware phases.
 
+use crate::util::json::{Json, ToJson};
+
 /// Raw event counts accumulated during an operation.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct CostCounts {
@@ -107,6 +109,27 @@ impl CostCounts {
     }
 }
 
+impl ToJson for CostCounts {
+    fn to_json(&self) -> Json {
+        Json::obj()
+            .field("dram_act", self.dram_act)
+            .field("dram_col_rd", self.dram_col_rd)
+            .field("dram_col_wr", self.dram_col_wr)
+            .field("dram_mac", self.dram_mac)
+            .field("sram_access", self.sram_access)
+            .field("sram_mac", self.sram_mac)
+            .field("sram_row_write", self.sram_row_write)
+            .field("hb_bytes", self.hb_bytes)
+            .field("noc_flit_hops", self.noc_flit_hops)
+            .field("noc_alu_ops", self.noc_alu_ops)
+            .field("gb_bytes", self.gb_bytes)
+            .field("cxl_bytes", self.cxl_bytes)
+            .field("nlu_ops", self.nlu_ops)
+            .field("gpu_flop", self.gpu_flop)
+            .field("gpu_hbm_bytes", self.gpu_hbm_bytes)
+    }
+}
+
 /// Latency + counts of one operation (or composed phase).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct OpCost {
@@ -152,6 +175,12 @@ impl OpCost {
 
     pub fn parallel_all<I: IntoIterator<Item = OpCost>>(items: I) -> OpCost {
         items.into_iter().fold(OpCost::zero(), |a, b| a.join(&b))
+    }
+}
+
+impl ToJson for OpCost {
+    fn to_json(&self) -> Json {
+        Json::obj().field("latency_ns", self.latency_ns).field("counts", self.counts.to_json())
     }
 }
 

@@ -7,6 +7,7 @@
 
 use std::time::{Duration, Instant};
 
+use super::json::{Json, ToJson};
 use super::stats::Stream;
 
 /// One benchmark result.
@@ -31,6 +32,28 @@ impl BenchResult {
             super::table::ftime_ns(self.max_ns),
             self.iters,
         )
+    }
+
+    /// Mean iterations per second (the `BENCH_*.json` trajectory metric).
+    pub fn iters_per_s(&self) -> f64 {
+        if self.mean_ns > 0.0 {
+            1e9 / self.mean_ns
+        } else {
+            0.0
+        }
+    }
+}
+
+impl ToJson for BenchResult {
+    fn to_json(&self) -> Json {
+        Json::obj()
+            .field("name", self.name.as_str())
+            .field("iters", self.iters)
+            .field("mean_ns", self.mean_ns)
+            .field("stddev_ns", self.stddev_ns)
+            .field("min_ns", self.min_ns)
+            .field("max_ns", self.max_ns)
+            .field("iters_per_s", self.iters_per_s())
     }
 }
 
@@ -103,6 +126,12 @@ impl Bencher {
     pub fn results(&self) -> &[BenchResult] {
         &self.results
     }
+
+    /// All results accumulated so far as a JSON array (for the
+    /// `BENCH_*.json` perf-trajectory artifacts).
+    pub fn results_json(&self) -> Json {
+        Json::arr(self.results.iter().map(|r| r.to_json()))
+    }
 }
 
 /// Prevent the optimizer from discarding a computed value.
@@ -133,5 +162,28 @@ mod tests {
     #[test]
     fn sink_returns_value() {
         assert_eq!(sink(42), 42);
+    }
+
+    #[test]
+    fn results_serialize_to_json() {
+        let mut b = Bencher::new(Duration::from_millis(5), Duration::from_millis(20));
+        b.bench("j", || 2u64 * 3);
+        let s = b.results_json().render();
+        assert!(s.starts_with('['));
+        assert!(s.contains("\"name\":\"j\""));
+        assert!(s.contains("\"iters_per_s\":"));
+    }
+
+    #[test]
+    fn iters_per_s_inverts_mean() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            mean_ns: 2e9,
+            stddev_ns: 0.0,
+            min_ns: 0.0,
+            max_ns: 0.0,
+        };
+        assert!((r.iters_per_s() - 0.5).abs() < 1e-12);
     }
 }

@@ -1,0 +1,247 @@
+//! A small hand-rolled JSON writer for machine-readable reports.
+//!
+//! No serde is vendored offline, so — mirroring the TOML-subset reader in
+//! `config/toml.rs` — the crate carries its own writer. It is write-only:
+//! every report type implements [`ToJson`] and the CLI's `--format json`
+//! path renders the resulting [`Json`] tree. Output is compact (single
+//! line), strings are escaped per RFC 8259, object keys keep insertion
+//! order so reports diff stably, and non-finite floats serialize as
+//! `null` (JSON has no NaN/Infinity).
+
+use std::fmt::Write as _;
+
+/// A JSON value tree, built bottom-up by [`ToJson`] implementations.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    /// Integral numbers (counters, ids, token counts).
+    Int(i64),
+    /// Floating-point numbers; non-finite values render as `null`.
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    /// Fields in insertion order (stable, diffable output).
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// An empty object, to be extended with [`Json::field`].
+    pub fn obj() -> Json {
+        Json::Obj(Vec::new())
+    }
+
+    /// Collect an iterator of values into a JSON array.
+    pub fn arr<I: IntoIterator<Item = Json>>(items: I) -> Json {
+        Json::Arr(items.into_iter().collect())
+    }
+
+    /// Builder-style field append; panics when called on a non-object
+    /// (that is a programming error, not an input error).
+    pub fn field(mut self, key: &str, value: impl Into<Json>) -> Json {
+        match &mut self {
+            Json::Obj(fields) => fields.push((key.to_string(), value.into())),
+            other => panic!("Json::field on non-object {other:?}"),
+        }
+        self
+    }
+
+    /// Render the tree to a compact JSON string.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Int(i) => {
+                let _ = write!(out, "{i}");
+            }
+            // Rust's f64 Display never emits exponent notation or locale
+            // separators, so the digits are valid JSON as-is.
+            Json::Num(x) if x.is_finite() => {
+                let _ = write!(out, "{x}");
+            }
+            Json::Num(_) => out.push_str("null"),
+            Json::Str(s) => write_escaped(out, s),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                out.push('{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(out, k);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn write_escaped(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+impl From<bool> for Json {
+    fn from(v: bool) -> Json {
+        Json::Bool(v)
+    }
+}
+
+impl From<i64> for Json {
+    fn from(v: i64) -> Json {
+        Json::Int(v)
+    }
+}
+
+// Counters in this crate (ns timestamps, token/byte counts) stay far below
+// i64::MAX; the cast is lossless for every value the simulators produce.
+impl From<u64> for Json {
+    fn from(v: u64) -> Json {
+        Json::Int(v as i64)
+    }
+}
+
+impl From<usize> for Json {
+    fn from(v: usize) -> Json {
+        Json::Int(v as i64)
+    }
+}
+
+impl From<f64> for Json {
+    fn from(v: f64) -> Json {
+        Json::Num(v)
+    }
+}
+
+impl From<&str> for Json {
+    fn from(v: &str) -> Json {
+        Json::Str(v.to_string())
+    }
+}
+
+impl From<String> for Json {
+    fn from(v: String) -> Json {
+        Json::Str(v)
+    }
+}
+
+impl From<Vec<Json>> for Json {
+    fn from(v: Vec<Json>) -> Json {
+        Json::Arr(v)
+    }
+}
+
+impl<T: Into<Json>> From<Option<T>> for Json {
+    fn from(v: Option<T>) -> Json {
+        match v {
+            Some(x) => x.into(),
+            None => Json::Null,
+        }
+    }
+}
+
+/// Machine-readable serialization: every report struct the `Engine`
+/// returns implements this, and the CLI's `--format json` renders it.
+pub trait ToJson {
+    fn to_json(&self) -> Json;
+
+    /// Convenience: render directly to a compact JSON string.
+    fn to_json_string(&self) -> String {
+        self.to_json().render()
+    }
+}
+
+impl ToJson for Json {
+    fn to_json(&self) -> Json {
+        self.clone()
+    }
+}
+
+/// Write a JSON tree to a file with a trailing newline (used for the
+/// `BENCH_*.json` perf-trajectory artifacts).
+pub fn write_json_file(path: &std::path::Path, json: &Json) -> std::io::Result<()> {
+    std::fs::write(path, json.render() + "\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_render() {
+        assert_eq!(Json::Null.render(), "null");
+        assert_eq!(Json::Bool(true).render(), "true");
+        assert_eq!(Json::Int(-3).render(), "-3");
+        assert_eq!(Json::Num(1.5).render(), "1.5");
+        assert_eq!(Json::Num(2.0).render(), "2");
+        assert_eq!(Json::from("hi").render(), "\"hi\"");
+    }
+
+    #[test]
+    fn non_finite_floats_become_null() {
+        assert_eq!(Json::Num(f64::NAN).render(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).render(), "null");
+        assert_eq!(Json::Num(f64::NEG_INFINITY).render(), "null");
+    }
+
+    #[test]
+    fn strings_are_escaped() {
+        let s = Json::from("a\"b\\c\nd\te\u{1}").render();
+        assert_eq!(s, "\"a\\\"b\\\\c\\nd\\te\\u0001\"");
+    }
+
+    #[test]
+    fn objects_keep_insertion_order() {
+        let j = Json::obj().field("z", 1u64).field("a", "x").field("n", Json::Null);
+        assert_eq!(j.render(), "{\"z\":1,\"a\":\"x\",\"n\":null}");
+    }
+
+    #[test]
+    fn arrays_and_nesting() {
+        let j = Json::arr([Json::Int(1), Json::obj().field("k", Json::arr([Json::Bool(false)]))]);
+        assert_eq!(j.render(), "[1,{\"k\":[false]}]");
+    }
+
+    #[test]
+    fn option_maps_to_null() {
+        let none: Option<&str> = None;
+        assert_eq!(Json::obj().field("v", none).render(), "{\"v\":null}");
+        assert_eq!(Json::obj().field("v", Some("x")).render(), "{\"v\":\"x\"}");
+    }
+
+    #[test]
+    #[should_panic(expected = "non-object")]
+    fn field_on_scalar_panics() {
+        let _ = Json::Int(1).field("k", 2u64);
+    }
+}

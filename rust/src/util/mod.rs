@@ -1,10 +1,13 @@
-//! Small self-contained utilities (PRNG, stats, tables, bench/prop harnesses,
-//! BF16 rounding). Nothing here depends on the rest of the library.
+//! Small self-contained utilities (PRNG, stats, tables, JSON writer,
+//! bench/prop harnesses, BF16 rounding). Nothing here depends on the rest
+//! of the library.
 pub mod bench;
 pub mod bf16;
+pub mod json;
 pub mod prop;
 pub mod rng;
 pub mod stats;
 pub mod table;
 
+pub use json::{Json, ToJson};
 pub use rng::XorShiftRng;

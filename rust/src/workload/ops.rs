@@ -13,6 +13,18 @@ pub enum OpClass {
     Collective,
 }
 
+impl OpClass {
+    /// Stable lowercase label (used by the JSON report serialization).
+    pub fn label(&self) -> &'static str {
+        match self {
+            OpClass::Fc => "fc",
+            OpClass::Attention => "attention",
+            OpClass::NonLinear => "nonlinear",
+            OpClass::Collective => "collective",
+        }
+    }
+}
+
 /// One operator instance with concrete shapes.
 #[derive(Debug, Clone, PartialEq)]
 pub enum LlmOp {

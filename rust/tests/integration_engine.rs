@@ -1,0 +1,280 @@
+//! Golden API-equivalence tests for the `Engine` + `CostModel` redesign:
+//! the new facade must reproduce the exact pre-refactor numbers, and the
+//! memoizing `CachedCostModel` must be bit-for-bit identical to driving
+//! the `System` simulator uncached.
+
+use compair::arch::{attacc, simulate, AttAccConfig, CachedCostModel, CostModel, System};
+use compair::config::{ArchKind, ModelConfig, Phase, RunConfig};
+use compair::coordinator::{Cluster, ClusterConfig, RouterPolicy, ServeConfig, Server};
+use compair::util::json::ToJson;
+use compair::workload::Scenario;
+use compair::Engine;
+
+fn rc(arch: ArchKind) -> RunConfig {
+    let mut rc = RunConfig::new(arch, ModelConfig::llama2_7b());
+    rc.batch = 16;
+    rc.seq_len = 4096;
+    rc.tp = 8;
+    rc.devices = 32;
+    rc
+}
+
+fn assert_phase_reports_identical(a: &compair::arch::PhaseReport, b: &compair::arch::PhaseReport) {
+    assert_eq!(a.latency_ns.to_bits(), b.latency_ns.to_bits());
+    assert_eq!(a.throughput_tok_s.to_bits(), b.throughput_tok_s.to_bits());
+    assert_eq!(a.nonlinear_frac.to_bits(), b.nonlinear_frac.to_bits());
+    assert_eq!(a.collective_frac.to_bits(), b.collective_frac.to_bits());
+    assert_eq!(a.bank_util.to_bits(), b.bank_util.to_bits());
+    assert_eq!(a.energy.total_pj().to_bits(), b.energy.total_pj().to_bits());
+    assert_eq!(a.layer_cost, b.layer_cost);
+    assert_eq!(a.ops.len(), b.ops.len());
+    for (x, y) in a.ops.iter().zip(&b.ops) {
+        assert_eq!(x.name, y.name);
+        assert_eq!(x.cost, y.cost);
+    }
+}
+
+#[test]
+fn engine_simulate_reproduces_legacy_numbers_for_all_five_pim_archs() {
+    for arch in [
+        ArchKind::Cent,
+        ArchKind::CentCurry,
+        ArchKind::CompAirBase,
+        ArchKind::CompAirOpt,
+        ArchKind::SramStack,
+    ] {
+        let legacy = simulate(rc(arch));
+        let engine = Engine::new(rc(arch)).simulate();
+        assert_phase_reports_identical(&legacy, &engine);
+    }
+}
+
+#[test]
+fn engine_simulate_reproduces_attacc_roofline() {
+    let c = rc(ArchKind::AttAcc);
+    let legacy = attacc::simulate(&c, &AttAccConfig::default());
+    let engine = Engine::new(c).simulate();
+    assert_phase_reports_identical(&legacy, &engine);
+}
+
+#[test]
+fn cached_cost_model_is_bit_identical_and_actually_caches() {
+    let sys = System::new(rc(ArchKind::CompAirOpt));
+    let cached = CachedCostModel::new(System::new(rc(ArchKind::CompAirOpt)));
+    let shapes = [
+        (Phase::Decode, 16usize, 4096usize),
+        (Phase::Prefill, 1, 512),
+        (Phase::Decode, 16, 4096), // repeat → hit
+        (Phase::Decode, 1, 1),
+    ];
+    for (phase, batch, seq) in shapes {
+        let a = sys.phase_report(phase, batch, seq);
+        let b = cached.phase_report(phase, batch, seq);
+        assert_phase_reports_identical(&a, &b);
+    }
+    let st = cached.stats();
+    assert!(st.hits >= 1, "repeated shape must hit the cache");
+    assert_eq!(st.misses, 3, "three distinct shapes were priced");
+    // iteration-level cache too
+    let i1 = cached.iteration_cost(256, 8, 2048);
+    let i2 = cached.iteration_cost(256, 8, 2048);
+    assert_eq!(i1, i2);
+    assert_eq!(sys.iteration_cost(256, 8, 2048), i1);
+}
+
+#[test]
+fn serve_scenario_golden_cached_equals_uncached() {
+    // one `serve --scenario` run: same seed → identical report fields
+    let cfg = ServeConfig {
+        n_requests: 16,
+        seed: 42,
+        scenario: Some(Scenario::by_name("chat").unwrap()),
+        ..Default::default()
+    };
+    let server = Server::new(rc(ArchKind::CompAirOpt), cfg.clone());
+    let uncached = server.run_with_model(&System::new(rc(ArchKind::CompAirOpt)));
+    let cached = server.run();
+    let engine = Engine::new(rc(ArchKind::CompAirOpt)).serve(cfg);
+
+    for r in [&cached, &engine] {
+        assert_eq!(uncached.completed, r.completed);
+        assert_eq!(uncached.rejected, r.rejected);
+        assert_eq!(uncached.preempted, r.preempted);
+        assert_eq!(uncached.unserved, r.unserved);
+        assert_eq!(uncached.makespan_ns, r.makespan_ns);
+        assert_eq!(uncached.tokens_out, r.tokens_out);
+        assert_eq!(uncached.decode_iters, r.decode_iters);
+        assert_eq!(uncached.throughput_tok_s.to_bits(), r.throughput_tok_s.to_bits());
+        assert_eq!(uncached.ttft_p50_ns.to_bits(), r.ttft_p50_ns.to_bits());
+        assert_eq!(uncached.ttft_p99_ns.to_bits(), r.ttft_p99_ns.to_bits());
+        assert_eq!(uncached.tpot_p50_ns.to_bits(), r.tpot_p50_ns.to_bits());
+        assert_eq!(uncached.tpot_p99_ns.to_bits(), r.tpot_p99_ns.to_bits());
+        assert_eq!(uncached.slo_attainment.to_bits(), r.slo_attainment.to_bits());
+        assert_eq!(uncached.energy.total_pj().to_bits(), r.energy.total_pj().to_bits());
+        assert_eq!(uncached.energy_per_token_pj.to_bits(), r.energy_per_token_pj.to_bits());
+        assert_eq!(uncached.per_class.len(), r.per_class.len());
+        for (a, b) in uncached.per_class.iter().zip(&r.per_class) {
+            assert_eq!(a.class, b.class);
+            assert_eq!(a.completed, b.completed);
+            assert_eq!(a.ttft_p99_ns.to_bits(), b.ttft_p99_ns.to_bits());
+            assert_eq!(a.slo_attainment.to_bits(), b.slo_attainment.to_bits());
+        }
+    }
+}
+
+#[test]
+fn cluster_golden_two_replicas_cached_equals_uncached() {
+    // one 2-replica cluster run: same seed → identical report fields
+    let serve = ServeConfig {
+        n_requests: 12,
+        seed: 42,
+        scenario: Some(Scenario::by_name("mixed").unwrap()),
+        ..Default::default()
+    };
+    let ccfg = ClusterConfig { replicas: 2, disagg: None, router: RouterPolicy::LeastLoadedKv };
+    let cluster = Cluster::new(rc(ArchKind::CompAirOpt), serve.clone(), ccfg.clone());
+    let uncached = cluster.run_with_model(&System::new(rc(ArchKind::CompAirOpt)));
+    let cached = cluster.run();
+    let engine = Engine::new(rc(ArchKind::CompAirOpt)).cluster(serve, ccfg);
+
+    for r in [&cached, &engine] {
+        assert_eq!(uncached.replicas, r.replicas);
+        assert_eq!(uncached.migrations, r.migrations);
+        assert_eq!(uncached.migration_bytes, r.migration_bytes);
+        assert_eq!(uncached.report.completed, r.report.completed);
+        assert_eq!(uncached.report.makespan_ns, r.report.makespan_ns);
+        assert_eq!(uncached.report.tokens_out, r.report.tokens_out);
+        assert_eq!(
+            uncached.report.energy.total_pj().to_bits(),
+            r.report.energy.total_pj().to_bits()
+        );
+        assert_eq!(uncached.per_replica.len(), r.per_replica.len());
+        for (a, b) in uncached.per_replica.iter().zip(&r.per_replica) {
+            assert_eq!(a.routed, b.routed);
+            assert_eq!(a.completed, b.completed);
+            assert_eq!(a.busy_ns, b.busy_ns);
+            assert_eq!(a.tokens_out, b.tokens_out);
+            assert_eq!(a.utilization.to_bits(), b.utilization.to_bits());
+        }
+    }
+}
+
+// ---- JSON well-formedness (no external parser offline, so a minimal
+// recursive-descent validator lives in the test) ----
+
+fn skip_ws(s: &[u8], mut i: usize) -> usize {
+    while i < s.len() && (s[i] as char).is_ascii_whitespace() {
+        i += 1;
+    }
+    i
+}
+
+fn validate_value(s: &[u8], i: usize) -> Result<usize, String> {
+    let i = skip_ws(s, i);
+    let err = |msg: &str, at: usize| Err(format!("{msg} at byte {at}"));
+    match s.get(i) {
+        None => err("unexpected end", i),
+        Some(b'{') => {
+            let mut i = skip_ws(s, i + 1);
+            if s.get(i) == Some(&b'}') {
+                return Ok(i + 1);
+            }
+            loop {
+                i = validate_string(s, skip_ws(s, i))?;
+                i = skip_ws(s, i);
+                if s.get(i) != Some(&b':') {
+                    return err("expected ':'", i);
+                }
+                i = validate_value(s, i + 1)?;
+                i = skip_ws(s, i);
+                match s.get(i) {
+                    Some(b',') => i += 1,
+                    Some(b'}') => return Ok(i + 1),
+                    _ => return err("expected ',' or '}'", i),
+                }
+            }
+        }
+        Some(b'[') => {
+            let mut i = skip_ws(s, i + 1);
+            if s.get(i) == Some(&b']') {
+                return Ok(i + 1);
+            }
+            loop {
+                i = validate_value(s, i)?;
+                i = skip_ws(s, i);
+                match s.get(i) {
+                    Some(b',') => i += 1,
+                    Some(b']') => return Ok(i + 1),
+                    _ => return err("expected ',' or ']'", i),
+                }
+            }
+        }
+        Some(b'"') => validate_string(s, i),
+        Some(b't') if s[i..].starts_with(b"true") => Ok(i + 4),
+        Some(b'f') if s[i..].starts_with(b"false") => Ok(i + 5),
+        Some(b'n') if s[i..].starts_with(b"null") => Ok(i + 4),
+        Some(c) if c.is_ascii_digit() || *c == b'-' => {
+            let mut j = i + 1;
+            while j < s.len()
+                && (s[j].is_ascii_digit() || matches!(s[j], b'.' | b'e' | b'E' | b'+' | b'-'))
+            {
+                j += 1;
+            }
+            Ok(j)
+        }
+        Some(_) => err("unexpected token", i),
+    }
+}
+
+fn validate_string(s: &[u8], i: usize) -> Result<usize, String> {
+    if s.get(i) != Some(&b'"') {
+        return Err(format!("expected string at byte {i}"));
+    }
+    let mut i = i + 1;
+    while i < s.len() {
+        match s[i] {
+            b'\\' => i += 2,
+            b'"' => return Ok(i + 1),
+            _ => i += 1,
+        }
+    }
+    Err("unterminated string".into())
+}
+
+fn assert_valid_json(s: &str) {
+    let bytes = s.as_bytes();
+    let end = validate_value(bytes, 0).unwrap_or_else(|e| panic!("invalid JSON ({e}): {s}"));
+    assert_eq!(skip_ws(bytes, end), bytes.len(), "trailing garbage in JSON: {s}");
+}
+
+#[test]
+fn every_report_type_serializes_to_well_formed_json() {
+    let engine = Engine::new(rc(ArchKind::CompAirOpt));
+    assert_valid_json(&engine.rc().to_json_string());
+    assert_valid_json(&engine.simulate().to_json_string());
+
+    let cfg = ServeConfig {
+        n_requests: 6,
+        seed: 42,
+        scenario: Some(Scenario::by_name("mixed").unwrap()),
+        ..Default::default()
+    };
+    assert_valid_json(&cfg.to_json_string());
+    let serve = engine.serve(cfg.clone());
+    let serve_json = serve.to_json_string();
+    assert_valid_json(&serve_json);
+    assert!(serve_json.contains("\"per_class\""));
+    assert!(serve_json.contains("\"slo_attainment\""));
+
+    let sc = engine.serve_scenario(Scenario::by_name("chat").unwrap(), 4, 42);
+    assert_valid_json(&sc.to_json_string());
+
+    let cluster = engine.cluster(
+        cfg,
+        ClusterConfig { disagg: Some((1, 1)), router: RouterPolicy::DeadlineAware, replicas: 2 },
+    );
+    let cluster_json = cluster.to_json_string();
+    assert_valid_json(&cluster_json);
+    assert!(cluster_json.contains("\"per_replica\""));
+    assert!(cluster_json.contains("\"migration_bytes\""));
+}

@@ -9,10 +9,12 @@
 #   2. cargo test -q                — unit + integration tests (tier-1)
 #   3. --format json gate           — one simulate + one list invocation must
 #                                     parse with `python3 -m json.tool`
-#   4. cargo clippy --all-targets   — lints with warnings denied
-#   5. cargo doc --no-deps          — rustdoc with warnings denied
-#   6. cargo fmt --check            — formatting (skipped if rustfmt absent)
-#   7. python tests                 — kernel/model oracles (skipped without jax)
+#   4. NoC calibration self-check   — the noc-calibration figure's calibrated
+#                                     error must be <= 20% at every anchor
+#   5. cargo clippy --all-targets   — lints with warnings denied
+#   6. cargo doc --no-deps          — rustdoc with warnings denied
+#   7. cargo fmt --check            — formatting (skipped if rustfmt absent)
+#   8. python tests                 — kernel/model oracles (skipped without jax)
 #
 # A missing `cargo` is a hard failure, never a silent skip: a gate that
 # checked nothing must not look green.
@@ -53,6 +55,27 @@ else
     echo "       and a gate that checked nothing must not look green." >&2
     exit 1
 fi
+
+say "NoC calibration self-check (calibrated error <= 20% per anchor)"
+# the noc-calibration figure prices every collective anchor through the
+# analytic, simulated and calibrated tiers; the only %-formatted column is
+# the calibrated-vs-simulated residual, which must stay within the 20%
+# contract the serving numbers rely on
+CAL_JSON=$(./target/release/compair figures noc-calibration --format json)
+printf '%s\n' "$CAL_JSON" | python3 -c '
+import json, re, sys
+doc = json.load(sys.stdin)
+out = next(f["output"] for f in doc["figures"] if f["figure"] == "noc-calibration")
+if re.search(r"(?i)(nan|inf)%", out):
+    sys.exit("non-finite calibrated error in the noc-calibration table")
+errs = [float(m) for m in re.findall(r"(\d+(?:\.\d+)?)%", out)]
+if not errs:
+    sys.exit("no calibrated-error values found in the noc-calibration table")
+bad = [e for e in errs if e > 20.0]
+if bad:
+    sys.exit(f"calibrated NoC error exceeds 20% at {len(bad)} anchor(s): {bad}")
+print(f"ok: {len(errs)} anchors, max calibrated error {max(errs):.2f}%")
+'
 
 if [[ "$FAST" == "0" ]]; then
     say "cargo clippy --all-targets (warnings are errors)"

@@ -24,6 +24,14 @@
 //! `--format json` renders. Under the hood the serving and cluster paths
 //! drive a [`CachedCostModel`] (see `arch/cost_model.rs`), so repeated
 //! iteration shapes are memoized instead of re-lowering the op-graph.
+//!
+//! NoC collective costs are priced at the fidelity the run config selects
+//! (`rc.noc_fidelity`, see `noc::model`): analytic closed forms,
+//! simulator-calibrated forms, or the flit-level mesh itself. Pick a tier
+//! with the builder, e.g.
+//! `Engine::new(rc).with(|rc| rc.noc_fidelity = NocFidelity::Calibrated)`;
+//! the fidelity is part of every memoization key, so cached results never
+//! mix tiers.
 
 use crate::arch::{attacc, AttAccConfig, CachedCostModel, PhaseReport, System};
 use crate::config::{ArchKind, RunConfig};
@@ -156,6 +164,21 @@ mod tests {
         let a = e.simulate();
         let b = cm.phase_report(e.rc().phase, e.rc().batch, e.rc().seq_len);
         assert_eq!(a.latency_ns.to_bits(), b.latency_ns.to_bits());
+    }
+
+    #[test]
+    fn fidelity_knob_threads_through_the_facade() {
+        use crate::config::NocFidelity;
+        for f in NocFidelity::all() {
+            let e = Engine::new(rc(ArchKind::CompAirOpt)).with(|rc| rc.noc_fidelity = f);
+            assert_eq!(e.rc().noc_fidelity, f);
+            let r = e.simulate();
+            assert!(r.latency_ns > 0.0 && r.latency_ns.is_finite(), "{f:?}");
+            // the cost model inherits the tier and reproduces the facade
+            let cm = e.cost_model();
+            let b = cm.phase_report(e.rc().phase, e.rc().batch, e.rc().seq_len);
+            assert_eq!(r.latency_ns.to_bits(), b.latency_ns.to_bits(), "{f:?}");
+        }
     }
 
     #[test]

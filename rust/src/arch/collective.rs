@@ -5,6 +5,14 @@
 //! calibrated against the flit-level simulator in this module's tests — the
 //! §Perf memoization lever is "analytic where validated, simulate where
 //! novel".
+//!
+//! These closed forms are the `Analytic` tier of [`crate::noc::model`];
+//! the `Calibrated` tier multiplies their latencies by per-collective
+//! correction factors fitted against the flit-level simulator, and the
+//! `Simulated` tier bypasses them entirely. The NoC formulas are therefore
+//! kept strictly chunk/wave-linear (cost = granules × per-granule cost,
+//! no fill/drain intercepts), so one multiplicative factor corrects them
+//! exactly at every anchor volume.
 
 use crate::config::{CxlConfig, DramConfig, HwConfig, NocConfig};
 use crate::sim::{CostCounts, OpCost};
@@ -12,19 +20,23 @@ use crate::sim::{CostCounts, OpCost};
 /// Element-wise reduction of `elems` scalars across `banks` banks through
 /// the column trees (4 parallel trees, stage-synchronized).
 pub fn noc_reduce(elems: u64, banks: u64, cfg: &NocConfig) -> OpCost {
-    if elems == 0 {
+    if elems == 0 || banks <= 1 {
+        // a single bank already holds its value; banks=0 must not drive the
+        // `banks - 1` edge count below zero
         return OpCost::zero();
     }
     let cols = cfg.mesh_cols as u64;
     let chunks = elems.div_ceil(cols);
-    // Per chunk: Σ_stages (hop distance 2^s + ~3 cycles of inject/execute).
+    // Per chunk, one ladder of log2⌈banks⌉ stages: hop distance 2^s plus
+    // ~3 cycles of inject / execute / stage-sync drain per stage (the tree
+    // schedule runs the mesh to idle between dependency-ordered stages, so
+    // the log-depth synchronization is priced here, per stage).
     let mut per_chunk = 0u64;
     let mut stride = 1u64;
     while stride < banks {
         per_chunk += stride + 3;
         stride <<= 1;
     }
-    let log2 = 64 - banks.leading_zeros() as u64 - 1;
     OpCost {
         latency_ns: (chunks * per_chunk) as f64 * cfg.cycle_ns,
         counts: CostCounts {
@@ -33,12 +45,12 @@ pub fn noc_reduce(elems: u64, banks: u64, cfg: &NocConfig) -> OpCost {
             ..Default::default()
         },
     }
-    .then(&OpCost::latency(log2 as f64 * 0.0))
 }
 
 /// Element-wise broadcast of `elems` scalars from one bank to `banks`.
 pub fn noc_broadcast(elems: u64, banks: u64, cfg: &NocConfig) -> OpCost {
-    if elems == 0 {
+    if elems == 0 || banks <= 1 {
+        // no other bank to reach; same `banks - 1` underflow guard as reduce
         return OpCost::zero();
     }
     let cols = cfg.mesh_cols as u64;
@@ -62,7 +74,9 @@ pub fn noc_broadcast(elems: u64, banks: u64, cfg: &NocConfig) -> OpCost {
 /// runs 2 parallel Horner lanes; one exponential occupies its lane for
 /// `3·rounds + overhead` cycles (3 ops/iteration + per-element WrReg).
 pub fn noc_exp(elems_per_bank: u64, rounds: u64, cfg: &NocConfig) -> OpCost {
-    if elems_per_bank == 0 {
+    if elems_per_bank == 0 || rounds == 0 {
+        // a zero-round Horner chain computes nothing (same guard as sqrt,
+        // keeping all fidelity tiers structurally identical at rounds=0)
         return OpCost::zero();
     }
     let lanes = 2u64;
@@ -78,19 +92,38 @@ pub fn noc_exp(elems_per_bank: u64, rounds: u64, cfg: &NocConfig) -> OpCost {
     }
 }
 
-/// `elems` square roots via Newton iteration in the NoC (RMSNorm's rsqrt).
+/// `elems` square roots via Newton (Heron) iteration in the NoC (RMSNorm's
+/// rsqrt): per round `y ← (y + x/y) / 2` — one divide occupying the
+/// iterative divider for `div_cycles`, one add, one halve. Same 2-lane
+/// structure as exp, but its own op mix: 3 ALU ops per round (exp's Horner
+/// also updates the iterated `k` ArgReg, a 4th op), a seed write and a
+/// result eject instead of exp's per-element WrReg+const setup.
 pub fn noc_sqrt(elems_per_bank: u64, rounds: u64, cfg: &NocConfig) -> OpCost {
-    // same lane structure as exp; 3 ops/iteration incl. one divide
-    noc_exp(elems_per_bank, rounds, cfg)
+    if elems_per_bank == 0 || rounds == 0 {
+        return OpCost::zero();
+    }
+    let lanes = 2u64;
+    let per_elem_cycles = 3 * rounds + 3 + rounds * cfg.div_cycles;
+    let cycles = elems_per_bank.div_ceil(lanes) * per_elem_cycles;
+    OpCost {
+        latency_ns: cycles as f64 * cfg.cycle_ns,
+        counts: CostCounts {
+            noc_alu_ops: elems_per_bank * 3 * rounds,
+            noc_flit_hops: elems_per_bank * (2 * rounds + 3),
+            ..Default::default()
+        },
+    }
 }
 
 /// Element-wise scalar op (e.g. the softmax divide) streamed through the
-/// bank's 4 routers: ~1 elem/cycle/router once pipelined.
+/// bank's 4 routers: ~1 elem/2 cycles/router once pipelined. Kept purely
+/// chunk-linear (no fill/drain constant — it is below the model's noise
+/// floor) so the calibrated tier's multiplicative correction is exact.
 pub fn noc_scalar_stream(elems_per_bank: u64, cfg: &NocConfig) -> OpCost {
     if elems_per_bank == 0 {
         return OpCost::zero();
     }
-    let cycles = elems_per_bank.div_ceil(cfg.mesh_cols as u64) * 2 + 2;
+    let cycles = elems_per_bank.div_ceil(cfg.mesh_cols as u64) * 2;
     OpCost {
         latency_ns: cycles as f64 * cfg.cycle_ns,
         counts: CostCounts {
@@ -161,7 +194,7 @@ pub fn dram_ewmul(elems_per_bank: u64, hw: &HwConfig) -> OpCost {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::noc::{trees, Mesh, StepOp};
+    use crate::noc::{trees, CalibratedNoc, Mesh, NocModel, SimulatedNoc, StepOp};
 
     #[test]
     fn analytic_reduce_calibrated_against_mesh() {
@@ -194,6 +227,98 @@ mod tests {
         }
         let ratio = total / analytic;
         assert!((0.5..2.0).contains(&ratio), "sim={total} analytic={analytic}");
+    }
+
+    #[test]
+    fn reduce_guards_degenerate_bank_counts() {
+        let cfg = NocConfig::default();
+        // regression: banks=0 used to underflow `banks - 1`; banks=1 has
+        // nothing to reduce across; and the dead `log2 * 0.0` latency term
+        // would have panicked on banks=0's leading_zeros arithmetic
+        assert_eq!(noc_reduce(64, 0, &cfg), OpCost::zero());
+        assert_eq!(noc_reduce(64, 1, &cfg), OpCost::zero());
+        assert_eq!(noc_reduce(0, 16, &cfg), OpCost::zero());
+        assert_eq!(noc_broadcast(64, 0, &cfg), OpCost::zero());
+        assert_eq!(noc_broadcast(64, 1, &cfg), OpCost::zero());
+    }
+
+    #[test]
+    fn reduce_non_power_of_two_banks() {
+        let cfg = NocConfig::default();
+        let c12 = noc_reduce(16, 12, &cfg);
+        assert!(c12.latency_ns > 0.0 && c12.latency_ns.is_finite());
+        // tree edges: one per non-root bank
+        assert_eq!(c12.counts.noc_flit_hops, 16 * 11);
+        assert_eq!(c12.counts.noc_alu_ops, 16 * 11);
+        // the stage ladder climbs to the power-of-two ceiling (strides
+        // 1,2,4,8 for both 12 and 16 banks), so latency matches banks=16
+        // while the event counts stay proportional to the real bank count
+        let c16 = noc_reduce(16, 16, &cfg);
+        assert_eq!(c12.latency_ns, c16.latency_ns);
+        assert!(c12.counts.noc_flit_hops < c16.counts.noc_flit_hops);
+        // monotone in banks across the non-pow2 range
+        let c5 = noc_reduce(16, 5, &cfg);
+        let c9 = noc_reduce(16, 9, &cfg);
+        assert!(c5.latency_ns <= c9.latency_ns);
+        assert!(c5.counts.noc_flit_hops < c9.counts.noc_flit_hops);
+    }
+
+    #[test]
+    fn sqrt_models_its_own_op_mix_not_exps() {
+        // regression: noc_sqrt was a verbatim alias of noc_exp, inheriting
+        // Horner's flit-hop/ALU counts; Newton-rsqrt must price its own mix
+        let cfg = NocConfig::default();
+        let e = noc_exp(64, 4, &cfg);
+        let s = noc_sqrt(64, 4, &cfg);
+        assert_ne!(s.counts, e.counts, "sqrt must not alias exp's energy counts");
+        // Heron has 3 ALU ops/round; Horner adds the iterated-k update (4)
+        assert!(s.counts.noc_alu_ops < e.counts.noc_alu_ops);
+        assert_ne!(s.counts.noc_flit_hops, e.counts.noc_flit_hops);
+        assert!(s.latency_ns > 0.0);
+        // both still pay the iterative divider every round
+        let mut fast = cfg.clone();
+        fast.div_cycles = 0;
+        assert!(noc_sqrt(64, 4, &cfg).latency_ns > noc_sqrt(64, 4, &fast).latency_ns);
+        assert_eq!(noc_sqrt(0, 4, &cfg), OpCost::zero());
+        assert_eq!(noc_sqrt(64, 0, &cfg), OpCost::zero());
+    }
+
+    #[test]
+    fn calibrated_reduce_within_1p2x_of_mesh() {
+        // the 0.5–2.0x raw band above, tightened through the Calibrated
+        // tier: correction factors fitted against the same simulator bring
+        // every anchor-shaped reduce within 1.2x
+        let hw = HwConfig::paper();
+        let cal = CalibratedNoc::new(&hw);
+        let sim = SimulatedNoc::new(&hw);
+        for elems in [4u64, 16, 64] {
+            for banks in [4u64, 16] {
+                let c = cal.reduce(elems, banks).latency_ns;
+                let s = sim.reduce(elems, banks).latency_ns;
+                let ratio = s / c;
+                assert!(
+                    (1.0 / 1.2..1.2).contains(&ratio),
+                    "elems={elems} banks={banks}: sim={s} calibrated={c} ratio={ratio}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn calibrated_broadcast_and_exp_within_1p2x_of_mesh() {
+        let hw = HwConfig::paper();
+        let cal = CalibratedNoc::new(&hw);
+        let sim = SimulatedNoc::new(&hw);
+        for elems in [4u64, 32] {
+            let ratio = sim.broadcast(elems, 16).latency_ns / cal.broadcast(elems, 16).latency_ns;
+            assert!((1.0 / 1.2..1.2).contains(&ratio), "broadcast elems={elems}: {ratio}");
+        }
+        for (elems, rounds) in [(2u64, 8u64), (16, 8), (16, 4)] {
+            let ratio = sim.exp(elems, rounds).latency_ns / cal.exp(elems, rounds).latency_ns;
+            assert!((1.0 / 1.2..1.2).contains(&ratio), "exp {elems}x{rounds}: {ratio}");
+            let ratio = sim.sqrt(elems, rounds).latency_ns / cal.sqrt(elems, rounds).latency_ns;
+            assert!((1.0 / 1.2..1.2).contains(&ratio), "sqrt {elems}x{rounds}: {ratio}");
+        }
     }
 
     #[test]

@@ -10,8 +10,8 @@
 //!
 //! [`System`] implements the trait directly (uncached: every call re-lowers
 //! the transformer op-graph). [`CachedCostModel`] wraps any model and
-//! memoizes both levels: full [`PhaseReport`]s by `(arch, phase, batch,
-//! seq_len)` and composed iteration [`OpCost`]s by `(prefill_tokens,
+//! memoizes both levels: full [`PhaseReport`]s by `(arch, noc_fidelity,
+//! phase, batch, seq_len)` and composed iteration [`OpCost`]s by `(prefill_tokens,
 //! decode_batch, max_kv)` — with the iteration key normalized to the cost
 //! function's true arguments (no decode half ⇒ `max_kv` is irrelevant and
 //! must not fragment the cache).
@@ -31,17 +31,20 @@
 use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
 
-use crate::config::{ArchKind, Phase, RunConfig};
+use crate::config::{ArchKind, NocFidelity, Phase, RunConfig};
 use crate::sim::OpCost;
 
 use super::system::{PhaseReport, System};
 
 /// Memoization key for a phase-level costing call. The wrapped model's
-/// hardware/model config is fixed, so the shape (plus the arch, for
-/// defense against key reuse across models) identifies the result.
+/// hardware/model config is fixed, so the shape (plus the arch and NoC
+/// fidelity, for defense against key reuse across models — two runs that
+/// differ only in fidelity tier price the same shape differently and must
+/// never share an entry) identifies the result.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct ShapeKey {
     pub arch: ArchKind,
+    pub fidelity: NocFidelity,
     pub phase: Phase,
     pub batch: usize,
     pub seq_len: usize,
@@ -200,11 +203,16 @@ impl<M: CostModel> CachedCostModel<M> {
         self.misses.set(self.misses.get() + 1);
     }
 
+    fn shape_key(&self, phase: Phase, batch: usize, seq_len: usize) -> ShapeKey {
+        let base = self.inner.base();
+        ShapeKey { arch: base.arch, fidelity: base.noc_fidelity, phase, batch, seq_len }
+    }
+
     /// Whole-pass cost of one phase shape, retaining only the `Copy`
     /// total. A full report priced earlier through `phase_report` already
     /// carries the total, so that map is consulted before re-lowering.
     fn phase_total(&self, phase: Phase, batch: usize, seq_len: usize) -> OpCost {
-        let key = ShapeKey { arch: self.inner.base().arch, phase, batch, seq_len };
+        let key = self.shape_key(phase, batch, seq_len);
         if let Some(c) = self.totals.borrow().get(&key) {
             self.hit();
             return *c;
@@ -231,7 +239,7 @@ impl<M: CostModel> CostModel for CachedCostModel<M> {
     }
 
     fn phase_report(&self, phase: Phase, batch: usize, seq_len: usize) -> PhaseReport {
-        let key = ShapeKey { arch: self.inner.base().arch, phase, batch, seq_len };
+        let key = self.shape_key(phase, batch, seq_len);
         // A hit clones the stored report (per-op vec included) — far
         // cheaper than re-lowering, and the serving/cluster hot loops
         // never pay it: they go through `iteration_cost`, whose memoized
@@ -364,6 +372,49 @@ mod tests {
         let c = cached.iteration_cost(0, 4, 0);
         let d = cached.iteration_cost(0, 4, 1);
         assert_eq!(c, d);
+    }
+
+    #[test]
+    fn shape_keys_are_fidelity_aware() {
+        use crate::config::NocFidelity;
+        // the same shape priced under two fidelity tiers must occupy two
+        // distinct cache entries — a shared key would let an analytic
+        // result answer a calibrated query
+        let mut calibrated = rc();
+        calibrated.noc_fidelity = NocFidelity::Calibrated;
+        let a = CachedCostModel::new(System::new(rc()));
+        let c = CachedCostModel::new(System::new(calibrated));
+        assert_ne!(
+            a.shape_key(Phase::Decode, 16, 4096),
+            c.shape_key(Phase::Decode, 16, 4096)
+        );
+        assert_eq!(
+            a.shape_key(Phase::Decode, 16, 4096),
+            CachedCostModel::new(System::new(rc())).shape_key(Phase::Decode, 16, 4096)
+        );
+    }
+
+    #[test]
+    fn cached_is_bit_identical_per_fidelity_tier() {
+        use crate::config::NocFidelity;
+        for f in NocFidelity::all() {
+            let mut cfg = rc();
+            cfg.noc_fidelity = f;
+            let sys = System::new(cfg.clone());
+            let cached = CachedCostModel::new(System::new(cfg));
+            for _ in 0..2 {
+                // second pass hits the cache; both must equal the uncached run
+                let a = sys.phase_report(Phase::Decode, 8, 2048);
+                let b = cached.phase_report(Phase::Decode, 8, 2048);
+                assert_eq!(a.latency_ns.to_bits(), b.latency_ns.to_bits(), "{f:?}");
+                assert_eq!(a.layer_cost, b.layer_cost, "{f:?}");
+                assert_eq!(
+                    sys.iteration_cost(128, 4, 1024),
+                    cached.iteration_cost(128, 4, 1024),
+                    "{f:?}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -101,6 +101,8 @@ compair — CompAir hybrid-PIM LLM inference simulator + coordinator
 
 USAGE:
   compair figures [<id>...] [--all]       regenerate paper tables/figures
+                                          (incl. noc-calibration: analytic
+                                          vs flit-level NoC error table)
   compair simulate [--arch A] [--model M] [--phase decode|prefill]
                    [--batch N] [--seqlen N] [--tp N] [--devices N]
                    [--config file.toml]   run one simulation, print report
@@ -119,12 +121,16 @@ USAGE:
   compair list                            list figures/models/archs/scenarios
 
 Every command accepts `--format text|json`; json emits one machine-readable
-report document on stdout.
+report document on stdout. `simulate`, `serve` and `figures` also accept
+`--noc-fidelity analytic|calibrated|simulated` to pick how NoC collectives
+are priced (closed forms, simulator-calibrated forms, or the flit-level
+mesh itself); serve defaults to calibrated, everything else to analytic.
 
 ARCHS:     cent | cent-curry | compair-base | compair-opt | sram-stack | attacc
 MODELS:    llama2-7b | llama2-13b | llama2-70b | qwen-72b | gpt3-175b | tiny
 SCENARIOS: chat | rag | long-context | batch | bursty | mixed
 ROUTERS:   round-robin | least-kv | deadline
+FIDELITY:  analytic | calibrated | simulated
 ";
 
 #[cfg(test)]

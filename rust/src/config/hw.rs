@@ -249,6 +249,80 @@ impl HbConfig {
     }
 }
 
+/// How the NoC collectives (reduce / broadcast / exp / sqrt / scalar
+/// stream) are priced by the cost model (see `noc::model`).
+///
+/// The flit-level mesh simulator is the ground truth but cycle-stepped;
+/// the closed forms in `arch::collective` are fast but were only validated
+/// to within 0.5–2.0× of it. The fidelity knob picks the trade-off per
+/// run and is part of every memoization key, so cached results can never
+/// mix tiers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum NocFidelity {
+    /// Closed-form analytic costs (fastest; the default, and essentially
+    /// the historical behaviour — the forms were re-linearized slightly
+    /// when the tiers were introduced, see `arch::collective`).
+    #[default]
+    Analytic,
+    /// Closed forms corrected by per-collective factors fitted against the
+    /// flit-level simulator at anchor shapes — fast like analytic,
+    /// accurate like simulation. The CLI default for `serve`.
+    Calibrated,
+    /// Drive the flit-level mesh / tree schedules / ISA machine directly
+    /// at the requested shape (chunk-replicated; see `noc::model`).
+    Simulated,
+}
+
+/// Process-wide default fidelity, read by [`crate::config::RunConfig::new`].
+/// `0 = Analytic, 1 = Calibrated, 2 = Simulated`. Only the CLI launcher
+/// writes it (so `figures --noc-fidelity` reaches the generators, which
+/// build their `RunConfig`s internally); the library default is Analytic.
+static PROCESS_DEFAULT_FIDELITY: std::sync::atomic::AtomicU8 =
+    std::sync::atomic::AtomicU8::new(0);
+
+impl NocFidelity {
+    pub fn label(&self) -> &'static str {
+        match self {
+            NocFidelity::Analytic => "analytic",
+            NocFidelity::Calibrated => "calibrated",
+            NocFidelity::Simulated => "simulated",
+        }
+    }
+
+    pub fn by_name(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "analytic" => Some(NocFidelity::Analytic),
+            "calibrated" => Some(NocFidelity::Calibrated),
+            "simulated" => Some(NocFidelity::Simulated),
+            _ => None,
+        }
+    }
+
+    /// Every tier, cheapest first.
+    pub fn all() -> [NocFidelity; 3] {
+        [NocFidelity::Analytic, NocFidelity::Calibrated, NocFidelity::Simulated]
+    }
+
+    /// The process-wide default new `RunConfig`s start from.
+    pub fn process_default() -> NocFidelity {
+        match PROCESS_DEFAULT_FIDELITY.load(std::sync::atomic::Ordering::Relaxed) {
+            1 => NocFidelity::Calibrated,
+            2 => NocFidelity::Simulated,
+            _ => NocFidelity::Analytic,
+        }
+    }
+
+    /// Override the process-wide default (CLI launcher only).
+    pub fn set_process_default(f: NocFidelity) {
+        let v = match f {
+            NocFidelity::Analytic => 0,
+            NocFidelity::Calibrated => 1,
+            NocFidelity::Simulated => 2,
+        };
+        PROCESS_DEFAULT_FIDELITY.store(v, std::sync::atomic::Ordering::Relaxed);
+    }
+}
+
 /// CompAir-NoC configuration (per channel).
 #[derive(Debug, Clone)]
 pub struct NocConfig {
@@ -412,5 +486,15 @@ mod tests {
     fn voltage_clamps() {
         assert_eq!(Voltage(1.5).clamp().0, 0.9);
         assert_eq!(Voltage(0.1).clamp().0, 0.6);
+    }
+
+    #[test]
+    fn fidelity_names_roundtrip() {
+        for f in NocFidelity::all() {
+            assert_eq!(NocFidelity::by_name(f.label()), Some(f));
+        }
+        assert_eq!(NocFidelity::by_name("nope"), None);
+        // library default is analytic (the historical behaviour)
+        assert_eq!(NocFidelity::default(), NocFidelity::Analytic);
     }
 }

@@ -5,6 +5,9 @@ pub mod model;
 pub mod run;
 pub mod toml;
 
-pub use hw::{ColumnDecoder, CxlConfig, DramConfig, HbConfig, HwConfig, NocConfig, SramConfig, SramGang, Voltage};
+pub use hw::{
+    ColumnDecoder, CxlConfig, DramConfig, HbConfig, HwConfig, NocConfig, NocFidelity, SramConfig,
+    SramGang, Voltage,
+};
 pub use model::ModelConfig;
 pub use run::{ArchKind, FcMapping, Phase, RunConfig};

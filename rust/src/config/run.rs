@@ -3,7 +3,7 @@
 
 use crate::util::json::{Json, ToJson};
 
-use super::hw::{HwConfig, SramGang, Voltage};
+use super::hw::{HwConfig, NocFidelity, SramGang, Voltage};
 use super::model::ModelConfig;
 use super::toml::Doc;
 
@@ -142,6 +142,10 @@ pub struct RunConfig {
     pub devices: usize,
     pub sram_gang: SramGang,
     pub fc_mapping: FcMapping,
+    /// How NoC collective costs are priced (see `noc::model`): analytic
+    /// closed forms, simulator-calibrated closed forms, or the flit-level
+    /// simulator itself. Part of every cost-model memoization key.
+    pub noc_fidelity: NocFidelity,
 }
 
 impl RunConfig {
@@ -159,6 +163,7 @@ impl RunConfig {
             devices: 32,
             sram_gang: SramGang::In256Out16,
             fc_mapping: FcMapping::OutputSplit,
+            noc_fidelity: NocFidelity::process_default(),
         }
     }
 
@@ -215,6 +220,10 @@ impl RunConfig {
                 _ => return Err(format!("unknown fc_mapping '{m}'")),
             };
         }
+        if let Some(f) = doc.get_str("run.noc_fidelity") {
+            self.noc_fidelity = NocFidelity::by_name(f)
+                .ok_or_else(|| format!("unknown noc_fidelity '{f}' (analytic | calibrated | simulated)"))?;
+        }
         if let Some(v) = doc.get_float("hw.sram.voltage") {
             self.hw.sram.voltage = Voltage(v).clamp();
         }
@@ -248,6 +257,7 @@ impl ToJson for RunConfig {
             .field("tp", self.tp)
             .field("devices", self.devices)
             .field("fc_mapping", self.fc_mapping.label())
+            .field("noc_fidelity", self.noc_fidelity.label())
     }
 }
 
@@ -307,6 +317,17 @@ voltage = 0.7
             rc.hw.dram.column_decoder,
             crate::config::hw::ColumnDecoder::Decoupled8and4
         );
+    }
+
+    #[test]
+    fn doc_noc_fidelity_applies_and_rejects() {
+        let mut rc = RunConfig::new(ArchKind::Cent, ModelConfig::llama2_7b());
+        assert_eq!(rc.noc_fidelity, NocFidelity::Analytic);
+        let doc = toml::parse("[run]\nnoc_fidelity = \"calibrated\"").unwrap();
+        rc.apply_doc(&doc).unwrap();
+        assert_eq!(rc.noc_fidelity, NocFidelity::Calibrated);
+        let doc = toml::parse("[run]\nnoc_fidelity = \"exact\"").unwrap();
+        assert!(rc.apply_doc(&doc).is_err());
     }
 
     #[test]

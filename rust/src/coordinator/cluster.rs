@@ -560,6 +560,17 @@ impl Cluster {
         // pricing every iteration on another — catch it early
         debug_assert_eq!(cm.base().arch, self.rc.arch, "cost model arch != cluster arch");
         debug_assert_eq!(cm.base().model.name, self.rc.model.name, "cost model != cluster model");
+        debug_assert_eq!(cm.base().tp, self.rc.tp, "cost model tp != cluster tp");
+        debug_assert_eq!(
+            cm.base().devices,
+            self.rc.devices,
+            "cost model devices != cluster devices"
+        );
+        debug_assert_eq!(
+            cm.base().noc_fidelity,
+            self.rc.noc_fidelity,
+            "cost model NoC fidelity != cluster fidelity"
+        );
         self.cfg.validate().expect("invalid cluster config");
         let n_replicas = self.cfg.replica_count();
         let class_names = self.serve.class_names();

@@ -385,6 +385,13 @@ impl Server {
         // pricing every iteration on another — catch it early
         debug_assert_eq!(cm.base().arch, self.rc.arch, "cost model arch != server arch");
         debug_assert_eq!(cm.base().model.name, self.rc.model.name, "cost model != server model");
+        debug_assert_eq!(cm.base().tp, self.rc.tp, "cost model tp != server tp");
+        debug_assert_eq!(cm.base().devices, self.rc.devices, "cost model devices != server devices");
+        debug_assert_eq!(
+            cm.base().noc_fidelity,
+            self.rc.noc_fidelity,
+            "cost model NoC fidelity != server fidelity"
+        );
         let class_names = self.cfg.class_names();
         let mut rejected_by_class = vec![0u64; class_names.len()];
 

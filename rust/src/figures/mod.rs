@@ -85,6 +85,9 @@ pub fn registry() -> Vec<(&'static str, fn() -> String)> {
         ("scenarios", serving::scenarios),
         ("scenario-archs", serving::scenario_archs),
         ("cluster", cluster::cluster),
+        // NoC costing self-check: analytic vs flit-level error per
+        // collective anchor, and the calibrated tier's residual
+        ("noc-calibration", noc_eval::noc_calibration),
     ]
 }
 

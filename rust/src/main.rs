@@ -4,7 +4,7 @@
 //! reports on every subcommand.
 
 use compair::cli::{Args, OutputFormat, USAGE};
-use compair::config::{ArchKind, ModelConfig, Phase, RunConfig};
+use compair::config::{ArchKind, ModelConfig, NocFidelity, Phase, RunConfig};
 use compair::coordinator::{cluster, serving, ClusterConfig, RouterPolicy, ServeConfig};
 use compair::figures;
 use compair::isa::{Machine, RowProgram};
@@ -40,8 +40,25 @@ fn main() {
     }
 }
 
+/// Parse the shared `--noc-fidelity` flag; `None` when absent (callers
+/// pick their own default: analytic everywhere except `serve`, which
+/// defaults to calibrated).
+fn parse_noc_fidelity(args: &Args) -> Result<Option<NocFidelity>, String> {
+    match args.flag("noc-fidelity") {
+        None => Ok(None),
+        Some(s) => NocFidelity::by_name(s).map(Some).ok_or_else(|| {
+            format!("unknown --noc-fidelity '{s}' (analytic | calibrated | simulated)")
+        }),
+    }
+}
+
 fn cmd_figures(args: &Args) -> Result<(), String> {
     let format = args.format()?;
+    // figure generators build their RunConfigs internally, so the flag
+    // threads through the process-wide default they inherit
+    if let Some(f) = parse_noc_fidelity(args)? {
+        NocFidelity::set_process_default(f);
+    }
     let registry = figures::registry();
     let names: Vec<String> = if args.has("all") || args.positional.is_empty() {
         registry.iter().map(|(n, _)| n.to_string()).collect()
@@ -77,12 +94,17 @@ fn cmd_figures(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-fn build_rc(args: &Args) -> Result<RunConfig, String> {
+/// Build the run config from flags. `default_fidelity` is the
+/// subcommand's NoC-costing default (analytic for `simulate`, calibrated
+/// for `serve`); a `--config` file may override it, and the explicit
+/// `--noc-fidelity` flag wins over both.
+fn build_rc(args: &Args, default_fidelity: NocFidelity) -> Result<RunConfig, String> {
     let arch = ArchKind::by_name(args.flag("arch").unwrap_or("compair-opt"))
         .ok_or("unknown --arch")?;
     let model = ModelConfig::by_name(args.flag("model").unwrap_or("llama2-7b"))
         .ok_or("unknown --model")?;
     let mut rc = RunConfig::new(arch, model);
+    rc.noc_fidelity = default_fidelity;
     rc.phase = match args.flag("phase").unwrap_or("decode") {
         "decode" => Phase::Decode,
         "prefill" => Phase::Prefill,
@@ -98,12 +120,16 @@ fn build_rc(args: &Args) -> Result<RunConfig, String> {
         let doc = compair::config::toml::parse(&text).map_err(|e| e.to_string())?;
         rc.apply_doc(&doc)?;
     }
+    // the explicit flag wins over both the default and a config file
+    if let Some(f) = parse_noc_fidelity(args)? {
+        rc.noc_fidelity = f;
+    }
     Ok(rc)
 }
 
 fn cmd_simulate(args: &Args) -> Result<(), String> {
     let format = args.format()?;
-    let engine = Engine::new(build_rc(args)?);
+    let engine = Engine::new(build_rc(args, NocFidelity::Analytic)?);
     let r = engine.simulate();
     if format == OutputFormat::Json {
         let doc = Json::obj()
@@ -194,7 +220,9 @@ fn parse_cluster_flags(args: &Args) -> Result<Option<ClusterConfig>, String> {
 
 fn cmd_serve(args: &Args) -> Result<(), String> {
     let format = args.format()?;
-    let engine = Engine::new(build_rc(args)?);
+    // serving numbers are the ones the ROADMAP builds on: default to the
+    // simulator-calibrated NoC costing unless the user picks a tier
+    let engine = Engine::new(build_rc(args, NocFidelity::Calibrated)?);
     if engine.rc().arch == ArchKind::AttAcc {
         return Err(
             "serve does not support --arch attacc: the AttAcc roofline baseline has no \

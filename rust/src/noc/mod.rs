@@ -5,14 +5,22 @@
 //! * `mesh` — flit-level cycle simulation of the 4×16 per-channel mesh;
 //! * `trees` — reduce/broadcast tree schedules over banks (§4.3.3);
 //! * `exchange` — RoPE neighbour-swap schedules (§4.3.1);
-//! * `area` — the Fig 21 area model (Synopsys DC numbers encoded).
+//! * `area` — the Fig 21 area model (Synopsys DC numbers encoded);
+//! * `model` — the fidelity-tiered [`NocModel`] costing interface
+//!   (analytic / calibrated / simulated) every system-level cost flows
+//!   through.
 pub mod area;
 pub mod curry;
 pub mod exchange;
 pub mod mesh;
+pub mod model;
 pub mod packet;
 pub mod trees;
 
 pub use curry::{curry_exp, curry_exp_rr, curry_sqrt, CurryAlu};
 pub use mesh::{Delivery, Mesh};
+pub use model::{
+    calibration_report, collective_cost, AnalyticNoc, CalibAnchor, CalibratedNoc, NocCollective,
+    NocModel, SimulatedNoc,
+};
 pub use packet::{Packet, PacketType, PathStep, RouterId, StepOp};

@@ -69,13 +69,27 @@ pub fn percentile(samples: &[f64], p: f64) -> f64 {
     }
 }
 
-/// Geometric mean of strictly positive values.
+/// Geometric mean over the strictly positive, finite samples.
+///
+/// Zero, negative, NaN and infinite entries are skipped rather than folded
+/// in — `ln(0) = -inf` would silently turn the whole mean into 0/NaN, so a
+/// single zero-latency sample must not poison a report (regression: the
+/// old version trusted its "strictly positive" doc and returned NaN/-inf
+/// garbage). Returns NaN when no usable sample remains, matching
+/// [`percentile`]'s empty-input convention.
 pub fn geomean(samples: &[f64]) -> f64 {
-    if samples.is_empty() {
+    let mut sum = 0.0;
+    let mut n = 0u64;
+    for &x in samples {
+        if x > 0.0 && x.is_finite() {
+            sum += x.ln();
+            n += 1;
+        }
+    }
+    if n == 0 {
         return f64::NAN;
     }
-    let s: f64 = samples.iter().map(|x| x.ln()).sum();
-    (s / samples.len() as f64).exp()
+    (sum / n as f64).exp()
 }
 
 /// Relative error |a-b| / max(|b|, eps).
@@ -130,6 +144,19 @@ mod tests {
     fn geomean_of_powers() {
         assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
         assert!((geomean(&[2.0, 8.0]) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn geomean_skips_nonpositive_and_nonfinite_samples() {
+        // regression: a single zero-latency sample used to yield 0-or-NaN
+        // via ln(0) = -inf and poison whole speedup reports
+        assert!((geomean(&[1.0, 0.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean(&[2.0, -3.0, 8.0]) - 4.0).abs() < 1e-12);
+        assert!((geomean(&[f64::NAN, 2.0, 8.0]) - 4.0).abs() < 1e-12);
+        assert!((geomean(&[f64::INFINITY, 2.0, 8.0]) - 4.0).abs() < 1e-12);
+        // nothing usable left → NaN, same convention as percentile(&[])
+        assert!(geomean(&[]).is_nan());
+        assert!(geomean(&[0.0, -1.0]).is_nan());
     }
 
     #[test]

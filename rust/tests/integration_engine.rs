@@ -4,7 +4,7 @@
 //! the `System` simulator uncached.
 
 use compair::arch::{attacc, simulate, AttAccConfig, CachedCostModel, CostModel, System};
-use compair::config::{ArchKind, ModelConfig, Phase, RunConfig};
+use compair::config::{ArchKind, ModelConfig, NocFidelity, Phase, RunConfig};
 use compair::coordinator::{Cluster, ClusterConfig, RouterPolicy, ServeConfig, Server};
 use compair::util::json::ToJson;
 use compair::workload::Scenario;
@@ -120,6 +120,55 @@ fn serve_scenario_golden_cached_equals_uncached() {
             assert_eq!(a.slo_attainment.to_bits(), b.slo_attainment.to_bits());
         }
     }
+}
+
+#[test]
+fn serve_is_bit_reproducible_per_noc_fidelity_tier() {
+    // the acceptance contract: `serve` accepts every fidelity tier, and
+    // cached ≡ uncached results are preserved bit-for-bit per tier
+    let cfg = ServeConfig {
+        n_requests: 8,
+        seed: 7,
+        scenario: Some(Scenario::by_name("chat").unwrap()),
+        ..Default::default()
+    };
+    for f in NocFidelity::all() {
+        let mut c = rc(ArchKind::CompAirOpt);
+        c.noc_fidelity = f;
+        let server = Server::new(c.clone(), cfg.clone());
+        let uncached = server.run_with_model(&System::new(c.clone()));
+        let cached = server.run();
+        assert_eq!(uncached.completed, cached.completed, "{f:?}");
+        assert_eq!(uncached.makespan_ns, cached.makespan_ns, "{f:?}");
+        assert_eq!(uncached.tokens_out, cached.tokens_out, "{f:?}");
+        assert_eq!(
+            uncached.throughput_tok_s.to_bits(),
+            cached.throughput_tok_s.to_bits(),
+            "{f:?}"
+        );
+        assert_eq!(uncached.ttft_p99_ns.to_bits(), cached.ttft_p99_ns.to_bits(), "{f:?}");
+        assert_eq!(
+            uncached.energy.total_pj().to_bits(),
+            cached.energy.total_pj().to_bits(),
+            "{f:?}"
+        );
+    }
+    // the tiers are genuinely distinct models: the fidelity knob must
+    // reach the costing (calibrated == analytic would mean it is ignored
+    // — the correction factors come from real mesh runs)
+    let lat = |f: NocFidelity| {
+        let mut c = rc(ArchKind::CompAirOpt);
+        c.noc_fidelity = f;
+        System::new(c).phase_report(Phase::Decode, 16, 4096).latency_ns
+    };
+    let (a, cal, sim) = (
+        lat(NocFidelity::Analytic),
+        lat(NocFidelity::Calibrated),
+        lat(NocFidelity::Simulated),
+    );
+    assert!(a > 0.0 && cal > 0.0 && sim > 0.0);
+    // calibrated tracks the simulator exactly at the granule level
+    assert!((cal - sim).abs() / sim < 1e-6, "calibrated {cal} vs simulated {sim}");
 }
 
 #[test]

@@ -187,3 +187,43 @@ fn prop_machine_memory_isolation_between_banks() {
         assert_eq!(m.read_row(a, 128, 8), expect);
     });
 }
+
+#[test]
+fn prop_analytic_and_simulated_noc_agree_in_ordering() {
+    // The calibration contract's foundation: across random shapes of one
+    // collective (same structural parameter, varying volume), the closed
+    // forms and the flit-level simulator must rank costs identically —
+    // a cheaper shape under one tier is never pricier under the other.
+    use compair::noc::model::{collective_cost, AnalyticNoc, NocCollective, SimulatedNoc};
+    let hw = HwConfig::paper();
+    check("analytic vs simulated NoC ordering", 30, |g| {
+        let analytic = AnalyticNoc::new(hw.noc.clone());
+        let sim = SimulatedNoc::new(&hw);
+        let kind = *g.pick(&[NocCollective::Reduce, NocCollective::Broadcast, NocCollective::Exp]);
+        let param = match kind {
+            NocCollective::Exp => *g.pick(&[4u64, 6, 8]),
+            _ => 1 << g.usize_in(1, 4) as u64, // banks in {2,4,8,16}
+        };
+        let e1 = g.usize_in(1, 4096) as u64;
+        let e2 = g.usize_in(1, 4096) as u64;
+        let a1 = collective_cost(&analytic, kind, e1, param).latency_ns;
+        let a2 = collective_cost(&analytic, kind, e2, param).latency_ns;
+        let s1 = collective_cost(&sim, kind, e1, param).latency_ns;
+        let s2 = collective_cost(&sim, kind, e2, param).latency_ns;
+        if a1 < a2 {
+            assert!(s1 <= s2, "{kind:?} p={param}: analytic {e1}<{e2} but sim {s1}>{s2}");
+        } else if a1 > a2 {
+            assert!(s1 >= s2, "{kind:?} p={param}: analytic {e1}>{e2} but sim {s1}<{s2}");
+        } else {
+            assert_eq!(s1, s2, "{kind:?} p={param}: analytic tie must be a sim tie");
+        }
+        // and across tree heights at fixed volume, both grow with banks
+        if matches!(kind, NocCollective::Reduce | NocCollective::Broadcast) {
+            let taller = (param * 2).min(16);
+            let at = collective_cost(&analytic, kind, e1, taller).latency_ns;
+            let st = collective_cost(&sim, kind, e1, taller).latency_ns;
+            assert!(at >= a1, "{kind:?}: analytic must grow with banks");
+            assert!(st >= s1, "{kind:?}: simulated must grow with banks");
+        }
+    });
+}

@@ -11,10 +11,15 @@
 #                                     parse with `python3 -m json.tool`
 #   4. NoC calibration self-check   — the noc-calibration figure's calibrated
 #                                     error must be <= 20% at every anchor
-#   5. cargo clippy --all-targets   — lints with warnings denied
-#   6. cargo doc --no-deps          — rustdoc with warnings denied
-#   7. cargo fmt --check            — formatting (skipped if rustfmt absent)
-#   8. python tests                 — kernel/model oracles (skipped without jax)
+#   5. pool determinism gate        — `figures --jobs 4 --format json` must be
+#                                     byte-identical to `--jobs 1`
+#   6. bench artifacts gate         — bench_hotpath runs in fast mode and both
+#                                     BENCH_serving.json / BENCH_parallel.json
+#                                     must parse
+#   7. cargo clippy --all-targets   — lints with warnings denied
+#   8. cargo doc --no-deps          — rustdoc with warnings denied
+#   9. cargo fmt --check            — formatting (skipped if rustfmt absent)
+#  10. python tests                 — kernel/model oracles (skipped without jax)
 #
 # A missing `cargo` is a hard failure, never a silent skip: a gate that
 # checked nothing must not look green.
@@ -75,6 +80,46 @@ bad = [e for e in errs if e > 20.0]
 if bad:
     sys.exit(f"calibrated NoC error exceeds 20% at {len(bad)} anchor(s): {bad}")
 print(f"ok: {len(errs)} anchors, max calibrated error {max(errs):.2f}%")
+'
+
+say "pool determinism gate (figures --jobs 4 == --jobs 1)"
+# the worker pool merges results in submission order, so pooled output is
+# contractually bit-identical to serial; diff the full figures JSON to hold
+# the CLI to it (a representative subset keeps the gate under a minute:
+# cell-sweep figures, the serving tables, and the calibration fit)
+DET_FIGS="fig5 fig9 fig16 fig23 scenarios noc-calibration"
+J1=$(./target/release/compair figures $DET_FIGS --jobs 1 --format json)
+J4=$(./target/release/compair figures $DET_FIGS --jobs 4 --format json)
+if [[ "$J1" == "$J4" ]]; then
+    echo "ok: --jobs 4 output is byte-identical to --jobs 1 ($DET_FIGS)"
+else
+    echo "error: figures output diverges between --jobs 1 and --jobs 4" >&2
+    diff <(printf '%s\n' "$J1") <(printf '%s\n' "$J4") | head -40 >&2
+    exit 1
+fi
+
+say "bench artifacts gate (BENCH_serving.json + BENCH_parallel.json parse)"
+# fast mode shrinks the Bencher budget; the pool section always runs its
+# single timed serial-vs-pooled passes and asserts bit-identity itself
+COMPAIR_BENCH_FAST=1 cargo bench -q --bench bench_hotpath
+for artifact in BENCH_serving.json BENCH_parallel.json; do
+    if [[ ! -f "$artifact" ]]; then
+        echo "error: bench_hotpath did not write $artifact" >&2
+        exit 1
+    fi
+    python3 -m json.tool < "$artifact" > /dev/null
+done
+python3 -c '
+import json
+doc = json.load(open("BENCH_parallel.json"))
+cases = doc["cases"]
+assert cases, "BENCH_parallel.json has no cases"
+for c in cases:
+    for k in ("name", "serial_ns", "parallel_ns", "speedup", "identical"):
+        assert k in c, "case missing %s: %r" % (k, c)
+    assert c["identical"] is True, "pooled output diverged in %s" % c["name"]
+speedups = ", ".join("%s %.2fx" % (c["name"], c["speedup"]) for c in cases)
+print("ok: %d pool cases (%s)" % (len(cases), speedups))
 '
 
 if [[ "$FAST" == "0" ]]; then

@@ -3,13 +3,45 @@
 //! policy face-off, and colocated vs disaggregated prefill/decode with
 //! priced KV migration.
 //!
-//! Run: `cargo run --release --example cluster`
+//! Run: `cargo run --release --example cluster [-- --jobs N|auto]`
+//!
+//! Every sweep cell (replica count, router policy, scenario × mode) is its
+//! own pool job; the submission-order merge keeps the tables byte-identical
+//! to --jobs 1.
 
 use compair::config::{ArchKind, ModelConfig, RunConfig};
 use compair::coordinator::{cluster::render_cluster_summary, ClusterConfig, RouterPolicy};
+use compair::util::pool::{default_jobs, par_map_indexed};
 use compair::util::table::{fbytes, fenergy_pj, fnum, ftime_ns, Table};
 use compair::workload::Scenario;
 use compair::Engine;
+
+/// Minimal `--jobs N|auto` parser (examples don't pull in the CLI layer).
+fn jobs_from_args() -> usize {
+    let mut it = std::env::args().skip(1);
+    while let Some(a) = it.next() {
+        let v = match a.strip_prefix("--jobs=") {
+            Some(v) => Some(v.to_string()),
+            None if a == "--jobs" => it.next(),
+            None => continue,
+        };
+        match v.as_deref() {
+            Some("auto") => return default_jobs(),
+            Some(s) => match s.parse::<usize>() {
+                Ok(n) if n >= 1 => return n,
+                _ => {
+                    eprintln!("--jobs expects a positive integer or 'auto', got '{s}'");
+                    std::process::exit(2);
+                }
+            },
+            None => {
+                eprintln!("--jobs expects a value");
+                std::process::exit(2);
+            }
+        }
+    }
+    default_jobs()
+}
 
 fn engine() -> Engine {
     let mut rc = RunConfig::new(ArchKind::CompAirOpt, ModelConfig::llama2_7b());
@@ -19,24 +51,31 @@ fn engine() -> Engine {
 }
 
 fn main() {
+    let jobs = jobs_from_args();
+
     // ---- replica scaling on the mixed multi-tenant blend ----
+    // each replica count is a pool job with its own Engine (per-worker
+    // memoization); rows land in sweep order
     println!("==== replica scaling: mixed blend, CompAir_Opt, llama2-7b ====");
     let mut t = Table::new(
         "colocated, least-kv router, 32 requests, seed 42",
         &["replicas", "makespan", "tok/s", "ttft p99", "slo%", "energy/tok"],
     );
-    for replicas in [1usize, 2, 4, 8] {
+    let rows = par_map_indexed(jobs, vec![1usize, 2, 4, 8], |_, replicas| {
         let cfg = ClusterConfig { replicas, disagg: None, router: RouterPolicy::LeastLoadedKv };
         let r = engine().cluster_scenario(Scenario::by_name("mixed").unwrap(), 32, 42, cfg)
             .cluster;
-        t.rowv(vec![
+        vec![
             replicas.to_string(),
             ftime_ns(r.report.makespan_ns as f64),
             fnum(r.report.throughput_tok_s),
             ftime_ns(r.report.ttft_p99_ns),
             format!("{:.1}%", r.report.slo_attainment * 100.0),
             fenergy_pj(r.report.energy_per_token_pj),
-        ]);
+        ]
+    });
+    for row in rows {
+        t.rowv(row);
     }
     t.print();
 
@@ -46,21 +85,25 @@ fn main() {
         "colocated, 48 requests, seed 42",
         &["router", "ttft p50", "ttft p99", "slo%", "rejected"],
     );
-    for router in [
+    let routers = vec![
         RouterPolicy::RoundRobin,
         RouterPolicy::LeastLoadedKv,
         RouterPolicy::DeadlineAware,
-    ] {
+    ];
+    let rows = par_map_indexed(jobs, routers, |_, router| {
         let cfg = ClusterConfig { replicas: 4, disagg: None, router };
         let r = engine().cluster_scenario(Scenario::by_name("bursty").unwrap(), 48, 42, cfg)
             .cluster;
-        t.rowv(vec![
+        vec![
             router.label().to_string(),
             ftime_ns(r.report.ttft_p50_ns),
             ftime_ns(r.report.ttft_p99_ns),
             format!("{:.1}%", r.report.slo_attainment * 100.0),
             r.report.rejected.to_string(),
-        ]);
+        ]
+    });
+    for row in rows {
+        t.rowv(row);
     }
     t.print();
 
@@ -70,25 +113,28 @@ fn main() {
         "least-kv router, seed 42",
         &["scenario", "mode", "tok/s", "ttft p99", "slo%", "energy/tok", "kv migrated"],
     );
+    let mut cells = Vec::new();
     for sc in Scenario::all() {
-        let n = sc.default_requests.min(16);
         for disagg in [None, Some((2usize, 2usize))] {
-            let cfg = ClusterConfig {
-                replicas: 4,
-                disagg,
-                router: RouterPolicy::LeastLoadedKv,
-            };
-            let r = engine().cluster_scenario(sc.clone(), n, 42, cfg).cluster;
-            t.rowv(vec![
-                sc.name.to_string(),
-                r.mode(),
-                fnum(r.report.throughput_tok_s),
-                ftime_ns(r.report.ttft_p99_ns),
-                format!("{:.1}%", r.report.slo_attainment * 100.0),
-                fenergy_pj(r.report.energy_per_token_pj),
-                fbytes(r.migration_bytes),
-            ]);
+            cells.push((sc.clone(), disagg));
         }
+    }
+    let rows = par_map_indexed(jobs, cells, |_, (sc, disagg)| {
+        let n = sc.default_requests.min(16);
+        let cfg = ClusterConfig { replicas: 4, disagg, router: RouterPolicy::LeastLoadedKv };
+        let r = engine().cluster_scenario(sc.clone(), n, 42, cfg).cluster;
+        vec![
+            sc.name.to_string(),
+            r.mode(),
+            fnum(r.report.throughput_tok_s),
+            ftime_ns(r.report.ttft_p99_ns),
+            format!("{:.1}%", r.report.slo_attainment * 100.0),
+            fenergy_pj(r.report.energy_per_token_pj),
+            fbytes(r.migration_bytes),
+        ]
+    });
+    for row in rows {
+        t.rowv(row);
     }
     t.print();
 

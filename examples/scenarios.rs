@@ -3,13 +3,44 @@
 //! per-class SLO breakdowns, followed by the CENT-vs-CompAir face-off on
 //! the mixed multi-tenant blend.
 //!
-//! Run: `cargo run --release --example scenarios`
+//! Run: `cargo run --release --example scenarios [-- --jobs N|auto]`
+//!
+//! Each scenario (and each face-off arch) is its own pool job; the
+//! submission-order merge keeps the printout byte-identical to --jobs 1.
 
 use compair::config::{ArchKind, ModelConfig, RunConfig};
 use compair::coordinator::serving;
+use compair::util::pool::{default_jobs, par_map_indexed};
 use compair::util::table::{fenergy_pj, fnum, ftime_ns, Table};
 use compair::workload::Scenario;
 use compair::Engine;
+
+/// Minimal `--jobs N|auto` parser (examples don't pull in the CLI layer).
+fn jobs_from_args() -> usize {
+    let mut it = std::env::args().skip(1);
+    while let Some(a) = it.next() {
+        let v = match a.strip_prefix("--jobs=") {
+            Some(v) => Some(v.to_string()),
+            None if a == "--jobs" => it.next(),
+            None => continue,
+        };
+        match v.as_deref() {
+            Some("auto") => return default_jobs(),
+            Some(s) => match s.parse::<usize>() {
+                Ok(n) if n >= 1 => return n,
+                _ => {
+                    eprintln!("--jobs expects a positive integer or 'auto', got '{s}'");
+                    std::process::exit(2);
+                }
+            },
+            None => {
+                eprintln!("--jobs expects a value");
+                std::process::exit(2);
+            }
+        }
+    }
+    default_jobs()
+}
 
 fn engine(arch: ArchKind) -> Engine {
     let mut rc = RunConfig::new(arch, ModelConfig::llama2_7b());
@@ -19,16 +50,24 @@ fn engine(arch: ArchKind) -> Engine {
 }
 
 fn main() {
+    let jobs = jobs_from_args();
+
     println!("==== scenario sweep: CompAir_Opt, llama2-7b, TP=8, 32 devices ====\n");
-    for sc in Scenario::all() {
+    // one pool job per scenario: each worker builds its own Engine (the
+    // memoizing cost model is per-instance), renders its block off-thread,
+    // and the merge prints them in Scenario::all() order
+    let blocks = par_map_indexed(jobs, Scenario::all(), |_, sc| {
         let name = sc.name;
         let desc = sc.description;
         let n = sc.default_requests;
         let sr = engine(ArchKind::CompAirOpt).serve_scenario(sc, n, 42);
-        println!("-- {name}: {desc} --");
-        print!("{}", serving::render_summary(&sr.report));
-        sr.report.class_table("per-class").print();
-        println!();
+        let mut out = format!("-- {name}: {desc} --\n");
+        out.push_str(&serving::render_summary(&sr.report));
+        out.push_str(&sr.report.class_table("per-class").render());
+        out
+    });
+    for b in blocks {
+        println!("{b}");
     }
 
     println!("==== mixed multi-tenant blend across architectures ====");
@@ -36,17 +75,21 @@ fn main() {
         "same trace, same SLOs",
         &["arch", "makespan", "tok/s", "ttft p99", "slo%", "energy/tok"],
     );
-    for arch in [ArchKind::Cent, ArchKind::CentCurry, ArchKind::CompAirOpt] {
+    let archs = vec![ArchKind::Cent, ArchKind::CentCurry, ArchKind::CompAirOpt];
+    let rows = par_map_indexed(jobs, archs, |_, arch| {
         let sc = Scenario::by_name("mixed").unwrap();
         let r = engine(arch).serve_scenario(sc, 48, 42).report;
-        t.rowv(vec![
+        vec![
             arch.label().to_string(),
             ftime_ns(r.makespan_ns as f64),
             fnum(r.throughput_tok_s),
             ftime_ns(r.ttft_p99_ns),
             format!("{:.1}%", r.slo_attainment * 100.0),
             fenergy_pj(r.energy_per_token_pj),
-        ]);
+        ]
+    });
+    for row in rows {
+        t.rowv(row);
     }
     t.print();
 }

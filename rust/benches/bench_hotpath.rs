@@ -11,13 +11,24 @@ use compair::arch::{CachedCostModel, System};
 use compair::config::{ArchKind, HwConfig, ModelConfig, NocConfig, RunConfig, SramGang};
 use compair::coordinator::{ServeConfig, Server};
 use compair::dram::{stream_latency_ns, PimBank};
+use compair::figures::{self, FigCtx};
 use compair::isa::{Machine, RowProgram};
 use compair::noc::packet::{Packet, PacketType, PathStep, RouterId, StepOp};
 use compair::noc::{trees, Mesh};
 use compair::sram::bank::{SramBank, WeightPolicy};
 use compair::util::bench::Bencher;
 use compair::util::json::{write_json_file, Json, ToJson};
+use compair::util::pool;
 use compair::workload::Scenario;
+use compair::Engine;
+
+/// Wall-clock one run of `f` (the pool cases are second-scale sweeps, so
+/// single timed runs — not `Bencher` batches — are the honest measure).
+fn timed<R>(f: impl FnOnce() -> R) -> (R, f64) {
+    let t0 = std::time::Instant::now();
+    let r = f();
+    (r, t0.elapsed().as_nanos() as f64)
+}
 
 fn main() {
     let hw = HwConfig::paper();
@@ -116,6 +127,19 @@ fn main() {
     let speedup = uncached.mean_ns / cached.mean_ns.max(1e-9);
     println!("cached speedup over uncached: {speedup:.2}x");
 
+    // one instrumented run outside the timers: the memo counters for the
+    // exact trace the face-off prices (hits / misses / evictions)
+    let cm = CachedCostModel::new(System::new(serving_rc()));
+    server.run_with_model(&cm);
+    let cache_stats = cm.stats();
+    println!(
+        "cache: {} hits, {} misses, {} evictions ({:.0}% hit rate)",
+        cache_stats.hits,
+        cache_stats.misses,
+        cache_stats.evictions,
+        cache_stats.hit_rate() * 100.0
+    );
+
     let doc = Json::obj()
         .field("bench", "serving_hotpath")
         .field("scenario", scenario)
@@ -125,10 +149,84 @@ fn main() {
         .field("uncached", uncached.to_json())
         .field("cached", cached.to_json())
         .field("cached_speedup", speedup)
+        .field("cache_stats", cache_stats.to_json())
         .field("all_results", b.results_json());
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_serving.json");
     match write_json_file(&path, &doc) {
         Ok(()) => println!("wrote {}", path.display()),
         Err(e) => eprintln!("warning: could not write {}: {e}", path.display()),
     }
+
+    // ---- worker pool: serial vs pooled figure/sweep wall time ----
+    // The determinism contract is part of the measurement: every case also
+    // asserts its pooled output is bit-identical to the serial run, so a
+    // regression in either speed or determinism shows up in the artifact
+    // (BENCH_parallel.json at the repository root).
+    println!("\n== worker pool: serial vs pooled (jobs={}) ==", pool::default_jobs());
+    let jobs = pool::default_jobs().max(2);
+    let serial_cx = FigCtx { jobs: 1, ..FigCtx::default() };
+    let pooled_cx = FigCtx { jobs, ..FigCtx::default() };
+    let mut cases: Vec<Json> = Vec::new();
+    let mut record = |name: &str, serial_ns: f64, parallel_ns: f64, identical: bool| {
+        let sp = serial_ns / parallel_ns.max(1.0);
+        println!(
+            "{:<32} serial {:>10.1}ms  pooled {:>10.1}ms  speedup {sp:.2}x  identical={identical}",
+            name,
+            serial_ns / 1e6,
+            parallel_ns / 1e6
+        );
+        cases.push(
+            Json::obj()
+                .field("name", name)
+                .field("serial_ns", serial_ns)
+                .field("parallel_ns", parallel_ns)
+                .field("speedup", sp)
+                .field("identical", identical),
+        );
+        identical
+    };
+
+    // a cell-sweep figure: 9 (batch, seqlen) cells x 4 archs per cell
+    let (s_out, s_ns) = timed(|| figures::run("fig16", &serial_cx).expect("fig16 registered"));
+    let (p_out, p_ns) = timed(|| figures::run("fig16", &pooled_cx).expect("fig16 registered"));
+    let mut all_identical = record("figures/fig16", s_ns, p_ns, s_out == p_out);
+
+    // the CalibratedNoc anchor fit: prefit warms granules on the pool
+    let (s_out, s_ns) =
+        timed(|| figures::run("noc-calibration", &serial_cx).expect("registered"));
+    let (p_out, p_ns) =
+        timed(|| figures::run("noc-calibration", &pooled_cx).expect("registered"));
+    all_identical &= record("figures/noc-calibration", s_ns, p_ns, s_out == p_out);
+
+    // the batch facade: an arch x batch grid through Engine::sweep
+    let grid = || {
+        let mut configs = Vec::new();
+        for arch in [ArchKind::Cent, ArchKind::CompAirBase, ArchKind::CompAirOpt] {
+            for batch in [1usize, 16, 64] {
+                let mut rc = RunConfig::new(arch, ModelConfig::llama2_7b());
+                rc.batch = batch;
+                rc.seq_len = 4096;
+                configs.push(rc);
+            }
+        }
+        configs
+    };
+    let (s_reports, s_ns) = timed(|| Engine::sweep(grid(), 1));
+    let (p_reports, p_ns) = timed(|| Engine::sweep(grid(), jobs));
+    let bits = |rs: &[compair::arch::PhaseReport]| -> Vec<u64> {
+        rs.iter().map(|r| r.latency_ns.to_bits()).collect()
+    };
+    all_identical &= record("engine/sweep-3x3-grid", s_ns, p_ns, bits(&s_reports) == bits(&p_reports));
+
+    let doc = Json::obj()
+        .field("bench", "parallel_pool")
+        .field("jobs", jobs)
+        .field("all_identical", all_identical)
+        .field("cases", Json::arr(cases.into_iter()));
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_parallel.json");
+    match write_json_file(&path, &doc) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("warning: could not write {}: {e}", path.display()),
+    }
+    assert!(all_identical, "pooled output diverged from serial — determinism contract broken");
 }

@@ -13,8 +13,9 @@ use compair::util::bench::Bencher;
 fn main() {
     let mut b = Bencher::from_env();
     println!("== per-figure regeneration (end-to-end) ==");
+    let cx = figures::FigCtx::default();
     for (name, f) in figures::registry() {
-        b.bench(&format!("figures/{name}"), f);
+        b.bench(&format!("figures/{name}"), || f(&cx));
     }
 
     println!("\n== headline simulations ==");

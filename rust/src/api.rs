@@ -108,6 +108,18 @@ impl Engine {
         Cluster::new(self.rc.clone(), serve, cfg).run()
     }
 
+    /// Batch-evaluate a sweep of configurations on up to `jobs` worker
+    /// threads, returning one one-shot [`PhaseReport`] per config **in
+    /// input order** — element `i` is exactly
+    /// `Engine::new(configs[i]).simulate()`, bit-identical whatever `jobs`
+    /// is (see `util::pool`). Each job builds its own `System` (the
+    /// memoizing models are deliberately `!Sync`), so jobs share nothing
+    /// but the configs. This is the batch face of the facade: the figure
+    /// sweeps and the `simulate --sweep-*` CLI paths fan out through it.
+    pub fn sweep(configs: Vec<RunConfig>, jobs: usize) -> Vec<PhaseReport> {
+        crate::util::pool::par_map_indexed(jobs, configs, |_, rc| Engine::new(rc).simulate())
+    }
+
     /// Cluster-serve one named scenario (labelled, for the figure tables).
     /// Panics for [`ArchKind::AttAcc`] (see [`Engine::serve`]).
     pub fn cluster_scenario(
@@ -178,6 +190,33 @@ mod tests {
             let cm = e.cost_model();
             let b = cm.phase_report(e.rc().phase, e.rc().batch, e.rc().seq_len);
             assert_eq!(r.latency_ns.to_bits(), b.latency_ns.to_bits(), "{f:?}");
+        }
+    }
+
+    #[test]
+    fn sweep_matches_a_serial_loop_bit_for_bit() {
+        let mut configs = Vec::new();
+        for arch in [ArchKind::Cent, ArchKind::CompAirBase, ArchKind::CompAirOpt, ArchKind::AttAcc]
+        {
+            for batch in [1usize, 16] {
+                let mut c = rc(arch);
+                c.batch = batch;
+                configs.push(c);
+            }
+        }
+        let serial: Vec<_> = configs.iter().map(|c| Engine::new(c.clone()).simulate()).collect();
+        for jobs in [1usize, 4] {
+            let swept = Engine::sweep(configs.clone(), jobs);
+            assert_eq!(swept.len(), serial.len());
+            for (i, (a, b)) in serial.iter().zip(&swept).enumerate() {
+                assert_eq!(a.latency_ns.to_bits(), b.latency_ns.to_bits(), "jobs={jobs} i={i}");
+                assert_eq!(
+                    a.throughput_tok_s.to_bits(),
+                    b.throughput_tok_s.to_bits(),
+                    "jobs={jobs} i={i}"
+                );
+                assert_eq!(a.layer_cost, b.layer_cost, "jobs={jobs} i={i}");
+            }
         }
     }
 

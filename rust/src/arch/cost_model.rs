@@ -23,16 +23,20 @@
 //! drift as the KV cache grows (`max_kv` rises every decode step), so the
 //! iteration path deliberately retains only the `Copy` whole-pass
 //! [`OpCost`] per shape, never the full per-op report, and every map is
-//! capped (drop-all eviction) so a long run's memory stays bounded.
+//! capped so a long run's memory stays bounded: at the cap the *oldest
+//! half* of the entries (insertion order) is evicted, which keeps the
+//! recent working set — the shapes a sweep is currently retracing — warm
+//! instead of cold-starting the whole cache.
 //! Memoization is sound because the simulator is a pure function of
 //! `(base config, shape)`; the golden tests in
 //! `tests/integration_engine.rs` assert cached ≡ uncached bit-for-bit.
 
 use std::cell::{Cell, RefCell};
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 
 use crate::config::{ArchKind, NocFidelity, Phase, RunConfig};
 use crate::sim::OpCost;
+use crate::util::json::{Json, ToJson};
 
 use super::system::{PhaseReport, System};
 
@@ -64,6 +68,9 @@ pub struct IterKey {
 pub struct CacheStats {
     pub hits: u64,
     pub misses: u64,
+    /// Entries dropped by the capped maps' oldest-half eviction. Zero on
+    /// every workload whose distinct-shape count stays under the caps.
+    pub evictions: u64,
 }
 
 impl CacheStats {
@@ -75,6 +82,16 @@ impl CacheStats {
         } else {
             self.hits as f64 / total as f64
         }
+    }
+}
+
+impl ToJson for CacheStats {
+    fn to_json(&self) -> Json {
+        Json::obj()
+            .field("hits", self.hits)
+            .field("misses", self.misses)
+            .field("evictions", self.evictions)
+            .field("hit_rate", self.hit_rate())
     }
 }
 
@@ -140,16 +157,53 @@ const PHASE_CAP: usize = 1024;
 const TOTAL_CAP: usize = 1 << 16;
 const ITER_CAP: usize = 1 << 16;
 
-/// Insert with drop-all eviction at `cap`. Decode shapes drift
-/// monotonically (the KV length rises every step), so LRU would buy
-/// little over clearing; bounding memory is what matters, and
-/// recomputation after a clear is always sound.
-fn insert_capped<K: std::hash::Hash + Eq, V>(map: &RefCell<HashMap<K, V>>, cap: usize, k: K, v: V) {
-    let mut m = map.borrow_mut();
-    if m.len() >= cap {
-        m.clear();
+/// A hash map bounded at `cap` entries with oldest-half eviction: when a
+/// fresh insert would exceed the cap, the oldest half of the entries (by
+/// first-insertion order) is dropped in one sweep. Decode shapes drift
+/// monotonically (the KV length rises every step), so per-entry LRU would
+/// buy little over this — but keeping the *recent* half warm matters: the
+/// old drop-all eviction cold-started every map at the cap, re-lowering
+/// shapes a sweep was actively retracing. Re-inserting an existing key
+/// refreshes the value without touching the insertion order (so a
+/// `phase_report` re-seeding an already-held total cannot double-count the
+/// key) and every eviction is counted for [`CacheStats`].
+struct CappedMap<K, V> {
+    cap: usize,
+    map: HashMap<K, V>,
+    /// First-insertion order of the keys currently held; in sync with
+    /// `map` (push on fresh insert, pop-front on eviction only).
+    order: VecDeque<K>,
+    evictions: u64,
+}
+
+impl<K: std::hash::Hash + Eq + Copy, V> CappedMap<K, V> {
+    fn new(cap: usize) -> Self {
+        assert!(cap >= 2, "a capped map needs room to keep a newest half");
+        Self { cap, map: HashMap::new(), order: VecDeque::new(), evictions: 0 }
     }
-    m.insert(k, v);
+
+    fn get(&self, k: &K) -> Option<&V> {
+        self.map.get(k)
+    }
+
+    fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    fn insert(&mut self, k: K, v: V) {
+        if self.map.insert(k, v).is_some() {
+            return; // value refresh; the key keeps its original position
+        }
+        self.order.push_back(k);
+        if self.map.len() > self.cap {
+            let drop = self.order.len() / 2;
+            for _ in 0..drop {
+                let old = self.order.pop_front().expect("order deque in sync with map");
+                self.map.remove(&old).expect("order deque in sync with map");
+                self.evictions += 1;
+            }
+        }
+    }
 }
 
 /// Memoizing wrapper around any [`CostModel`]. Interior mutability keeps
@@ -159,11 +213,11 @@ fn insert_capped<K: std::hash::Hash + Eq, V>(map: &RefCell<HashMap<K, V>>, cap: 
 pub struct CachedCostModel<M: CostModel> {
     inner: M,
     /// Full reports, for direct [`CostModel::phase_report`] callers.
-    phases: RefCell<HashMap<ShapeKey, PhaseReport>>,
+    phases: RefCell<CappedMap<ShapeKey, PhaseReport>>,
     /// Whole-pass totals only (`Copy`), for the iteration hot path — a
     /// drifting decode shape costs one small entry here, not a report.
-    totals: RefCell<HashMap<ShapeKey, OpCost>>,
-    iters: RefCell<HashMap<IterKey, OpCost>>,
+    totals: RefCell<CappedMap<ShapeKey, OpCost>>,
+    iters: RefCell<CappedMap<IterKey, OpCost>>,
     hits: Cell<u64>,
     misses: Cell<u64>,
 }
@@ -172,9 +226,9 @@ impl<M: CostModel> CachedCostModel<M> {
     pub fn new(inner: M) -> Self {
         Self {
             inner,
-            phases: RefCell::new(HashMap::new()),
-            totals: RefCell::new(HashMap::new()),
-            iters: RefCell::new(HashMap::new()),
+            phases: RefCell::new(CappedMap::new(PHASE_CAP)),
+            totals: RefCell::new(CappedMap::new(TOTAL_CAP)),
+            iters: RefCell::new(CappedMap::new(ITER_CAP)),
             hits: Cell::new(0),
             misses: Cell::new(0),
         }
@@ -186,7 +240,13 @@ impl<M: CostModel> CachedCostModel<M> {
 
     /// Lookup counters over all cache levels.
     pub fn stats(&self) -> CacheStats {
-        CacheStats { hits: self.hits.get(), misses: self.misses.get() }
+        CacheStats {
+            hits: self.hits.get(),
+            misses: self.misses.get(),
+            evictions: self.phases.borrow().evictions
+                + self.totals.borrow().evictions
+                + self.iters.borrow().evictions,
+        }
     }
 
     /// Distinct memoized entries (phase reports + totals + iteration
@@ -228,7 +288,7 @@ impl<M: CostModel> CachedCostModel<M> {
                 self.inner.phase_report(phase, batch, seq_len).layer_cost_total()
             }
         };
-        insert_capped(&self.totals, TOTAL_CAP, key, total);
+        self.totals.borrow_mut().insert(key, total);
         total
     }
 }
@@ -250,9 +310,10 @@ impl<M: CostModel> CostModel for CachedCostModel<M> {
         }
         self.miss();
         let r = self.inner.phase_report(phase, batch, seq_len);
-        insert_capped(&self.phases, PHASE_CAP, key, r.clone());
+        self.phases.borrow_mut().insert(key, r.clone());
         // the total is a free by-product — seed the iteration path's map
-        insert_capped(&self.totals, TOTAL_CAP, key, r.layer_cost_total());
+        // (a refresh if `phase_total` already holds this shape)
+        self.totals.borrow_mut().insert(key, r.layer_cost_total());
         r
     }
 
@@ -276,7 +337,7 @@ impl<M: CostModel> CostModel for CachedCostModel<M> {
             decode_batch,
             max_kv,
         );
-        insert_capped(&self.iters, ITER_CAP, key, cost);
+        self.iters.borrow_mut().insert(key, cost);
         cost
     }
 }
@@ -418,14 +479,57 @@ mod tests {
     }
 
     #[test]
-    fn capped_insert_bounds_the_map() {
-        let map: RefCell<HashMap<usize, usize>> = RefCell::new(HashMap::new());
+    fn capped_map_bounds_the_map_and_keeps_the_newest_half() {
+        let mut map: CappedMap<usize, usize> = CappedMap::new(4);
         for i in 0..10 {
-            insert_capped(&map, 4, i, i);
+            map.insert(i, i * 10);
+            assert!(map.len() <= 4, "cap breached after inserting {i}");
         }
-        // every insert lands; the map never exceeds the cap
-        assert!(map.borrow().len() <= 4);
-        assert_eq!(map.borrow().get(&9), Some(&9));
+        // the most recent insert always survives eviction...
+        assert_eq!(map.get(&9), Some(&90));
+        // ...and so does the newest *half*, not just the newest entry:
+        // inserts 0..10 over cap 4 evict two entries at each of i = 4, 6
+        // and 8, so the survivors are exactly {6, 7, 8, 9}
+        for k in 6..10 {
+            assert_eq!(map.get(&k), Some(&(k * 10)));
+        }
+        assert_eq!(map.get(&0), None);
+        assert_eq!(map.get(&5), None);
+        assert_eq!(map.evictions, 6, "every dropped entry is counted");
+    }
+
+    #[test]
+    fn capped_map_refresh_keeps_insertion_order_honest() {
+        let mut map: CappedMap<usize, usize> = CappedMap::new(4);
+        for i in 0..4 {
+            map.insert(i, i);
+        }
+        // refreshing an existing key must not re-enter the order deque —
+        // a duplicate would later desync eviction from the map
+        map.insert(0, 100);
+        assert_eq!(map.get(&0), Some(&100));
+        assert_eq!(map.len(), 4);
+        assert_eq!(map.evictions, 0);
+        map.insert(4, 4); // fresh insert over cap: evict the oldest half
+        assert_eq!(map.len(), 3);
+        assert_eq!(map.get(&0), None, "refreshed key keeps its original (oldest) position");
+        assert_eq!(map.get(&1), None);
+        assert_eq!(map.get(&4), Some(&4));
+        assert_eq!(map.evictions, 2);
+    }
+
+    #[test]
+    fn eviction_surfaces_in_stats() {
+        let mut map: CappedMap<usize, usize> = CappedMap::new(2);
+        for i in 0..3 {
+            map.insert(i, i);
+        }
+        assert!(map.evictions > 0);
+        // and the struct-level counter reaches CacheStats/JSON
+        let st = CacheStats { hits: 3, misses: 1, evictions: map.evictions };
+        let j = st.to_json().render();
+        assert!(j.contains("\"evictions\":1"), "{j}");
+        assert!(j.contains("\"hit_rate\":0.75"), "{j}");
     }
 
     #[test]

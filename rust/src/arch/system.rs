@@ -101,6 +101,13 @@ impl System {
         let sram = SramBank::new(&rc.hw.sram, rc.sram_gang, &rc.hw.dram);
         let channel = Channel::new(&rc.hw.dram);
         let noc = noc_model::build(rc.noc_fidelity, &rc.hw);
+        if rc.jobs > 1 {
+            // fan the calibration anchor simulations out over the run's
+            // worker budget (a no-op for the stateless analytic tier and
+            // the lazily-memoizing simulated tier); the fitted state is
+            // bit-identical to the lazy serial fit
+            noc.prefit(rc.jobs);
+        }
         Self { rc, em, bank, sram, channel, noc }
     }
 

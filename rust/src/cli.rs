@@ -103,6 +103,10 @@ USAGE:
   compair figures [<id>...] [--all]       regenerate paper tables/figures
                                           (incl. noc-calibration: analytic
                                           vs flit-level NoC error table)
+                   [--jobs N|auto]        fan figures + their sweep cells out
+                                          to N pool workers (auto = all
+                                          cores); output is bit-identical
+                                          to --jobs 1, whatever N is
   compair simulate [--arch A] [--model M] [--phase decode|prefill]
                    [--batch N] [--seqlen N] [--tp N] [--devices N]
                    [--config file.toml]   run one simulation, print report
@@ -125,6 +129,9 @@ report document on stdout. `simulate`, `serve` and `figures` also accept
 `--noc-fidelity analytic|calibrated|simulated` to pick how NoC collectives
 are priced (closed forms, simulator-calibrated forms, or the flit-level
 mesh itself); serve defaults to calibrated, everything else to analytic.
+They likewise accept `--jobs N|auto` (default auto): on `figures` it sizes
+the worker pool for the figure/cell fan-out, on `simulate`/`serve` it
+parallelizes the NoC calibration prefit. Results never depend on N.
 
 ARCHS:     cent | cent-curry | compair-base | compair-opt | sram-stack | attacc
 MODELS:    llama2-7b | llama2-13b | llama2-70b | qwen-72b | gpt3-175b | tiny

@@ -273,13 +273,6 @@ pub enum NocFidelity {
     Simulated,
 }
 
-/// Process-wide default fidelity, read by [`crate::config::RunConfig::new`].
-/// `0 = Analytic, 1 = Calibrated, 2 = Simulated`. Only the CLI launcher
-/// writes it (so `figures --noc-fidelity` reaches the generators, which
-/// build their `RunConfig`s internally); the library default is Analytic.
-static PROCESS_DEFAULT_FIDELITY: std::sync::atomic::AtomicU8 =
-    std::sync::atomic::AtomicU8::new(0);
-
 impl NocFidelity {
     pub fn label(&self) -> &'static str {
         match self {
@@ -301,25 +294,6 @@ impl NocFidelity {
     /// Every tier, cheapest first.
     pub fn all() -> [NocFidelity; 3] {
         [NocFidelity::Analytic, NocFidelity::Calibrated, NocFidelity::Simulated]
-    }
-
-    /// The process-wide default new `RunConfig`s start from.
-    pub fn process_default() -> NocFidelity {
-        match PROCESS_DEFAULT_FIDELITY.load(std::sync::atomic::Ordering::Relaxed) {
-            1 => NocFidelity::Calibrated,
-            2 => NocFidelity::Simulated,
-            _ => NocFidelity::Analytic,
-        }
-    }
-
-    /// Override the process-wide default (CLI launcher only).
-    pub fn set_process_default(f: NocFidelity) {
-        let v = match f {
-            NocFidelity::Analytic => 0,
-            NocFidelity::Calibrated => 1,
-            NocFidelity::Simulated => 2,
-        };
-        PROCESS_DEFAULT_FIDELITY.store(v, std::sync::atomic::Ordering::Relaxed);
     }
 }
 

@@ -146,6 +146,13 @@ pub struct RunConfig {
     /// closed forms, simulator-calibrated closed forms, or the flit-level
     /// simulator itself. Part of every cost-model memoization key.
     pub noc_fidelity: NocFidelity,
+    /// Worker threads for the parallel-capable paths this run touches
+    /// (calibration anchor fits today; sweeps fan out above `RunConfig`).
+    /// `1` (the library default) is fully serial; any value produces
+    /// bit-identical results — the pool merges in submission order (see
+    /// `util::pool`). Echoed into JSON reports as provenance; never part
+    /// of a memoization key because it cannot change a result.
+    pub jobs: usize,
 }
 
 impl RunConfig {
@@ -163,7 +170,12 @@ impl RunConfig {
             devices: 32,
             sram_gang: SramGang::In256Out16,
             fc_mapping: FcMapping::OutputSplit,
-            noc_fidelity: NocFidelity::process_default(),
+            // the library default is analytic and explicit — there is no
+            // process-wide mutable default (it was a data race waiting to
+            // happen under the worker pool); the CLI threads its
+            // per-subcommand default through every constructor instead
+            noc_fidelity: NocFidelity::Analytic,
+            jobs: 1,
         }
     }
 
@@ -224,6 +236,12 @@ impl RunConfig {
             self.noc_fidelity = NocFidelity::by_name(f)
                 .ok_or_else(|| format!("unknown noc_fidelity '{f}' (analytic | calibrated | simulated)"))?;
         }
+        if let Some(v) = doc.get_int("run.jobs") {
+            if v < 1 {
+                return Err("run.jobs must be >= 1".into());
+            }
+            self.jobs = v as usize;
+        }
         if let Some(v) = doc.get_float("hw.sram.voltage") {
             self.hw.sram.voltage = Voltage(v).clamp();
         }
@@ -258,6 +276,7 @@ impl ToJson for RunConfig {
             .field("devices", self.devices)
             .field("fc_mapping", self.fc_mapping.label())
             .field("noc_fidelity", self.noc_fidelity.label())
+            .field("jobs", self.jobs)
     }
 }
 

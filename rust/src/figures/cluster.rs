@@ -5,13 +5,16 @@
 //! CXL switch — layered over the paper's per-device model.
 
 use crate::api::Engine;
-use crate::config::{ArchKind, ModelConfig, RunConfig};
+use crate::config::{ArchKind, ModelConfig};
 use crate::coordinator::{ClusterConfig, RouterPolicy};
+use crate::util::pool::par_map_indexed;
 use crate::util::table::{fbytes, fenergy_pj, fnum, ftime_ns, Table};
 use crate::workload::Scenario;
 
-fn engine() -> Engine {
-    let mut rc = RunConfig::new(ArchKind::CompAirOpt, ModelConfig::llama2_7b());
+use super::FigCtx;
+
+fn engine(cx: &FigCtx) -> Engine {
+    let mut rc = cx.rc(ArchKind::CompAirOpt, ModelConfig::llama2_7b());
     rc.tp = 8;
     rc.devices = 32;
     Engine::new(rc)
@@ -19,8 +22,11 @@ fn engine() -> Engine {
 
 /// Colocated vs disaggregated serving across all scenarios and replica
 /// counts {2, 4}: SLO attainment, energy/token, and the KV-migration
-/// traffic the disaggregated mode pays (priced through `cxl_p2p`).
-pub fn cluster() -> String {
+/// traffic the disaggregated mode pays (priced through `cxl_p2p`). Every
+/// (scenario, replica-count, mode) cell is an independent cluster
+/// simulation — each runs as its own pool job, rows merged in sweep
+/// order.
+pub fn cluster(cx: &FigCtx) -> String {
     let mut t = Table::new(
         "Cluster serving — colocated vs disaggregated (CompAir_Opt, llama2-7b, TP=8, \
          32 devices/replica, least-kv router, seed 42)",
@@ -29,35 +35,38 @@ pub fn cluster() -> String {
             "kv migrated",
         ],
     );
+    let mut cells = Vec::new();
     for sc in Scenario::all() {
-        let name = sc.name;
         // cap request counts so full-figure regeneration stays fast
         let n = sc.default_requests.min(12);
         for replicas in [2usize, 4] {
             for disagg in [None, Some((replicas / 2, replicas - replicas / 2))] {
-                let cfg = ClusterConfig {
-                    replicas,
-                    disagg,
-                    router: RouterPolicy::LeastLoadedKv,
-                };
-                let mode = match disagg {
-                    Some((p, d)) => format!("disagg {p}:{d}"),
-                    None => "colocated".to_string(),
-                };
-                let r = engine().cluster_scenario(sc.clone(), n, 42, cfg).cluster;
-                t.rowv(vec![
-                    name.to_string(),
-                    replicas.to_string(),
-                    mode,
-                    r.report.completed.to_string(),
-                    fnum(r.report.throughput_tok_s),
-                    ftime_ns(r.report.ttft_p99_ns),
-                    format!("{:.1}%", r.report.slo_attainment * 100.0),
-                    fenergy_pj(r.report.energy_per_token_pj),
-                    fbytes(r.migration_bytes),
-                ]);
+                cells.push((sc.clone(), n, replicas, disagg));
             }
         }
+    }
+    let rows = par_map_indexed(cx.jobs, cells, |_, (sc, n, replicas, disagg)| {
+        let cfg = ClusterConfig { replicas, disagg, router: RouterPolicy::LeastLoadedKv };
+        let mode = match disagg {
+            Some((p, d)) => format!("disagg {p}:{d}"),
+            None => "colocated".to_string(),
+        };
+        let name = sc.name;
+        let r = engine(cx).cluster_scenario(sc, n, 42, cfg).cluster;
+        vec![
+            name.to_string(),
+            replicas.to_string(),
+            mode,
+            r.report.completed.to_string(),
+            fnum(r.report.throughput_tok_s),
+            ftime_ns(r.report.ttft_p99_ns),
+            format!("{:.1}%", r.report.slo_attainment * 100.0),
+            fenergy_pj(r.report.energy_per_token_pj),
+            fbytes(r.migration_bytes),
+        ]
+    });
+    for row in rows {
+        t.rowv(row);
     }
     t.render()
 }
@@ -68,7 +77,7 @@ mod tests {
 
     #[test]
     fn cluster_table_covers_scenarios_and_modes() {
-        let s = cluster();
+        let s = cluster(&FigCtx::default());
         for name in Scenario::names() {
             assert!(s.contains(name), "cluster table missing scenario '{name}'");
         }

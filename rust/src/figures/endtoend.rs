@@ -3,96 +3,91 @@
 
 use crate::api::Engine;
 use crate::config::{ArchKind, ModelConfig, Phase, RunConfig};
+use crate::util::pool::par_map_indexed;
 use crate::util::table::{fenergy_pj, fnum, ftime_ns, fx, Table};
 
-fn rc(arch: ArchKind, m: ModelConfig) -> RunConfig {
-    RunConfig::new(arch, m)
+use super::FigCtx;
+
+fn rc(cx: &FigCtx, arch: ArchKind, m: ModelConfig) -> RunConfig {
+    cx.rc(arch, m)
 }
 
 /// Fig 15: GPT3-175B, batch 64, decode @128K — latency/throughput/energy of
 /// CompAir vs CENT (32/96 devices, TP=8) vs AttAcc (4 A100 + 4 HBM-PIM).
-pub fn fig15() -> String {
+/// One pool job per system point; the sweep shares nothing across cells.
+pub fn fig15(cx: &FigCtx) -> String {
     let mut t = Table::new(
         "Fig 15 — GPT3-175B decode (batch=64, seqlen=128K, TP=8)",
         &["system", "devices", "lat/token", "tok/s", "energy/token"],
     );
-    for (arch, devices) in [
-        (ArchKind::Cent, 32usize),
-        (ArchKind::CompAirOpt, 32),
-        (ArchKind::Cent, 96),
-        (ArchKind::CompAirOpt, 96),
-    ] {
-        let mut c = rc(arch, ModelConfig::gpt3_175b());
+    // the 128K points, the AttAcc 4K comparison point, and CompAir at the
+    // same 4K shape for the 3.52x energy headline
+    let cells: Vec<(ArchKind, usize, usize, String, String)> = vec![
+        (ArchKind::Cent, 32, 128 * 1024, ArchKind::Cent.label().into(), "32".into()),
+        (ArchKind::CompAirOpt, 32, 128 * 1024, ArchKind::CompAirOpt.label().into(), "32".into()),
+        (ArchKind::Cent, 96, 128 * 1024, ArchKind::Cent.label().into(), "96".into()),
+        (ArchKind::CompAirOpt, 96, 128 * 1024, ArchKind::CompAirOpt.label().into(), "96".into()),
+        (ArchKind::AttAcc, 32, 4096, "AttAcc-4-A100-HBM (4K ctx)".into(), "4+4".into()),
+        (ArchKind::CompAirOpt, 96, 4096, "CompAir_Opt (4K ctx, 96dev)".into(), "96".into()),
+    ];
+    let rows = par_map_indexed(cx.jobs, cells, |_, (arch, devices, seq, system, dev_label)| {
+        let mut c = rc(cx, arch, ModelConfig::gpt3_175b());
         c.batch = 64;
-        c.seq_len = 128 * 1024;
+        c.seq_len = seq;
         c.tp = 8;
         c.devices = devices;
         let r = Engine::new(c).simulate();
-        t.rowv(vec![
-            arch.label().into(),
-            devices.to_string(),
+        vec![
+            system,
+            dev_label,
             ftime_ns(r.latency_ns),
             fnum(r.throughput_tok_s),
             fenergy_pj(r.energy.total_pj()),
-        ]);
+        ]
+    });
+    for row in rows {
+        t.rowv(row);
     }
-    // AttAcc (4K-context point per the paper's comparison)
-    let mut c = rc(ArchKind::AttAcc, ModelConfig::gpt3_175b());
-    c.batch = 64;
-    c.seq_len = 4096;
-    let r = Engine::new(c).simulate();
-    t.rowv(vec![
-        "AttAcc-4-A100-HBM (4K ctx)".into(),
-        "4+4".into(),
-        ftime_ns(r.latency_ns),
-        fnum(r.throughput_tok_s),
-        fenergy_pj(r.energy.total_pj()),
-    ]);
-    // CompAir at the same 4K point for the 3.52x energy headline
-    let mut c2 = rc(ArchKind::CompAirOpt, ModelConfig::gpt3_175b());
-    c2.batch = 64;
-    c2.seq_len = 4096;
-    c2.devices = 96;
-    let r2 = Engine::new(c2).simulate();
-    t.rowv(vec![
-        "CompAir_Opt (4K ctx, 96dev)".into(),
-        "96".into(),
-        ftime_ns(r2.latency_ns),
-        fnum(r2.throughput_tok_s),
-        fenergy_pj(r2.energy.total_pj()),
-    ]);
     t.render()
 }
 
 /// Fig 16: decode throughput ablation over batch × seqlen (Llama2-70B/7B):
-/// CENT → CENT+CurryALU → CompAir_Base → CompAir_Opt.
-pub fn fig16() -> String {
+/// CENT → CENT+CurryALU → CompAir_Base → CompAir_Opt. Each (model, batch,
+/// seqlen) row prices four architectures — one pool job per row.
+pub fn fig16(cx: &FigCtx) -> String {
     let mut out = String::new();
     for model in [ModelConfig::llama2_70b(), ModelConfig::llama2_7b()] {
         let mut t = Table::new(
             &format!("Fig 16 — {} decode throughput (tok/s), TP=8, 32 devices", model.name),
             &["batch", "seqlen", "CENT", "+CurryALU", "CompAir_Base", "CompAir_Opt", "best-vs-CENT"],
         );
+        let mut cells = Vec::new();
         for batch in [1usize, 16, 64] {
             for seq in [4096usize, 16384, 32768] {
-                let mut row = vec![batch.to_string(), seq.to_string()];
-                let mut thr = Vec::new();
-                for arch in [
-                    ArchKind::Cent,
-                    ArchKind::CentCurry,
-                    ArchKind::CompAirBase,
-                    ArchKind::CompAirOpt,
-                ] {
-                    let mut c = rc(arch, model.clone());
-                    c.batch = batch;
-                    c.seq_len = seq;
-                    let r = Engine::new(c).simulate();
-                    thr.push(r.throughput_tok_s);
-                    row.push(fnum(r.throughput_tok_s));
-                }
-                row.push(fx(thr[3] / thr[0]));
-                t.rowv(row);
+                cells.push((batch, seq));
             }
+        }
+        let rows = par_map_indexed(cx.jobs, cells, |_, (batch, seq)| {
+            let mut row = vec![batch.to_string(), seq.to_string()];
+            let mut thr = Vec::new();
+            for arch in [
+                ArchKind::Cent,
+                ArchKind::CentCurry,
+                ArchKind::CompAirBase,
+                ArchKind::CompAirOpt,
+            ] {
+                let mut c = rc(cx, arch, model.clone());
+                c.batch = batch;
+                c.seq_len = seq;
+                let r = Engine::new(c).simulate();
+                thr.push(r.throughput_tok_s);
+                row.push(fnum(r.throughput_tok_s));
+            }
+            row.push(fx(thr[3] / thr[0]));
+            row
+        });
+        for row in rows {
+            t.rowv(row);
         }
         out.push_str(&t.render());
         out.push('\n');
@@ -101,14 +96,15 @@ pub fn fig16() -> String {
 }
 
 /// Fig 17: prefill latency speedups across the model zoo (0.5K prompt).
-pub fn fig17() -> String {
+/// One pool job per model.
+pub fn fig17(cx: &FigCtx) -> String {
     let mut t = Table::new(
         "Fig 17 — prefill (0.5K) latency, speedup over CENT",
         &["model", "CENT(ms)", "Base", "Opt", "Opt-speedup"],
     );
-    for m in ModelConfig::zoo() {
+    let rows = par_map_indexed(cx.jobs, ModelConfig::zoo(), |_, m| {
         let run = |arch: ArchKind| {
-            let mut c = rc(arch, m.clone());
+            let mut c = rc(cx, arch, m.clone());
             c.phase = Phase::Prefill;
             c.batch = 1;
             c.seq_len = 512;
@@ -117,25 +113,29 @@ pub fn fig17() -> String {
         let cent = run(ArchKind::Cent);
         let base = run(ArchKind::CompAirBase);
         let opt = run(ArchKind::CompAirOpt);
-        t.rowv(vec![
+        vec![
             m.name.into(),
             fnum(cent / 1e6),
             fx(cent / base),
             fx(cent / opt),
             fx(cent / opt),
-        ]);
+        ]
+    });
+    for row in rows {
+        t.rowv(row);
     }
     t.render()
 }
 
-/// Fig 18: tensor-parallel sweep — bank utilization and latency.
-pub fn fig18() -> String {
+/// Fig 18: tensor-parallel sweep — bank utilization and latency. One pool
+/// job per TP point.
+pub fn fig18(cx: &FigCtx) -> String {
     let mut t = Table::new(
         "Fig 18 — TP sweep, Llama2-13B (batch=64, decode, 4K)",
         &["tp", "bank-util", "CENT lat", "CompAir lat", "CompAir speedup"],
     );
-    for tp in [1usize, 2, 4, 8, 16, 32] {
-        let mut a = rc(ArchKind::Cent, ModelConfig::llama2_13b());
+    let rows = par_map_indexed(cx.jobs, vec![1usize, 2, 4, 8, 16, 32], |_, tp| {
+        let mut a = rc(cx, ArchKind::Cent, ModelConfig::llama2_13b());
         a.batch = 64;
         a.seq_len = 4096;
         a.tp = tp;
@@ -145,28 +145,33 @@ pub fn fig18() -> String {
         b.hw = crate::config::HwConfig::paper_opt();
         let ra = Engine::new(a).simulate();
         let rb = Engine::new(b).simulate();
-        t.rowv(vec![
+        vec![
             tp.to_string(),
             format!("{:.1}%", rb.bank_util * 100.0),
             ftime_ns(ra.latency_ns),
             ftime_ns(rb.latency_ns),
             fx(ra.latency_ns / rb.latency_ns),
-        ]);
+        ]
+    });
+    for row in rows {
+        t.rowv(row);
     }
     t.render()
 }
 
 /// Fig 19: very long context (128K ctx, 8K generation) on Qwen-72B and
-/// GPT3-175B, with non-linear share.
-pub fn fig19() -> String {
+/// GPT3-175B, with non-linear share. One pool job per model (the speedup
+/// column is relative within a model's pair of rows).
+pub fn fig19(cx: &FigCtx) -> String {
     let mut t = Table::new(
         "Fig 19 — long context (seq=128K), decode, batch=16, TP=8",
         &["model", "arch", "lat/token", "tok/s", "nonlin %", "speedup"],
     );
-    for m in [ModelConfig::qwen_72b(), ModelConfig::gpt3_175b()] {
+    let models = vec![ModelConfig::qwen_72b(), ModelConfig::gpt3_175b()];
+    let row_pairs = par_map_indexed(cx.jobs, models, |_, m| {
         let mut results = Vec::new();
         for arch in [ArchKind::Cent, ArchKind::CompAirOpt] {
-            let mut c = rc(arch, m.clone());
+            let mut c = rc(cx, arch, m.clone());
             c.batch = 16;
             c.seq_len = 128 * 1024;
             c.gen_len = 8192;
@@ -174,16 +179,22 @@ pub fn fig19() -> String {
             results.push((arch, r));
         }
         let base = results[0].1.latency_ns;
-        for (arch, r) in results {
-            t.rowv(vec![
-                m.name.into(),
-                arch.label().into(),
-                ftime_ns(r.latency_ns),
-                fnum(r.throughput_tok_s),
-                format!("{:.1}%", r.nonlinear_frac * 100.0),
-                fx(base / r.latency_ns),
-            ]);
-        }
+        results
+            .into_iter()
+            .map(|(arch, r)| {
+                vec![
+                    m.name.to_string(),
+                    arch.label().into(),
+                    ftime_ns(r.latency_ns),
+                    fnum(r.throughput_tok_s),
+                    format!("{:.1}%", r.nonlinear_frac * 100.0),
+                    fx(base / r.latency_ns),
+                ]
+            })
+            .collect::<Vec<_>>()
+    });
+    for row in row_pairs.into_iter().flatten() {
+        t.rowv(row);
     }
     t.render()
 }
@@ -200,7 +211,7 @@ mod tests {
 
     #[test]
     fn fig15_compair_beats_cent_and_attacc_energy() {
-        let s = fig15();
+        let s = fig15(&FigCtx::default());
         assert!(s.contains("CompAir_Opt") && s.contains("AttAcc"));
         assert!(s.contains("CENT"));
     }
@@ -208,7 +219,7 @@ mod tests {
     #[test]
     fn fig16_best_speedup_band() {
         // paper: 1.95-6.28x decode improvement at batch 64; allow wider sim band
-        let s = fig16();
+        let s = fig16(&FigCtx::default());
         let sp = speedups(&s);
         assert!(!sp.is_empty());
         let max = sp.iter().cloned().fold(0.0, f64::max);
@@ -218,7 +229,7 @@ mod tests {
     #[test]
     fn fig17_band() {
         // paper: 3.29-5.46x (Base) → 4.1-7.89x (Opt)
-        let s = fig17();
+        let s = fig17(&FigCtx::default());
         let sp = speedups(&s);
         for v in &sp {
             assert!((1.5..12.0).contains(v), "prefill speedup {v} out of band:\n{s}");
@@ -227,7 +238,7 @@ mod tests {
 
     #[test]
     fn fig18_util_monotone_nonincreasing() {
-        let s = fig18();
+        let s = fig18(&FigCtx::default());
         let utils: Vec<f64> = s
             .lines()
             .filter_map(|l| {
@@ -243,7 +254,7 @@ mod tests {
     #[test]
     fn fig19_long_context_speedup() {
         // paper: 2.13-2.73x decode improvement at 128K
-        let s = fig19();
+        let s = fig19(&FigCtx::default());
         let sp: Vec<f64> = speedups(&s).into_iter().filter(|v| *v > 1.01).collect();
         assert!(!sp.is_empty());
         for v in &sp {

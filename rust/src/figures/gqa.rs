@@ -8,7 +8,10 @@ use crate::config::{HwConfig, ModelConfig, SramGang};
 use crate::dram::PimBank;
 use crate::energy::EnergyModel;
 use crate::sram::bank::{SramBank, WeightPolicy};
+use crate::util::pool::par_map_indexed;
 use crate::util::table::{fnum, Table};
+
+use super::FigCtx;
 
 struct GqaPoint {
     dram_ns: f64,
@@ -49,7 +52,8 @@ fn gqa_point(m: &ModelConfig, seq: usize, tp: usize, qk: bool) -> GqaPoint {
 }
 
 /// Fig 24: latency ratio map (SRAM-stack / DRAM-PIM); < 1 = SRAM wins.
-pub fn fig24() -> String {
+/// One pool job per seqlen row (each prices four TP points).
+pub fn fig24(cx: &FigCtx) -> String {
     let m = ModelConfig::llama2_70b();
     let mut out = String::new();
     for (qk, label) in [(true, "QK^T"), (false, "SV")] {
@@ -57,12 +61,16 @@ pub fn fig24() -> String {
             &format!("Fig 24 — GQA {label} latency ratio SRAM/DRAM (Llama2-70B, group=8; <1 = SRAM wins)"),
             &["seqlen", "TP=1", "TP=2", "TP=4", "TP=8"],
         );
-        for seq in [2048usize, 8192, 32768, 131072] {
+        let seqs = vec![2048usize, 8192, 32768, 131072];
+        let rows = par_map_indexed(cx.jobs, seqs, |_, seq| {
             let mut row = vec![seq.to_string()];
             for tp in [1usize, 2, 4, 8] {
                 let p = gqa_point(&m, seq, tp, qk);
                 row.push(fnum(p.sram_ns / p.dram_ns));
             }
+            row
+        });
+        for row in rows {
             t.rowv(row);
         }
         out.push_str(&t.render());
@@ -72,7 +80,8 @@ pub fn fig24() -> String {
 }
 
 /// Fig 25: energy ratio map (SRAM-stack / DRAM-PIM); > 1 = SRAM costs more.
-pub fn fig25() -> String {
+/// One pool job per seqlen row.
+pub fn fig25(cx: &FigCtx) -> String {
     let m = ModelConfig::llama2_70b();
     let mut out = String::new();
     for (qk, label) in [(true, "QK^T"), (false, "SV")] {
@@ -80,12 +89,16 @@ pub fn fig25() -> String {
             &format!("Fig 25 — GQA {label} energy ratio SRAM/DRAM (Llama2-70B)"),
             &["seqlen", "TP=1", "TP=2", "TP=4", "TP=8"],
         );
-        for seq in [2048usize, 8192, 32768, 131072] {
+        let seqs = vec![2048usize, 8192, 32768, 131072];
+        let rows = par_map_indexed(cx.jobs, seqs, |_, seq| {
             let mut row = vec![seq.to_string()];
             for tp in [1usize, 2, 4, 8] {
                 let p = gqa_point(&m, seq, tp, qk);
                 row.push(fnum(p.sram_pj / p.dram_pj));
             }
+            row
+        });
+        for row in rows {
             t.rowv(row);
         }
         out.push_str(&t.render());
@@ -114,7 +127,7 @@ mod tests {
 
     #[test]
     fn fig24_renders_both_ops() {
-        let s = fig24();
+        let s = fig24(&FigCtx::default());
         assert!(s.contains("QK^T") && s.contains("SV"));
     }
 

@@ -1,16 +1,17 @@
 //! Mapping and micro-architecture figures: Fig 8 (gang shapes × mapping),
 //! Fig 9 (decoupled column decoder), Fig 20 (SRAM-PIM DSE).
 
-use crate::config::{
-    ArchKind, ColumnDecoder, HwConfig, ModelConfig, RunConfig, SramGang, Voltage,
-};
+use crate::config::{ArchKind, ColumnDecoder, HwConfig, ModelConfig, SramGang, Voltage};
 use crate::dram::PimBank;
 use crate::sram::bank::{SramBank, WeightPolicy};
+use crate::util::pool::par_map_indexed;
 use crate::util::table::{fnum, fx, Table};
+
+use super::FigCtx;
 
 /// Fig 8: Llama2-13B per-bank Q/K/V + FFN speedups of SRAM-stack over pure
 /// DRAM-PIM, for (512,8) output-split vs (256,16) input-split.
-pub fn fig8() -> String {
+pub fn fig8(_cx: &FigCtx) -> String {
     let hw = HwConfig::paper();
     let m = ModelConfig::llama2_13b();
     let dram = PimBank::new(&hw.dram);
@@ -48,17 +49,19 @@ pub fn fig8() -> String {
 }
 
 /// Fig 9: end-to-end effect of decoupling the column decoder (Llama2-13B).
-pub fn fig9() -> String {
+/// One pool job per (phase, batch, seqlen) cell.
+pub fn fig9(cx: &FigCtx) -> String {
     let mut t = Table::new(
         "Fig 9 — DRAM-PIM reorganization (decoupled 8:1/4:1 column decoder), Llama2-13B",
         &["phase", "batch", "seqlen", "base(ms)", "opt(ms)", "speedup"],
     );
-    for (phase, batch, seq) in [
+    let cells = vec![
         (crate::config::Phase::Decode, 16usize, 4096usize),
         (crate::config::Phase::Decode, 64, 4096),
         (crate::config::Phase::Prefill, 1, 2048),
-    ] {
-        let mut base = RunConfig::new(ArchKind::CompAirBase, ModelConfig::llama2_13b());
+    ];
+    let rows = par_map_indexed(cx.jobs, cells, |_, (phase, batch, seq)| {
+        let mut base = cx.rc(ArchKind::CompAirBase, ModelConfig::llama2_13b());
         base.phase = phase;
         base.batch = batch;
         base.seq_len = seq;
@@ -67,21 +70,24 @@ pub fn fig9() -> String {
         opt.hw.dram.column_decoder = ColumnDecoder::Decoupled8and4;
         let tb = crate::api::Engine::new(base).simulate().latency_ns;
         let to = crate::api::Engine::new(opt).simulate().latency_ns;
-        t.rowv(vec![
+        vec![
             format!("{phase:?}"),
             batch.to_string(),
             seq.to_string(),
             fnum(tb / 1e6),
             fnum(to / 1e6),
             fx(tb / to),
-        ]);
+        ]
+    });
+    for row in rows {
+        t.rowv(row);
     }
     t.render()
 }
 
 /// Fig 20: DSE of the SRAM-PIM gang shape × voltage against the per-bank
 /// DRAM feed bandwidth (green line) and the HB ceiling (red line).
-pub fn fig20() -> String {
+pub fn fig20(_cx: &FigCtx) -> String {
     let mut out = String::new();
     for gang in [SramGang::In512Out8, SramGang::In256Out16] {
         let mut t = Table::new(
@@ -114,7 +120,7 @@ mod tests {
 
     #[test]
     fn fig8_input_split_competitive() {
-        let s = fig8();
+        let s = fig8(&FigCtx::default());
         assert!(s.contains("input-split"));
         assert!(s.contains("(256,16)"));
     }
@@ -122,7 +128,7 @@ mod tests {
     #[test]
     fn fig9_speedup_in_paper_band() {
         // paper: 1.15-1.5x end-to-end
-        let s = fig9();
+        let s = fig9(&FigCtx::default());
         let speedups: Vec<f64> = s
             .lines()
             .filter_map(|l| l.split_whitespace().last()?.strip_suffix('x')?.parse().ok())
@@ -138,7 +144,7 @@ mod tests {
     fn fig20_divergence_point() {
         // below the divergence point (feed-bound) voltage must not matter;
         // the DSE table should show compute-bound=false at batch 16 tiles
-        let s = fig20();
+        let s = fig20(&FigCtx::default());
         assert!(s.contains("0.6V") && s.contains("0.9V"));
     }
 }

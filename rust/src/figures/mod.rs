@@ -1,6 +1,16 @@
 //! Figure/table regeneration harness: one entry per paper table and figure
 //! (DESIGN.md carries the experiment index). Each function re-runs the
 //! simulation fresh and renders the same rows/series the paper plots.
+//!
+//! Every generator takes a [`FigCtx`] — the explicit knobs a figure run
+//! threads through (worker count, NoC costing tier). This replaced a
+//! process-wide mutable fidelity default: with figures fanning out across
+//! worker threads, global state would be a data race, and explicit
+//! parameters were overdue anyway. Figures fan out twice: [`run_all`]
+//! runs whole figures as pool jobs, and the sweep-shaped figures
+//! additionally run each cell (scenario × arch × replica-count…) as its
+//! own job. Both merges are submission-ordered (`util::pool`), so
+//! `--jobs N` output is bit-identical to `--jobs 1`.
 
 pub mod cluster;
 pub mod endtoend;
@@ -10,11 +20,43 @@ pub mod motivation;
 pub mod noc_eval;
 pub mod serving;
 
-use crate::config::HwConfig;
+use crate::config::{ArchKind, HwConfig, ModelConfig, NocFidelity, RunConfig};
+use crate::util::pool::par_map_indexed;
 use crate::util::table::Table;
 
+/// The explicit per-run context every figure generator receives: how many
+/// pool workers its cell sweeps may use, and which NoC costing tier its
+/// `RunConfig`s select. Plain data, `Copy`, shared read-only across
+/// workers — the whole point is that nothing here is process-global.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FigCtx {
+    /// Worker threads for the cell sweep inside one figure (and for
+    /// [`run_all`]'s figure-level fan-out).
+    pub jobs: usize,
+    /// The NoC costing tier every figure `RunConfig` runs under.
+    pub noc_fidelity: NocFidelity,
+}
+
+impl Default for FigCtx {
+    fn default() -> Self {
+        Self { jobs: 1, noc_fidelity: NocFidelity::Analytic }
+    }
+}
+
+impl FigCtx {
+    /// A figure-cell `RunConfig` with this context's fidelity applied.
+    /// Cell configs keep `jobs = 1`: the cells themselves are the pool
+    /// jobs, and nesting a per-`System` prefit pool inside them would
+    /// oversubscribe without changing any result.
+    pub fn rc(&self, arch: ArchKind, model: ModelConfig) -> RunConfig {
+        let mut rc = RunConfig::new(arch, model);
+        rc.noc_fidelity = self.noc_fidelity;
+        rc
+    }
+}
+
 /// Table 3: the hardware configuration, echoed from the config structs.
-pub fn table3() -> String {
+pub fn table3(_cx: &FigCtx) -> String {
     let hw = HwConfig::paper();
     let mut t = Table::new("Table 3 — hardware configuration", &["component", "spec"]);
     t.rowv(vec![
@@ -61,9 +103,9 @@ pub fn table3() -> String {
 }
 
 /// All figures in paper order: (id, generator).
-pub fn registry() -> Vec<(&'static str, fn() -> String)> {
+pub fn registry() -> Vec<(&'static str, fn(&FigCtx) -> String)> {
     vec![
-        ("table3", table3 as fn() -> String),
+        ("table3", table3 as fn(&FigCtx) -> String),
         ("fig4a", motivation::fig4a),
         ("fig4bc", motivation::fig4bc),
         ("fig5", motivation::fig5),
@@ -92,8 +134,15 @@ pub fn registry() -> Vec<(&'static str, fn() -> String)> {
 }
 
 /// Run one figure by id.
-pub fn run(name: &str) -> Option<String> {
-    registry().into_iter().find(|(n, _)| *n == name).map(|(_, f)| f())
+pub fn run(name: &str, cx: &FigCtx) -> Option<String> {
+    registry().into_iter().find(|(n, _)| *n == name).map(|(_, f)| f(cx))
+}
+
+/// Regenerate every registered figure, fanning whole figures out as pool
+/// jobs, and return `(id, rendered table)` in registry order — the same
+/// pairs, bit-identical, whatever `cx.jobs` is.
+pub fn run_all(cx: &FigCtx) -> Vec<(&'static str, String)> {
+    par_map_indexed(cx.jobs, registry(), |_, (name, f)| (name, f(cx)))
 }
 
 #[cfg(test)]
@@ -113,13 +162,23 @@ mod tests {
 
     #[test]
     fn table3_echoes_config() {
-        let s = table3();
+        let s = table3(&FigCtx::default());
         assert!(s.contains("tRCDWR=14"));
         assert!(s.contains("4x16") || s.contains("4 arrays"));
     }
 
     #[test]
     fn unknown_figure_is_none() {
-        assert!(run("fig99").is_none());
+        assert!(run("fig99", &FigCtx::default()).is_none());
+    }
+
+    #[test]
+    fn fig_ctx_threads_fidelity_into_cell_configs() {
+        let cx = FigCtx { jobs: 4, noc_fidelity: NocFidelity::Calibrated };
+        let rc = cx.rc(ArchKind::CompAirOpt, ModelConfig::llama2_7b());
+        assert_eq!(rc.noc_fidelity, NocFidelity::Calibrated);
+        assert_eq!(rc.jobs, 1, "cells are the pool jobs; they must not nest pools");
+        assert_eq!(FigCtx::default().jobs, 1);
+        assert_eq!(FigCtx::default().noc_fidelity, NocFidelity::Analytic);
     }
 }

@@ -2,14 +2,17 @@
 //! Fig 5 (non-linear overhead), Fig 7B (per-bank power).
 
 use crate::arch::pure_sram_requirements;
-use crate::config::{ArchKind, HwConfig, ModelConfig, RunConfig, SramGang};
+use crate::config::{ArchKind, HwConfig, ModelConfig, SramGang};
 use crate::dram::PimBank;
 use crate::energy::EnergyModel;
 use crate::sram::bank::{SramBank, WeightPolicy};
+use crate::util::pool::par_map_indexed;
 use crate::util::table::{fnum, fx, Table};
 
+use super::FigCtx;
+
 /// Fig 4A: pure SRAM-PIM macro count and power for all FC layers.
-pub fn fig4a() -> String {
+pub fn fig4a(_cx: &FigCtx) -> String {
     let hw = HwConfig::paper();
     let mut t = Table::new(
         "Fig 4A — pure SRAM-PIM holding all FC layers (no reloading)",
@@ -29,7 +32,7 @@ pub fn fig4a() -> String {
 
 /// Fig 4B/4C: SRAM-PIM stacking DRAM vs pure DRAM-PIM across batch sizes,
 /// for Q/K/V projection (weight-reuse friendly) and SV (input-dependent).
-pub fn fig4bc() -> String {
+pub fn fig4bc(_cx: &FigCtx) -> String {
     let hw = HwConfig::paper();
     let m = ModelConfig::llama2_7b();
     let dram = PimBank::new(&hw.dram);
@@ -72,29 +75,34 @@ pub fn fig4bc() -> String {
 }
 
 /// Fig 5C/5D: non-linear share of transformer-block time and the extra
-/// data movement of the centralized NLU (CENT baseline).
-pub fn fig5() -> String {
+/// data movement of the centralized NLU (CENT baseline). One pool job per
+/// sequence-length point.
+pub fn fig5(cx: &FigCtx) -> String {
     let mut t = Table::new(
         "Fig 5C/5D — non-linear overhead on pure DRAM-PIM (CENT, Llama2-7B, batch=16)",
         &["seqlen", "layer(us)", "nonlin %", "nlu I/O bytes/layer"],
     );
-    for seq in [2048usize, 4096, 8192, 16384, 32768, 65536] {
-        let mut rc = RunConfig::new(ArchKind::Cent, ModelConfig::llama2_7b());
+    let seqs = vec![2048usize, 4096, 8192, 16384, 32768, 65536];
+    let rows = par_map_indexed(cx.jobs, seqs, |_, seq| {
+        let mut rc = cx.rc(ArchKind::Cent, ModelConfig::llama2_7b());
         rc.batch = 16;
         rc.seq_len = seq;
         let r = crate::api::Engine::new(rc).simulate();
-        t.rowv(vec![
+        vec![
             seq.to_string(),
             fnum(r.layer_cost.latency_ns / 1e3),
             format!("{:.1}%", r.nonlinear_frac * 100.0),
             format!("{:.2e}", r.layer_cost.counts.gb_bytes as f64),
-        ]);
+        ]
+    });
+    for row in rows {
+        t.rowv(row);
     }
     t.render()
 }
 
 /// Fig 7B: per-bank power of the DRAM-PIM vs the stacked SRAM-PIM macros.
-pub fn fig7b() -> String {
+pub fn fig7b(_cx: &FigCtx) -> String {
     let hw = HwConfig::paper();
     let em = EnergyModel::new(&hw.sram, hw.hb.pj_per_bit);
     let dram = PimBank::new(&hw.dram);
@@ -123,7 +131,7 @@ mod tests {
 
     #[test]
     fn fig4a_shows_infeasibility() {
-        let s = fig4a();
+        let s = fig4a(&FigCtx::default());
         assert!(s.contains("gpt3-175b"));
         // every model must exceed A100 power by a lot
         assert!(s.lines().count() >= 8);
@@ -131,7 +139,7 @@ mod tests {
 
     #[test]
     fn fig4bc_speedup_grows_with_batch() {
-        let s = fig4bc();
+        let s = fig4bc(&FigCtx::default());
         assert!(s.contains("Fig 4B"));
         assert!(s.contains("Fig 4C"));
         // batch=64 row should show a multi-x speedup
@@ -142,7 +150,7 @@ mod tests {
 
     #[test]
     fn fig5_nonlinear_grows() {
-        let s = fig5();
+        let s = fig5(&FigCtx::default());
         let fracs: Vec<f64> = s
             .lines()
             .filter(|l| l.contains('%'))
@@ -157,7 +165,7 @@ mod tests {
     #[test]
     fn fig7b_sram_power_in_paper_band() {
         // §3.2: 8KB SRAM-PIMs consume ~0.022 W each → 4 macros ≈ 0.09 W
-        let s = fig7b();
+        let s = fig7b(&FigCtx::default());
         assert!(s.contains("SRAM-PIM"));
     }
 }

@@ -8,11 +8,14 @@ use crate::config::{HwConfig, SramGang};
 use crate::isa::{Machine, RowProgram};
 use crate::noc::area::{curry_alus_resources, softmax_unit_resources, AreaModel};
 use crate::noc::model::calibration_report;
+use crate::util::pool::par_map_indexed;
 use crate::util::table::{fnum, Table};
+
+use super::FigCtx;
 
 /// Fig 21: area of the per-bank logic stack and the Curry ALU share, plus
 /// the FPGA-resource comparison against a dedicated Softmax unit.
-pub fn fig21() -> String {
+pub fn fig21(_cx: &FigCtx) -> String {
     let a = AreaModel::default();
     let mut t = Table::new("Fig 21A — per-bank logic-die area (UMC 28nm)", &["component", "mm^2"]);
     t.rowv(vec!["4x SRAM-PIM macro".into(), fnum(4.0 * a.sram_macro_mm2)]);
@@ -35,7 +38,7 @@ pub fn fig21() -> String {
 
 /// Fig 22: latency of the non-linear path — distributed Curry ALUs vs the
 /// centralized NLU round trip, per softmax batch.
-pub fn fig22() -> String {
+pub fn fig22(_cx: &FigCtx) -> String {
     let hw = HwConfig::paper();
     let mut t = Table::new(
         "Fig 22 — non-linear latency: centralized NLU vs Curry ALUs (softmax rows of seqlen)",
@@ -63,14 +66,16 @@ pub fn fig22() -> String {
 }
 
 /// Fig 23: path generation (instruction fusion) latency profits, measured
-/// on the real ISA machine executing the Fig 13 exponential program.
-pub fn fig23() -> String {
+/// on the real ISA machine executing the Fig 13 exponential program. Each
+/// (elems, rounds) cell drives its own ISA machines — one pool job each.
+pub fn fig23(cx: &FigCtx) -> String {
     let hw = HwConfig::paper();
     let mut t = Table::new(
         "Fig 23 — path-generation profits (exp program on the ISA machine)",
         &["elems/bank", "rounds", "base(us)", "fused(us)", "saving"],
     );
-    for (len, rounds) in [(8usize, 4u32), (16, 6), (32, 6)] {
+    let cells = vec![(8usize, 4u32), (16, 6), (32, 6)];
+    let rows = par_map_indexed(cx.jobs, cells, |_, (len, rounds)| {
         let run = |fuse: bool| {
             let mut m = Machine::new(&hw, SramGang::In256Out16);
             let xs: Vec<f32> = (0..len).map(|i| 0.05 * i as f32 - 0.4).collect();
@@ -80,13 +85,16 @@ pub fn fig23() -> String {
         };
         let base = run(false);
         let fused = run(true);
-        t.rowv(vec![
+        vec![
             len.to_string(),
             rounds.to_string(),
             fnum(base / 1e3),
             fnum(fused / 1e3),
             format!("{:.0}%", (1.0 - fused / base) * 100.0),
-        ]);
+        ]
+    });
+    for row in rows {
+        t.rowv(row);
     }
     t.render()
 }
@@ -97,13 +105,13 @@ pub fn fig23() -> String {
 /// calibrated tier's residual against the simulator — the number ci.sh
 /// gates at ≤ 20% (it is the only %-formatted column, which is what the
 /// gate's parser keys on).
-pub fn noc_calibration() -> String {
+pub fn noc_calibration(cx: &FigCtx) -> String {
     let hw = HwConfig::paper();
     let mut t = Table::new(
         "NoC calibration — closed forms vs flit-level mesh, per collective anchor",
         &["collective", "shape", "analytic(ns)", "sim(ns)", "ratio", "calibrated(ns)", "err"],
     );
-    for a in calibration_report(&hw) {
+    for a in calibration_report(&hw, cx.jobs) {
         t.rowv(vec![
             a.collective.to_string(),
             a.shape.clone(),
@@ -123,7 +131,7 @@ mod tests {
 
     #[test]
     fn fig21_curry_share_and_fit() {
-        let s = fig21();
+        let s = fig21(&FigCtx::default());
         assert!(s.contains("0.8195") || s.contains("0.819"));
         assert!(s.contains("Curry ALU"));
     }
@@ -132,7 +140,7 @@ mod tests {
     fn fig22_reduction_band() {
         // paper: ~30% total non-linear compression, 25% long-text; the
         // distributed path should win clearly at long context
-        let s = fig22();
+        let s = fig22(&FigCtx::default());
         let reductions: Vec<f64> = s
             .lines()
             .filter_map(|l| l.split_whitespace().last()?.strip_suffix('%')?.parse().ok())
@@ -148,7 +156,7 @@ mod tests {
     fn noc_calibration_errors_gate_at_20pct() {
         // the same contract ci.sh enforces on the rendered table: every
         // %-formatted value is a calibrated-vs-simulated error ≤ 20%
-        let s = noc_calibration();
+        let s = noc_calibration(&FigCtx::default());
         let errs: Vec<f64> = s
             .lines()
             .filter_map(|l| l.split_whitespace().last()?.strip_suffix('%')?.parse().ok())
@@ -167,7 +175,7 @@ mod tests {
     #[test]
     fn fig23_saving_band() {
         // paper: 33-50% latency optimization from path generation
-        let s = fig23();
+        let s = fig23(&FigCtx::default());
         let savings: Vec<f64> = s
             .lines()
             .filter_map(|l| l.split_whitespace().last()?.strip_suffix('%')?.parse().ok())

@@ -5,12 +5,15 @@
 //! SLO-reporting evaluation style of the PIM-serving literature.
 
 use crate::api::Engine;
-use crate::config::{ArchKind, ModelConfig, RunConfig};
+use crate::config::{ArchKind, ModelConfig};
+use crate::util::pool::par_map_indexed;
 use crate::util::table::{fenergy_pj, fnum, ftime_ns, Table};
 use crate::workload::Scenario;
 
-fn engine(arch: ArchKind) -> Engine {
-    let mut rc = RunConfig::new(arch, ModelConfig::llama2_7b());
+use super::FigCtx;
+
+fn engine(cx: &FigCtx, arch: ArchKind) -> Engine {
+    let mut rc = cx.rc(arch, ModelConfig::llama2_7b());
     rc.tp = 8;
     rc.devices = 32;
     Engine::new(rc)
@@ -18,8 +21,9 @@ fn engine(arch: ArchKind) -> Engine {
 
 /// Scenario sweep: every named scenario served on CompAir_Opt
 /// (llama2-7b, TP=8, 32 devices), reporting throughput, tail latencies,
-/// SLO attainment, and energy per token.
-pub fn scenarios() -> String {
+/// SLO attainment, and energy per token. One pool job per scenario, rows
+/// merged in registry order.
+pub fn scenarios(cx: &FigCtx) -> String {
     let mut t = Table::new(
         "Serving scenarios — CompAir_Opt, llama2-7b, TP=8, 32 devices, seed 42",
         &[
@@ -27,12 +31,12 @@ pub fn scenarios() -> String {
             "slo%", "energy/tok",
         ],
     );
-    for sc in Scenario::all() {
+    let rows = par_map_indexed(cx.jobs, Scenario::all(), |_, sc| {
         // cap request counts so full-figure regeneration stays fast
         let name = sc.name;
         let n = sc.default_requests.min(32);
-        let r = engine(ArchKind::CompAirOpt).serve_scenario(sc, n, 42).report;
-        t.rowv(vec![
+        let r = engine(cx, ArchKind::CompAirOpt).serve_scenario(sc, n, 42).report;
+        vec![
             name.to_string(),
             r.completed.to_string(),
             r.rejected.to_string(),
@@ -43,27 +47,28 @@ pub fn scenarios() -> String {
             ftime_ns(r.tpot_p50_ns),
             format!("{:.1}%", r.slo_attainment * 100.0),
             fenergy_pj(r.energy_per_token_pj),
-        ]);
+        ]
+    });
+    for row in rows {
+        t.rowv(row);
     }
     t.render()
 }
 
 /// Architecture face-off on the mixed multi-tenant scenario: CENT vs the
-/// CompAir ablation steps, same trace, same SLOs.
-pub fn scenario_archs() -> String {
+/// CompAir ablation steps, same trace, same SLOs. One pool job per
+/// architecture.
+pub fn scenario_archs(cx: &FigCtx) -> String {
     let sc = Scenario::by_name("mixed").expect("mixed scenario registered");
     let mut t = Table::new(
         "Mixed multi-tenant scenario across architectures — llama2-7b, TP=8, 32 devices",
         &["arch", "makespan", "tok/s", "ttft p99", "tpot p99", "slo%", "energy/tok"],
     );
-    for arch in [
-        ArchKind::Cent,
-        ArchKind::CentCurry,
-        ArchKind::CompAirBase,
-        ArchKind::CompAirOpt,
-    ] {
-        let r = engine(arch).serve_scenario(sc.clone(), 32, 42).report;
-        t.rowv(vec![
+    let archs =
+        vec![ArchKind::Cent, ArchKind::CentCurry, ArchKind::CompAirBase, ArchKind::CompAirOpt];
+    let rows = par_map_indexed(cx.jobs, archs, |_, arch| {
+        let r = engine(cx, arch).serve_scenario(sc.clone(), 32, 42).report;
+        vec![
             arch.label().to_string(),
             ftime_ns(r.makespan_ns as f64),
             fnum(r.throughput_tok_s),
@@ -71,7 +76,10 @@ pub fn scenario_archs() -> String {
             ftime_ns(r.tpot_p99_ns),
             format!("{:.1}%", r.slo_attainment * 100.0),
             fenergy_pj(r.energy_per_token_pj),
-        ]);
+        ]
+    });
+    for row in rows {
+        t.rowv(row);
     }
     t.render()
 }
@@ -82,7 +90,7 @@ mod tests {
 
     #[test]
     fn scenario_table_has_all_scenarios() {
-        let s = scenarios();
+        let s = scenarios(&FigCtx::default());
         for name in Scenario::names() {
             assert!(s.contains(name), "scenario table missing '{name}'");
         }
@@ -91,7 +99,7 @@ mod tests {
 
     #[test]
     fn arch_table_covers_ablation() {
-        let s = scenario_archs();
+        let s = scenario_archs(&FigCtx::default());
         for label in ["CENT", "CompAir_Opt"] {
             assert!(s.contains(label), "arch table missing '{label}'");
         }

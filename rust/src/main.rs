@@ -7,7 +7,9 @@ use compair::cli::{Args, OutputFormat, USAGE};
 use compair::config::{ArchKind, ModelConfig, NocFidelity, Phase, RunConfig};
 use compair::coordinator::{cluster, serving, ClusterConfig, RouterPolicy, ServeConfig};
 use compair::figures;
+use compair::figures::FigCtx;
 use compair::isa::{Machine, RowProgram};
+use compair::util::pool;
 use compair::util::json::{Json, ToJson};
 use compair::util::table::{fenergy_pj, fnum, ftime_ns, Table};
 use compair::workload::Scenario;
@@ -52,12 +54,35 @@ fn parse_noc_fidelity(args: &Args) -> Result<Option<NocFidelity>, String> {
     }
 }
 
+/// Parse `--jobs`; `None` when absent (callers pick their own default).
+/// `auto` resolves to the machine's available parallelism.
+fn parse_jobs(args: &Args) -> Result<Option<usize>, String> {
+    match args.flag("jobs") {
+        None => Ok(None),
+        Some("auto") => Ok(Some(pool::default_jobs())),
+        Some(v) => {
+            let n: usize = v
+                .parse()
+                .map_err(|_| format!("--jobs expects a positive integer or 'auto', got '{v}'"))?;
+            if n == 0 {
+                return Err("--jobs must be >= 1 (use 1 for serial)".into());
+            }
+            Ok(Some(n))
+        }
+    }
+}
+
 fn cmd_figures(args: &Args) -> Result<(), String> {
     let format = args.format()?;
-    // figure generators build their RunConfigs internally, so the flag
-    // threads through the process-wide default they inherit
+    // figure generators build their RunConfigs internally; the flags
+    // thread through the explicit context every generator receives
+    // (there is deliberately no process-wide default to mutate)
+    let mut cx = FigCtx { jobs: pool::default_jobs(), ..FigCtx::default() };
     if let Some(f) = parse_noc_fidelity(args)? {
-        NocFidelity::set_process_default(f);
+        cx.noc_fidelity = f;
+    }
+    if let Some(j) = parse_jobs(args)? {
+        cx.jobs = j;
     }
     let registry = figures::registry();
     let names: Vec<String> = if args.has("all") || args.positional.is_empty() {
@@ -65,27 +90,31 @@ fn cmd_figures(args: &Args) -> Result<(), String> {
     } else {
         args.positional.clone()
     };
-    // validate up front so a typo errors before any table is computed
-    for n in &names {
-        if !registry.iter().any(|(id, _)| *id == n.as_str()) {
-            return Err(format!("unknown figure '{n}' (see `compair list`)"));
-        }
-    }
+    // resolve up front so a typo errors before any table is computed
+    let selected: Vec<(&'static str, fn(&FigCtx) -> String)> = names
+        .iter()
+        .map(|n| {
+            registry
+                .iter()
+                .find(|(id, _)| *id == n.as_str())
+                .copied()
+                .ok_or_else(|| format!("unknown figure '{n}' (see `compair list`)"))
+        })
+        .collect::<Result<_, _>>()?;
+    // whole figures fan out as pool jobs; the submission-order merge keeps
+    // the printed sequence (and every byte) identical to --jobs 1
+    let outputs = pool::par_map_indexed(cx.jobs, selected, |_, (name, f)| (name, f(&cx)));
     match format {
-        // stream: the scenario/cluster tables each run full serving sims,
-        // so print each as it completes
         OutputFormat::Text => {
-            for n in &names {
-                println!("{}", figures::run(n).expect("validated above"));
+            for (_, table) in &outputs {
+                println!("{table}");
             }
         }
         // figure tables are text artifacts by design (diffable in CI);
         // their JSON carries the id + rendered rows
         OutputFormat::Json => {
-            let arr = Json::arr(names.iter().map(|n| {
-                Json::obj()
-                    .field("figure", n.as_str())
-                    .field("output", figures::run(n).expect("validated above"))
+            let arr = Json::arr(outputs.iter().map(|(name, table)| {
+                Json::obj().field("figure", *name).field("output", table.as_str())
             }));
             let doc = Json::obj().field("command", "figures").field("figures", arr);
             println!("{}", doc.render());
@@ -105,6 +134,9 @@ fn build_rc(args: &Args, default_fidelity: NocFidelity) -> Result<RunConfig, Str
         .ok_or("unknown --model")?;
     let mut rc = RunConfig::new(arch, model);
     rc.noc_fidelity = default_fidelity;
+    // CLI runs default to the machine's parallelism for the NoC-anchor
+    // prefit; a config file may pin it, and the explicit flag wins
+    rc.jobs = pool::default_jobs();
     rc.phase = match args.flag("phase").unwrap_or("decode") {
         "decode" => Phase::Decode,
         "prefill" => Phase::Prefill,
@@ -120,9 +152,12 @@ fn build_rc(args: &Args, default_fidelity: NocFidelity) -> Result<RunConfig, Str
         let doc = compair::config::toml::parse(&text).map_err(|e| e.to_string())?;
         rc.apply_doc(&doc)?;
     }
-    // the explicit flag wins over both the default and a config file
+    // the explicit flags win over both the default and a config file
     if let Some(f) = parse_noc_fidelity(args)? {
         rc.noc_fidelity = f;
+    }
+    if let Some(j) = parse_jobs(args)? {
+        rc.jobs = j;
     }
     Ok(rc)
 }
@@ -343,7 +378,7 @@ fn cmd_isa_demo(args: &Args) -> Result<(), String> {
 }
 
 fn cmd_config(args: &Args) -> Result<(), String> {
-    let table = figures::table3();
+    let table = figures::table3(&FigCtx::default());
     match args.format()? {
         OutputFormat::Text => println!("{table}"),
         OutputFormat::Json => {

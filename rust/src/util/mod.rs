@@ -1,13 +1,15 @@
 //! Small self-contained utilities (PRNG, stats, tables, JSON writer,
-//! bench/prop harnesses, BF16 rounding). Nothing here depends on the rest
-//! of the library.
+//! bench/prop harnesses, BF16 rounding, deterministic worker pool).
+//! Nothing here depends on the rest of the library.
 pub mod bench;
 pub mod bf16;
 pub mod json;
+pub mod pool;
 pub mod prop;
 pub mod rng;
 pub mod stats;
 pub mod table;
 
 pub use json::{Json, ToJson};
+pub use pool::{default_jobs, par_map_indexed};
 pub use rng::XorShiftRng;

@@ -1,0 +1,159 @@
+//! Deterministic worker pool for embarrassingly parallel sweeps.
+//!
+//! Every layer of this repo that fans out independent jobs — figure cells,
+//! scenario sweeps, `Engine::sweep` batches, NoC calibration anchor fits —
+//! funnels through [`par_map_indexed`]: jobs are handed to `--jobs N`
+//! workers (plain `std::thread::scope` threads, no dependencies) and the
+//! results are merged **in submission order**, so the output is
+//! bit-identical to a serial walk of the same job list. The determinism
+//! contract (see docs/ARCHITECTURE.md §"Parallel execution") is therefore
+//! structural, not statistical: parallelism only reorders *when* a job
+//! runs, never what it computes or where its result lands.
+//!
+//! The job closure must be `Sync` (shared by every worker) and the jobs
+//! must be independent — in particular, the memoizing cost models
+//! (`CachedCostModel`, the `SimulatedNoc`/`CalibratedNoc` tiers) use
+//! `RefCell` interior mutability and are deliberately `!Sync`; parallel
+//! callers give each job its own model instance seeded from the shared
+//! config (per-worker caches), which the type system enforces rather than
+//! trusts.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// The default worker count: one per available hardware thread, falling
+/// back to 1 when the parallelism cannot be queried (exotic platforms,
+/// restricted sandboxes).
+pub fn default_jobs() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Map `f` over `items` on up to `jobs` worker threads, returning the
+/// results **in submission order** (result `i` is `f(i, items[i])`,
+/// wherever and whenever it ran).
+///
+/// * `jobs <= 1`, an empty list, or a single item runs inline on the
+///   caller's thread — the serial path is not merely equivalent to the
+///   parallel one, for these shapes it *is* the same code.
+/// * Workers pull jobs from a shared cursor (no static partitioning), so
+///   ragged job costs — one slow scenario cell among cheap ones — cannot
+///   idle a worker while work remains.
+/// * A panicking job propagates: the scope joins every worker first, then
+///   re-raises, so no result built from a poisoned run can escape.
+pub fn par_map_indexed<T, R, F>(jobs: usize, items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, T) -> R + Sync,
+{
+    let n = items.len();
+    if jobs <= 1 || n <= 1 {
+        return items.into_iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    // Jobs are claimed by index from an atomic cursor; each item is moved
+    // out of its slot exactly once (the cursor hands an index to exactly
+    // one worker). Results land in their submission-order slot.
+    let slots: Vec<Mutex<Option<T>>> = items.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..jobs.min(n) {
+            s.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let item = slots[i]
+                    .lock()
+                    .expect("job slot poisoned")
+                    .take()
+                    .expect("job claimed twice");
+                let r = f(i, item);
+                *results[i].lock().expect("result slot poisoned") = Some(r);
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .expect("result slot poisoned")
+                .expect("worker completed without writing its slot")
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_come_back_in_submission_order() {
+        let items: Vec<usize> = (0..64).collect();
+        let out = par_map_indexed(4, items, |i, x| {
+            // stagger the fast/slow jobs so completion order scrambles
+            if x % 3 == 0 {
+                std::thread::sleep(std::time::Duration::from_micros(50));
+            }
+            (i, x * 2)
+        });
+        for (i, (idx, v)) in out.iter().enumerate() {
+            assert_eq!(*idx, i);
+            assert_eq!(*v, i * 2);
+        }
+    }
+
+    #[test]
+    fn parallel_is_bit_identical_to_serial() {
+        let work = |i: usize, x: u64| -> u64 {
+            // a pure but non-trivial function of (index, item)
+            let mut h = x.wrapping_mul(0x9e3779b97f4a7c15) ^ i as u64;
+            for _ in 0..10 {
+                h = h.rotate_left(13).wrapping_mul(31).wrapping_add(7);
+            }
+            h
+        };
+        let items: Vec<u64> = (0..257).map(|i| i * 3 + 1).collect();
+        let serial = par_map_indexed(1, items.clone(), work);
+        for jobs in [2usize, 4, 8] {
+            assert_eq!(par_map_indexed(jobs, items.clone(), work), serial, "jobs={jobs}");
+        }
+    }
+
+    #[test]
+    fn degenerate_shapes_run_inline() {
+        assert_eq!(par_map_indexed::<u32, u32, _>(8, vec![], |_, x| x), Vec::<u32>::new());
+        assert_eq!(par_map_indexed(8, vec![41], |_, x| x + 1), vec![42]);
+        assert_eq!(par_map_indexed(0, vec![1, 2, 3], |_, x| x * 10), vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn more_jobs_than_items_is_fine() {
+        assert_eq!(par_map_indexed(64, vec![1, 2, 3], |_, x| x + 1), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn items_are_moved_not_cloned() {
+        // non-Clone items must pass through the pool by move
+        struct NoClone(usize);
+        let items = vec![NoClone(1), NoClone(2), NoClone(3), NoClone(4)];
+        let out = par_map_indexed(2, items, |_, t| t.0 * 10);
+        assert_eq!(out, vec![10, 20, 30, 40]);
+    }
+
+    #[test]
+    #[should_panic(expected = "job 2 exploded")]
+    fn a_panicking_job_propagates() {
+        let _ = par_map_indexed(4, vec![0usize, 1, 2, 3], |i, _| {
+            if i == 2 {
+                panic!("job 2 exploded");
+            }
+            i
+        });
+    }
+
+    #[test]
+    fn default_jobs_is_positive() {
+        assert!(default_jobs() >= 1);
+    }
+}

@@ -1,0 +1,99 @@
+//! Determinism goldens for the worker pool (PR 6): pooled execution must
+//! be bit-identical to serial, everywhere the pool is wired in — every
+//! figure in the registry, the `Engine::sweep` batch facade, and the
+//! `CalibratedNoc` parallel anchor fit. These are the same contracts
+//! ci.sh gates at the CLI level (`figures --jobs 4` diffed against
+//! `--jobs 1`); here they run in-process so a divergence names the
+//! figure instead of dumping a JSON diff.
+
+use compair::config::{ArchKind, HwConfig, ModelConfig, NocFidelity, RunConfig};
+use compair::figures::{self, FigCtx};
+use compair::noc::model::{
+    anchor_grid, calibration_report, collective_cost, CalibratedNoc, NocModel,
+};
+use compair::Engine;
+
+/// Every registered figure, `--jobs 4` vs `--jobs 1`, byte-for-byte.
+/// Exercises both fan-out levels: `run_all` runs whole figures as pool
+/// jobs, and the sweep-shaped figures par_map their cells internally.
+#[test]
+fn every_registry_figure_is_jobs_invariant() {
+    let serial = figures::run_all(&FigCtx { jobs: 1, ..FigCtx::default() });
+    let pooled = figures::run_all(&FigCtx { jobs: 4, ..FigCtx::default() });
+    assert_eq!(serial.len(), pooled.len());
+    assert_eq!(serial.len(), figures::registry().len(), "run_all must cover the registry");
+    for ((n1, s), (n2, p)) in serial.iter().zip(&pooled) {
+        assert_eq!(n1, n2, "run_all must preserve registry order");
+        assert_eq!(s, p, "figure '{n1}' diverged between --jobs 1 and --jobs 4");
+    }
+}
+
+/// The figure-level contract also holds under the calibrated NoC tier,
+/// where each worker owns a memoizing simulator instance. One figure is
+/// enough here (the full registry under calibration is minutes of work);
+/// fig16 sweeps 9 cells x 4 archs, all through the calibrated tier.
+#[test]
+fn calibrated_tier_figure_is_jobs_invariant() {
+    let cx1 = FigCtx { jobs: 1, noc_fidelity: NocFidelity::Calibrated };
+    let cx4 = FigCtx { jobs: 4, noc_fidelity: NocFidelity::Calibrated };
+    let s = figures::run("fig16", &cx1).expect("fig16 registered");
+    let p = figures::run("fig16", &cx4).expect("fig16 registered");
+    assert_eq!(s, p);
+}
+
+/// `Engine::sweep(configs, jobs)` element i is exactly
+/// `Engine::new(configs[i]).simulate()`, whatever `jobs` is.
+#[test]
+fn engine_sweep_equals_a_serial_loop() {
+    let mut configs = Vec::new();
+    for arch in [ArchKind::Cent, ArchKind::CompAirBase, ArchKind::CompAirOpt, ArchKind::AttAcc] {
+        for seq in [4096usize, 16384] {
+            let mut rc = RunConfig::new(arch, ModelConfig::llama2_7b());
+            rc.batch = 16;
+            rc.seq_len = seq;
+            configs.push(rc);
+        }
+    }
+    let serial: Vec<_> = configs.iter().map(|c| Engine::new(c.clone()).simulate()).collect();
+    let pooled = Engine::sweep(configs, 4);
+    assert_eq!(serial.len(), pooled.len());
+    for (a, b) in serial.iter().zip(&pooled) {
+        assert_eq!(a.latency_ns.to_bits(), b.latency_ns.to_bits());
+        assert_eq!(a.throughput_tok_s.to_bits(), b.throughput_tok_s.to_bits());
+        assert_eq!(a.energy.total_pj().to_bits(), b.energy.total_pj().to_bits());
+        assert_eq!(a.layer_cost, b.layer_cost);
+    }
+}
+
+/// Parallel anchor prefit ≡ lazy serial fit: a `CalibratedNoc` whose
+/// anchors were warmed on 4 workers prices every collective with the
+/// exact bits of one that fit each factor on demand.
+#[test]
+fn calibration_parallel_fit_matches_serial_fit() {
+    let hw = HwConfig::paper();
+    let warmed = CalibratedNoc::new(&hw);
+    warmed.prefit(4);
+    let lazy = CalibratedNoc::new(&hw);
+    // price every anchor shape through both instances: the pool-warmed fit
+    // and the on-demand serial fit must produce the same bits
+    for (kind, elems, param) in anchor_grid(&hw) {
+        let w = collective_cost(&warmed, kind, elems, param);
+        let l = collective_cost(&lazy, kind, elems, param);
+        assert_eq!(
+            w.latency_ns.to_bits(),
+            l.latency_ns.to_bits(),
+            "{kind:?} elems={elems} param={param} diverged between prefit(4) and lazy fit"
+        );
+    }
+    // and the rendered calibration table itself is jobs-invariant
+    let r1 = calibration_report(&hw, 1);
+    let r4 = calibration_report(&hw, 4);
+    assert_eq!(r1.len(), r4.len());
+    for (a, b) in r1.iter().zip(&r4) {
+        assert_eq!(a.collective, b.collective);
+        assert_eq!(a.shape, b.shape);
+        assert_eq!(a.analytic_ns.to_bits(), b.analytic_ns.to_bits());
+        assert_eq!(a.simulated_ns.to_bits(), b.simulated_ns.to_bits());
+        assert_eq!(a.calibrated_ns.to_bits(), b.calibrated_ns.to_bits());
+    }
+}

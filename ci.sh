@@ -13,6 +13,10 @@
 #                                     error must be <= 20% at every anchor
 #   5. pool determinism gate        — `figures --jobs 4 --format json` must be
 #                                     byte-identical to `--jobs 1`
+#   5b. mapping never-lose gate     — every `r=` marker in the mapping-search
+#                                     figure must be <= 1 (searched placement
+#                                     never beats static), and its --jobs 4
+#                                     output must equal --jobs 1
 #   6. bench artifacts gate         — bench_hotpath runs in fast mode and both
 #                                     BENCH_serving.json / BENCH_parallel.json
 #                                     must parse
@@ -95,6 +99,33 @@ if [[ "$J1" == "$J4" ]]; then
 else
     echo "error: figures output diverges between --jobs 1 and --jobs 4" >&2
     diff <(printf '%s\n' "$J1") <(printf '%s\n' "$J4") | head -40 >&2
+    exit 1
+fi
+
+say "mapping never-lose gate (mapping-search r= markers <= 1)"
+# every phase-level row of the mapping-search figure carries an
+# `r=<auto/static>` marker; the auto-mapper's structural guarantee is that
+# no searched placement ever scores worse than the paper's static one
+MAP_J1=$(./target/release/compair figures mapping-search --jobs 1 --format json)
+printf '%s\n' "$MAP_J1" | python3 -c '
+import json, re, sys
+doc = json.load(sys.stdin)
+out = next(f["output"] for f in doc["figures"] if f["figure"] == "mapping-search")
+ratios = [float(m) for m in re.findall(r"r=([0-9]+(?:\.[0-9]+)?)", out)]
+if not ratios:
+    sys.exit("no r= never-lose markers found in the mapping-search table")
+bad = [r for r in ratios if r > 1.0 + 1e-9]
+if bad:
+    sys.exit(f"auto mapping scored worse than static in {len(bad)} cell(s): {bad}")
+print(f"ok: {len(ratios)} cells, min ratio {min(ratios):.4f}")
+'
+# the search itself must be jobs-invariant end to end
+MAP_J4=$(./target/release/compair figures mapping-search --jobs 4 --format json)
+if [[ "$MAP_J1" == "$MAP_J4" ]]; then
+    echo "ok: mapping-search --jobs 4 output is byte-identical to --jobs 1"
+else
+    echo "error: mapping-search output diverges between --jobs 1 and --jobs 4" >&2
+    diff <(printf '%s\n' "$MAP_J1") <(printf '%s\n' "$MAP_J4") | head -40 >&2
     exit 1
 fi
 

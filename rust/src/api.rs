@@ -34,11 +34,12 @@
 //! mix tiers.
 
 use crate::arch::{attacc, AttAccConfig, CachedCostModel, PhaseReport, System};
-use crate::config::{ArchKind, RunConfig};
+use crate::config::{ArchKind, MappingMode, RunConfig};
 use crate::coordinator::{
     Cluster, ClusterConfig, ClusterReport, ClusterScenarioReport, ScenarioReport, ServeConfig,
     ServeReport, Server,
 };
+use crate::mapper::{search_phase, Mapping, SearchConfig, SearchResult};
 use crate::workload::Scenario;
 
 /// One architecture/model/fabric point, evaluated under any lens.
@@ -76,12 +77,54 @@ impl Engine {
 
     /// One-shot simulation of the configured phase. Unlike the legacy
     /// `arch::simulate`, this dispatches every architecture variant,
-    /// including the AttAcc roofline baseline.
+    /// including the AttAcc roofline baseline. With `rc.mapping = auto`
+    /// the PIM variants search operator placement first and report the
+    /// phase under the winner (never worse than static — see `mapper`);
+    /// the AttAcc roofline has no mapping space and ignores the knob.
     pub fn simulate(&self) -> PhaseReport {
         match self.rc.arch {
             ArchKind::AttAcc => attacc::simulate(&self.rc, &AttAccConfig::default()),
-            _ => System::new(self.rc.clone()).run(),
+            _ => match self.rc.mapping {
+                MappingMode::Static => System::new(self.rc.clone()).run(),
+                MappingMode::Auto => {
+                    let res = self.search_mapping();
+                    System::new(self.rc.clone()).run_shape_mapped(
+                        self.rc.phase,
+                        self.rc.batch,
+                        self.rc.seq_len,
+                        &res.mapping,
+                    )
+                }
+            },
         }
+    }
+
+    /// One-shot simulation under an explicit operator mapping (must be
+    /// legal for the configured variant). Panics for [`ArchKind::AttAcc`]
+    /// (no PIM-fabric mapping space).
+    pub fn simulate_mapped(&self, m: &Mapping) -> PhaseReport {
+        assert_ne!(self.rc.arch, ArchKind::AttAcc, "AttAcc has no PIM-fabric mapping space");
+        assert!(
+            m.is_valid_for(self.rc.arch),
+            "mapping {} is invalid for {:?}",
+            m.summary(),
+            self.rc.arch
+        );
+        System::new(self.rc.clone()).run_shape_mapped(self.rc.phase, self.rc.batch, self.rc.seq_len, m)
+    }
+
+    /// Search operator placement for the configured phase shape (scored
+    /// with `rc.jobs` workers; result is jobs-invariant). Panics for
+    /// [`ArchKind::AttAcc`].
+    pub fn search_mapping(&self) -> SearchResult {
+        assert_ne!(self.rc.arch, ArchKind::AttAcc, "AttAcc has no PIM-fabric mapping space");
+        search_phase(
+            &self.rc,
+            self.rc.phase,
+            self.rc.batch,
+            self.rc.seq_len,
+            &SearchConfig::from_rc(&self.rc),
+        )
     }
 
     /// Continuous-batching serving simulation on this hardware point.
@@ -218,6 +261,67 @@ mod tests {
                 assert_eq!(a.layer_cost, b.layer_cost, "jobs={jobs} i={i}");
             }
         }
+    }
+
+    #[test]
+    fn simulate_mapped_with_static_mapping_equals_simulate() {
+        use crate::mapper::Mapping;
+        let e = Engine::new(rc(ArchKind::CompAirOpt));
+        let a = e.simulate();
+        let b = e.simulate_mapped(&Mapping::static_for(ArchKind::CompAirOpt));
+        assert_eq!(a.latency_ns.to_bits(), b.latency_ns.to_bits());
+        assert_eq!(a.layer_cost, b.layer_cost);
+    }
+
+    #[test]
+    fn auto_mapping_simulate_never_loses() {
+        use crate::config::MappingMode;
+        for arch in [ArchKind::CentCurry, ArchKind::CompAirOpt, ArchKind::SramStack] {
+            let mut c = rc(arch);
+            c.model = ModelConfig::tiny();
+            c.batch = 16;
+            let static_lat = Engine::new(c.clone()).simulate().latency_ns;
+            c.mapping = MappingMode::Auto;
+            let auto_lat = Engine::new(c).simulate().latency_ns;
+            assert!(auto_lat <= static_lat, "{arch:?}: auto {auto_lat} > static {static_lat}");
+        }
+    }
+
+    #[test]
+    fn search_mapping_matches_simulate_auto() {
+        use crate::config::MappingMode;
+        let mut c = rc(ArchKind::CompAirOpt);
+        c.model = ModelConfig::tiny();
+        let e = Engine::new(c.clone());
+        let res = e.search_mapping();
+        assert!(res.cost_ns <= res.static_cost_ns);
+        let direct = e.simulate_mapped(&res.mapping);
+        assert_eq!(direct.latency_ns.to_bits(), res.cost_ns.to_bits());
+        c.mapping = MappingMode::Auto;
+        let auto = Engine::new(c).simulate();
+        assert_eq!(auto.latency_ns.to_bits(), res.cost_ns.to_bits());
+    }
+
+    #[test]
+    fn sweep_carries_the_mapping_knob() {
+        use crate::config::MappingMode;
+        let mut auto_c = rc(ArchKind::CompAirOpt);
+        auto_c.model = ModelConfig::tiny();
+        auto_c.mapping = MappingMode::Auto;
+        let mut static_c = auto_c.clone();
+        static_c.mapping = MappingMode::Static;
+        let swept = Engine::sweep(vec![static_c.clone(), auto_c.clone()], 2);
+        assert_eq!(swept[0].latency_ns.to_bits(), Engine::new(static_c).simulate().latency_ns.to_bits());
+        assert_eq!(swept[1].latency_ns.to_bits(), Engine::new(auto_c).simulate().latency_ns.to_bits());
+        assert!(swept[1].latency_ns <= swept[0].latency_ns);
+    }
+
+    #[test]
+    #[should_panic(expected = "mapping space")]
+    fn simulate_mapped_rejects_attacc() {
+        use crate::mapper::Mapping;
+        let _ = Engine::new(rc(ArchKind::AttAcc))
+            .simulate_mapped(&Mapping::static_for(ArchKind::Cent));
     }
 
     #[test]

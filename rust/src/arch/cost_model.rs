@@ -35,6 +35,7 @@ use std::cell::{Cell, RefCell};
 use std::collections::{HashMap, VecDeque};
 
 use crate::config::{ArchKind, NocFidelity, Phase, RunConfig};
+use crate::mapper::Mapping;
 use crate::sim::OpCost;
 use crate::util::json::{Json, ToJson};
 
@@ -121,10 +122,11 @@ pub trait CostModel {
     }
 }
 
-/// The one composition rule for a serving iteration — the trait default
-/// and the cached override both call it (with their own way of producing
-/// a phase total), so the two paths cannot drift apart.
-fn compose_iteration(
+/// The one composition rule for a serving iteration — the trait default,
+/// the cached override, and the auto-mapping model (`mapper`) all call it
+/// (with their own way of producing a phase total), so the paths cannot
+/// drift apart.
+pub(crate) fn compose_iteration(
     phase_total: &dyn Fn(Phase, usize, usize) -> OpCost,
     prefill_tokens: usize,
     decode_batch: usize,
@@ -218,6 +220,12 @@ pub struct CachedCostModel<M: CostModel> {
     /// drifting decode shape costs one small entry here, not a report.
     totals: RefCell<CappedMap<ShapeKey, OpCost>>,
     iters: RefCell<CappedMap<IterKey, OpCost>>,
+    /// Reports priced under an explicit non-static operator mapping (the
+    /// auto-mapper's searched winners); keyed by shape *and* mapping so a
+    /// remapped result can never answer a static query or vice versa.
+    mapped_phases: RefCell<CappedMap<(ShapeKey, Mapping), PhaseReport>>,
+    /// Whole-pass totals under an explicit mapping (`Copy`, like `totals`).
+    mapped_totals: RefCell<CappedMap<(ShapeKey, Mapping), OpCost>>,
     hits: Cell<u64>,
     misses: Cell<u64>,
 }
@@ -229,6 +237,8 @@ impl<M: CostModel> CachedCostModel<M> {
             phases: RefCell::new(CappedMap::new(PHASE_CAP)),
             totals: RefCell::new(CappedMap::new(TOTAL_CAP)),
             iters: RefCell::new(CappedMap::new(ITER_CAP)),
+            mapped_phases: RefCell::new(CappedMap::new(PHASE_CAP)),
+            mapped_totals: RefCell::new(CappedMap::new(TOTAL_CAP)),
             hits: Cell::new(0),
             misses: Cell::new(0),
         }
@@ -245,14 +255,20 @@ impl<M: CostModel> CachedCostModel<M> {
             misses: self.misses.get(),
             evictions: self.phases.borrow().evictions
                 + self.totals.borrow().evictions
-                + self.iters.borrow().evictions,
+                + self.iters.borrow().evictions
+                + self.mapped_phases.borrow().evictions
+                + self.mapped_totals.borrow().evictions,
         }
     }
 
     /// Distinct memoized entries (phase reports + totals + iteration
-    /// costs).
+    /// costs, static- and explicit-mapping levels).
     pub fn entries(&self) -> usize {
-        self.phases.borrow().len() + self.totals.borrow().len() + self.iters.borrow().len()
+        self.phases.borrow().len()
+            + self.totals.borrow().len()
+            + self.iters.borrow().len()
+            + self.mapped_phases.borrow().len()
+            + self.mapped_totals.borrow().len()
     }
 
     fn hit(&self) {
@@ -271,7 +287,9 @@ impl<M: CostModel> CachedCostModel<M> {
     /// Whole-pass cost of one phase shape, retaining only the `Copy`
     /// total. A full report priced earlier through `phase_report` already
     /// carries the total, so that map is consulted before re-lowering.
-    fn phase_total(&self, phase: Phase, batch: usize, seq_len: usize) -> OpCost {
+    /// Public because the auto-mapping model (`mapper`) composes its
+    /// never-lose floor from exactly this static total.
+    pub fn phase_total(&self, phase: Phase, batch: usize, seq_len: usize) -> OpCost {
         let key = self.shape_key(phase, batch, seq_len);
         if let Some(c) = self.totals.borrow().get(&key) {
             self.hit();
@@ -289,6 +307,68 @@ impl<M: CostModel> CachedCostModel<M> {
             }
         };
         self.totals.borrow_mut().insert(key, total);
+        total
+    }
+}
+
+/// Explicit-mapping pricing, memoized. Only `System` can lower an
+/// arbitrary [`Mapping`], so these live on the concrete wrapper rather
+/// than widening the object-safe [`CostModel`] trait that every harness
+/// loop consumes. A query for the variant's *static* mapping is routed to
+/// the unmapped path — same cache entries, no duplicate pricing.
+impl CachedCostModel<System> {
+    /// Full report under an explicit operator mapping.
+    pub fn phase_report_mapped(
+        &self,
+        m: &Mapping,
+        phase: Phase,
+        batch: usize,
+        seq_len: usize,
+    ) -> PhaseReport {
+        if *m == self.inner.static_mapping() {
+            return self.phase_report(phase, batch, seq_len);
+        }
+        let key = (self.shape_key(phase, batch, seq_len), *m);
+        if let Some(r) = self.mapped_phases.borrow().get(&key) {
+            self.hit();
+            return r.clone();
+        }
+        self.miss();
+        let r = self.inner.run_shape_mapped(phase, batch, seq_len, m);
+        self.mapped_phases.borrow_mut().insert(key, r.clone());
+        self.mapped_totals.borrow_mut().insert(key, r.layer_cost_total());
+        r
+    }
+
+    /// Whole-pass total under an explicit mapping (`Copy`-only retention,
+    /// mirroring [`CachedCostModel::phase_total`]).
+    pub fn phase_total_mapped(
+        &self,
+        m: &Mapping,
+        phase: Phase,
+        batch: usize,
+        seq_len: usize,
+    ) -> OpCost {
+        if *m == self.inner.static_mapping() {
+            return self.phase_total(phase, batch, seq_len);
+        }
+        let key = (self.shape_key(phase, batch, seq_len), *m);
+        if let Some(c) = self.mapped_totals.borrow().get(&key) {
+            self.hit();
+            return *c;
+        }
+        let from_report = self.mapped_phases.borrow().get(&key).map(|r| r.layer_cost_total());
+        let total = match from_report {
+            Some(t) => {
+                self.hit();
+                t
+            }
+            None => {
+                self.miss();
+                self.inner.run_shape_mapped(phase, batch, seq_len, m).layer_cost_total()
+            }
+        };
+        self.mapped_totals.borrow_mut().insert(key, total);
         total
     }
 }
@@ -530,6 +610,87 @@ mod tests {
         let j = st.to_json().render();
         assert!(j.contains("\"evictions\":1"), "{j}");
         assert!(j.contains("\"hit_rate\":0.75"), "{j}");
+    }
+
+    #[test]
+    fn mapped_pricing_is_cached_and_bit_identical() {
+        use crate::mapper::{Mapping, Placement, Slot};
+        let sys = System::new(rc());
+        let cached = CachedCostModel::new(System::new(rc()));
+        let m = Mapping::static_for(ArchKind::CompAirOpt).with(Slot::FcDown, Placement::DramPim);
+        let want = sys.run_shape_mapped(Phase::Decode, 16, 4096, &m);
+        let a = cached.phase_report_mapped(&m, Phase::Decode, 16, 4096); // miss
+        let misses = cached.stats().misses;
+        let b = cached.phase_report_mapped(&m, Phase::Decode, 16, 4096); // hit
+        assert_eq!(cached.stats().misses, misses);
+        assert!(cached.stats().hits >= 1);
+        for r in [&a, &b] {
+            assert_eq!(r.latency_ns.to_bits(), want.latency_ns.to_bits());
+            assert_eq!(r.layer_cost, want.layer_cost);
+        }
+        // the report seeded the mapped-total map: no re-lowering
+        let t = cached.phase_total_mapped(&m, Phase::Decode, 16, 4096);
+        assert_eq!(cached.stats().misses, misses);
+        assert_eq!(t, want.layer_cost_total());
+    }
+
+    #[test]
+    fn static_mapping_query_shares_the_unmapped_cache() {
+        let cached = CachedCostModel::new(System::new(rc()));
+        let m = crate::mapper::Mapping::static_for(ArchKind::CompAirOpt);
+        let a = cached.phase_report(Phase::Decode, 8, 2048); // seeds phases/totals
+        let entries = cached.entries();
+        let b = cached.phase_report_mapped(&m, Phase::Decode, 8, 2048);
+        assert_eq!(a.latency_ns.to_bits(), b.latency_ns.to_bits());
+        assert_eq!(cached.entries(), entries, "static mapping must not duplicate entries");
+        let t = cached.phase_total_mapped(&m, Phase::Decode, 8, 2048);
+        assert_eq!(t, a.layer_cost_total());
+        assert_eq!(cached.entries(), entries);
+    }
+
+    #[test]
+    fn two_mappings_of_one_shape_occupy_distinct_entries() {
+        use crate::mapper::{Mapping, Placement, Slot};
+        let cached = CachedCostModel::new(System::new(rc()));
+        let s = Mapping::static_for(ArchKind::CompAirOpt);
+        let m1 = s.with(Slot::FcDown, Placement::DramPim);
+        let m2 = s.with(Slot::Softmax, Placement::Host);
+        let a = cached.phase_total_mapped(&m1, Phase::Decode, 16, 4096);
+        let b = cached.phase_total_mapped(&m2, Phase::Decode, 16, 4096);
+        assert_ne!(a.latency_ns.to_bits(), b.latency_ns.to_bits());
+        // both keys live side by side; re-queries hit
+        let hits = cached.stats().hits;
+        assert_eq!(cached.phase_total_mapped(&m1, Phase::Decode, 16, 4096), a);
+        assert_eq!(cached.phase_total_mapped(&m2, Phase::Decode, 16, 4096), b);
+        assert_eq!(cached.stats().hits, hits + 2);
+    }
+
+    #[test]
+    fn capped_map_evicts_strictly_oldest_first() {
+        // step through each overflow and pin the exact survivor set — the
+        // coarser bounds test above can pass with a subtly wrong eviction
+        // order, this one cannot
+        let mut map: CappedMap<usize, usize> = CappedMap::new(6);
+        for i in 0..7 {
+            map.insert(i, i);
+        }
+        // overflow at i=6 dropped the oldest half: 0, 1, 2
+        for gone in 0..3 {
+            assert_eq!(map.get(&gone), None, "{gone} should be evicted");
+        }
+        for kept in 3..7 {
+            assert_eq!(map.get(&kept), Some(&kept), "{kept} should survive");
+        }
+        assert_eq!(map.evictions, 3);
+        // survivors keep their original relative order for the next sweep
+        map.insert(7, 7);
+        map.insert(8, 8); // len 6 -> no eviction yet
+        map.insert(9, 9); // overflow: drops 3, 4, 5
+        assert_eq!(map.get(&3), None);
+        assert_eq!(map.get(&5), None);
+        assert_eq!(map.get(&6), Some(&6));
+        assert_eq!(map.get(&9), Some(&9));
+        assert_eq!(map.evictions, 6);
     }
 
     #[test]

@@ -8,4 +8,4 @@ pub mod system;
 
 pub use attacc::{pure_sram_requirements, AttAccConfig};
 pub use cost_model::{CacheStats, CachedCostModel, CostModel, IterKey, ShapeKey};
-pub use system::{simulate, OpReport, PhaseReport, System};
+pub use system::{fc_tiles, simulate, OpReport, PhaseReport, System};

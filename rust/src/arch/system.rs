@@ -8,9 +8,11 @@
 //! full pipeline is `batch · pp / (n_layers · layer_latency)` while
 //! per-token latency is `n_layers · layer_latency` plus stage handoffs.
 
+use crate::config::hw::DramConfig;
 use crate::config::{ArchKind, FcMapping, Phase, RunConfig};
 use crate::dram::{Channel, PimBank};
 use crate::energy::{EnergyBreakdown, EnergyModel};
+use crate::mapper::{supported_placements, Mapping, Placement, Slot};
 use crate::noc::model::NocModel;
 use crate::noc::{exchange, model as noc_model};
 use crate::sim::OpCost;
@@ -81,6 +83,28 @@ impl ToJson for PhaseReport {
     }
 }
 
+/// The per-bank tile shape the FC lowering assigns: `(out_tile, in_tile,
+/// active_banks)` for a device-local `d_in × d_out` projection. Single
+/// source for `System::fc_cost` *and* the Fig 8 per-bank tables — the two
+/// used to hand-code these splits independently and had drifted apart.
+pub fn fc_tiles(mapping: FcMapping, d_in: usize, d_out: usize, dram: &DramConfig) -> (usize, usize, usize) {
+    let banks = dram.banks_per_device();
+    match mapping {
+        FcMapping::OutputSplit => {
+            let out_tile = d_out.div_ceil(banks).max(1);
+            let active = d_out.div_ceil(out_tile).min(banks);
+            (out_tile, d_in, active)
+        }
+        FcMapping::InputSplit => {
+            // input split across the banks of a channel, output split
+            // across channels
+            let out_tile = d_out.div_ceil(dram.channels_per_device).max(1);
+            let in_tile = d_in.div_ceil(dram.banks_per_channel).max(1);
+            (out_tile, in_tile, banks)
+        }
+    }
+}
+
 /// The simulator facade.
 pub struct System {
     pub rc: RunConfig,
@@ -92,6 +116,10 @@ pub struct System {
     /// analytic closed forms, simulator-calibrated forms, or the
     /// flit-level simulator (see `noc::model`).
     noc: Box<dyn NocModel>,
+    /// The hard-coded placement this variant has always used; the default
+    /// lowering path ([`System::run_shape`]) goes through it, so
+    /// `mapping=static` is the pre-mapper behavior by construction.
+    static_map: Mapping,
 }
 
 impl System {
@@ -108,16 +136,22 @@ impl System {
             // bit-identical to the lazy serial fit
             noc.prefit(rc.jobs);
         }
-        Self { rc, em, bank, sram, channel, noc }
+        let static_map = Mapping::static_for(rc.arch);
+        Self { rc, em, bank, sram, channel, noc, static_map }
+    }
+
+    /// The hard-coded placement baseline for this variant.
+    pub fn static_mapping(&self) -> Mapping {
+        self.static_map
     }
 
     fn banks_per_device(&self) -> usize {
         self.rc.hw.dram.banks_per_device()
     }
 
-    /// Cost of one FC op on this architecture (per device; single layer).
-    /// Returns (cost, active-bank fraction).
-    fn fc_cost(&self, name: &str, d_in: usize, d_out: usize, tokens: usize) -> (OpCost, f64) {
+    /// Cost of one FC op (per device; single layer) on the engine
+    /// `use_sram` selects. Returns (cost, active-bank fraction).
+    fn fc_cost(&self, name: &str, d_in: usize, d_out: usize, tokens: usize, use_sram: bool) -> (OpCost, f64) {
         let tp = self.rc.tp;
         let row_parallel = matches!(name, "o" | "down");
         let (din_dev, dout_dev) = if row_parallel {
@@ -134,24 +168,20 @@ impl System {
         let in_bytes = (tokens * din_dev * 2) as u64;
         let bcast = self.channel.gb_broadcast(in_bytes).replicate(channels as u64);
 
-        let use_sram = self.rc.arch.has_sram();
         let (compute, active_banks, reduce) = match self.rc.fc_mapping {
             FcMapping::OutputSplit => {
-                let out_tile = dout_dev.div_ceil(banks).max(1);
-                let active = dout_dev.div_ceil(out_tile).min(banks);
+                let (out_tile, in_tile, active) =
+                    fc_tiles(FcMapping::OutputSplit, din_dev, dout_dev, &self.rc.hw.dram);
                 let per_bank = if use_sram {
-                    self.sram.gemm(out_tile, din_dev, tokens, WeightPolicy::Reload)
+                    self.sram.gemm(out_tile, in_tile, tokens, WeightPolicy::Reload)
                 } else {
-                    self.bank.gemv(out_tile, din_dev, tokens)
+                    self.bank.gemv(out_tile, in_tile, tokens)
                 };
                 (per_bank.replicate(active as u64), active, OpCost::zero())
             }
             FcMapping::InputSplit => {
-                // input split across the banks of a channel, output split
-                // across channels
-                let out_tile = dout_dev.div_ceil(channels).max(1);
-                let in_tile = din_dev.div_ceil(banks_pc).max(1);
-                let active = banks;
+                let (out_tile, in_tile, active) =
+                    fc_tiles(FcMapping::InputSplit, din_dev, dout_dev, &self.rc.hw.dram);
                 let per_bank = if use_sram {
                     self.sram.gemm(out_tile, in_tile, tokens, WeightPolicy::Reload)
                 } else {
@@ -214,12 +244,12 @@ impl System {
         }
     }
 
-    fn softmax_cost(&self, rows: usize, seq: usize) -> OpCost {
+    fn softmax_cost(&self, rows: usize, seq: usize, on_noc: bool) -> OpCost {
         let tp = self.rc.tp;
         let rows_dev = rows.div_ceil(tp).max(1);
         let banks = self.banks_per_device() as u64;
         let elems = rows_dev as u64 * seq as u64;
-        if self.rc.arch.has_curry() {
+        if on_noc {
             // distributed: exp bank-locally, per-row partial sums on the MAC
             // lanes, scalar tree reduce + broadcast, divide in transit
             let per_bank = elems.div_ceil(banks);
@@ -246,11 +276,11 @@ impl System {
         }
     }
 
-    fn rope_cost(&self, tokens: usize, heads: usize, d_head: usize) -> OpCost {
+    fn rope_cost(&self, tokens: usize, heads: usize, d_head: usize, on_noc: bool) -> OpCost {
         let tp = self.rc.tp;
         let vecs_dev = (tokens * heads.div_ceil(tp)).max(1);
         let banks = self.banks_per_device();
-        if self.rc.arch.has_curry() {
+        if on_noc {
             let per_bank_vecs = vecs_dev.div_ceil(banks).max(1);
             let ex = exchange::exchange_cost(d_head, &self.rc.hw.noc)
                 .repeat(per_bank_vecs as u64)
@@ -271,10 +301,10 @@ impl System {
         }
     }
 
-    fn rmsnorm_cost(&self, tokens: usize, d_model: usize) -> OpCost {
+    fn rmsnorm_cost(&self, tokens: usize, d_model: usize, on_noc: bool) -> OpCost {
         let banks = self.banks_per_device() as u64;
         let elems = (tokens * d_model) as u64;
-        if self.rc.arch.has_curry() {
+        if on_noc {
             let per_bank = elems.div_ceil(banks);
             // square-accumulate on MAC lanes (x·x into the accumulator)
             let sq = OpCost::latency(per_bank as f64 / 16.0 * self.rc.hw.dram.t_ccd_ns)
@@ -299,11 +329,11 @@ impl System {
         }
     }
 
-    fn activation_cost(&self, tokens: usize, width: usize) -> OpCost {
+    fn activation_cost(&self, tokens: usize, width: usize, on_noc: bool) -> OpCost {
         let tp = self.rc.tp;
         let elems = (tokens * width.div_ceil(tp)) as u64;
         let banks = self.banks_per_device() as u64;
-        if self.rc.arch.has_curry() {
+        if on_noc {
             let per_bank = elems.div_ceil(banks);
             // sigmoid: exp + 1/(1+e); gating: EWMUL on the lanes
             let exp = self.noc.exp(per_bank, 8).replicate(banks);
@@ -322,22 +352,47 @@ impl System {
         }
     }
 
-    /// Lower one op; counts are per tp-group (all devices of the replica).
+    /// Lower one op under the static mapping; counts are per tp-group
+    /// (all devices of the replica).
     pub fn op_cost(&self, op: &LlmOp) -> (OpCost, f64) {
+        self.op_cost_mapped(op, &self.static_map)
+    }
+
+    /// Lower one op on the engine the mapping assigns its slot. The
+    /// placement must be legal for this variant (`supported_placements`);
+    /// the search only emits legal mappings, so this is a debug assert,
+    /// not a runtime gate.
+    pub fn op_cost_mapped(&self, op: &LlmOp, m: &Mapping) -> (OpCost, f64) {
+        let place = m.placement_of(op);
+        debug_assert!(
+            supported_placements(Slot::of_op(op), self.rc.arch).contains(&place),
+            "{:?} cannot run on {} under {:?}",
+            Slot::of_op(op),
+            place.label(),
+            self.rc.arch
+        );
+        let use_sram = place == Placement::SramPim;
+        let on_noc = place == Placement::NocAlu;
         let tp = self.rc.tp as u64;
         let (c, util) = match op {
-            LlmOp::Fc { name, d_in, d_out, tokens } => self.fc_cost(name, *d_in, *d_out, *tokens),
+            LlmOp::Fc { name, d_in, d_out, tokens } => {
+                self.fc_cost(name, *d_in, *d_out, *tokens, use_sram)
+            }
             LlmOp::AttnQK { batch, heads, rows_q, seq, d_head } => {
                 (self.attn_cost(true, *batch, *heads, *rows_q, *seq, *d_head), 1.0)
             }
             LlmOp::AttnSV { batch, heads, rows_q, seq, d_head } => {
                 (self.attn_cost(false, *batch, *heads, *rows_q, *seq, *d_head), 1.0)
             }
-            LlmOp::Softmax { rows, seq } => (self.softmax_cost(*rows, *seq), 1.0),
-            LlmOp::Rope { tokens, heads, d_head } => (self.rope_cost(*tokens, *heads, *d_head), 1.0),
-            LlmOp::RmsNorm { tokens, d_model } => (self.rmsnorm_cost(*tokens, *d_model), 1.0),
+            LlmOp::Softmax { rows, seq } => (self.softmax_cost(*rows, *seq, on_noc), 1.0),
+            LlmOp::Rope { tokens, heads, d_head } => {
+                (self.rope_cost(*tokens, *heads, *d_head, on_noc), 1.0)
+            }
+            LlmOp::RmsNorm { tokens, d_model } => {
+                (self.rmsnorm_cost(*tokens, *d_model, on_noc), 1.0)
+            }
             LlmOp::Activation { tokens, width, .. } => {
-                (self.activation_cost(*tokens, *width), 1.0)
+                (self.activation_cost(*tokens, *width, on_noc), 1.0)
             }
             LlmOp::AllReduce { tokens, d_model } => (
                 coll::cxl_allreduce(
@@ -364,6 +419,20 @@ impl System {
     /// serving loop, the cached model) avoid cloning a `RunConfig` per
     /// call.
     pub fn run_shape(&self, phase: Phase, batch: usize, seq_len: usize) -> PhaseReport {
+        self.run_shape_mapped(phase, batch, seq_len, &self.static_map)
+    }
+
+    /// Simulate one phase shape under an explicit operator mapping. The
+    /// default path is `run_shape_mapped(.., &self.static_mapping())`, so
+    /// the static mapping reproduces the pre-mapper numbers bit-for-bit;
+    /// the mapping search scores its candidates through this entry.
+    pub fn run_shape_mapped(
+        &self,
+        phase: Phase,
+        batch: usize,
+        seq_len: usize,
+        m: &Mapping,
+    ) -> PhaseReport {
         let rc = &self.rc;
         let ops = layer_ops(&rc.model, phase, batch, seq_len);
         let mut layer = OpCost::zero();
@@ -372,7 +441,7 @@ impl System {
         let mut coll_ns = 0.0;
         let mut utils = Vec::new();
         for op in &ops {
-            let (c, util) = self.op_cost(op);
+            let (c, util) = self.op_cost_mapped(op, m);
             match op.class() {
                 OpClass::NonLinear => nl_ns += c.latency_ns,
                 OpClass::Collective => coll_ns += c.latency_ns,
@@ -607,6 +676,70 @@ mod tests {
         // pass agrees to float accumulation noise
         let rel = (c.latency_ns - s.latency_ns).abs() / s.latency_ns;
         assert!(rel < 1e-6, "calibrated vs simulated latency drift: {rel}");
+    }
+
+    #[test]
+    fn static_mapped_run_is_bit_identical_to_run_shape() {
+        use crate::mapper::Mapping;
+        for arch in [
+            ArchKind::Cent,
+            ArchKind::CentCurry,
+            ArchKind::CompAirBase,
+            ArchKind::CompAirOpt,
+            ArchKind::SramStack,
+        ] {
+            let sys = System::new(rc(arch));
+            let m = Mapping::static_for(arch);
+            assert_eq!(sys.static_mapping(), m);
+            for (phase, batch, seq) in [(Phase::Decode, 16, 4096), (Phase::Prefill, 1, 512)] {
+                let a = sys.run_shape(phase, batch, seq);
+                let b = sys.run_shape_mapped(phase, batch, seq, &m);
+                assert_eq!(a.latency_ns.to_bits(), b.latency_ns.to_bits(), "{arch:?}");
+                assert_eq!(a.layer_cost, b.layer_cost, "{arch:?}");
+                assert_eq!(a.energy.total_pj().to_bits(), b.energy.total_pj().to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn remapping_an_op_changes_its_cost() {
+        use crate::mapper::{Mapping, Placement, Slot};
+        // moving the FFN down-projection off the SRAM arrays onto the
+        // DRAM banks must re-price it (either direction — the point is
+        // the mapping knob is live, not decorative)
+        let sys = System::new(rc(ArchKind::CompAirOpt));
+        let m = Mapping::static_for(ArchKind::CompAirOpt);
+        let remapped = m.with(Slot::FcDown, Placement::DramPim);
+        let a = sys.run_shape_mapped(Phase::Decode, 32, 4096, &m);
+        let b = sys.run_shape_mapped(Phase::Decode, 32, 4096, &remapped);
+        assert_ne!(a.latency_ns.to_bits(), b.latency_ns.to_bits());
+        // and softmax host-vs-noc likewise
+        let host_sm = m.with(Slot::Softmax, Placement::Host);
+        let c = sys.run_shape_mapped(Phase::Decode, 32, 4096, &host_sm);
+        assert_ne!(a.latency_ns.to_bits(), c.latency_ns.to_bits());
+    }
+
+    #[test]
+    fn fc_tiles_match_paper_splits() {
+        use crate::config::HwConfig;
+        let hw = HwConfig::paper();
+        let banks = hw.dram.banks_per_device();
+        assert_eq!(banks, 512);
+        // Llama2-13B Q/K/V (§3.3): output-split hands each bank a
+        // 5120×30 tile (3·5120 outputs over 512 banks)
+        let (out_t, in_t, active) = fc_tiles(FcMapping::OutputSplit, 5120, 3 * 5120, &hw.dram);
+        assert_eq!((out_t, in_t), (30, 5120));
+        assert_eq!(active, 512);
+        // input-split: outputs over the 32 channels, inputs over the 16
+        // banks of each channel
+        let (out_t, in_t, active) = fc_tiles(FcMapping::InputSplit, 5120, 3 * 5120, &hw.dram);
+        assert_eq!(out_t, (3 * 5120usize).div_ceil(hw.dram.channels_per_device));
+        assert_eq!(in_t, 5120usize.div_ceil(hw.dram.banks_per_channel));
+        assert_eq!(active, banks);
+        // degenerate projections clamp to one column, not zero
+        let (out_t, _, active) = fc_tiles(FcMapping::OutputSplit, 64, 8, &hw.dram);
+        assert_eq!(out_t, 1);
+        assert_eq!(active, 8);
     }
 
     #[test]

@@ -110,6 +110,10 @@ USAGE:
   compair simulate [--arch A] [--model M] [--phase decode|prefill]
                    [--batch N] [--seqlen N] [--tp N] [--devices N]
                    [--config file.toml]   run one simulation, print report
+                   [--mapping static|auto] operator placement: the paper's
+                                          hard-coded engine assignment, or
+                                          a per-shape placement search that
+                                          never scores worse than static
   compair serve    [--arch A] [--model M] [--rate R] [--requests N]
                    [--prompt N] [--gen N] [--seed S]
                    [--scenario NAME]      continuous-batching serving sim;
@@ -131,7 +135,10 @@ are priced (closed forms, simulator-calibrated forms, or the flit-level
 mesh itself); serve defaults to calibrated, everything else to analytic.
 They likewise accept `--jobs N|auto` (default auto): on `figures` it sizes
 the worker pool for the figure/cell fan-out, on `simulate`/`serve` it
-parallelizes the NoC calibration prefit. Results never depend on N.
+parallelizes the NoC calibration prefit and (under `--mapping auto`) the
+placement-search candidate scoring. Results never depend on N. `serve`
+also accepts `--mapping static|auto`; auto re-searches per shape class
+and falls back to the static placement whenever search cannot beat it.
 
 ARCHS:     cent | cent-curry | compair-base | compair-opt | sram-stack | attacc
 MODELS:    llama2-7b | llama2-13b | llama2-70b | qwen-72b | gpt3-175b | tiny

@@ -10,4 +10,4 @@ pub use hw::{
     SramGang, Voltage,
 };
 pub use model::ModelConfig;
-pub use run::{ArchKind, FcMapping, Phase, RunConfig};
+pub use run::{ArchKind, FcMapping, MappingMode, Phase, RunConfig};

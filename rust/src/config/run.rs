@@ -105,6 +105,38 @@ impl FcMapping {
     }
 }
 
+/// How operators are placed onto engines (see `mapper`): the hard-coded
+/// per-variant assignment, or a per-(phase, shape-class) search clamped to
+/// never lose to it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum MappingMode {
+    /// The static placement `arch/system.rs` has always used (default —
+    /// results are bit-identical to the pre-mapper simulator).
+    #[default]
+    Static,
+    /// Search DRAM-PIM / SRAM-PIM / NoC-ALU / host placement per phase and
+    /// shape-class; falls back to static whenever the search cannot
+    /// strictly beat it.
+    Auto,
+}
+
+impl MappingMode {
+    pub fn label(&self) -> &'static str {
+        match self {
+            MappingMode::Static => "static",
+            MappingMode::Auto => "auto",
+        }
+    }
+
+    pub fn by_name(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "static" => Some(MappingMode::Static),
+            "auto" => Some(MappingMode::Auto),
+            _ => None,
+        }
+    }
+}
+
 /// Inference phase. `Hash` lets the cached cost model key memo entries by
 /// phase.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -142,6 +174,11 @@ pub struct RunConfig {
     pub devices: usize,
     pub sram_gang: SramGang,
     pub fc_mapping: FcMapping,
+    /// Operator→engine placement policy: the static per-variant assignment
+    /// or the per-shape-class auto search (see `mapper`). Never part of a
+    /// memoization key — mapped results are keyed by the concrete
+    /// `Mapping` they were priced under, not by the policy that chose it.
+    pub mapping: MappingMode,
     /// How NoC collective costs are priced (see `noc::model`): analytic
     /// closed forms, simulator-calibrated closed forms, or the flit-level
     /// simulator itself. Part of every cost-model memoization key.
@@ -170,6 +207,7 @@ impl RunConfig {
             devices: 32,
             sram_gang: SramGang::In256Out16,
             fc_mapping: FcMapping::OutputSplit,
+            mapping: MappingMode::Static,
             // the library default is analytic and explicit — there is no
             // process-wide mutable default (it was a data race waiting to
             // happen under the worker pool); the CLI threads its
@@ -232,6 +270,10 @@ impl RunConfig {
                 _ => return Err(format!("unknown fc_mapping '{m}'")),
             };
         }
+        if let Some(m) = doc.get_str("run.mapping") {
+            self.mapping = MappingMode::by_name(m)
+                .ok_or_else(|| format!("unknown mapping '{m}' (static | auto)"))?;
+        }
         if let Some(f) = doc.get_str("run.noc_fidelity") {
             self.noc_fidelity = NocFidelity::by_name(f)
                 .ok_or_else(|| format!("unknown noc_fidelity '{f}' (analytic | calibrated | simulated)"))?;
@@ -275,6 +317,7 @@ impl ToJson for RunConfig {
             .field("tp", self.tp)
             .field("devices", self.devices)
             .field("fc_mapping", self.fc_mapping.label())
+            .field("mapping", self.mapping.label())
             .field("noc_fidelity", self.noc_fidelity.label())
             .field("jobs", self.jobs)
     }
@@ -336,6 +379,29 @@ voltage = 0.7
             rc.hw.dram.column_decoder,
             crate::config::hw::ColumnDecoder::Decoupled8and4
         );
+    }
+
+    #[test]
+    fn mapping_mode_roundtrips_and_defaults_static() {
+        assert_eq!(RunConfig::new(ArchKind::Cent, ModelConfig::llama2_7b()).mapping, MappingMode::Static);
+        for m in [MappingMode::Static, MappingMode::Auto] {
+            assert_eq!(MappingMode::by_name(m.label()), Some(m));
+        }
+        assert_eq!(MappingMode::by_name("AUTO"), Some(MappingMode::Auto));
+        assert_eq!(MappingMode::by_name("beam"), None);
+    }
+
+    #[test]
+    fn doc_mapping_applies_and_rejects() {
+        let mut rc = RunConfig::new(ArchKind::CompAirOpt, ModelConfig::llama2_7b());
+        let doc = toml::parse("[run]\nmapping = \"auto\"").unwrap();
+        rc.apply_doc(&doc).unwrap();
+        assert_eq!(rc.mapping, MappingMode::Auto);
+        let doc = toml::parse("[run]\nmapping = \"greedy\"").unwrap();
+        assert!(rc.apply_doc(&doc).is_err());
+        // the JSON echo is self-describing
+        let j = rc.to_json().render();
+        assert!(j.contains("\"mapping\":\"auto\""), "{j}");
     }
 
     #[test]

@@ -22,7 +22,8 @@
 
 use crate::arch::collective::cxl_p2p;
 use crate::arch::{CachedCostModel, CostModel, System};
-use crate::config::RunConfig;
+use crate::config::{MappingMode, RunConfig};
+use crate::mapper::AutoMappedCostModel;
 use crate::sim::{EventQueue, OpCost};
 use crate::util::json::{Json, ToJson};
 use crate::util::table::{fbytes, fenergy_pj, ftime_ns, Table};
@@ -547,10 +548,21 @@ impl Cluster {
 
     /// Run the cluster simulation to completion. All replicas share one
     /// [`CachedCostModel`] (they cost identical hardware), so an iteration
-    /// shape priced on any replica is a cache hit on every other.
+    /// shape priced on any replica is a cache hit on every other. With
+    /// `rc.mapping = auto` the shared model is the shape-adaptive
+    /// [`AutoMappedCostModel`] — one placement search per (phase,
+    /// shape-class) serves every replica.
     pub fn run(&self) -> ClusterReport {
-        let cm = CachedCostModel::new(System::new(self.rc.clone()));
-        self.run_with_model(&cm)
+        match self.rc.mapping {
+            MappingMode::Static => {
+                let cm = CachedCostModel::new(System::new(self.rc.clone()));
+                self.run_with_model(&cm)
+            }
+            MappingMode::Auto => {
+                let cm = AutoMappedCostModel::new(self.rc.clone());
+                self.run_with_model(&cm)
+            }
+        }
     }
 
     /// Run against an explicit [`CostModel`] over the same `RunConfig`

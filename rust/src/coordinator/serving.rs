@@ -10,8 +10,9 @@
 //! bit-reproducible.
 
 use crate::arch::{CachedCostModel, CostModel, System};
-use crate::config::RunConfig;
+use crate::config::{MappingMode, RunConfig};
 use crate::energy::EnergyBreakdown;
+use crate::mapper::AutoMappedCostModel;
 use crate::sim::{EventQueue, OpCost};
 use crate::util::json::{Json, ToJson};
 use crate::util::stats::percentile;
@@ -371,10 +372,22 @@ impl Server {
     /// [`CachedCostModel`], so every repeated iteration shape — chunked
     /// prefill re-prices the same `(Prefill, 1, chunk)` pass on each
     /// iteration of a long prompt — becomes a table lookup instead of an
-    /// op-graph lowering.
+    /// op-graph lowering. With `rc.mapping = auto` the model is the
+    /// shape-adaptive [`AutoMappedCostModel`]: prefill and decode classes
+    /// search their own operator placements (once per class), and every
+    /// iteration is floored at the static cost, so a run can only get
+    /// faster — never slower — than `mapping = static`.
     pub fn run(&self) -> ServeReport {
-        let cm = CachedCostModel::new(System::new(self.rc.clone()));
-        self.run_with_model(&cm)
+        match self.rc.mapping {
+            MappingMode::Static => {
+                let cm = CachedCostModel::new(System::new(self.rc.clone()));
+                self.run_with_model(&cm)
+            }
+            MappingMode::Auto => {
+                let cm = AutoMappedCostModel::new(self.rc.clone());
+                self.run_with_model(&cm)
+            }
+        }
     }
 
     /// Run the loop against an explicit [`CostModel`] over the same
@@ -603,6 +616,49 @@ mod tests {
         let b = serve(ArchKind::CompAirOpt, 20.0);
         assert_eq!(a.makespan_ns, b.makespan_ns);
         assert_eq!(a.completed, b.completed);
+    }
+
+    #[test]
+    fn auto_mapping_serve_never_slower_and_deterministic() {
+        let mut rc = RunConfig::new(ArchKind::CompAirOpt, ModelConfig::tiny());
+        rc.tp = 8;
+        rc.devices = 32;
+        let cfg = ServeConfig {
+            arrival_rate: 50.0,
+            n_requests: 12,
+            prompt_len: 96,
+            gen_len: 6,
+            ..Default::default()
+        };
+        let server = Server::new(rc.clone(), cfg.clone());
+        let static_r = server.run();
+        rc.mapping = MappingMode::Auto;
+        let auto_server = Server::new(rc.clone(), cfg);
+        let auto_a = auto_server.run();
+        // every iteration is floored at the static cost, so the makespan
+        // can only shrink or stay put
+        assert!(
+            auto_a.makespan_ns <= static_r.makespan_ns,
+            "auto {} > static {}",
+            auto_a.makespan_ns,
+            static_r.makespan_ns
+        );
+        assert_eq!(auto_a.completed, static_r.completed);
+        // and the auto path is bit-reproducible, including across jobs
+        rc.jobs = 4;
+        let auto_b = Server::new(
+            rc,
+            ServeConfig {
+                arrival_rate: 50.0,
+                n_requests: 12,
+                prompt_len: 96,
+                gen_len: 6,
+                ..Default::default()
+            },
+        )
+        .run();
+        assert_eq!(auto_a.makespan_ns, auto_b.makespan_ns);
+        assert_eq!(auto_a.energy_per_token_pj.to_bits(), auto_b.energy_per_token_pj.to_bits());
     }
 
     #[test]

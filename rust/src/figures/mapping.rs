@@ -1,31 +1,41 @@
 //! Mapping and micro-architecture figures: Fig 8 (gang shapes × mapping),
-//! Fig 9 (decoupled column decoder), Fig 20 (SRAM-PIM DSE).
+//! Fig 9 (decoupled column decoder), Fig 20 (SRAM-PIM DSE), plus the
+//! beyond-paper `mapping-search` table (auto-mapper vs static placement).
 
-use crate::config::{ArchKind, ColumnDecoder, HwConfig, ModelConfig, SramGang, Voltage};
+use crate::arch::fc_tiles;
+use crate::config::{
+    ArchKind, ColumnDecoder, FcMapping, HwConfig, ModelConfig, Phase, SramGang, Voltage,
+};
+use crate::coordinator::{ServeConfig, Server};
 use crate::dram::PimBank;
+use crate::mapper::{search_phase, AutoMappedCostModel, SearchConfig};
 use crate::sram::bank::{SramBank, WeightPolicy};
 use crate::util::pool::par_map_indexed;
-use crate::util::table::{fnum, fx, Table};
+use crate::util::table::{fnum, ftime_ns, fx, Table};
+use crate::workload::Scenario;
 
 use super::FigCtx;
 
 /// Fig 8: Llama2-13B per-bank Q/K/V + FFN speedups of SRAM-stack over pure
-/// DRAM-PIM, for (512,8) output-split vs (256,16) input-split.
+/// DRAM-PIM, for (512,8) output-split vs (256,16) input-split. Tile shapes
+/// come from [`fc_tiles`] — the same function `System::fc_cost` tiles
+/// with — so the figure can never drift from what the cost model prices
+/// (the previous hand-coded input-split row had).
 pub fn fig8(_cx: &FigCtx) -> String {
     let hw = HwConfig::paper();
     let m = ModelConfig::llama2_13b();
     let dram = PimBank::new(&hw.dram);
-    let banks = hw.dram.banks_per_device(); // 16 banks x 32 channels
     let mut out = String::new();
-    for (label, out_tile, in_dim) in [
-        // §3.3: output-split gives each bank a 5120x10 Q/K/V tile
-        ("Q/K/V output-split (5120 x 10/bank)", (3 * m.d_model).div_ceil(banks), m.d_model),
-        // input-split reorganization: 2560x20 per bank
-        ("Q/K/V input-split (2560 x 20/bank)", 2 * (3 * m.d_model).div_ceil(banks), m.d_model / 2),
-        ("FFN up (5120 -> 13824/512 banks)", m.d_ffn.div_ceil(banks), m.d_model),
+    for (label, mapping, d_in, d_out) in [
+        // §3.3: output-split hands each bank a thin d_model-deep tile
+        ("Q/K/V output-split", FcMapping::OutputSplit, m.d_model, 3 * m.d_model),
+        // input-split reorganization: split d_in across a channel's banks
+        ("Q/K/V input-split", FcMapping::InputSplit, m.d_model, 3 * m.d_model),
+        ("FFN up output-split", FcMapping::OutputSplit, m.d_model, m.d_ffn),
     ] {
+        let (out_tile, in_dim, _active) = fc_tiles(mapping, d_in, d_out, &hw.dram);
         let mut t = Table::new(
-            &format!("Fig 8 — {label} (Llama2-13B)"),
+            &format!("Fig 8 — {label}: {in_dim} x {out_tile}/bank (Llama2-13B)"),
             &["batch", "dram(us)", "(512,8)(us)", "(256,16)(us)", "best-speedup"],
         );
         let s58 = SramBank::new(&hw.sram, SramGang::In512Out8, &hw.dram);
@@ -114,6 +124,101 @@ pub fn fig20(_cx: &FigCtx) -> String {
     out
 }
 
+/// Every architecture the auto-mapper can search (AttAcc is a roofline
+/// reference with no PIM-fabric cost model, hence no mapping space).
+const MAPPED_ARCHS: [ArchKind; 5] = [
+    ArchKind::Cent,
+    ArchKind::CentCurry,
+    ArchKind::CompAirBase,
+    ArchKind::CompAirOpt,
+    ArchKind::SramStack,
+];
+
+/// Mapping search (beyond-paper): the auto-mapper's placement choice vs
+/// the paper's hard-coded static assignment.
+///
+/// Table 1 sweeps phase shapes across every mappable architecture and two
+/// model configs; its `r=` tokens are machine-checkable never-lose
+/// markers (searched cost / static cost, `<= 1` by construction — ci.sh
+/// greps and gates on them). Table 2 replays every named serving scenario
+/// under the shape-adaptive [`AutoMappedCostModel`]; makespan ratios are
+/// reported without the marker because batching dynamics are not provably
+/// monotone in per-iteration latency. One pool job per cell/scenario,
+/// rows merged in submission order — bit-identical whatever `cx.jobs` is.
+pub fn mapping_search(cx: &FigCtx) -> String {
+    let mut t = Table::new(
+        "Mapping search — searched placement vs static, per phase shape",
+        &[
+            "arch", "model", "phase", "batch", "seqlen", "space", "static(us)", "auto(us)",
+            "never-lose", "mapping",
+        ],
+    );
+    let mut cells = Vec::new();
+    for arch in MAPPED_ARCHS {
+        for model in [ModelConfig::llama2_7b(), ModelConfig::llama2_13b()] {
+            for shape in [(Phase::Decode, 32usize, 4096usize), (Phase::Prefill, 1, 2048)] {
+                cells.push((arch, model.clone(), shape));
+            }
+        }
+    }
+    let rows = par_map_indexed(cx.jobs, cells, |_, (arch, model, (phase, batch, seq))| {
+        let name = model.name.to_string();
+        let mut rc = cx.rc(arch, model);
+        rc.phase = phase;
+        rc.batch = batch;
+        rc.seq_len = seq;
+        let res = search_phase(&rc, phase, batch, seq, &SearchConfig::default());
+        vec![
+            arch.label().to_string(),
+            name,
+            format!("{phase:?}"),
+            batch.to_string(),
+            seq.to_string(),
+            res.space_size.to_string(),
+            fnum(res.static_cost_ns / 1e3),
+            fnum(res.cost_ns / 1e3),
+            format!("r={:.4}", res.cost_ns / res.static_cost_ns),
+            res.mapping.summary(),
+        ]
+    });
+    for row in rows {
+        t.rowv(row);
+    }
+    let mut out = t.render();
+    out.push('\n');
+
+    let mut t2 = Table::new(
+        "Mapping search — serving scenarios, CompAir_Opt, llama2-7b, TP=8, 32 devices, seed 42",
+        &["scenario", "static makespan", "auto makespan", "ratio", "done", "searches"],
+    );
+    let rows2 = par_map_indexed(cx.jobs, Scenario::all(), |_, sc| {
+        let name = sc.name;
+        // cap request counts so full-figure regeneration stays fast
+        let n = sc.default_requests.min(8);
+        let mut rc = cx.rc(ArchKind::CompAirOpt, ModelConfig::llama2_7b());
+        rc.tp = 8;
+        rc.devices = 32;
+        let cfg = ServeConfig { n_requests: n, seed: 42, scenario: Some(sc), ..Default::default() };
+        let server = Server::new(rc.clone(), cfg);
+        let st = server.run();
+        let auto = AutoMappedCostModel::new(rc);
+        let at = server.run_with_model(&auto);
+        vec![
+            name.to_string(),
+            ftime_ns(st.makespan_ns as f64),
+            ftime_ns(at.makespan_ns as f64),
+            format!("{:.4}", at.makespan_ns as f64 / st.makespan_ns.max(1) as f64),
+            format!("{}/{}", st.completed, at.completed),
+            auto.searches().to_string(),
+        ]
+    });
+    for row in rows2 {
+        t2.rowv(row);
+    }
+    out.push_str(&t2.render());
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -123,6 +228,45 @@ mod tests {
         let s = fig8(&FigCtx::default());
         assert!(s.contains("input-split"));
         assert!(s.contains("(256,16)"));
+    }
+
+    #[test]
+    fn fig8_tiles_are_the_cost_model_tiles() {
+        // the figure must price the exact tile shapes System::fc_cost
+        // prices — regression guard for the hand-coded drift this fixed
+        let hw = HwConfig::paper();
+        let m = ModelConfig::llama2_13b();
+        let s = fig8(&FigCtx::default());
+        for (mapping, d_in, d_out) in [
+            (FcMapping::OutputSplit, m.d_model, 3 * m.d_model),
+            (FcMapping::InputSplit, m.d_model, 3 * m.d_model),
+            (FcMapping::OutputSplit, m.d_model, m.d_ffn),
+        ] {
+            let (out_tile, in_tile, _) = fc_tiles(mapping, d_in, d_out, &hw.dram);
+            let tag = format!("{in_tile} x {out_tile}/bank");
+            assert!(s.contains(&tag), "fig8 lost the fc_tiles shape {tag}:\n{s}");
+        }
+    }
+
+    #[test]
+    fn mapping_search_never_loses_and_is_jobs_invariant() {
+        let s1 = mapping_search(&FigCtx::default());
+        let ratios: Vec<f64> = s1
+            .split("r=")
+            .skip(1)
+            .filter_map(|rest| rest.split_whitespace().next()?.parse().ok())
+            .collect();
+        // one marker per (arch, model, shape) cell in table 1
+        assert_eq!(ratios.len(), MAPPED_ARCHS.len() * 2 * 2, "marker count:\n{s1}");
+        for r in &ratios {
+            assert!(*r <= 1.0 + 1e-9, "auto mapping lost to static (r={r}):\n{s1}");
+        }
+        // table 2 covers every named scenario
+        for sc in Scenario::all() {
+            assert!(s1.contains(sc.name), "missing scenario {}:\n{s1}", sc.name);
+        }
+        let s4 = mapping_search(&FigCtx { jobs: 4, ..FigCtx::default() });
+        assert_eq!(s1, s4, "mapping-search output must not depend on --jobs");
     }
 
     #[test]

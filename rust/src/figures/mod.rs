@@ -130,6 +130,9 @@ pub fn registry() -> Vec<(&'static str, fn(&FigCtx) -> String)> {
         // NoC costing self-check: analytic vs flit-level error per
         // collective anchor, and the calibrated tier's residual
         ("noc-calibration", noc_eval::noc_calibration),
+        // auto-mapper vs static placement: phase-shape sweep with
+        // machine-checkable never-lose markers, plus a scenario replay
+        ("mapping-search", mapping::mapping_search),
     ]
 }
 
@@ -155,6 +158,7 @@ mod tests {
         for expected in [
             "table3", "fig4a", "fig4bc", "fig5", "fig7b", "fig8", "fig9", "fig15", "fig16",
             "fig17", "fig18", "fig19", "fig20", "fig21", "fig22", "fig23", "fig24", "fig25",
+            "mapping-search",
         ] {
             assert!(names.contains(&expected), "missing {expected}");
         }

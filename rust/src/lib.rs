@@ -22,6 +22,7 @@ pub mod arch;
 pub mod cli;
 pub mod config;
 pub mod coordinator;
+pub mod mapper;
 pub mod runtime;
 pub mod energy;
 pub mod figures;

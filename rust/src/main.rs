@@ -4,7 +4,7 @@
 //! reports on every subcommand.
 
 use compair::cli::{Args, OutputFormat, USAGE};
-use compair::config::{ArchKind, ModelConfig, NocFidelity, Phase, RunConfig};
+use compair::config::{ArchKind, MappingMode, ModelConfig, NocFidelity, Phase, RunConfig};
 use compair::coordinator::{cluster, serving, ClusterConfig, RouterPolicy, ServeConfig};
 use compair::figures;
 use compair::figures::FigCtx;
@@ -158,6 +158,10 @@ fn build_rc(args: &Args, default_fidelity: NocFidelity) -> Result<RunConfig, Str
     }
     if let Some(j) = parse_jobs(args)? {
         rc.jobs = j;
+    }
+    if let Some(m) = args.flag("mapping") {
+        rc.mapping = MappingMode::by_name(m)
+            .ok_or_else(|| format!("unknown --mapping '{m}' (static | auto)"))?;
     }
     Ok(rc)
 }

@@ -1,0 +1,527 @@
+//! Operator auto-mapping: which engine runs each transformer op.
+//!
+//! CompAir's headline wins come from placing every operator on the engine
+//! that suits it — DRAM-PIM banks for bandwidth-bound GeMV, SRAM-PIM under
+//! the banks for latency-critical matrix work, the in-transit Curry ALUs
+//! for non-linear ops, the centralized NLU/host path as the fallback. Up
+//! to now `arch/system.rs` hard-coded one such assignment per architecture
+//! variant; this module reifies the assignment as data ([`Mapping`]), keeps
+//! the hard-coded choice available bit-for-bit ([`Mapping::static_for`]),
+//! and searches the placement space for something better
+//! ([`search::search_phase`]), in the spirit of the balanced PIM/NoC
+//! dataflow searches of LEAP and the heterogeneous-PIM scheduling of HPIM.
+//!
+//! The search scores whole mappings through `System::run_shape_mapped`
+//! (the same lowering the static path uses, so scores are real phase
+//! latencies at the configured NoC fidelity) and is clamped to *never
+//! lose*: the static mapping is always a scored candidate, and the final
+//! answer falls back to it on any tie or regression. `tests/prop_mapper.rs`
+//! holds the property suite (never-lose, validity, determinism).
+//!
+//! [`AutoMappedCostModel`] adapts the search to the serving loop: one
+//! search per (phase, shape-class) — classes are pow2 ceilings of
+//! (batch, kv-length), so a drifting decode shape re-uses its class's
+//! mapping instead of re-searching every iteration — with all pricing
+//! memoized in the underlying [`CachedCostModel`].
+
+pub mod search;
+
+pub use search::{search_phase, search_space_size, SearchConfig, SearchResult};
+
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
+
+use crate::arch::cost_model::compose_iteration;
+use crate::arch::{CacheStats, CachedCostModel, CostModel, PhaseReport, System};
+use crate::config::{ArchKind, Phase, RunConfig};
+use crate::sim::OpCost;
+use crate::workload::LlmOp;
+
+/// An engine an operator can execute on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Placement {
+    /// DRAM-PIM bank MAC lanes (bandwidth-bound GeMV).
+    DramPim,
+    /// SRAM-PIM arrays stacked under the banks (latency-critical matmul).
+    SramPim,
+    /// In-transit Curry ALUs in the NoC routers (non-linear ops).
+    NocAlu,
+    /// The centralized NLU / CXL-controller path (always available).
+    Host,
+}
+
+impl Placement {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Placement::DramPim => "dram-pim",
+            Placement::SramPim => "sram-pim",
+            Placement::NocAlu => "noc-alu",
+            Placement::Host => "host",
+        }
+    }
+
+    /// One-letter code for compact mapping summaries.
+    pub fn code(&self) -> char {
+        match self {
+            Placement::DramPim => 'D',
+            Placement::SramPim => 'S',
+            Placement::NocAlu => 'N',
+            Placement::Host => 'H',
+        }
+    }
+}
+
+/// One placement decision slot: every operator `workload::layer_ops` can
+/// emit folds onto exactly one slot, so a [`Mapping`] is a fixed-size
+/// array rather than a per-op table. FC slots are keyed by the projection
+/// name (their shapes differ, so their best engines may too).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(usize)]
+pub enum Slot {
+    FcQ = 0,
+    FcKv,
+    FcO,
+    FcUp,
+    FcGate,
+    FcDown,
+    AttnQK,
+    AttnSV,
+    Softmax,
+    Rope,
+    RmsNorm,
+    Activation,
+    AllReduce,
+}
+
+/// Number of decision slots in a [`Mapping`].
+pub const N_SLOTS: usize = 13;
+
+impl Slot {
+    /// Every slot, in declaration order (the canonical search order).
+    pub fn all() -> [Slot; N_SLOTS] {
+        [
+            Slot::FcQ,
+            Slot::FcKv,
+            Slot::FcO,
+            Slot::FcUp,
+            Slot::FcGate,
+            Slot::FcDown,
+            Slot::AttnQK,
+            Slot::AttnSV,
+            Slot::Softmax,
+            Slot::Rope,
+            Slot::RmsNorm,
+            Slot::Activation,
+            Slot::AllReduce,
+        ]
+    }
+
+    /// The slot an operator instance decides under.
+    pub fn of_op(op: &LlmOp) -> Slot {
+        match op {
+            LlmOp::Fc { name, .. } => match *name {
+                "q" => Slot::FcQ,
+                "kv" => Slot::FcKv,
+                "o" => Slot::FcO,
+                "up" => Slot::FcUp,
+                "gate" => Slot::FcGate,
+                "down" => Slot::FcDown,
+                other => unreachable!("unknown FC projection '{other}'"),
+            },
+            LlmOp::AttnQK { .. } => Slot::AttnQK,
+            LlmOp::AttnSV { .. } => Slot::AttnSV,
+            LlmOp::Softmax { .. } => Slot::Softmax,
+            LlmOp::Rope { .. } => Slot::Rope,
+            LlmOp::RmsNorm { .. } => Slot::RmsNorm,
+            LlmOp::Activation { .. } => Slot::Activation,
+            LlmOp::AllReduce { .. } => Slot::AllReduce,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Slot::FcQ => "fc:q",
+            Slot::FcKv => "fc:kv",
+            Slot::FcO => "fc:o",
+            Slot::FcUp => "fc:up",
+            Slot::FcGate => "fc:gate",
+            Slot::FcDown => "fc:down",
+            Slot::AttnQK => "attn:qk",
+            Slot::AttnSV => "attn:sv",
+            Slot::Softmax => "nl:softmax",
+            Slot::Rope => "nl:rope",
+            Slot::RmsNorm => "nl:rmsnorm",
+            Slot::Activation => "nl:act",
+            Slot::AllReduce => "coll:allreduce",
+        }
+    }
+}
+
+/// The engines a slot may legally run on under an architecture variant,
+/// **static placement first** (deterministic tie-breaking: candidate 0 of
+/// every enumeration is exactly the static mapping).
+///
+/// Validity rules (the property suite pins them):
+/// * FC projections: DRAM-PIM always; SRAM-PIM only where the variant
+///   stacks SRAM under the banks.
+/// * Attention score/value matmuls: DRAM-PIM only — K/V are
+///   input-dependent, so they live where the KV cache lives (§8).
+/// * Non-linear ops (softmax/rope/rmsnorm/activation): the host NLU
+///   always works; the Curry ALUs only where the variant has them; and
+///   **never** a PIM engine — exp/rsqrt have no MAC-lane lowering.
+/// * All-reduce: the CXL fabric (host) only.
+pub fn supported_placements(slot: Slot, arch: ArchKind) -> Vec<Placement> {
+    match slot {
+        Slot::FcQ | Slot::FcKv | Slot::FcO | Slot::FcUp | Slot::FcGate | Slot::FcDown => {
+            if arch.has_sram() {
+                vec![Placement::SramPim, Placement::DramPim]
+            } else {
+                vec![Placement::DramPim]
+            }
+        }
+        Slot::AttnQK | Slot::AttnSV => vec![Placement::DramPim],
+        Slot::Softmax | Slot::Rope | Slot::RmsNorm | Slot::Activation => {
+            if arch.has_curry() {
+                vec![Placement::NocAlu, Placement::Host]
+            } else {
+                vec![Placement::Host]
+            }
+        }
+        Slot::AllReduce => vec![Placement::Host],
+    }
+}
+
+/// A complete per-slot placement assignment. `Copy + Eq + Hash` so it can
+/// key memoization maps and be compared bit-for-bit across search runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Mapping {
+    places: [Placement; N_SLOTS],
+}
+
+impl Mapping {
+    /// The hard-coded placement `arch/system.rs` has always used: FC on
+    /// SRAM-PIM where stacked (else DRAM-PIM), attention on DRAM-PIM,
+    /// non-linear ops on the Curry ALUs where present (else host NLU),
+    /// collectives on the fabric. This is the `StaticMapping` baseline —
+    /// `System::run_shape` lowers through it, so it is the pre-mapper
+    /// behavior by construction, not by re-implementation.
+    pub fn static_for(arch: ArchKind) -> Mapping {
+        let mut places = [Placement::Host; N_SLOTS];
+        for slot in Slot::all() {
+            places[slot as usize] = supported_placements(slot, arch)[0];
+        }
+        Mapping { places }
+    }
+
+    pub fn get(&self, slot: Slot) -> Placement {
+        self.places[slot as usize]
+    }
+
+    /// A copy with one slot rebound.
+    pub fn with(mut self, slot: Slot, p: Placement) -> Mapping {
+        self.places[slot as usize] = p;
+        self
+    }
+
+    /// The placement governing an operator instance.
+    pub fn placement_of(&self, op: &LlmOp) -> Placement {
+        self.get(Slot::of_op(op))
+    }
+
+    /// Does every slot sit on an engine the variant supports?
+    pub fn is_valid_for(&self, arch: ArchKind) -> bool {
+        Slot::all()
+            .iter()
+            .all(|s| supported_placements(*s, arch).contains(&self.get(*s)))
+    }
+
+    /// Compact human-readable summary, FC slots then attention/non-linear/
+    /// collective, e.g. `fc:SSDSSD attn:DD nl:NNNN coll:H`.
+    pub fn summary(&self) -> String {
+        let code = |s: Slot| self.get(s).code();
+        format!(
+            "fc:{}{}{}{}{}{} attn:{}{} nl:{}{}{}{} coll:{}",
+            code(Slot::FcQ),
+            code(Slot::FcKv),
+            code(Slot::FcO),
+            code(Slot::FcUp),
+            code(Slot::FcGate),
+            code(Slot::FcDown),
+            code(Slot::AttnQK),
+            code(Slot::AttnSV),
+            code(Slot::Softmax),
+            code(Slot::Rope),
+            code(Slot::RmsNorm),
+            code(Slot::Activation),
+            code(Slot::AllReduce),
+        )
+    }
+}
+
+/// A [`CostModel`] that searches for the best mapping per (phase,
+/// shape-class) and prices iterations under it — never worse than static.
+///
+/// Shape classes are pow2 ceilings of (batch, seq): decode shapes drift
+/// every step as the KV grows, so searching per exact shape would melt the
+/// serving loop. One search runs at the class ceiling (the conservative
+/// representative) and its winner is reused for every shape in the class.
+/// Because a class winner found at the ceiling may not win at every member
+/// shape, the *pricing* step re-compares mapped vs static at the actual
+/// shape and takes the cheaper one — that comparison, not the search, is
+/// what makes the never-lose property hold per iteration, unconditionally.
+///
+/// Determinism: the search is deterministic per (config, shape-class) and
+/// jobs-invariant (see `search`), the class cache is keyed data, and all
+/// pricing flows through the memoized, bit-stable `CachedCostModel` — so a
+/// serve run under this model is bit-identical across `--jobs` counts.
+pub struct AutoMappedCostModel {
+    inner: CachedCostModel<System>,
+    static_map: Mapping,
+    search: SearchConfig,
+    rc: RunConfig,
+    /// Chosen mapping per (phase, class-batch, class-seq).
+    chosen: RefCell<HashMap<(Phase, usize, usize), Mapping>>,
+    searches: Cell<u64>,
+}
+
+impl AutoMappedCostModel {
+    pub fn new(rc: RunConfig) -> Self {
+        let search = SearchConfig::from_rc(&rc);
+        Self::with_search(rc, search)
+    }
+
+    pub fn with_search(rc: RunConfig, search: SearchConfig) -> Self {
+        assert_ne!(rc.arch, ArchKind::AttAcc, "AttAcc has no PIM-fabric cost model");
+        let static_map = Mapping::static_for(rc.arch);
+        Self {
+            inner: CachedCostModel::new(System::new(rc.clone())),
+            static_map,
+            search,
+            rc,
+            chosen: RefCell::new(HashMap::new()),
+            searches: Cell::new(0),
+        }
+    }
+
+    /// Pow2-ceiling shape class: all of `(batch, seq)` in
+    /// `(2^k..=2^(k+1)-1, 2^j..=2^(j+1)-1)`... share one searched mapping.
+    pub fn shape_class(batch: usize, seq: usize) -> (usize, usize) {
+        (batch.max(1).next_power_of_two(), seq.max(1).next_power_of_two())
+    }
+
+    /// Searches actually executed (≤ one per distinct (phase, class)).
+    pub fn searches(&self) -> u64 {
+        self.searches.get()
+    }
+
+    /// Cache counters of the underlying memoizing model.
+    pub fn stats(&self) -> CacheStats {
+        self.inner.stats()
+    }
+
+    /// The mapping serving this shape's class (searched once, then cached).
+    pub fn mapping_for(&self, phase: Phase, batch: usize, seq: usize) -> Mapping {
+        if search_space_size(&self.rc) <= 1 {
+            return self.static_map; // nothing to decide on this variant
+        }
+        let (cb, cs) = Self::shape_class(batch, seq);
+        if let Some(m) = self.chosen.borrow().get(&(phase, cb, cs)) {
+            return *m;
+        }
+        let res = search_phase(&self.rc, phase, cb, cs, &self.search);
+        self.searches.set(self.searches.get() + 1);
+        self.chosen.borrow_mut().insert((phase, cb, cs), res.mapping);
+        res.mapping
+    }
+
+    /// Whole-pass total under the class mapping, floored by static at the
+    /// *actual* shape (ties go static): the per-iteration never-lose rule.
+    fn phase_total_auto(&self, phase: Phase, batch: usize, seq: usize) -> OpCost {
+        let m = self.mapping_for(phase, batch, seq);
+        let st = self.inner.phase_total(phase, batch, seq);
+        if m == self.static_map {
+            return st;
+        }
+        let mt = self.inner.phase_total_mapped(&m, phase, batch, seq);
+        if mt.latency_ns < st.latency_ns {
+            mt
+        } else {
+            st
+        }
+    }
+}
+
+impl CostModel for AutoMappedCostModel {
+    fn base(&self) -> &RunConfig {
+        self.inner.base()
+    }
+
+    fn phase_report(&self, phase: Phase, batch: usize, seq_len: usize) -> PhaseReport {
+        let m = self.mapping_for(phase, batch, seq_len);
+        if m != self.static_map {
+            let st = self.inner.phase_total(phase, batch, seq_len);
+            let mt = self.inner.phase_total_mapped(&m, phase, batch, seq_len);
+            if mt.latency_ns < st.latency_ns {
+                return self.inner.phase_report_mapped(&m, phase, batch, seq_len);
+            }
+        }
+        self.inner.phase_report(phase, batch, seq_len)
+    }
+
+    fn iteration_cost(&self, prefill_tokens: usize, decode_batch: usize, max_kv: usize) -> OpCost {
+        compose_iteration(
+            &|phase, batch, seq| self.phase_total_auto(phase, batch, seq),
+            prefill_tokens,
+            decode_batch,
+            max_kv,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::workload::layer_ops;
+
+    fn rc(arch: ArchKind) -> RunConfig {
+        RunConfig::new(arch, ModelConfig::llama2_7b())
+    }
+
+    #[test]
+    fn every_layer_op_folds_onto_a_slot() {
+        for model in [ModelConfig::llama2_7b(), ModelConfig::gpt3_175b()] {
+            for phase in [Phase::Decode, Phase::Prefill] {
+                for op in layer_ops(&model, phase, 4, 256) {
+                    let slot = Slot::of_op(&op);
+                    assert!(Slot::all().contains(&slot), "{op:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn static_mapping_mirrors_capability_flags() {
+        for arch in [
+            ArchKind::Cent,
+            ArchKind::CentCurry,
+            ArchKind::CompAirBase,
+            ArchKind::CompAirOpt,
+            ArchKind::SramStack,
+        ] {
+            let m = Mapping::static_for(arch);
+            assert!(m.is_valid_for(arch), "{arch:?}");
+            let fc_want = if arch.has_sram() { Placement::SramPim } else { Placement::DramPim };
+            let nl_want = if arch.has_curry() { Placement::NocAlu } else { Placement::Host };
+            for s in [Slot::FcQ, Slot::FcKv, Slot::FcO, Slot::FcUp, Slot::FcGate, Slot::FcDown] {
+                assert_eq!(m.get(s), fc_want, "{arch:?} {s:?}");
+            }
+            for s in [Slot::Softmax, Slot::Rope, Slot::RmsNorm, Slot::Activation] {
+                assert_eq!(m.get(s), nl_want, "{arch:?} {s:?}");
+            }
+            assert_eq!(m.get(Slot::AttnQK), Placement::DramPim);
+            assert_eq!(m.get(Slot::AttnSV), Placement::DramPim);
+            assert_eq!(m.get(Slot::AllReduce), Placement::Host);
+        }
+    }
+
+    #[test]
+    fn nonlinear_ops_never_admit_pim_engines() {
+        for arch in ArchKind::all() {
+            for slot in [Slot::Softmax, Slot::Rope, Slot::RmsNorm, Slot::Activation] {
+                let opts = supported_placements(slot, arch);
+                assert!(!opts.contains(&Placement::DramPim), "{arch:?} {slot:?}");
+                assert!(!opts.contains(&Placement::SramPim), "{arch:?} {slot:?}");
+                assert!(opts.contains(&Placement::Host), "host fallback is universal");
+            }
+        }
+    }
+
+    #[test]
+    fn option_lists_lead_with_the_static_choice() {
+        for arch in ArchKind::all() {
+            let m = Mapping::static_for(arch);
+            for slot in Slot::all() {
+                assert_eq!(supported_placements(slot, arch)[0], m.get(slot), "{arch:?} {slot:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn with_rebinds_one_slot_and_invalid_mappings_are_caught() {
+        let m = Mapping::static_for(ArchKind::Cent);
+        let bad = m.with(Slot::Softmax, Placement::DramPim);
+        assert_eq!(bad.get(Slot::Softmax), Placement::DramPim);
+        assert_eq!(bad.get(Slot::FcQ), m.get(Slot::FcQ));
+        assert!(!bad.is_valid_for(ArchKind::Cent), "softmax on banks must be invalid");
+        // sram placement on a variant without stacked sram is invalid too
+        let bad2 = m.with(Slot::FcQ, Placement::SramPim);
+        assert!(!bad2.is_valid_for(ArchKind::Cent));
+        assert!(m.with(Slot::FcQ, Placement::DramPim).is_valid_for(ArchKind::CompAirOpt));
+    }
+
+    #[test]
+    fn summary_is_compact_and_slot_ordered() {
+        let s = Mapping::static_for(ArchKind::CompAirOpt).summary();
+        assert_eq!(s, "fc:SSSSSS attn:DD nl:NNNN coll:H");
+        let s = Mapping::static_for(ArchKind::Cent).summary();
+        assert_eq!(s, "fc:DDDDDD attn:DD nl:HHHH coll:H");
+    }
+
+    #[test]
+    fn shape_class_is_pow2_ceiling() {
+        assert_eq!(AutoMappedCostModel::shape_class(1, 1), (1, 1));
+        assert_eq!(AutoMappedCostModel::shape_class(3, 4097), (4, 8192));
+        assert_eq!(AutoMappedCostModel::shape_class(16, 4096), (16, 4096));
+        assert_eq!(AutoMappedCostModel::shape_class(0, 0), (1, 1), "degenerate shapes clamp");
+    }
+
+    #[test]
+    fn auto_model_searches_once_per_shape_class() {
+        let cm = AutoMappedCostModel::new(rc(ArchKind::CompAirOpt).with(|c| c.model = ModelConfig::tiny()));
+        let _ = cm.iteration_cost(0, 16, 1000);
+        let after_first = cm.searches();
+        assert!(after_first >= 1);
+        // 1001..1024 stays in the (16, 1024) class: no new search
+        let _ = cm.iteration_cost(0, 16, 1010);
+        assert_eq!(cm.searches(), after_first);
+        // crossing the pow2 boundary opens a new class
+        let _ = cm.iteration_cost(0, 16, 1030);
+        assert_eq!(cm.searches(), after_first + 1);
+    }
+
+    #[test]
+    fn auto_model_on_searchless_arch_is_static_verbatim() {
+        // CENT has a single-candidate space: the auto model must not
+        // search at all and must price exactly like the cached static path
+        let auto = AutoMappedCostModel::new(rc(ArchKind::Cent));
+        let cached = CachedCostModel::new(System::new(rc(ArchKind::Cent)));
+        for (pf, db, kv) in [(0usize, 8usize, 2048usize), (256, 0, 0), (128, 4, 512)] {
+            assert_eq!(auto.iteration_cost(pf, db, kv), cached.iteration_cost(pf, db, kv));
+        }
+        assert_eq!(auto.searches(), 0);
+        let a = auto.phase_report(Phase::Decode, 8, 2048);
+        let b = cached.phase_report(Phase::Decode, 8, 2048);
+        assert_eq!(a.latency_ns.to_bits(), b.latency_ns.to_bits());
+    }
+
+    #[test]
+    fn auto_iteration_never_loses_to_static() {
+        for arch in [ArchKind::CentCurry, ArchKind::CompAirOpt, ArchKind::SramStack] {
+            let base = rc(arch).with(|c| c.model = ModelConfig::tiny());
+            let auto = AutoMappedCostModel::new(base.clone());
+            let cached = CachedCostModel::new(System::new(base));
+            for (pf, db, kv) in [(0usize, 16usize, 2048usize), (512, 0, 0), (256, 8, 1024)] {
+                let a = auto.iteration_cost(pf, db, kv).latency_ns;
+                let s = cached.iteration_cost(pf, db, kv).latency_ns;
+                assert!(a <= s, "{arch:?} pf={pf} db={db} kv={kv}: auto {a} > static {s}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "AttAcc")]
+    fn auto_model_rejects_attacc() {
+        let _ = AutoMappedCostModel::new(rc(ArchKind::AttAcc));
+    }
+}

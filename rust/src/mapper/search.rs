@@ -1,0 +1,364 @@
+//! Mapping search: exhaustive over small placement spaces, beam otherwise,
+//! scored through the real lowering at the configured NoC fidelity.
+//!
+//! Candidates are whole [`Mapping`]s priced by
+//! `System::run_shape_mapped(phase, batch, seq, mapping).latency_ns` — the
+//! same code path the chosen mapping will later run under, so the search
+//! optimizes exactly what the report measures. Scoring fans out on
+//! `util::pool::par_map_indexed` in fixed-size chunks (each worker builds
+//! its own `System`; the memoizing tiers are `!Sync` by design), and the
+//! chunking is independent of the worker count, so scores — and therefore
+//! the chosen mapping — are bit-identical whatever `jobs` is.
+//!
+//! The never-lose guarantee is structural: the static mapping is always
+//! candidate 0, the argmin prefers earlier candidates on ties, and a final
+//! clamp returns static outright unless the best candidate is strictly
+//! cheaper. Beam search starts *from* the static mapping and keeps it in
+//! the scored set, so narrowing the beam can cost optimality but never
+//! correctness.
+
+use std::collections::HashMap;
+
+use crate::arch::System;
+use crate::config::{ArchKind, Phase, RunConfig};
+use crate::util::pool::par_map_indexed;
+
+use super::{supported_placements, Mapping, Placement, Slot};
+
+/// Search policy knobs. Defaults match the CLI: spaces up to
+/// `exhaustive_limit` candidates are enumerated outright (every variant in
+/// the paper fits — the largest, a gated-FFN model on CompAir, has
+/// 2⁶·2⁴ = 1024 candidates), larger spaces fall back to slot-by-slot beam
+/// expansion of width `beam_width`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SearchConfig {
+    /// Candidates kept per beam round (beam mode only).
+    pub beam_width: usize,
+    /// Largest placement-space size enumerated exhaustively.
+    pub exhaustive_limit: usize,
+    /// Worker threads for candidate scoring (result-invariant).
+    pub jobs: usize,
+}
+
+impl Default for SearchConfig {
+    fn default() -> Self {
+        Self { beam_width: 8, exhaustive_limit: 2048, jobs: 1 }
+    }
+}
+
+impl SearchConfig {
+    /// Defaults with the run's worker budget applied.
+    pub fn from_rc(rc: &RunConfig) -> Self {
+        Self { jobs: rc.jobs.max(1), ..Self::default() }
+    }
+}
+
+/// Outcome of one mapping search.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SearchResult {
+    /// The chosen mapping (== `static_mapping` whenever nothing strictly
+    /// beats it).
+    pub mapping: Mapping,
+    /// Phase latency (ns) under the chosen mapping.
+    pub cost_ns: f64,
+    /// The hard-coded baseline the search is clamped against.
+    pub static_mapping: Mapping,
+    /// Phase latency (ns) under the static mapping.
+    pub static_cost_ns: f64,
+    /// Distinct candidates priced (incl. the static baseline).
+    pub candidates_scored: usize,
+    /// Total placement-space size for this (arch, model).
+    pub space_size: usize,
+    /// Whether the whole space was enumerated (vs beam).
+    pub exhaustive: bool,
+}
+
+/// The slots with more than one legal engine under this config, with their
+/// option lists (static choice first), in canonical slot order. A gate
+/// projection only exists on gated-FFN models, so it is pinned static
+/// elsewhere — searching a slot the op list never emits would only inflate
+/// the space.
+pub fn decision_slots(rc: &RunConfig) -> Vec<(Slot, Vec<Placement>)> {
+    Slot::all()
+        .into_iter()
+        .filter(|s| !(matches!(s, Slot::FcGate) && !rc.model.gated_ffn))
+        .filter_map(|s| {
+            let opts = supported_placements(s, rc.arch);
+            if opts.len() > 1 {
+                Some((s, opts))
+            } else {
+                None
+            }
+        })
+        .collect()
+}
+
+/// Number of distinct legal mappings for this (arch, model): the product
+/// of the decision slots' option counts (1 when nothing is searchable).
+pub fn search_space_size(rc: &RunConfig) -> usize {
+    decision_slots(rc).iter().map(|(_, o)| o.len()).product::<usize>().max(1)
+}
+
+/// Scoring chunk size. Fixed — *not* derived from `jobs` — so the
+/// (chunk → worker) partition never changes the per-candidate arithmetic
+/// and results stay bit-identical across worker counts.
+const SCORE_CHUNK: usize = 32;
+
+/// Price each candidate at the shape; element `i` is candidate `i`'s phase
+/// latency in ns, in input order, bit-identical whatever `jobs` is.
+fn score_candidates(
+    rc: &RunConfig,
+    phase: Phase,
+    batch: usize,
+    seq: usize,
+    candidates: &[Mapping],
+    jobs: usize,
+) -> Vec<f64> {
+    let chunks: Vec<Vec<Mapping>> =
+        candidates.chunks(SCORE_CHUNK).map(|c| c.to_vec()).collect();
+    let scored = par_map_indexed(jobs, chunks, |_, chunk| {
+        // each worker prices through its own System; keep the nested
+        // prefit pool off (the chunk itself is already a pool job)
+        let mut wrc = rc.clone();
+        wrc.jobs = 1;
+        let sys = System::new(wrc);
+        chunk
+            .iter()
+            .map(|m| sys.run_shape_mapped(phase, batch, seq, m).latency_ns)
+            .collect::<Vec<f64>>()
+    });
+    scored.into_iter().flatten().collect()
+}
+
+/// Search the placement space for one phase shape. Deterministic per
+/// (config, shape): candidate enumeration and tie-breaking are fixed
+/// orders, scoring is jobs-invariant, and the result is clamped to the
+/// static baseline — `cost_ns <= static_cost_ns` always, with
+/// `mapping == static_mapping` unless something is strictly cheaper.
+pub fn search_phase(
+    rc: &RunConfig,
+    phase: Phase,
+    batch: usize,
+    seq: usize,
+    cfg: &SearchConfig,
+) -> SearchResult {
+    assert_ne!(rc.arch, ArchKind::AttAcc, "AttAcc has no PIM-fabric mapping space");
+    let static_mapping = Mapping::static_for(rc.arch);
+    let slots = decision_slots(rc);
+    let space_size = search_space_size(rc);
+    let jobs = cfg.jobs.max(1);
+
+    let exhaustive = space_size <= cfg.exhaustive_limit.max(1);
+    let (best, best_cost, static_cost, scored_n) = if exhaustive {
+        // mixed-radix enumeration in slot order; index 0 selects every
+        // slot's first option, i.e. exactly the static mapping
+        let mut candidates = Vec::with_capacity(space_size);
+        for idx in 0..space_size {
+            let mut m = static_mapping;
+            let mut rest = idx;
+            for (slot, opts) in &slots {
+                m = m.with(*slot, opts[rest % opts.len()]);
+                rest /= opts.len();
+            }
+            candidates.push(m);
+        }
+        let scores = score_candidates(rc, phase, batch, seq, &candidates, jobs);
+        let mut best_i = 0usize;
+        for (i, s) in scores.iter().enumerate() {
+            // strict '<' keeps the earliest (most-static-like) candidate
+            // on ties
+            if s.total_cmp(&scores[best_i]) == std::cmp::Ordering::Less {
+                best_i = i;
+            }
+        }
+        (candidates[best_i], scores[best_i], scores[0], candidates.len())
+    } else {
+        // beam: grow slot by slot from the static mapping; undecided slots
+        // stay static, so every frontier entry is a complete, scoreable
+        // mapping and the static baseline survives every round
+        let static_cost = score_candidates(rc, phase, batch, seq, &[static_mapping], jobs)[0];
+        let mut scored: HashMap<Mapping, f64> = HashMap::new();
+        scored.insert(static_mapping, static_cost);
+        let mut beam: Vec<(Mapping, f64)> = vec![(static_mapping, static_cost)];
+        for (slot, opts) in &slots {
+            let mut frontier: Vec<Mapping> = Vec::new();
+            for (m, _) in &beam {
+                for &p in opts {
+                    let cand = m.with(*slot, p);
+                    if !scored.contains_key(&cand) && !frontier.contains(&cand) {
+                        frontier.push(cand);
+                    }
+                }
+            }
+            let fresh = score_candidates(rc, phase, batch, seq, &frontier, jobs);
+            for (m, s) in frontier.iter().zip(&fresh) {
+                scored.insert(*m, *s);
+            }
+            let mut pool: Vec<(Mapping, f64)> = beam.clone();
+            pool.extend(frontier.into_iter().zip(fresh));
+            // stable sort: equal scores keep insertion order (beam
+            // survivors, then frontier), so ties resolve deterministically
+            pool.sort_by(|a, b| a.1.total_cmp(&b.1));
+            pool.truncate(cfg.beam_width.max(1));
+            beam = pool;
+        }
+        let (bm, bc) = beam[0];
+        (bm, bc, static_cost, scored.len())
+    };
+
+    // never-lose clamp: only a strictly cheaper mapping dethrones static
+    if best_cost < static_cost {
+        SearchResult {
+            mapping: best,
+            cost_ns: best_cost,
+            static_mapping,
+            static_cost_ns: static_cost,
+            candidates_scored: scored_n,
+            space_size,
+            exhaustive,
+        }
+    } else {
+        SearchResult {
+            mapping: static_mapping,
+            cost_ns: static_cost,
+            static_mapping,
+            static_cost_ns: static_cost,
+            candidates_scored: scored_n,
+            space_size,
+            exhaustive,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+
+    fn rc(arch: ArchKind) -> RunConfig {
+        RunConfig::new(arch, ModelConfig::tiny())
+    }
+
+    #[test]
+    fn space_sizes_match_capability_flags() {
+        // tiny is gated-FFN: 6 FC slots + 4 nonlinear slots are decidable
+        assert_eq!(search_space_size(&rc(ArchKind::Cent)), 1);
+        assert_eq!(search_space_size(&rc(ArchKind::CentCurry)), 16);
+        assert_eq!(search_space_size(&rc(ArchKind::SramStack)), 64);
+        assert_eq!(search_space_size(&rc(ArchKind::CompAirOpt)), 1024);
+        // ungated model drops the gate slot
+        let mut ungated = rc(ArchKind::CompAirOpt);
+        ungated.model = ModelConfig::gpt3_175b();
+        assert_eq!(search_space_size(&ungated), 512);
+    }
+
+    #[test]
+    fn candidate_zero_is_the_static_mapping() {
+        let cfg = SearchConfig::default();
+        for arch in [ArchKind::CentCurry, ArchKind::CompAirOpt, ArchKind::SramStack] {
+            let res = search_phase(&rc(arch), Phase::Decode, 8, 512, &cfg);
+            assert!(res.exhaustive);
+            assert_eq!(res.space_size, res.candidates_scored);
+            assert_eq!(res.static_mapping, Mapping::static_for(arch));
+            assert!(res.cost_ns <= res.static_cost_ns, "{arch:?}");
+            assert!(res.mapping.is_valid_for(arch), "{arch:?}");
+        }
+    }
+
+    #[test]
+    fn searchless_space_returns_static_immediately() {
+        let res = search_phase(&rc(ArchKind::Cent), Phase::Decode, 4, 256, &SearchConfig::default());
+        assert_eq!(res.mapping, Mapping::static_for(ArchKind::Cent));
+        assert_eq!(res.space_size, 1);
+        assert_eq!(res.cost_ns.to_bits(), res.static_cost_ns.to_bits());
+    }
+
+    #[test]
+    fn scores_are_jobs_invariant() {
+        for arch in [ArchKind::CompAirOpt, ArchKind::SramStack] {
+            let base = search_phase(
+                &rc(arch),
+                Phase::Decode,
+                16,
+                1024,
+                &SearchConfig { jobs: 1, ..SearchConfig::default() },
+            );
+            for jobs in [2usize, 4] {
+                let got = search_phase(
+                    &rc(arch),
+                    Phase::Decode,
+                    16,
+                    1024,
+                    &SearchConfig { jobs, ..SearchConfig::default() },
+                );
+                assert_eq!(got.mapping, base.mapping, "{arch:?} jobs={jobs}");
+                assert_eq!(got.cost_ns.to_bits(), base.cost_ns.to_bits(), "{arch:?} jobs={jobs}");
+                assert_eq!(
+                    got.static_cost_ns.to_bits(),
+                    base.static_cost_ns.to_bits(),
+                    "{arch:?} jobs={jobs}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn beam_mode_still_never_loses() {
+        // force beam by shrinking the exhaustive limit below the space
+        let cfg = SearchConfig { beam_width: 2, exhaustive_limit: 1, jobs: 1 };
+        for arch in [ArchKind::CentCurry, ArchKind::CompAirOpt] {
+            let res = search_phase(&rc(arch), Phase::Decode, 8, 512, &cfg);
+            assert!(!res.exhaustive, "{arch:?}");
+            assert!(res.cost_ns <= res.static_cost_ns, "{arch:?}");
+            assert!(res.mapping.is_valid_for(arch), "{arch:?}");
+        }
+    }
+
+    #[test]
+    fn wide_beam_matches_exhaustive_on_a_small_space() {
+        // with the beam wide enough to retain every partial assignment,
+        // slot-by-slot expansion enumerates the full product space and
+        // must land on the exhaustive winner
+        let exh = search_phase(
+            &rc(ArchKind::SramStack),
+            Phase::Decode,
+            8,
+            512,
+            &SearchConfig::default(),
+        );
+        let beam = search_phase(
+            &rc(ArchKind::SramStack),
+            Phase::Decode,
+            8,
+            512,
+            &SearchConfig { beam_width: 4096, exhaustive_limit: 1, jobs: 1 },
+        );
+        assert!(!beam.exhaustive);
+        assert_eq!(beam.mapping, exh.mapping);
+        assert_eq!(beam.cost_ns.to_bits(), exh.cost_ns.to_bits());
+    }
+
+    #[test]
+    fn beam_scores_are_jobs_invariant_too() {
+        let mk = |jobs| {
+            search_phase(
+                &rc(ArchKind::CompAirOpt),
+                Phase::Prefill,
+                1,
+                256,
+                &SearchConfig { beam_width: 4, exhaustive_limit: 1, jobs },
+            )
+        };
+        let a = mk(1);
+        let b = mk(4);
+        assert_eq!(a.mapping, b.mapping);
+        assert_eq!(a.cost_ns.to_bits(), b.cost_ns.to_bits());
+        assert_eq!(a.candidates_scored, b.candidates_scored);
+    }
+
+    #[test]
+    #[should_panic(expected = "AttAcc")]
+    fn attacc_has_no_mapping_space() {
+        let _ = search_phase(&rc(ArchKind::AttAcc), Phase::Decode, 1, 64, &SearchConfig::default());
+    }
+}

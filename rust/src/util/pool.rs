@@ -153,6 +153,34 @@ mod tests {
     }
 
     #[test]
+    #[should_panic(expected = "inline job exploded")]
+    fn a_panicking_job_propagates_on_the_inline_path_too() {
+        // jobs <= 1 runs on the caller's thread — the panic must surface
+        // there exactly as it does from a worker
+        let _ = par_map_indexed(1, vec![0usize, 1, 2], |i, _| {
+            if i == 1 {
+                panic!("inline job exploded");
+            }
+            i
+        });
+    }
+
+    #[test]
+    fn every_job_runs_exactly_once() {
+        // the shared-cursor claim must hand each index to one worker: a
+        // dropped or double-run job would show up in the per-index tally
+        let hits: Vec<AtomicUsize> = (0..100).map(|_| AtomicUsize::new(0)).collect();
+        let out = par_map_indexed(8, (0..100usize).collect(), |i, x| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+            x
+        });
+        assert_eq!(out, (0..100).collect::<Vec<_>>());
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 1, "job {i} ran a wrong number of times");
+        }
+    }
+
+    #[test]
     fn default_jobs_is_positive() {
         assert!(default_jobs() >= 1);
     }

@@ -208,6 +208,66 @@ fn cluster_golden_two_replicas_cached_equals_uncached() {
     }
 }
 
+#[test]
+fn static_mapping_golden_all_five_pim_archs() {
+    // the auto-mapper PR's regression contract: `mapping = static` (the
+    // default) reproduces the pre-mapper numbers exactly — legacy
+    // `simulate` ≡ Engine ≡ pinning the explicit static `Mapping`
+    use compair::config::MappingMode;
+    use compair::mapper::Mapping;
+    for arch in [
+        ArchKind::Cent,
+        ArchKind::CentCurry,
+        ArchKind::CompAirBase,
+        ArchKind::CompAirOpt,
+        ArchKind::SramStack,
+    ] {
+        let c = rc(arch);
+        assert_eq!(c.mapping, MappingMode::Static, "static must stay the default");
+        let legacy = simulate(c.clone());
+        let engine = Engine::new(c).simulate();
+        let pinned = Engine::new(rc(arch)).simulate_mapped(&Mapping::static_for(arch));
+        assert_phase_reports_identical(&legacy, &engine);
+        assert_phase_reports_identical(&legacy, &pinned);
+    }
+}
+
+#[test]
+fn serve_static_mapping_golden_and_searchless_auto() {
+    use compair::config::MappingMode;
+    let cfg = ServeConfig {
+        n_requests: 10,
+        seed: 42,
+        scenario: Some(Scenario::by_name("chat").unwrap()),
+        ..Default::default()
+    };
+    // serving with the knob explicitly at `static` is the pre-PR path
+    let base = Server::new(rc(ArchKind::CompAirOpt), cfg.clone()).run();
+    let mut st = rc(ArchKind::CompAirOpt);
+    st.mapping = MappingMode::Static;
+    let explicit = Server::new(st, cfg.clone()).run();
+    assert_eq!(base.completed, explicit.completed);
+    assert_eq!(base.makespan_ns, explicit.makespan_ns);
+    assert_eq!(base.tokens_out, explicit.tokens_out);
+    assert_eq!(base.throughput_tok_s.to_bits(), explicit.throughput_tok_s.to_bits());
+    assert_eq!(base.energy_per_token_pj.to_bits(), explicit.energy_per_token_pj.to_bits());
+
+    // a searchless arch (Cent: one-candidate space) under `auto` must be
+    // the static run verbatim — the knob is provably free there
+    let run_cent = |mode: MappingMode| {
+        let mut c = rc(ArchKind::Cent);
+        c.mapping = mode;
+        Server::new(c, cfg.clone()).run()
+    };
+    let cs = run_cent(MappingMode::Static);
+    let ca = run_cent(MappingMode::Auto);
+    assert_eq!(cs.completed, ca.completed);
+    assert_eq!(cs.makespan_ns, ca.makespan_ns);
+    assert_eq!(cs.tokens_out, ca.tokens_out);
+    assert_eq!(cs.throughput_tok_s.to_bits(), ca.throughput_tok_s.to_bits());
+    assert_eq!(cs.energy_per_token_pj.to_bits(), ca.energy_per_token_pj.to_bits());
+}
+
 // ---- JSON well-formedness (no external parser offline, so a minimal
 // recursive-descent validator lives in the test) ----
 

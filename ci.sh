@@ -17,6 +17,10 @@
 #                                     figure must be <= 1 (searched placement
 #                                     never beats static), and its --jobs 4
 #                                     output must equal --jobs 1
+#   5c. static verifier gate        — `compair check --format json` must report
+#                                     zero error diagnostics over every shipped
+#                                     (arch, model) point, and its --jobs 4
+#                                     output must equal --jobs 1
 #   6. bench artifacts gate         — bench_hotpath runs in fast mode and both
 #                                     BENCH_serving.json / BENCH_parallel.json
 #                                     must parse
@@ -126,6 +130,36 @@ if [[ "$MAP_J1" == "$MAP_J4" ]]; then
 else
     echo "error: mapping-search output diverges between --jobs 1 and --jobs 4" >&2
     diff <(printf '%s\n' "$MAP_J1") <(printf '%s\n' "$MAP_J4") | head -40 >&2
+    exit 1
+fi
+
+say "static verifier gate (compair check: zero errors over shipped configs)"
+# the check subcommand lints every shipped (arch, model) point, the Row-Level
+# ISA programs (with the static flit/op count cross-check) and the scenario
+# SLO tables; error-severity diagnostics fail CI (warnings are reported but
+# pass — capacity overflows are priced as streaming, not rejected)
+CHK_J1=$(./target/release/compair check --jobs 1 --format json)
+printf '%s\n' "$CHK_J1" | python3 -c '
+import json, sys
+doc = json.load(sys.stdin)
+assert doc["command"] == "check", "unexpected command field"
+assert doc["isa"]["errors"] == 0, "ISA program lint errors: %r" % doc["isa"]
+assert doc["scenarios"]["errors"] == 0, "scenario SLO errors: %r" % doc["scenarios"]
+assert doc["points"], "check covered no (arch, model) points"
+bad = [p for p in doc["points"] if p["report"]["errors"]]
+if bad:
+    sys.exit("check errors at: " + ", ".join(f"{p['arch']}/{p['model']}" for p in bad))
+assert doc["errors"] == 0 and doc["ok"] is True, "check reported errors"
+warns = doc["warnings"]
+print(f"ok: {len(doc['points'])} points clean, {warns} warning(s)")
+'
+# the point fan-out runs on the pool; the report must not depend on --jobs
+CHK_J4=$(./target/release/compair check --jobs 4 --format json)
+if [[ "$CHK_J1" == "$CHK_J4" ]]; then
+    echo "ok: check --jobs 4 output is byte-identical to --jobs 1"
+else
+    echo "error: check output diverges between --jobs 1 and --jobs 4" >&2
+    diff <(printf '%s\n' "$CHK_J1") <(printf '%s\n' "$CHK_J4") | head -40 >&2
     exit 1
 fi
 

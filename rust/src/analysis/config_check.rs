@@ -1,0 +1,206 @@
+//! Cross-field consistency checks over `RunConfig` / `HwConfig` /
+//! `ModelConfig` (plus cluster splits and scenario SLOs).
+//!
+//! Errors are invariants the rest of the crate assumes and would panic
+//! or silently misprice without (mesh rows = banks per channel, head
+//! divisibility, tensor-parallel degree vs devices). Warnings flag
+//! configurations that run but probably aren't what the operator meant
+//! (idle devices from a non-dividing TP degree, out-of-corner voltage).
+
+use crate::config::{RunConfig, Voltage};
+use crate::coordinator::cluster::ClusterConfig;
+use crate::workload::{Scenario, Slo};
+
+use super::{CheckReport, Diag};
+
+/// Check one run configuration. Pure; normalized report.
+pub fn check_run(rc: &RunConfig) -> CheckReport {
+    let mut rep = CheckReport::default();
+    let hw = &rc.hw;
+    let m = &rc.model;
+
+    // The Row-Level ISA identifies mesh rows with banks: every bank owns
+    // one router row (Fig 12). The translator and interpreter both index
+    // routers by bank.
+    if hw.noc.mesh_rows != hw.dram.banks_per_channel {
+        rep.push(Diag::error(
+            "cfg.mesh-banks",
+            "hw.noc.mesh_rows",
+            format!(
+                "mesh has {} router rows but the channel has {} banks; \
+                 bank-indexed packet paths would fall off the mesh",
+                hw.noc.mesh_rows, hw.dram.banks_per_channel
+            ),
+        ));
+    }
+
+    // Model head geometry: d_head and the GQA group are integer divisions
+    // the op shapes rely on.
+    if m.n_heads == 0 || m.d_model % m.n_heads != 0 {
+        rep.push(Diag::error(
+            "cfg.head-divisibility",
+            "model.n_heads",
+            format!("d_model {} is not divisible into {} heads", m.d_model, m.n_heads),
+        ));
+    }
+    if m.n_kv_heads == 0 || (m.n_heads > 0 && m.n_heads % m.n_kv_heads != 0) {
+        rep.push(Diag::error(
+            "cfg.head-divisibility",
+            "model.n_kv_heads",
+            format!("{} heads do not group evenly over {} KV heads", m.n_heads, m.n_kv_heads),
+        ));
+    }
+
+    // kv_bytes_per_token must equal 2 bytes/elem x K+V x heads x layers;
+    // truncating head division makes the bookkept KV footprint drift from
+    // the geometric one.
+    if m.n_heads > 0 {
+        let exact = 2.0 * 2.0 * m.n_kv_heads as f64 * (m.d_model as f64 / m.n_heads as f64)
+            * m.n_layers as f64;
+        let booked = m.kv_bytes_per_token() as f64;
+        if (booked - exact).abs() > 1e-6 {
+            rep.push(Diag::error(
+                "cfg.kv-dtype",
+                "model.kv_bytes_per_token",
+                format!(
+                    "bookkept {booked} bytes/token vs {exact} from BF16 x 2 x {} KV heads \
+                     x d_head x {} layers",
+                    m.n_kv_heads, m.n_layers
+                ),
+            ));
+        }
+    }
+
+    // Shape positivity: zero batch/seq/gen degenerate into div-by-zero
+    // waves and empty phases downstream.
+    if rc.batch == 0 || rc.seq_len == 0 || rc.gen_len == 0 {
+        rep.push(Diag::error(
+            "cfg.shape-positive",
+            "run.batch/seq_len/gen_len",
+            format!(
+                "batch {}, seq_len {}, gen_len {} must all be positive",
+                rc.batch, rc.seq_len, rc.gen_len
+            ),
+        ));
+    }
+
+    // Parallelism: tp devices must exist on the fabric.
+    if rc.tp == 0 || rc.devices == 0 || rc.tp > rc.devices {
+        rep.push(Diag::error(
+            "cfg.tp-devices",
+            "run.tp",
+            format!("tp {} needs at least that many of the {} devices", rc.tp, rc.devices),
+        ));
+    } else if rc.devices % rc.tp != 0 {
+        rep.push(Diag::warning(
+            "cfg.tp-remainder",
+            "run.devices",
+            format!("{} devices leave {} idle at tp {}", rc.devices, rc.devices % rc.tp, rc.tp),
+        ));
+    }
+    if rc.devices > hw.cxl.devices {
+        rep.push(Diag::error(
+            "cfg.fabric-devices",
+            "run.devices",
+            format!("run wants {} devices but the CXL fabric hosts {}", rc.devices, hw.cxl.devices),
+        ));
+    }
+
+    // The gang must tile exactly onto the bank's macros: a logical shape
+    // that doesn't use macro_inputs x macro_outputs x macros_per_bank
+    // MACs would mis-price every SRAM pass.
+    let (gi, go) = rc.sram_gang.shape(&hw.sram);
+    let macro_macs = hw.sram.macro_inputs * hw.sram.macro_outputs * hw.sram.macros_per_bank;
+    if gi * go != macro_macs {
+        rep.push(Diag::error(
+            "cfg.gang-macros",
+            "run.sram_gang",
+            format!(
+                "gang shape {go}x{gi} ({} MACs) does not tile the bank's {} macro MACs",
+                gi * go,
+                macro_macs
+            ),
+        ));
+    }
+
+    // Voltage outside the published corners is clamped by the model —
+    // the configured value silently isn't the simulated one.
+    let v = hw.sram.voltage.0;
+    if !(Voltage::MIN..=Voltage::MAX).contains(&v) {
+        rep.push(Diag::warning(
+            "cfg.voltage-corner",
+            "hw.sram.voltage",
+            format!(
+                "{v} V is outside the published [{}, {}] corners and will be clamped",
+                Voltage::MIN,
+                Voltage::MAX
+            ),
+        ));
+    }
+
+    // A fused-chain packet needs 72 flit bits (4 path steps + header);
+    // narrower flits can't carry the paper's path encoding.
+    if hw.noc.flit_bits < 72 {
+        rep.push(Diag::warning(
+            "cfg.flit-capacity",
+            "hw.noc.flit_bits",
+            format!(
+                "{}-bit flits cannot carry the 72-bit fused-chain path encoding \
+                 (multi-flit packets are not modeled)",
+                hw.noc.flit_bits
+            ),
+        ));
+    }
+
+    rep.normalize();
+    rep
+}
+
+/// SLO sanity for one class: targets must be positive, and time-to-first-
+/// token at or above per-token latency (a TTFT tighter than one decode
+/// step is unmeetable by construction).
+pub fn check_slo(slo: &Slo, context: &str) -> CheckReport {
+    let mut rep = CheckReport::default();
+    if slo.ttft_ns == 0 || slo.tpot_ns == 0 {
+        rep.push(Diag::error(
+            "cfg.slo-sanity",
+            context,
+            "SLO targets must be positive (use Slo::relaxed() for best-effort)".to_string(),
+        ));
+    } else if slo.ttft_ns < slo.tpot_ns {
+        rep.push(Diag::warning(
+            "cfg.slo-sanity",
+            context,
+            format!(
+                "TTFT target {} ns is tighter than the per-token target {} ns",
+                slo.ttft_ns, slo.tpot_ns
+            ),
+        ));
+    }
+    rep.normalize();
+    rep
+}
+
+/// SLO sanity across the built-in scenario zoo (arch-independent; run
+/// once per `compair check`).
+pub fn check_scenarios() -> CheckReport {
+    let mut rep = CheckReport::default();
+    for sc in Scenario::all() {
+        for class in &sc.classes {
+            rep.extend(check_slo(&class.slo, &format!("scenario {} class {}", sc.name, class.name)));
+        }
+    }
+    rep.normalize();
+    rep
+}
+
+/// Cluster split sanity: wraps `ClusterConfig::validate` into the
+/// diagnostics framework (empty disagg pools, zero replicas).
+pub fn check_cluster(cfg: &ClusterConfig) -> CheckReport {
+    let mut rep = CheckReport::default();
+    if let Err(e) = cfg.validate() {
+        rep.push(Diag::error("cfg.disagg-split", "cluster", e));
+    }
+    rep.normalize();
+    rep
+}

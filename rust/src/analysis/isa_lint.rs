@@ -1,0 +1,421 @@
+//! Static linter for Row-Level ISA programs (paper Table 1).
+//!
+//! Checks a [`RowProgram`] without executing it: address/bank bounds,
+//! mask/len consistency, def-before-use and dead stores per bank address
+//! range, the fused-chain legality rules (`lane_width` vs mesh columns,
+//! ALU-binding conflicts, divider occupancy), SRAM gang ordering and
+//! capacity — plus a count cross-check that derives flit/op totals from
+//! the `plan()` output and flags drift against the analytic
+//! `arch/collective.rs` closed forms (the same contract the NoC
+//! calibration gate enforces dynamically).
+
+use crate::arch::collective::noc_exp;
+use crate::config::{HwConfig, SramGang};
+use crate::isa::interp::BANK_MEM_ELEMS;
+use crate::isa::row::{AccessDir, ArgSrc, ExchangeMode, RowInst, RowProgram, ALL_BANKS};
+use crate::isa::translate::{plan, FusedChain, Plan};
+
+use super::{CheckReport, Diag};
+
+/// What the linter may assume about bank memory before the program runs.
+#[derive(Debug, Clone, Default)]
+pub struct LintOptions {
+    /// Address ranges `(addr, len)` initialized externally (via
+    /// `Machine::write_row`) before the program executes.
+    pub inputs: Vec<(usize, usize)>,
+    /// Skip the def-before-use / dead-store passes entirely. The
+    /// `Machine::run` debug hook uses this: callers may have written any
+    /// row, so flow facts about initial memory are unknowable there.
+    pub assume_all_initialized: bool,
+    /// Plan chains with path-generation fusion on (the default; matches
+    /// how the program will actually be translated).
+    pub fuse: bool,
+}
+
+impl LintOptions {
+    /// Lint with a declared set of externally initialized input rows.
+    pub fn with_inputs(inputs: Vec<(usize, usize)>) -> LintOptions {
+        LintOptions { inputs, assume_all_initialized: false, fuse: true }
+    }
+
+    /// Lint structural properties only (the `Machine::run` hook).
+    pub fn assume_initialized() -> LintOptions {
+        LintOptions { inputs: Vec::new(), assume_all_initialized: true, fuse: true }
+    }
+}
+
+/// One recorded store, for the def-use / dead-store pass.
+struct WriteRec {
+    lo: usize,
+    hi: usize,
+    mask: u64,
+    idx: usize,
+    what: &'static str,
+    read: bool,
+}
+
+/// Flow state threaded through the program-order pass.
+struct Flow<'a> {
+    writes: Vec<WriteRec>,
+    inputs: &'a [(usize, usize)],
+    enabled: bool,
+}
+
+impl Flow<'_> {
+    /// A read of `[lo, hi)` on `mask` banks: marks overlapping stores
+    /// live and reports when some part of the range has no earlier store
+    /// (or declared input) covering every read bank.
+    fn read(&mut self, rep: &mut CheckReport, ctx: &str, lo: usize, hi: usize, mask: u64) {
+        if !self.enabled || lo >= hi {
+            return;
+        }
+        let mut cover: Vec<(usize, usize)> =
+            self.inputs.iter().map(|&(a, l)| (a, a + l)).collect();
+        for w in self.writes.iter_mut() {
+            if w.lo < hi && lo < w.hi && w.mask & mask != 0 {
+                w.read = true;
+            }
+            // only stores present on *every* read bank define the value
+            if w.mask & mask == mask {
+                cover.push((w.lo, w.hi));
+            }
+        }
+        cover.sort_unstable();
+        let mut at = lo;
+        for (a, b) in cover {
+            if a > at {
+                break;
+            }
+            at = at.max(b);
+            if at >= hi {
+                return;
+            }
+        }
+        rep.push(Diag::warning(
+            "isa.use-before-def",
+            ctx,
+            format!(
+                "reads [{at}, {hi}) before any instruction or declared input writes it \
+                 (fresh DRAM reads as zeros)"
+            ),
+        ));
+    }
+
+    /// A store of `[lo, hi)` on `mask` banks: reports earlier stores it
+    /// fully shadows that were never read in between.
+    fn write(
+        &mut self,
+        rep: &mut CheckReport,
+        lo: usize,
+        hi: usize,
+        mask: u64,
+        idx: usize,
+        what: &'static str,
+    ) {
+        if !self.enabled || lo >= hi {
+            return;
+        }
+        for w in self.writes.iter_mut() {
+            if !w.read && w.lo >= lo && w.hi <= hi && w.mask & !mask == 0 {
+                rep.push(Diag::warning(
+                    "isa.dead-store",
+                    format!("inst {} ({})", w.idx, w.what),
+                    format!(
+                        "store to [{}, {}) is fully overwritten by inst {idx} before any read",
+                        w.lo, w.hi
+                    ),
+                ));
+                w.read = true; // report a shadowed store once
+            }
+        }
+        self.writes.push(WriteRec { lo, hi, mask, idx, what, read: false });
+    }
+}
+
+fn inst_name(i: &RowInst) -> &'static str {
+    match i {
+        RowInst::NocScalar { .. } => "NoC_Scalar",
+        RowInst::NocAccess { .. } => "NoC_Access",
+        RowInst::NocBCast { .. } => "NoC_BCast",
+        RowInst::NocReduce { .. } => "NoC_Reduce",
+        RowInst::NocExchange { .. } => "NoC_Exchange",
+        RowInst::SramWrite { .. } => "SRAM_Write",
+        RowInst::SramCompute { .. } => "SRAM_Compute",
+        RowInst::DramGemv { .. } => "DRAM_GeMV",
+        RowInst::Fill { .. } => "Fill",
+    }
+}
+
+/// Bounds helper: `[addr, addr+len)` must fit the bank memory model.
+fn check_range(rep: &mut CheckReport, ctx: &str, what: &str, addr: usize, len: usize) {
+    let end = addr.saturating_add(len);
+    if end > BANK_MEM_ELEMS {
+        rep.push(Diag::error(
+            "isa.addr-bounds",
+            ctx,
+            format!("{what} [{addr}, {end}) exceeds the {BANK_MEM_ELEMS}-element bank memory"),
+        ));
+    }
+}
+
+/// Lint one Row-Level program against a hardware config and gang shape.
+/// Pure: no interpreter state is touched. The report is normalized
+/// (sorted, deduplicated) before returning.
+pub fn lint(prog: &RowProgram, hw: &HwConfig, gang: SramGang, opts: &LintOptions) -> CheckReport {
+    let mut rep = CheckReport::default();
+    let banks = hw.dram.banks_per_channel;
+    let (gi, go) = gang.shape(&hw.sram);
+    let mut flow =
+        Flow { writes: Vec::new(), inputs: &opts.inputs, enabled: !opts.assume_all_initialized };
+    let mut sram_loaded: u64 = 0;
+
+    for (idx, inst) in prog.insts.iter().enumerate() {
+        let ctx = format!("inst {idx} ({})", inst_name(inst));
+        let mask = inst.mask();
+        if mask == 0 {
+            rep.push(Diag::warning("isa.mask-empty", &ctx, "bank mask is empty: the instruction runs on no bank".to_string()));
+        }
+        if banks < u64::BITS as usize && mask >> banks != 0 {
+            rep.push(Diag::error(
+                "isa.mask-range",
+                &ctx,
+                format!("mask {mask:#x} selects banks beyond the channel's {banks}"),
+            ));
+        }
+        match inst {
+            RowInst::NocScalar { src, dst, len, arg, .. } => {
+                lint_len(&mut rep, &ctx, *len);
+                check_range(&mut rep, &ctx, "src", *src, *len);
+                check_range(&mut rep, &ctx, "dst", *dst, *len);
+                flow.read(&mut rep, &ctx, *src, src + len, mask);
+                if let ArgSrc::Row(r) = arg {
+                    check_range(&mut rep, &ctx, "arg row", *r, *len);
+                    flow.read(&mut rep, &ctx, *r, r + len, mask);
+                }
+                flow.write(&mut rep, *dst, dst + len, mask, idx, inst_name(inst));
+            }
+            RowInst::Fill { dst, len, .. } => {
+                lint_len(&mut rep, &ctx, *len);
+                check_range(&mut rep, &ctx, "dst", *dst, *len);
+                flow.write(&mut rep, *dst, dst + len, mask, idx, inst_name(inst));
+            }
+            RowInst::NocAccess { dir, addr, .. } => {
+                if *dir == AccessDir::Rd {
+                    check_range(&mut rep, &ctx, "dst", *addr, 1);
+                    flow.write(&mut rep, *addr, addr + 1, mask, idx, inst_name(inst));
+                }
+            }
+            RowInst::NocBCast { src, dst, src_bank, len, .. } => {
+                lint_len(&mut rep, &ctx, *len);
+                check_range(&mut rep, &ctx, "src", *src, *len);
+                check_range(&mut rep, &ctx, "dst", *dst, *len);
+                if *src_bank >= banks {
+                    rep.push(Diag::error(
+                        "isa.mask-range",
+                        &ctx,
+                        format!("src_bank {src_bank} outside the channel's {banks} banks"),
+                    ));
+                } else {
+                    flow.read(&mut rep, &ctx, *src, src + len, 1 << src_bank);
+                }
+                flow.write(&mut rep, *dst, dst + len, mask | (1 << src_bank), idx, inst_name(inst));
+            }
+            RowInst::NocReduce { src, dst, dst_bank, len, .. } => {
+                lint_len(&mut rep, &ctx, *len);
+                check_range(&mut rep, &ctx, "src", *src, *len);
+                check_range(&mut rep, &ctx, "dst", *dst, *len);
+                if *dst_bank >= banks {
+                    rep.push(Diag::error(
+                        "isa.mask-range",
+                        &ctx,
+                        format!("dst_bank {dst_bank} outside the channel's {banks} banks"),
+                    ));
+                }
+                flow.read(&mut rep, &ctx, *src, src + len, mask);
+                flow.write(&mut rep, *dst, dst + len, 1u64 << (*dst_bank).min(63), idx, inst_name(inst));
+            }
+            RowInst::NocExchange { mode, src, dst, offset, group, len, .. } => {
+                lint_len(&mut rep, &ctx, *len);
+                check_range(&mut rep, &ctx, "src", *src, *len);
+                check_range(&mut rep, &ctx, "dst", *dst, *len);
+                match mode {
+                    ExchangeMode::RPlus | ExchangeMode::RMinus => {
+                        if (*offset, *group) != (1, 2) {
+                            rep.push(Diag::error(
+                                "isa.exchange-shape",
+                                &ctx,
+                                format!(
+                                    "R-mode exchange supports only the pair swap \
+                                     (offset 1, group 2), got ({offset}, {group})"
+                                ),
+                            ));
+                        }
+                    }
+                    ExchangeMode::TPlus | ExchangeMode::TMinus => {
+                        if *group == 0 || *group > banks {
+                            rep.push(Diag::error(
+                                "isa.exchange-shape",
+                                &ctx,
+                                format!("T-mode group {group} invalid for a {banks}-bank channel"),
+                            ));
+                        } else if *offset % *group == 0 {
+                            rep.push(Diag::warning(
+                                "isa.exchange-shape",
+                                &ctx,
+                                format!("offset {offset} ≡ 0 mod group {group}: every bank swaps with itself"),
+                            ));
+                        }
+                    }
+                }
+                flow.read(&mut rep, &ctx, *src, src + len, mask);
+                flow.write(&mut rep, *dst, dst + len, mask, idx, inst_name(inst));
+            }
+            RowInst::SramWrite { addr, len, .. } => {
+                lint_len(&mut rep, &ctx, *len);
+                check_range(&mut rep, &ctx, "weights", *addr, *len);
+                if *len > gi * go {
+                    rep.push(Diag::error(
+                        "isa.sram-capacity",
+                        &ctx,
+                        format!("loads {len} weights into a {go}x{gi} gang ({} max)", gi * go),
+                    ));
+                }
+                flow.read(&mut rep, &ctx, *addr, addr + len, mask);
+                sram_loaded |= mask;
+            }
+            RowInst::SramCompute { src, dst, len, .. } => {
+                lint_len(&mut rep, &ctx, *len);
+                check_range(&mut rep, &ctx, "src", *src, *len);
+                check_range(&mut rep, &ctx, "dst", *dst, 1);
+                if mask & !sram_loaded != 0 {
+                    rep.push(Diag::error(
+                        "isa.sram-order",
+                        &ctx,
+                        format!(
+                            "SRAM_Compute before SRAM_Write: banks {:#x} have no loaded gang weights",
+                            mask & !sram_loaded
+                        ),
+                    ));
+                }
+                flow.read(&mut rep, &ctx, *src, src + len, mask);
+                flow.write(&mut rep, *dst, dst + 1, mask, idx, inst_name(inst));
+            }
+            RowInst::DramGemv { w, src, dst, out_dim, in_dim, .. } => {
+                lint_len(&mut rep, &ctx, out_dim * in_dim);
+                check_range(&mut rep, &ctx, "weights", *w, out_dim * in_dim);
+                check_range(&mut rep, &ctx, "src", *src, *in_dim);
+                check_range(&mut rep, &ctx, "dst", *dst, *out_dim);
+                flow.read(&mut rep, &ctx, *w, w + out_dim * in_dim, mask);
+                flow.read(&mut rep, &ctx, *src, src + in_dim, mask);
+                flow.write(&mut rep, *dst, dst + out_dim, mask, idx, inst_name(inst));
+            }
+        }
+    }
+
+    // Chain-level checks on the translated plan.
+    for (pi, p) in plan(&prog.insts, opts.fuse).iter().enumerate() {
+        if let Plan::Chain(c) = p {
+            let ctx = format!("chain {pi} ({} steps, iter {})", c.steps.len(), c.iter_num);
+            if c.lane_width() > hw.noc.mesh_cols {
+                rep.push(Diag::error(
+                    "isa.lane-overflow",
+                    &ctx,
+                    format!(
+                        "chain needs {} router columns but the mesh has {}: \
+                         column assignments wrap and collide",
+                        c.lane_width(),
+                        hw.noc.mesh_cols
+                    ),
+                ));
+            }
+            if c.has_alu_conflict() {
+                rep.push(Diag::warning(
+                    "isa.alu-conflict",
+                    &ctx,
+                    "two steps bind the same ALU class with different args; \
+                     each such pair costs an extra column"
+                        .to_string(),
+                ));
+            }
+            if c.div_steps() >= 2 {
+                rep.push(Diag::warning(
+                    "isa.div-occupancy",
+                    &ctx,
+                    format!(
+                        "{} Div steps serialize on the bank's iterative divider \
+                         ({} cycles each)",
+                        c.div_steps(),
+                        hw.noc.div_cycles
+                    ),
+                ));
+            }
+        }
+    }
+
+    rep.normalize();
+    rep
+}
+
+fn lint_len(rep: &mut CheckReport, ctx: &str, len: usize) {
+    if len == 0 {
+        rep.push(Diag::warning("isa.len-zero", ctx, "zero-length operation does nothing".to_string()));
+    }
+}
+
+/// Per-element static counts of one fused chain, as the flit-level
+/// machine bills them: ALU ops = (steps + iter-tagged steps) × IterNum
+/// (iterating steps also update their ArgReg each traversal); flit hops
+/// = one column per lane-width slot per traversal, plus the inject and
+/// deliver hops at the chain endpoints.
+pub fn chain_static_counts(c: &FusedChain) -> (u64, u64) {
+    let iter_steps = c.steps.iter().filter(|(_, _, it, _, _)| *it).count() as u64;
+    let alu = (c.steps.len() as u64 + iter_steps) * c.iter_num as u64;
+    let hops = c.lane_width() as u64 * c.iter_num as u64 + 2;
+    (alu, hops)
+}
+
+/// Derive the exp kernel's flit/op totals statically from its `plan()`
+/// and cross-check them against the analytic `noc_exp` closed form.
+/// Drift beyond `tol` (relative) means the Row-Level program and the
+/// formula the cost model bills have diverged — the static mirror of
+/// the dynamic calibration gate.
+pub fn exp_count_crosscheck(len: usize, rounds: u32, hw: &HwConfig, tol: f64) -> CheckReport {
+    let mut rep = CheckReport::default();
+    let prog = RowProgram::exp_program(0, 4096, len, rounds, ALL_BANKS);
+    let (mut alu_pe, mut hops_pe) = (0u64, 0u64);
+    for p in &plan(&prog.insts, true) {
+        if let Plan::Chain(c) = p {
+            let (a, h) = chain_static_counts(c);
+            alu_pe += a;
+            hops_pe += h;
+        }
+    }
+    let derived_alu = alu_pe * len as u64;
+    let derived_hops = hops_pe * len as u64;
+    let formula = noc_exp(len as u64, rounds as u64, &hw.noc);
+    let pairs = [
+        ("noc_alu_ops", derived_alu, formula.counts.noc_alu_ops),
+        ("noc_flit_hops", derived_hops, formula.counts.noc_flit_hops),
+    ];
+    for (name, derived, analytic) in pairs {
+        let drift = if analytic == 0 {
+            if derived == 0 { 0.0 } else { f64::INFINITY }
+        } else {
+            (derived as f64 - analytic as f64).abs() / analytic as f64
+        };
+        if drift > tol {
+            rep.push(Diag::error(
+                "isa.count-drift",
+                format!("exp(len {len}, rounds {rounds}) {name}"),
+                format!(
+                    "statically derived {derived} vs analytic {analytic} \
+                     ({:.0}% drift, tolerance {:.0}%)",
+                    drift * 100.0,
+                    tol * 100.0
+                ),
+            ));
+        }
+    }
+    rep.normalize();
+    rep
+}

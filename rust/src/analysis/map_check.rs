@@ -1,0 +1,133 @@
+//! Static validator for operator→engine [`Mapping`]s.
+//!
+//! Placement legality is an error (the lowering would execute an op on
+//! an engine with no implementation for it — non-linears have no MAC-lane
+//! lowering, attention must live with the KV cache). Capacity findings
+//! are warnings: the analytic tiers price oversubscribed weights/KV as
+//! streaming traffic rather than rejecting them, but an operator reading
+//! the report should know the hardware would be reloading.
+
+use crate::config::RunConfig;
+use crate::mapper::{supported_placements, Mapping, Placement, Slot};
+
+use super::{CheckReport, Diag};
+
+/// The FC projection shapes of a model, `(name, out_dim, in_dim)`.
+fn fc_projections(rc: &RunConfig) -> Vec<(&'static str, usize, usize)> {
+    let m = &rc.model;
+    let d = m.d_model;
+    let kv = 2 * m.n_kv_heads * m.d_head();
+    let mut v = vec![("q", d, d), ("kv", kv, d), ("o", d, d), ("up", m.d_ffn, d), ("down", d, m.d_ffn)];
+    if m.gated_ffn {
+        v.push(("gate", m.d_ffn, d));
+    }
+    v
+}
+
+/// Check one mapping against the run's architecture, model and hardware.
+/// The report is normalized before returning.
+pub fn check_mapping(rc: &RunConfig, m: &Mapping) -> CheckReport {
+    let mut rep = CheckReport::default();
+
+    // 1. Placement legality per slot.
+    for slot in Slot::all() {
+        let p = m.get(slot);
+        if supported_placements(slot, rc.arch).contains(&p) {
+            continue;
+        }
+        let nonlinear =
+            matches!(slot, Slot::Softmax | Slot::Rope | Slot::RmsNorm | Slot::Activation);
+        if nonlinear && matches!(p, Placement::DramPim | Placement::SramPim) {
+            rep.push(Diag::error(
+                "map.nonlinear-on-pim",
+                slot.label(),
+                format!(
+                    "{} placed on {}: exp/rsqrt have no MAC-lane lowering on PIM banks",
+                    slot.label(),
+                    p.label()
+                ),
+            ));
+        } else {
+            rep.push(Diag::error(
+                "map.illegal-placement",
+                slot.label(),
+                format!("{} is not a supported engine for {} on {}", p.label(), slot.label(), rc.arch.label()),
+            ));
+        }
+    }
+
+    // 2. Device capacity: weights + KV at the configured max context must
+    //    fit the per-device DRAM (warning: the simulator prices overflow
+    //    as streaming, but real hardware would be swapping). Degenerate
+    //    model shapes are config_check's findings, not capacity ones.
+    if rc.model.n_heads == 0 || rc.model.n_kv_heads == 0 {
+        rep.normalize();
+        return rep;
+    }
+    let capacity = rc.hw.dram.device_capacity_bytes();
+    let tp = rc.tp.max(1);
+    let weight_bytes = rc.model.total_fc_params() * 2 / tp as u64;
+    if weight_bytes > capacity {
+        rep.push(Diag::warning(
+            "map.weight-capacity",
+            "weights",
+            format!(
+                "{} weight bytes per device (tp {tp}) exceed the {} per-device DRAM capacity",
+                weight_bytes, capacity
+            ),
+        ));
+    }
+    let context = rc.seq_len + rc.gen_len;
+    let kv_bytes = (rc.batch * context) as u64 * rc.model.kv_bytes_per_token() / tp as u64;
+    if kv_bytes.saturating_add(weight_bytes) > capacity {
+        rep.push(Diag::warning(
+            "map.kv-capacity",
+            "kv-cache",
+            format!(
+                "KV cache needs {kv_bytes} bytes per device at batch {} x context {context} \
+                 on top of {weight_bytes} weight bytes, exceeding the {capacity}-byte device",
+                rc.batch
+            ),
+        ));
+    }
+
+    // 3. SRAM gang residency: an FC slot on SRAM-PIM whose per-bank weight
+    //    share exceeds the gang's resident capacity runs under the reload
+    //    policy (priced, but worth surfacing).
+    let (gi, go) = rc.sram_gang.shape(&rc.hw.sram);
+    let resident_bytes = gi * go * 2;
+    let banks = rc.hw.dram.banks_per_device().max(1);
+    for (name, out, inp) in fc_projections(rc) {
+        let slot = match name {
+            "q" => Slot::FcQ,
+            "kv" => Slot::FcKv,
+            "o" => Slot::FcO,
+            "up" => Slot::FcUp,
+            "gate" => Slot::FcGate,
+            _ => Slot::FcDown,
+        };
+        if m.get(slot) != Placement::SramPim {
+            continue;
+        }
+        let per_bank = out * inp * 2 / tp / banks;
+        if per_bank > resident_bytes {
+            rep.push(Diag::warning(
+                "map.sram-capacity",
+                slot.label(),
+                format!(
+                    "{per_bank} weight bytes per bank exceed the {go}x{gi} gang's \
+                     {resident_bytes} resident bytes: the projection streams via weight reload"
+                ),
+            ));
+        }
+    }
+
+    rep.normalize();
+    rep
+}
+
+/// The error-severity subset of placement legality, as a cheap predicate
+/// for the mapper search (capacity warnings must not veto candidates).
+pub fn placement_legal(rc: &RunConfig, m: &Mapping) -> bool {
+    m.is_valid_for(rc.arch)
+}

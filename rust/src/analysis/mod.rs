@@ -1,0 +1,216 @@
+//! Static analysis: the `compair check` verification passes.
+//!
+//! Three passes over the artifacts the rest of the crate *executes* —
+//! Row-Level ISA programs ([`isa_lint`]), operator placements
+//! ([`map_check`]) and run/hardware/model configurations
+//! ([`config_check`]) — each reporting through one shared diagnostics
+//! type ([`Diag`]) so the CLI, the `Engine::check` facade, the CI gate
+//! and the debug-assert hooks in `Machine::run` / the mapper scorer all
+//! speak the same language. Every diagnostic carries a stable code from
+//! [`ALL_CODES`]; `tests/static_analysis.rs` keeps a seeded-defect
+//! corpus proving each code can actually fire.
+//!
+//! The passes are pure functions of their inputs: no I/O, no
+//! interpreter state, no randomness. Reports are normalized to a
+//! deterministic order, so `compair check --format json` is
+//! byte-identical however the work is fanned out.
+
+pub mod config_check;
+pub mod isa_lint;
+pub mod map_check;
+
+use crate::config::HwConfig;
+use crate::config::SramGang;
+use crate::isa::row::{RowProgram, ALL_BANKS};
+use crate::util::json::{Json, ToJson};
+use crate::util::table::Table;
+
+/// How bad a diagnostic is. `Error` means the artifact would misbehave
+/// (or panic) if executed; `Warning` flags a suspicious-but-runnable
+/// condition (dead stores, capacity overflows the analytic tiers price
+/// as streaming rather than reject).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Error,
+    Warning,
+}
+
+impl Severity {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Severity::Error => "error",
+            Severity::Warning => "warning",
+        }
+    }
+}
+
+/// One finding: a stable machine-readable `code`, a severity, a
+/// `context` naming where it was found (instruction index, slot label,
+/// config field) and a human-readable message.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Diag {
+    pub severity: Severity,
+    pub code: &'static str,
+    pub context: String,
+    pub message: String,
+}
+
+impl Diag {
+    pub fn error(code: &'static str, context: impl Into<String>, message: impl Into<String>) -> Diag {
+        Diag { severity: Severity::Error, code, context: context.into(), message: message.into() }
+    }
+
+    pub fn warning(
+        code: &'static str,
+        context: impl Into<String>,
+        message: impl Into<String>,
+    ) -> Diag {
+        Diag { severity: Severity::Warning, code, context: context.into(), message: message.into() }
+    }
+
+    /// One-line rendering (the debug-assert hooks panic with these).
+    pub fn render(&self) -> String {
+        format!("{} [{}] {}: {}", self.severity.label(), self.code, self.context, self.message)
+    }
+}
+
+impl ToJson for Diag {
+    fn to_json(&self) -> Json {
+        Json::obj()
+            .field("severity", self.severity.label())
+            .field("code", self.code)
+            .field("context", self.context.as_str())
+            .field("message", self.message.as_str())
+    }
+}
+
+/// Every lint code a pass can emit. The negative-corpus test asserts
+/// each one fires on at least one seeded defect, so a code can't rot
+/// into dead configuration.
+pub const ALL_CODES: &[&str] = &[
+    // isa_lint
+    "isa.addr-bounds",
+    "isa.mask-range",
+    "isa.mask-empty",
+    "isa.len-zero",
+    "isa.exchange-shape",
+    "isa.use-before-def",
+    "isa.dead-store",
+    "isa.lane-overflow",
+    "isa.alu-conflict",
+    "isa.div-occupancy",
+    "isa.sram-order",
+    "isa.sram-capacity",
+    "isa.count-drift",
+    // map_check
+    "map.illegal-placement",
+    "map.nonlinear-on-pim",
+    "map.sram-capacity",
+    "map.kv-capacity",
+    "map.weight-capacity",
+    // config_check
+    "cfg.mesh-banks",
+    "cfg.head-divisibility",
+    "cfg.kv-dtype",
+    "cfg.shape-positive",
+    "cfg.tp-devices",
+    "cfg.tp-remainder",
+    "cfg.fabric-devices",
+    "cfg.gang-macros",
+    "cfg.voltage-corner",
+    "cfg.flit-capacity",
+    "cfg.slo-sanity",
+    "cfg.disagg-split",
+];
+
+/// An accumulated, deterministically ordered set of diagnostics.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct CheckReport {
+    pub diags: Vec<Diag>,
+}
+
+impl CheckReport {
+    pub fn push(&mut self, d: Diag) {
+        debug_assert!(ALL_CODES.contains(&d.code), "unregistered lint code {}", d.code);
+        self.diags.push(d);
+    }
+
+    pub fn extend(&mut self, other: CheckReport) {
+        self.diags.extend(other.diags);
+    }
+
+    /// Deterministic order — errors first, then by (code, context,
+    /// message) — with exact duplicates collapsed. Every public
+    /// entry point returns a normalized report.
+    pub fn normalize(&mut self) {
+        self.diags.sort();
+        self.diags.dedup();
+    }
+
+    pub fn errors(&self) -> usize {
+        self.diags.iter().filter(|d| d.severity == Severity::Error).count()
+    }
+
+    pub fn warnings(&self) -> usize {
+        self.diags.iter().filter(|d| d.severity == Severity::Warning).count()
+    }
+
+    /// No errors (warnings are allowed — the debug-assert hooks and the
+    /// CI gate key off this).
+    pub fn is_clean(&self) -> bool {
+        self.errors() == 0
+    }
+
+    pub fn has_code(&self, code: &str) -> bool {
+        self.diags.iter().any(|d| d.code == code)
+    }
+
+    /// One diagnostic per line (panic payloads, terse logs).
+    pub fn render_brief(&self) -> String {
+        self.diags.iter().map(Diag::render).collect::<Vec<_>>().join("\n")
+    }
+
+    /// The human-readable diagnostics table for `--format text`.
+    pub fn render_table(&self, title: &str) -> String {
+        let mut t = Table::new(title, &["severity", "code", "context", "message"]);
+        for d in &self.diags {
+            t.row(&[
+                d.severity.label().to_string(),
+                d.code.to_string(),
+                d.context.clone(),
+                d.message.clone(),
+            ]);
+        }
+        t.render()
+    }
+}
+
+impl ToJson for CheckReport {
+    fn to_json(&self) -> Json {
+        Json::obj()
+            .field("errors", self.errors())
+            .field("warnings", self.warnings())
+            .field("ok", self.is_clean())
+            .field("diags", Json::arr(self.diags.iter().map(Diag::to_json)))
+    }
+}
+
+/// Lint the shipped Row-Level programs: the exponential kernel at the
+/// NoC calibration anchor shapes, with its input row declared
+/// initialized, plus the static flit/op count cross-check against the
+/// `arch/collective.rs` closed forms at the same anchors. This is the
+/// arch-independent slice of `compair check` (the programs do not vary
+/// per architecture variant).
+pub fn check_isa_programs(hw: &HwConfig) -> CheckReport {
+    let mut rep = CheckReport::default();
+    // mirror noc::model::ANCHOR_GRANULES × the exp-round grid the
+    // collective tests pin: (elems, rounds)
+    for (len, rounds) in [(2usize, 8u32), (16, 8), (16, 4)] {
+        let prog = RowProgram::exp_program(0, 4096, len, rounds, ALL_BANKS);
+        let opts = isa_lint::LintOptions::with_inputs(vec![(0, len)]);
+        rep.extend(isa_lint::lint(&prog, hw, SramGang::In256Out16, &opts));
+        rep.extend(isa_lint::exp_count_crosscheck(len, rounds, hw, 0.25));
+    }
+    rep.normalize();
+    rep
+}

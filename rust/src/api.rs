@@ -33,6 +33,7 @@
 //! the fidelity is part of every memoization key, so cached results never
 //! mix tiers.
 
+use crate::analysis::{config_check, map_check, CheckReport};
 use crate::arch::{attacc, AttAccConfig, CachedCostModel, PhaseReport, System};
 use crate::config::{ArchKind, MappingMode, RunConfig};
 use crate::coordinator::{
@@ -62,6 +63,23 @@ impl Engine {
     /// The run configuration this engine evaluates.
     pub fn rc(&self) -> &RunConfig {
         &self.rc
+    }
+
+    /// Statically verify this point without executing anything: the
+    /// config consistency pass over `rc`, plus — for the PIM variants —
+    /// the mapping validator over the placement the run would actually
+    /// use (the paper's static assignment; `mapping = auto` candidates
+    /// are checked inside the search itself). The AttAcc roofline has no
+    /// mapping space, so it gets the config pass only. Returns a
+    /// normalized [`CheckReport`]; `compair check` and the CI gate call
+    /// this per (arch, model) point.
+    pub fn check(&self) -> CheckReport {
+        let mut rep = config_check::check_run(&self.rc);
+        if self.rc.arch != ArchKind::AttAcc {
+            rep.extend(map_check::check_mapping(&self.rc, &Mapping::static_for(self.rc.arch)));
+        }
+        rep.normalize();
+        rep
     }
 
     /// A fresh, independent memoizing cost model over this configuration.
@@ -322,6 +340,22 @@ mod tests {
         use crate::mapper::Mapping;
         let _ = Engine::new(rc(ArchKind::AttAcc))
             .simulate_mapped(&Mapping::static_for(ArchKind::Cent));
+    }
+
+    #[test]
+    fn check_passes_every_arch_on_the_default_point() {
+        for arch in ArchKind::all() {
+            let rep = Engine::new(rc(arch)).check();
+            assert!(rep.is_clean(), "{arch:?}:\n{}", rep.render_brief());
+        }
+    }
+
+    #[test]
+    fn check_flags_a_broken_config() {
+        let mut c = rc(ArchKind::CompAirOpt);
+        c.tp = 5; // does not divide 32 devices
+        let rep = Engine::new(c).check();
+        assert!(rep.has_code("cfg.tp-remainder"), "{}", rep.render_brief());
     }
 
     #[test]

@@ -65,6 +65,23 @@ impl Args {
         }
     }
 
+    /// A numeric flag with an inclusive `[min, max]` range. Shape and
+    /// worker counts go through this so a zero or absurd value is a parse
+    /// error here, not a div-by-zero or OOM-sized sweep downstream.
+    pub fn flag_usize_bounded(
+        &self,
+        name: &str,
+        default: usize,
+        min: usize,
+        max: usize,
+    ) -> Result<usize, String> {
+        let v = self.flag_usize(name, default)?;
+        if v < min || v > max {
+            return Err(format!("--{name} must be in {min}..={max}, got {v}"));
+        }
+        Ok(v)
+    }
+
     pub fn flag_f64(&self, name: &str, default: f64) -> Result<f64, String> {
         match self.flag(name) {
             None => Ok(default),
@@ -125,6 +142,12 @@ USAGE:
                                           decode replicas w/ KV migration
                    [--router POLICY]      arrival routing policy
   compair isa-demo [--len N] [--rounds N] run the hierarchical-ISA exp demo
+  compair check    [--arch A] [--model M] static verifier: lints the shipped
+                   [--config file.toml]   ISA programs, validates operator
+                   [--jobs N|auto]        placements and cross-checks configs
+                                          over every (arch, model) point;
+                                          exits nonzero on any error-severity
+                                          diagnostic (warnings pass)
   compair config show                     print the Table-3 hardware config
   compair list                            list figures/models/archs/scenarios
 
@@ -182,6 +205,26 @@ mod tests {
         let a = parse("simulate");
         assert_eq!(a.flag_usize("batch", 7).unwrap(), 7);
         assert_eq!(a.flag_f64("rate", 1.5).unwrap(), 1.5);
+    }
+
+    #[test]
+    fn bounded_flag_accepts_range_and_default() {
+        let a = parse("simulate --batch 64");
+        assert_eq!(a.flag_usize_bounded("batch", 16, 1, 1024).unwrap(), 64);
+        // default applies unvalidated input absent
+        assert_eq!(a.flag_usize_bounded("seqlen", 4096, 1, 1 << 24).unwrap(), 4096);
+    }
+
+    #[test]
+    fn bounded_flag_rejects_out_of_range() {
+        let zero = parse("simulate --batch 0");
+        let e = zero.flag_usize_bounded("batch", 16, 1, 1024).unwrap_err();
+        assert!(e.contains("--batch must be in 1..=1024"), "{e}");
+        let huge = parse("serve --replicas 9999");
+        assert!(huge.flag_usize_bounded("replicas", 0, 0, 4096).is_err());
+        // non-numeric still reports the integer parse error
+        let nan = parse("simulate --batch lots");
+        assert!(nan.flag_usize_bounded("batch", 16, 1, 1024).unwrap_err().contains("integer"));
     }
 
     #[test]

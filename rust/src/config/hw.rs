@@ -107,7 +107,9 @@ impl DramConfig {
 
     /// Per-device DRAM capacity in bytes.
     pub fn device_capacity_bytes(&self) -> u64 {
-        (self.bank_mb as u64) << 20 << 0 * self.banks_per_device() as u64
+        // `<< 20 << 0 * banks` previously parsed as `(x << 20) << (0 * banks)`
+        // and returned one bank's capacity, not the device's
+        ((self.bank_mb as u64) << 20) * self.banks_per_device() as u64
     }
 }
 
@@ -397,6 +399,15 @@ impl HwConfig {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn device_capacity_covers_every_bank() {
+        let hw = HwConfig::paper();
+        // 32 MB × 16 banks × 32 channels = 16 GiB per device (regression:
+        // a shift-precedence bug used to report one bank's 32 MB)
+        assert_eq!(hw.dram.banks_per_device(), 512);
+        assert_eq!(hw.dram.device_capacity_bytes(), (32u64 << 20) * 512);
+    }
 
     #[test]
     fn table3_defaults() {

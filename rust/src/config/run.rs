@@ -296,6 +296,9 @@ impl RunConfig {
         if self.tp == 0 || self.batch == 0 || self.devices == 0 {
             return Err("tp, batch and devices must be positive".into());
         }
+        if self.seq_len == 0 || self.gen_len == 0 {
+            return Err("seqlen and genlen must be positive".into());
+        }
         if self.tp > self.devices {
             return Err(format!("tp ({}) exceeds devices ({})", self.tp, self.devices));
         }

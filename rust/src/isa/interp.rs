@@ -92,6 +92,21 @@ impl Machine {
 
     /// Execute a program; `fuse` toggles path generation (Fig 23's levers).
     pub fn run(&mut self, prog: &RowProgram, fuse: bool) -> OpCost {
+        // Debug builds front-load the static linter: a program the checker
+        // rejects must not reach the interpreter's scattered asserts.
+        // (Structural checks only — callers may have pre-written any row,
+        // so def-use facts are unknowable here.)
+        #[cfg(debug_assertions)]
+        {
+            let mut opts = crate::analysis::isa_lint::LintOptions::assume_initialized();
+            opts.fuse = fuse;
+            let lint = crate::analysis::isa_lint::lint(prog, &self.hw, self.gang, &opts);
+            assert!(
+                lint.is_clean(),
+                "static ISA lint rejected the program:\n{}",
+                lint.render_brief()
+            );
+        }
         let plans = plan(&prog.insts, fuse);
         let mut cost = OpCost::zero();
         for p in &plans {

@@ -30,77 +30,83 @@ pub struct FusedChain {
     pub absorbed: usize,
 }
 
+/// Cheap `Eq`/`Copy` ALU-binding key for a chain step. Immediates compare
+/// by bit pattern (same distinction `{arg:?}` drew, without the per-step
+/// String allocation the old key paid on every lane_width/emit_path call).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ArgKey {
+    Imm(u32),
+    Row(usize),
+}
+
+impl ArgKey {
+    fn of(arg: &ArgSrc) -> ArgKey {
+        match arg {
+            ArgSrc::Imm(v) => ArgKey::Imm(v.to_bits()),
+            ArgSrc::Row(r) => ArgKey::Row(*r),
+        }
+    }
+}
+
+/// Which of the two per-column Curry ALUs an op binds to (Fig 13).
+fn alu_of(op: StepOp) -> usize {
+    match op {
+        StepOp::Mul | StepOp::Div => 0,
+        StepOp::Add | StepOp::Sub => 1,
+    }
+}
+
 impl FusedChain {
-    /// Distinct router columns this chain's lane occupies, honoring the
-    /// ALU-binding rule (Mul/Div → ALU0, Add/Sub → ALU1): two steps may
-    /// share a column only if they bind different ALUs or are the same
-    /// (op, arg) assignment.
-    pub fn lane_width(&self) -> usize {
-        // slot assignment: per column, track what each ALU is bound to.
-        let mut cols: Vec<[Option<(StepOp, String)>; 2]> = Vec::new();
+    /// Column-slot assignment shared by `lane_width`, `emit_path` and
+    /// `alu_configs` (they must agree, so the loop lives in one place).
+    /// Per step: the column offset it lands on and whether it reuses an
+    /// already-configured identical (op, arg) binding. Two steps share a
+    /// column only if they bind different ALUs (Mul/Div → ALU0,
+    /// Add/Sub → ALU1) or are the same (op, arg) assignment.
+    fn assign_columns(&self) -> Vec<(usize, bool)> {
+        let mut cols: Vec<[Option<(StepOp, ArgKey)>; 2]> = Vec::new();
+        let mut out = Vec::with_capacity(self.steps.len());
         for (op, arg, _, _, _) in &self.steps {
-            let alu = match op {
-                StepOp::Mul | StepOp::Div => 0usize,
-                StepOp::Add | StepOp::Sub => 1,
-            };
-            let key = (*op, format!("{arg:?}"));
-            let mut placed = false;
-            for c in cols.iter_mut() {
+            let alu = alu_of(*op);
+            let key = (*op, ArgKey::of(arg));
+            let mut found = None;
+            for (ci, c) in cols.iter_mut().enumerate() {
                 match &c[alu] {
                     Some(k) if *k == key => {
-                        placed = true;
+                        found = Some((ci, true));
                         break;
                     }
                     None => {
-                        c[alu] = Some(key.clone());
-                        placed = true;
+                        c[alu] = Some(key);
+                        found = Some((ci, false));
                         break;
                     }
                     _ => {}
                 }
             }
-            if !placed {
-                let mut slot: [Option<(StepOp, String)>; 2] = [None, None];
+            out.push(found.unwrap_or_else(|| {
+                let mut slot: [Option<(StepOp, ArgKey)>; 2] = [None, None];
                 slot[alu] = Some(key);
                 cols.push(slot);
-            }
+                (cols.len() - 1, false)
+            }));
         }
-        cols.len().max(1)
+        out
+    }
+
+    /// Distinct router columns this chain's lane occupies under the
+    /// ALU-binding rule.
+    pub fn lane_width(&self) -> usize {
+        self.assign_columns().iter().map(|(ci, _)| ci + 1).max().unwrap_or(1)
     }
 
     /// Emit the path steps for a given bank row, mapping chain steps onto
     /// router columns the same way `lane_width` does. `col_base` offsets the
     /// column allocation so multiple lanes coexist in one bank.
     pub fn emit_path(&self, bank: usize, col_base: usize, mesh_cols: usize) -> Vec<PathStep> {
-        let mut cols: Vec<[Option<(StepOp, String)>; 2]> = Vec::new();
-        let mut path = Vec::new();
-        for (op, arg, iter_tag, _, _) in &self.steps {
-            let alu = match op {
-                StepOp::Mul | StepOp::Div => 0usize,
-                StepOp::Add | StepOp::Sub => 1,
-            };
-            let key = (*op, format!("{arg:?}"));
-            let mut col_idx = None;
-            for (ci, c) in cols.iter_mut().enumerate() {
-                match &c[alu] {
-                    Some(k) if *k == key => {
-                        col_idx = Some(ci);
-                        break;
-                    }
-                    None => {
-                        c[alu] = Some(key.clone());
-                        col_idx = Some(ci);
-                        break;
-                    }
-                    _ => {}
-                }
-            }
-            let ci = col_idx.unwrap_or_else(|| {
-                let mut slot: [Option<(StepOp, String)>; 2] = [None, None];
-                slot[alu] = Some(key);
-                cols.push(slot);
-                cols.len() - 1
-            });
+        let cols = self.assign_columns();
+        let mut path = Vec::with_capacity(self.steps.len());
+        for ((op, _, iter_tag, _, _), (ci, _)) in self.steps.iter().zip(&cols) {
             let at = RouterId::new((col_base + ci) % mesh_cols, bank);
             let mut step =
                 if *iter_tag { PathStep::compute_iter(at, *op) } else { PathStep::compute(at, *op) };
@@ -113,40 +119,30 @@ impl FusedChain {
     /// The ALU configurations this chain requires for a bank/lane, as
     /// (column offset, alu, arg-source, iter_op, iter_arg).
     pub fn alu_configs(&self) -> Vec<(usize, usize, ArgSrc, StepOp, f32)> {
-        let mut cols: Vec<[Option<(StepOp, String)>; 2]> = Vec::new();
+        let cols = self.assign_columns();
         let mut out = Vec::new();
-        for (op, arg, _, iter_op, iter_arg) in &self.steps {
-            let alu = match op {
-                StepOp::Mul | StepOp::Div => 0usize,
-                StepOp::Add | StepOp::Sub => 1,
-            };
-            let key = (*op, format!("{arg:?}"));
-            let mut found = None;
-            for (ci, c) in cols.iter_mut().enumerate() {
-                match &c[alu] {
-                    Some(k) if *k == key => {
-                        found = Some((ci, true));
-                        break;
-                    }
-                    None => {
-                        c[alu] = Some(key.clone());
-                        found = Some((ci, false));
-                        break;
-                    }
-                    _ => {}
-                }
-            }
-            let (ci, dup) = found.unwrap_or_else(|| {
-                let mut slot: [Option<(StepOp, String)>; 2] = [None, None];
-                slot[alu] = Some(key);
-                cols.push(slot);
-                (cols.len() - 1, false)
-            });
-            if !dup {
-                out.push((ci, alu, arg.clone(), *iter_op, *iter_arg));
+        for ((op, arg, _, iter_op, iter_arg), (ci, dup)) in self.steps.iter().zip(&cols) {
+            if !*dup {
+                out.push((*ci, alu_of(*op), arg.clone(), *iter_op, *iter_arg));
             }
         }
         out
+    }
+
+    /// How many steps bind the iterative divider (the lint's occupancy
+    /// hazard: a second in-chain Div serializes on the same 4-cycle unit).
+    pub fn div_steps(&self) -> usize {
+        self.steps.iter().filter(|(op, ..)| *op == StepOp::Div).count()
+    }
+
+    /// Whether two steps carry the same op with *different* args — each such
+    /// pair costs an extra column under the ALU-binding rule.
+    pub fn has_alu_conflict(&self) -> bool {
+        self.steps.iter().enumerate().any(|(i, (op_a, arg_a, ..))| {
+            self.steps[..i]
+                .iter()
+                .any(|(op_b, arg_b, ..)| op_a == op_b && ArgKey::of(arg_a) != ArgKey::of(arg_b))
+        })
     }
 }
 
@@ -377,6 +373,145 @@ mod tests {
         assert_eq!(path[2].at, path[0].at);
         assert!(path[1].iter_tag);
         assert!(path.iter().all(|s| s.at.y == 3));
+    }
+
+    /// Reference column-assignment with the old `format!("{arg:?}")` String
+    /// key, kept verbatim so the ArgKey refactor is pinned to it.
+    fn lane_width_reference(c: &FusedChain) -> usize {
+        let mut cols: Vec<[Option<(StepOp, String)>; 2]> = Vec::new();
+        for (op, arg, _, _, _) in &c.steps {
+            let alu = match op {
+                StepOp::Mul | StepOp::Div => 0usize,
+                StepOp::Add | StepOp::Sub => 1,
+            };
+            let key = (*op, format!("{arg:?}"));
+            let mut placed = false;
+            for col in cols.iter_mut() {
+                match &col[alu] {
+                    Some(k) if *k == key => {
+                        placed = true;
+                        break;
+                    }
+                    None => {
+                        col[alu] = Some(key.clone());
+                        placed = true;
+                        break;
+                    }
+                    _ => {}
+                }
+            }
+            if !placed {
+                let mut slot: [Option<(StepOp, String)>; 2] = [None, None];
+                slot[alu] = Some(key);
+                cols.push(slot);
+            }
+        }
+        cols.len().max(1)
+    }
+
+    fn chain_of(steps: Vec<(StepOp, ArgSrc)>) -> FusedChain {
+        FusedChain {
+            steps: steps
+                .into_iter()
+                .map(|(op, arg)| (op, arg, false, StepOp::Sub, 0.0))
+                .collect(),
+            iter_num: 1,
+            src: 0,
+            dst: 0,
+            mask: ALL_BANKS,
+            len: 4,
+            absorbed: 1,
+        }
+    }
+
+    #[test]
+    fn arg_key_matches_debug_string_reference() {
+        use StepOp::*;
+        let cases = vec![
+            vec![],
+            vec![(Mul, ArgSrc::Row(0)), (Div, ArgSrc::Imm(6.0)), (Add, ArgSrc::Imm(1.0))],
+            vec![(Add, ArgSrc::Imm(1.0)), (Add, ArgSrc::Imm(1.0))], // dup binding
+            vec![(Add, ArgSrc::Imm(1.0)), (Add, ArgSrc::Imm(1.5))], // conflict
+            vec![(Mul, ArgSrc::Row(3)), (Mul, ArgSrc::Row(7)), (Mul, ArgSrc::Row(3))],
+            vec![(Mul, ArgSrc::Imm(0.0)), (Mul, ArgSrc::Imm(-0.0))], // bit-distinct
+            vec![(Sub, ArgSrc::Imm(2.0)), (Div, ArgSrc::Imm(2.0)), (Add, ArgSrc::Row(1))],
+        ];
+        for steps in cases {
+            let c = chain_of(steps);
+            assert_eq!(c.lane_width(), lane_width_reference(&c), "steps {:?}", c.steps);
+        }
+        // and the shipped exp chain keeps its Fig 13 width of 2
+        let p = RowProgram::exp_program(0, 100, 4, 6, ALL_BANKS);
+        match &plan(&p.insts, true)[1] {
+            Plan::Chain(c) => {
+                assert_eq!(c.lane_width(), 2);
+                assert_eq!(c.lane_width(), lane_width_reference(c));
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn empty_program_plans_to_nothing() {
+        assert!(plan(&[], true).is_empty());
+        assert!(plan(&[], false).is_empty());
+    }
+
+    #[test]
+    fn single_non_fusable_inst_passes_through() {
+        let insts = [RowInst::Fill { dst: 0, mask: ALL_BANKS, len: 4, value: 0.0 }];
+        let plans = plan(&insts, true);
+        assert_eq!(plans.len(), 1);
+        assert!(matches!(plans[0], Plan::Other(RowInst::Fill { .. })));
+    }
+
+    #[test]
+    fn non_adjacent_producer_breaks_the_chain() {
+        use crate::noc::StepOp;
+        // inst2's src is inst0's dst, not inst1's — only adjacent
+        // producer-consumer pairs fuse, so the run splits after inst1
+        let mut p = RowProgram::new();
+        p.push(RowInst::scalar(StepOp::Add, 0, 10, 4, 1.0));
+        p.push(RowInst::scalar(StepOp::Mul, 10, 20, 4, 2.0));
+        p.push(RowInst::scalar(StepOp::Add, 10, 30, 4, 3.0));
+        let plans = plan(&p.insts, true);
+        assert_eq!(plans.len(), 2);
+        match (&plans[0], &plans[1]) {
+            (Plan::Chain(a), Plan::Chain(b)) => {
+                assert_eq!(a.steps.len(), 2);
+                assert_eq!(a.absorbed, 2);
+                assert_eq!(b.steps.len(), 1);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn iter_num_saturation_falls_back_to_greedy_windows() {
+        // 15 blocks is the last value the 4-bit IterNum encodes…
+        let p = RowProgram::exp_program(0, 4096, 4, 15, ALL_BANKS);
+        let plans = plan(&p.insts, true);
+        assert_eq!(plans.len(), 2);
+        match &plans[1] {
+            Plan::Chain(c) => {
+                assert_eq!(c.iter_num, 15);
+                assert_eq!(c.absorbed, 45);
+            }
+            _ => panic!(),
+        }
+        // …16 saturates: the 48-scalar run degrades to greedy 4-step windows
+        let p = RowProgram::exp_program(0, 4096, 4, 16, ALL_BANKS);
+        let plans = plan(&p.insts, true);
+        assert_eq!(plans.len(), 1 + 12, "Fill + 48/4 greedy chains");
+        for pl in &plans[1..] {
+            match pl {
+                Plan::Chain(c) => {
+                    assert_eq!(c.iter_num, 1);
+                    assert_eq!(c.steps.len(), 4);
+                }
+                _ => panic!(),
+            }
+        }
     }
 
     #[test]

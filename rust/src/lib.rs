@@ -17,6 +17,9 @@
 //! hot path), and the [`Engine`] facade dispatches every evaluation mode —
 //! one-shot simulation, serving, cluster runs — returning report structs
 //! that serialize via [`util::json::ToJson`].
+#![forbid(unsafe_code)]
+
+pub mod analysis;
 pub mod api;
 pub mod arch;
 pub mod cli;

@@ -3,6 +3,7 @@
 //! [`Engine`] facade, with `--format json` emitting machine-readable
 //! reports on every subcommand.
 
+use compair::analysis;
 use compair::cli::{Args, OutputFormat, USAGE};
 use compair::config::{ArchKind, MappingMode, ModelConfig, NocFidelity, Phase, RunConfig};
 use compair::coordinator::{cluster, serving, ClusterConfig, RouterPolicy, ServeConfig};
@@ -28,6 +29,7 @@ fn main() {
         "simulate" => cmd_simulate(&args),
         "serve" => cmd_serve(&args),
         "isa-demo" => cmd_isa_demo(&args),
+        "check" => cmd_check(&args),
         "config" => cmd_config(&args),
         "list" => cmd_list(&args),
         "" | "help" | "-h" => {
@@ -66,6 +68,9 @@ fn parse_jobs(args: &Args) -> Result<Option<usize>, String> {
                 .map_err(|_| format!("--jobs expects a positive integer or 'auto', got '{v}'"))?;
             if n == 0 {
                 return Err("--jobs must be >= 1 (use 1 for serial)".into());
+            }
+            if n > 1024 {
+                return Err(format!("--jobs must be <= 1024, got {n}"));
             }
             Ok(Some(n))
         }
@@ -142,11 +147,11 @@ fn build_rc(args: &Args, default_fidelity: NocFidelity) -> Result<RunConfig, Str
         "prefill" => Phase::Prefill,
         p => return Err(format!("unknown --phase '{p}'")),
     };
-    rc.batch = args.flag_usize("batch", 16)?;
-    rc.seq_len = args.flag_usize("seqlen", 4096)?;
-    rc.gen_len = args.flag_usize("genlen", 1)?;
-    rc.tp = args.flag_usize("tp", 8)?;
-    rc.devices = args.flag_usize("devices", 32)?;
+    rc.batch = args.flag_usize_bounded("batch", 16, 1, 1 << 20)?;
+    rc.seq_len = args.flag_usize_bounded("seqlen", 4096, 1, 1 << 24)?;
+    rc.gen_len = args.flag_usize_bounded("genlen", 1, 1, 1 << 24)?;
+    rc.tp = args.flag_usize_bounded("tp", 8, 1, 4096)?;
+    rc.devices = args.flag_usize_bounded("devices", 32, 1, 1 << 16)?;
     if let Some(path) = args.flag("config") {
         let text = std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
         let doc = compair::config::toml::parse(&text).map_err(|e| e.to_string())?;
@@ -211,7 +216,7 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
 
 /// Parse the cluster flags; `None` means single-replica serving.
 fn parse_cluster_flags(args: &Args) -> Result<Option<ClusterConfig>, String> {
-    let replicas = args.flag_usize("replicas", 0)?; // 0 = flag absent
+    let replicas = args.flag_usize_bounded("replicas", 0, 0, 4096)?; // 0 = flag absent
     if args.flag("replicas").is_some() && replicas == 0 {
         return Err("--replicas must be positive".into());
     }
@@ -275,16 +280,16 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     let (cfg, label, desc) = if let Some(name) = args.flag("scenario") {
         let sc = Scenario::by_name(name)
             .ok_or_else(|| format!("unknown scenario '{name}' (see `compair list`)"))?;
-        let n = args.flag_usize("requests", sc.default_requests)?;
+        let n = args.flag_usize_bounded("requests", sc.default_requests, 1, 1 << 20)?;
         let label = format!("scenario={} n={} seed={}", sc.name, n, seed);
         let desc = Some(sc.description.to_string());
         (ServeConfig { n_requests: n, seed, scenario: Some(sc), ..Default::default() }, label, desc)
     } else {
         let cfg = ServeConfig {
             arrival_rate: args.flag_f64("rate", 32.0)?,
-            n_requests: args.flag_usize("requests", 64)?,
-            prompt_len: args.flag_usize("prompt", 512)?,
-            gen_len: args.flag_usize("gen", 32)?,
+            n_requests: args.flag_usize_bounded("requests", 64, 1, 1 << 20)?,
+            prompt_len: args.flag_usize_bounded("prompt", 512, 1, 1 << 24)?,
+            gen_len: args.flag_usize_bounded("gen", 32, 1, 1 << 24)?,
             seed,
             ..Default::default()
         };
@@ -334,8 +339,8 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
 
 fn cmd_isa_demo(args: &Args) -> Result<(), String> {
     let format = args.format()?;
-    let len = args.flag_usize("len", 8)?;
-    let rounds = args.flag_usize("rounds", 6)? as u32;
+    let len = args.flag_usize_bounded("len", 8, 1, 4096)?;
+    let rounds = args.flag_usize_bounded("rounds", 6, 1, 64)? as u32;
     let hw = compair::config::HwConfig::paper();
     let xs: Vec<f32> = (0..len).map(|i| -1.0 + 2.0 * i as f32 / len as f32).collect();
     let run = |fuse: bool| {
@@ -378,6 +383,101 @@ fn cmd_isa_demo(args: &Args) -> Result<(), String> {
         ftime_ns(base.latency_ns),
         saving * 100.0
     );
+    Ok(())
+}
+
+fn cmd_check(args: &Args) -> Result<(), String> {
+    let format = args.format()?;
+    let jobs = parse_jobs(args)?.unwrap_or_else(pool::default_jobs);
+    let archs: Vec<ArchKind> = match args.flag("arch") {
+        Some(a) => vec![ArchKind::by_name(a).ok_or("unknown --arch")?],
+        None => ArchKind::all().to_vec(),
+    };
+    let models: Vec<ModelConfig> = match args.flag("model") {
+        Some(m) => vec![ModelConfig::by_name(m).ok_or("unknown --model")?],
+        None => ModelConfig::zoo(),
+    };
+    let doc = match args.flag("config") {
+        None => None,
+        Some(path) => {
+            let text = std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
+            Some(compair::config::toml::parse(&text).map_err(|e| e.to_string())?)
+        }
+    };
+    // the arch-independent passes run once: the shipped Row-Level
+    // programs (+ static count cross-check) and the scenario SLO tables
+    let isa = analysis::check_isa_programs(&compair::config::HwConfig::paper());
+    let scenarios = analysis::config_check::check_scenarios();
+    // per-(arch, model) points fan out across the pool; each point pins
+    // rc.jobs = 1 and the submission-order merge keeps the output (and
+    // the JSON document) byte-identical whatever --jobs is
+    let mut points = Vec::new();
+    for &arch in &archs {
+        for m in &models {
+            points.push((arch, m.clone()));
+        }
+    }
+    let results = pool::par_map_indexed(jobs, points, |_, (arch, model)| {
+        let name = model.name;
+        let mut rc = RunConfig::new(arch, model);
+        rc.jobs = 1;
+        if let Some(d) = &doc {
+            if let Err(e) = rc.apply_doc(d) {
+                return Err(format!("{}/{name}: {e}", arch.cli_name()));
+            }
+        }
+        Ok((arch.cli_name(), name, Engine::new(rc).check()))
+    });
+    let mut reports: Vec<(&'static str, &'static str, analysis::CheckReport)> = Vec::new();
+    for r in results {
+        reports.push(r?);
+    }
+    let point_errs: usize = reports.iter().map(|(_, _, r)| r.errors()).sum();
+    let point_warns: usize = reports.iter().map(|(_, _, r)| r.warnings()).sum();
+    let errors = isa.errors() + scenarios.errors() + point_errs;
+    let warnings = isa.warnings() + scenarios.warnings() + point_warns;
+    if format == OutputFormat::Json {
+        let pts = Json::arr(reports.iter().map(|(arch, model, rep)| {
+            Json::obj().field("arch", *arch).field("model", *model).field("report", rep.to_json())
+        }));
+        let out = Json::obj()
+            .field("command", "check")
+            .field("isa", isa.to_json())
+            .field("scenarios", scenarios.to_json())
+            .field("points", pts)
+            .field("errors", errors)
+            .field("warnings", warnings)
+            .field("ok", errors == 0);
+        println!("{}", out.render());
+    } else {
+        let mut t = Table::new("check summary", &["pass", "errors", "warnings"]);
+        t.rowv(vec!["isa programs".into(), isa.errors().to_string(), isa.warnings().to_string()]);
+        t.rowv(vec![
+            "scenarios".into(),
+            scenarios.errors().to_string(),
+            scenarios.warnings().to_string(),
+        ]);
+        for (arch, model, rep) in &reports {
+            t.rowv(vec![
+                format!("{arch} / {model}"),
+                rep.errors().to_string(),
+                rep.warnings().to_string(),
+            ]);
+        }
+        t.print();
+        let named = std::iter::once(("isa programs".to_string(), &isa))
+            .chain(std::iter::once(("scenarios".to_string(), &scenarios)))
+            .chain(reports.iter().map(|(a, m, r)| (format!("{a} / {m}"), r)));
+        for (title, rep) in named {
+            if !rep.diags.is_empty() {
+                println!("{}", rep.render_table(&title));
+            }
+        }
+        println!("check: {} point(s), {errors} error(s), {warnings} warning(s)", reports.len());
+    }
+    if errors > 0 {
+        return Err(format!("check found {errors} error diagnostic(s)"));
+    }
     Ok(())
 }
 

@@ -121,6 +121,18 @@ fn score_candidates(
         // prefit pool off (the chunk itself is already a pool job)
         let mut wrc = rc.clone();
         wrc.jobs = 1;
+        // debug builds re-verify every candidate through the static
+        // mapping validator before pricing it: an illegal placement must
+        // fail here with a diagnostic, not misprice silently
+        #[cfg(debug_assertions)]
+        for m in &chunk {
+            let diags = crate::analysis::map_check::check_mapping(&wrc, m);
+            assert!(
+                diags.is_clean(),
+                "mapper scored an illegal candidate:\n{}",
+                diags.render_brief()
+            );
+        }
         let sys = System::new(wrc);
         chunk
             .iter()
@@ -162,6 +174,12 @@ pub fn search_phase(
             }
             candidates.push(m);
         }
+        // up-front legality rejection: the mixed-radix enumeration only
+        // emits supported engines, so this is a guard against option-list
+        // regressions, never a filter in practice (candidate 0 — the
+        // static mapping — is always legal, so index/score alignment and
+        // the never-lose baseline are preserved)
+        candidates.retain(|m| m.is_valid_for(rc.arch));
         let scores = score_candidates(rc, phase, batch, seq, &candidates, jobs);
         let mut best_i = 0usize;
         for (i, s) in scores.iter().enumerate() {
@@ -185,7 +203,10 @@ pub fn search_phase(
             for (m, _) in &beam {
                 for &p in opts {
                     let cand = m.with(*slot, p);
-                    if !scored.contains_key(&cand) && !frontier.contains(&cand) {
+                    if cand.is_valid_for(rc.arch)
+                        && !scored.contains_key(&cand)
+                        && !frontier.contains(&cand)
+                    {
                         frontier.push(cand);
                     }
                 }

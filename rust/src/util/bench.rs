@@ -137,13 +137,9 @@ impl Bencher {
 /// Prevent the optimizer from discarding a computed value.
 #[inline]
 pub fn sink<T>(x: T) -> T {
-    // Volatile read of a stack byte derived from the value's address: cheap
-    // and sufficient to anchor the computation without inline asm.
-    let r = &x;
-    unsafe {
-        std::ptr::read_volatile(&(r as *const T as usize));
-    }
-    x
+    // `black_box` is the stable, safe anchor (the crate forbids unsafe
+    // code; this was its last unsafe block).
+    std::hint::black_box(x)
 }
 
 #[cfg(test)]

@@ -1,0 +1,278 @@
+//! The static-analysis contract, from both sides.
+//!
+//! Positive: everything the repo ships — Row-Level programs, static
+//! mappings, the config zoo, the scenario SLOs — passes `compair check`
+//! with zero errors, and the statically derived flit/op counts agree
+//! exactly with the analytic closed forms at the calibration anchors.
+//!
+//! Negative: a seeded-defect corpus proves every code in
+//! `analysis::ALL_CODES` can actually fire, so no lint rots into dead
+//! configuration.
+
+use std::collections::BTreeSet;
+
+use compair::analysis::{
+    self, config_check,
+    isa_lint::{self, LintOptions},
+    map_check, CheckReport, Severity, ALL_CODES,
+};
+use compair::config::{ArchKind, HwConfig, ModelConfig, RunConfig, SramGang, Voltage};
+use compair::coordinator::{ClusterConfig, RouterPolicy};
+use compair::isa::interp::BANK_MEM_ELEMS;
+use compair::isa::{ExchangeMode, Machine, RowInst, RowProgram, ALL_BANKS};
+use compair::mapper::{Mapping, Placement, Slot};
+use compair::noc::StepOp;
+use compair::workload::Slo;
+use compair::Engine;
+
+fn lint_with(insts: Vec<RowInst>, hw: &HwConfig, opts: &LintOptions) -> CheckReport {
+    let prog = RowProgram { insts };
+    isa_lint::lint(&prog, hw, SramGang::In256Out16, opts)
+}
+
+/// Structural lint only (flow facts about initial memory skipped).
+fn lint_structural(insts: Vec<RowInst>) -> CheckReport {
+    lint_with(insts, &HwConfig::paper(), &LintOptions::assume_initialized())
+}
+
+/// Full lint with no declared inputs (every read of fresh memory flags).
+fn lint_flow(insts: Vec<RowInst>) -> CheckReport {
+    lint_with(insts, &HwConfig::paper(), &LintOptions::with_inputs(vec![]))
+}
+
+fn fill(dst: usize, mask: u64, len: usize) -> RowInst {
+    RowInst::Fill { dst, mask, len, value: 0.0 }
+}
+
+/// One seeded defect per lint code: `(code, report the defect produces)`.
+fn corpus() -> Vec<(&'static str, CheckReport)> {
+    let paper = HwConfig::paper();
+    let mut narrow = HwConfig::paper();
+    narrow.noc.mesh_cols = 2;
+
+    let llama = || ModelConfig::by_name("llama2-7b").unwrap();
+    let rc_cent = RunConfig::new(ArchKind::Cent, llama());
+    let rc_opt = RunConfig::new(ArchKind::CompAirOpt, llama());
+    let mut rc_big_kv = rc_opt.clone();
+    rc_big_kv.batch = 512;
+    rc_big_kv.seq_len = 32768;
+    let rc_gpt =
+        RunConfig::new(ArchKind::CompAirOpt, ModelConfig::by_name("gpt3-175b").unwrap());
+
+    let cfg = |f: &dyn Fn(&mut RunConfig)| {
+        let mut rc = RunConfig::new(ArchKind::CompAirOpt, llama());
+        f(&mut rc);
+        config_check::check_run(&rc)
+    };
+
+    vec![
+        // --- ISA program linter ---
+        ("isa.addr-bounds", lint_structural(vec![fill(BANK_MEM_ELEMS - 1, ALL_BANKS, 2)])),
+        ("isa.mask-range", lint_structural(vec![fill(0, 1 << 16, 1)])),
+        ("isa.mask-empty", lint_structural(vec![fill(0, 0, 1)])),
+        ("isa.len-zero", lint_structural(vec![fill(0, ALL_BANKS, 0)])),
+        (
+            "isa.exchange-shape",
+            lint_structural(vec![RowInst::NocExchange {
+                mode: ExchangeMode::RPlus,
+                src: 0,
+                dst: 16,
+                mask: ALL_BANKS,
+                offset: 2,
+                group: 3,
+                len: 4,
+            }]),
+        ),
+        ("isa.use-before-def", lint_flow(vec![RowInst::scalar(StepOp::Add, 0, 16, 4, 1.0)])),
+        (
+            "isa.dead-store",
+            lint_flow(vec![fill(0, ALL_BANKS, 4), fill(0, ALL_BANKS, 4)]),
+        ),
+        (
+            // three same-ALU steps with distinct args need three router
+            // columns; a 2-column mesh can't schedule the chain
+            "isa.lane-overflow",
+            lint_with(
+                vec![
+                    RowInst::scalar(StepOp::Mul, 0, 16, 4, 1.0),
+                    RowInst::scalar(StepOp::Mul, 16, 32, 4, 2.0),
+                    RowInst::scalar(StepOp::Mul, 32, 48, 4, 3.0),
+                ],
+                &narrow,
+                &LintOptions::assume_initialized(),
+            ),
+        ),
+        (
+            "isa.alu-conflict",
+            lint_structural(vec![
+                RowInst::scalar(StepOp::Add, 0, 16, 4, 1.0),
+                RowInst::scalar(StepOp::Add, 16, 32, 4, 2.0),
+            ]),
+        ),
+        (
+            "isa.div-occupancy",
+            lint_structural(vec![
+                RowInst::scalar(StepOp::Div, 0, 16, 4, 2.0),
+                RowInst::scalar(StepOp::Div, 16, 32, 4, 3.0),
+            ]),
+        ),
+        (
+            "isa.sram-order",
+            lint_structural(vec![RowInst::SramCompute { src: 0, dst: 16, mask: ALL_BANKS, len: 4 }]),
+        ),
+        (
+            "isa.sram-capacity",
+            lint_structural(vec![RowInst::SramWrite { addr: 0, mask: ALL_BANKS, len: 4097 }]),
+        ),
+        (
+            // rounds > 15 saturate IterNum: the greedy fallback windows
+            // inflate per-element hops well past the 2r+2 closed form
+            "isa.count-drift",
+            isa_lint::exp_count_crosscheck(4, 20, &paper, 0.25),
+        ),
+        // --- mapping validator ---
+        (
+            "map.illegal-placement",
+            map_check::check_mapping(
+                &rc_cent,
+                &Mapping::static_for(ArchKind::Cent).with(Slot::FcQ, Placement::SramPim),
+            ),
+        ),
+        (
+            "map.nonlinear-on-pim",
+            map_check::check_mapping(
+                &rc_cent,
+                &Mapping::static_for(ArchKind::Cent).with(Slot::Softmax, Placement::DramPim),
+            ),
+        ),
+        (
+            // llama2-7b's up-projection share per bank exceeds the gang's
+            // resident weights, so the static SRAM placement streams
+            "map.sram-capacity",
+            map_check::check_mapping(&rc_opt, &Mapping::static_for(ArchKind::CompAirOpt)),
+        ),
+        (
+            "map.kv-capacity",
+            map_check::check_mapping(&rc_big_kv, &Mapping::static_for(ArchKind::CompAirOpt)),
+        ),
+        (
+            "map.weight-capacity",
+            map_check::check_mapping(&rc_gpt, &Mapping::static_for(ArchKind::CompAirOpt)),
+        ),
+        // --- config consistency ---
+        ("cfg.mesh-banks", cfg(&|rc| rc.hw.noc.mesh_rows = 8)),
+        ("cfg.head-divisibility", cfg(&|rc| rc.model.n_heads = 3)),
+        ("cfg.kv-dtype", cfg(&|rc| rc.model.n_heads = 3)),
+        ("cfg.shape-positive", cfg(&|rc| rc.batch = 0)),
+        ("cfg.tp-devices", cfg(&|rc| rc.tp = 64)),
+        ("cfg.tp-remainder", cfg(&|rc| rc.devices = 12)),
+        (
+            "cfg.fabric-devices",
+            cfg(&|rc| {
+                rc.tp = 8;
+                rc.devices = 64;
+            }),
+        ),
+        ("cfg.gang-macros", cfg(&|rc| rc.hw.sram.macros_per_bank = 2)),
+        ("cfg.voltage-corner", cfg(&|rc| rc.hw.sram.voltage = Voltage(1.2))),
+        ("cfg.flit-capacity", cfg(&|rc| rc.hw.noc.flit_bits = 32)),
+        ("cfg.slo-sanity", config_check::check_slo(&Slo { ttft_ns: 0, tpot_ns: 1 }, "corpus")),
+        (
+            "cfg.disagg-split",
+            config_check::check_cluster(&ClusterConfig {
+                replicas: 4,
+                disagg: Some((0, 4)),
+                router: RouterPolicy::RoundRobin,
+            }),
+        ),
+    ]
+}
+
+#[test]
+fn every_lint_code_fires_on_its_seeded_defect() {
+    let mut fired: BTreeSet<&'static str> = BTreeSet::new();
+    for (code, rep) in corpus() {
+        assert!(
+            rep.has_code(code),
+            "seeded defect for {code} did not fire; report:\n{}",
+            rep.render_brief()
+        );
+        for d in &rep.diags {
+            fired.insert(d.code);
+        }
+    }
+    for code in ALL_CODES {
+        assert!(fired.contains(code), "no corpus defect triggers {code}");
+    }
+}
+
+#[test]
+fn corpus_codes_are_registered_exhaustively() {
+    // the corpus keys must themselves be registered codes, one per code
+    let keys: BTreeSet<&'static str> = corpus().into_iter().map(|(c, _)| c).collect();
+    let all: BTreeSet<&'static str> = ALL_CODES.iter().copied().collect();
+    assert_eq!(keys, all);
+}
+
+#[test]
+fn shipped_configs_are_error_free_on_every_arch_and_model() {
+    for arch in ArchKind::all() {
+        for model in ModelConfig::zoo() {
+            let name = model.name;
+            let rep = Engine::new(RunConfig::new(arch, model)).check();
+            assert!(rep.is_clean(), "{arch:?}/{name} fails check:\n{}", rep.render_brief());
+        }
+    }
+}
+
+#[test]
+fn shipped_isa_programs_lint_clean() {
+    let rep = analysis::check_isa_programs(&HwConfig::paper());
+    assert!(rep.diags.is_empty(), "paper hw:\n{}", rep.render_brief());
+    let rep = analysis::check_isa_programs(&HwConfig::paper_opt());
+    assert!(rep.is_clean(), "paper_opt hw:\n{}", rep.render_brief());
+}
+
+#[test]
+fn scenario_slos_are_sane() {
+    let rep = config_check::check_scenarios();
+    assert!(rep.is_clean(), "{}", rep.render_brief());
+}
+
+#[test]
+fn static_counts_match_the_analytic_forms_exactly_at_anchors() {
+    // zero tolerance: at the calibration anchors the plan-derived flit/op
+    // totals must equal the arch/collective closed forms bit for bit
+    for (len, rounds) in [(2usize, 8u32), (16, 8), (16, 4), (8, 6)] {
+        let rep = isa_lint::exp_count_crosscheck(len, rounds, &HwConfig::paper(), 0.0);
+        assert!(rep.diags.is_empty(), "len {len} rounds {rounds}:\n{}", rep.render_brief());
+    }
+}
+
+#[test]
+fn reports_are_normalized_and_deterministic() {
+    let build = || {
+        lint_flow(vec![
+            fill(BANK_MEM_ELEMS, ALL_BANKS, 1),
+            RowInst::scalar(StepOp::Add, 0, 16, 4, 1.0),
+            fill(32, 0, 0),
+        ])
+    };
+    let a = build();
+    let b = build();
+    assert_eq!(a, b, "lint is not deterministic");
+    assert!(!a.is_clean());
+    assert!(a.warnings() >= 2);
+    assert!(a.diags.windows(2).all(|w| w[0] <= w[1]), "not sorted:\n{}", a.render_brief());
+    assert_eq!(a.diags[0].severity, Severity::Error, "errors must sort first");
+}
+
+#[cfg(debug_assertions)]
+#[test]
+#[should_panic(expected = "static ISA lint")]
+fn machine_run_rejects_a_structurally_invalid_program_in_debug() {
+    let hw = HwConfig::paper();
+    let mut m = Machine::new(&hw, SramGang::In256Out16);
+    let prog = RowProgram { insts: vec![fill(BANK_MEM_ELEMS, ALL_BANKS, 4)] };
+    let _ = m.run(&prog, true);
+}

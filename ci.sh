@@ -21,6 +21,11 @@
 #                                     zero error diagnostics over every shipped
 #                                     (arch, model) point, and its --jobs 4
 #                                     output must equal --jobs 1
+#   5d. semantic audit gate         — `compair audit --format json` must report
+#                                     zero invariant violations over the pow2
+#                                     point lattice (conservation, monotonicity,
+#                                     coherence, fidelity bands), and its
+#                                     --jobs 4 output must equal --jobs 1
 #   6. bench artifacts gate         — bench_hotpath runs in fast mode and both
 #                                     BENCH_serving.json / BENCH_parallel.json
 #                                     must parse
@@ -160,6 +165,34 @@ if [[ "$CHK_J1" == "$CHK_J4" ]]; then
 else
     echo "error: check output diverges between --jobs 1 and --jobs 4" >&2
     diff <(printf '%s\n' "$CHK_J1") <(printf '%s\n' "$CHK_J4") | head -40 >&2
+    exit 1
+fi
+
+say "semantic audit gate (compair audit: zero invariant violations)"
+# the audit subcommand proves physical invariants — finiteness, op/energy/
+# bytes conservation, monotonicity, cache coherence, never-lose, fidelity
+# bands, calibration bounds — over the pow2 point lattice plus the
+# arch-independent global slice; any error-severity diagnostic fails CI
+AUD_J1=$(./target/release/compair audit --jobs 1 --format json)
+printf '%s\n' "$AUD_J1" | python3 -c '
+import json, sys
+doc = json.load(sys.stdin)
+assert doc["command"] == "audit", "unexpected command field"
+assert doc["global"]["errors"] == 0, "global audit errors: %r" % doc["global"]
+assert doc["points"], "audit covered no lattice points"
+bad = [p for p in doc["points"] if p["report"]["errors"]]
+if bad:
+    sys.exit("audit errors at: " + ", ".join(p["point"] for p in bad))
+assert doc["errors"] == 0 and doc["ok"] is True, "audit reported errors"
+print(f"ok: {len(doc['points'])} lattice points clean, {doc['warnings']} warning(s)")
+'
+# the lattice fan-out runs on the pool; the report must not depend on --jobs
+AUD_J4=$(./target/release/compair audit --jobs 4 --format json)
+if [[ "$AUD_J1" == "$AUD_J4" ]]; then
+    echo "ok: audit --jobs 4 output is byte-identical to --jobs 1"
+else
+    echo "error: audit output diverges between --jobs 1 and --jobs 4" >&2
+    diff <(printf '%s\n' "$AUD_J1") <(printf '%s\n' "$AUD_J4") | head -40 >&2
     exit 1
 fi
 

@@ -1,0 +1,840 @@
+//! `compair audit`: semantic invariants over the cost pipeline.
+//!
+//! `compair check` (PR 8) verifies *structure* — ISA legality, placement
+//! legality, config consistency. This second tier verifies the
+//! *semantics* of the numbers the whole stack is built on: every report
+//! produced on a deterministic pow2 lattice of
+//! (arch × model × phase × shape × NoC-fidelity × mapping-mode) points
+//! ([`super::audit_lattice`]) must obey the physics the simulators claim
+//! to model. Violations surface as `aud.*` diagnostics through the same
+//! [`Diag`]/[`CheckReport`] framework, so the CLI, `Engine::audit`, the
+//! CI gate, and the negative corpus in `tests/audit.rs` all speak one
+//! language.
+//!
+//! The invariant catalog, one registered code each:
+//!
+//! * **`aud.non-finite` / `aud.negative` / `aud.unit-range`** — every
+//!   latency/energy/throughput field is a finite, non-negative number;
+//!   fractions, utilizations, and SLO attainments stay in `[0, 1]`, and a
+//!   class that completed nothing reports exactly 0.0 attainment.
+//! * **`aud.op-conservation`** — the per-op costs in a [`PhaseReport`]
+//!   re-compose (same fold, same pipeline/handoff arithmetic as
+//!   `System::run_shape_mapped`) to the layer cost, total latency, and
+//!   throughput the report claims.
+//! * **`aud.energy-conservation`** — re-pricing the re-composed counts
+//!   through a fresh [`EnergyModel`] reproduces every component of the
+//!   report's [`EnergyBreakdown`](crate::energy::EnergyBreakdown).
+//! * **`aud.bytes-conservation`** — the `arch/collective` closed forms
+//!   move exactly the bytes/events they are handed (nothing vanishes,
+//!   nothing is conjured), degenerate shapes price to exactly zero, and
+//!   the cluster KV-migration path bills exactly `migration_bytes` at the
+//!   CXL rate.
+//! * **`aud.monotonic`** — latency and dynamic energy never decrease
+//!   along pow2 batch/seq/KV chains at fixed everything-else.
+//! * **`aud.cache-coherence`** — a memoizing model answers bit-identically
+//!   to the uncached reference, and repeat queries are stable.
+//! * **`aud.never-lose`** — the auto-mapper never scores worse than the
+//!   static mapping, re-proven from the audit side.
+//! * **`aud.fidelity-band`** — every calibration anchor's calibrated
+//!   residual is inside the gated 20% band of the simulator; the raw
+//!   analytic ratio outside its documented 0.5–2.0× band, or a
+//!   volume-ordering disagreement between tiers, warns.
+//! * **`aud.calibration-bounds`** — every fitted NoC correction factor is
+//!   finite and inside [`FACTOR_BOUNDS`](crate::noc::FACTOR_BOUNDS).
+//!
+//! Every check is a pure function of fabricatable inputs (reports, priced
+//! costs, anchor rows), so the seeded-defect corpus can hand each one a
+//! single doctored artifact and prove the code fires.
+
+use std::collections::BTreeMap;
+
+use crate::analysis::{CheckReport, Diag};
+use crate::arch::collective as coll;
+use crate::arch::{attacc, AttAccConfig, CachedCostModel, CostModel, PhaseReport, System};
+use crate::config::{ArchKind, HwConfig, MappingMode, Phase, RunConfig};
+use crate::coordinator::{
+    Cluster, ClusterConfig, ClusterReport, RouterPolicy, ServeConfig, ServeReport, Server,
+};
+use crate::energy::EnergyModel;
+use crate::mapper::AutoMappedCostModel;
+use crate::noc::{calibration_factors, calibration_report, CalibAnchor, FACTOR_BOUNDS};
+use crate::sim::{CostCounts, OpCost};
+
+use super::audit_lattice::{self as lattice, AuditPoint, ShapeAnchor};
+
+/// Relative tolerance for re-derived f64 identities. The audit re-runs
+/// the *same* arithmetic the simulator ran, so agreement is bit-exact in
+/// practice; the epsilon only absorbs hypothetical re-association.
+const REL_TOL: f64 = 1e-9;
+
+/// The calibrated tier's gated residual band vs the simulator — the same
+/// 20% contract ci.sh and `tests/prop_invariants.rs` enforce.
+const FIDELITY_BAND: f64 = 0.2;
+
+/// Documented band of the raw analytic/simulator ratio; escaping it is a
+/// warning (the calibration exists to close exactly this gap).
+const RAW_RATIO_BAND: (f64, f64) = (0.5, 2.0);
+
+/// Audit knobs (CLI `--deep` widens the lattice and chains).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AuditOptions {
+    pub deep: bool,
+}
+
+// ------------------------------------------------------------ primitives
+
+fn num(rep: &mut CheckReport, ctx: &str, name: &str, v: f64) {
+    if !v.is_finite() {
+        rep.push(Diag::error("aud.non-finite", ctx, format!("{name} is {v} (not finite)")));
+    } else if v < 0.0 {
+        rep.push(Diag::error("aud.negative", ctx, format!("{name} is negative ({v:.6})")));
+    }
+}
+
+fn unit(rep: &mut CheckReport, ctx: &str, name: &str, v: f64) {
+    num(rep, ctx, name, v);
+    if v.is_finite() && !(0.0..=1.0).contains(&v) {
+        rep.push(Diag::error("aud.unit-range", ctx, format!("{name} = {v:.6} outside [0, 1]")));
+    }
+}
+
+/// First counter two count vectors disagree on, for precise messages.
+fn first_count_diff(a: &CostCounts, b: &CostCounts) -> Option<(&'static str, u64, u64)> {
+    a.fields()
+        .iter()
+        .zip(b.fields().iter())
+        .find(|((_, x), (_, y))| x != y)
+        .map(|(&(n, x), &(_, y))| (n, x, y))
+}
+
+/// One closed-form traffic identity: the priced cost must carry exactly
+/// `want` events on `counter`. Public so the negative corpus can hand in
+/// a doctored count next to the real closed-form outputs the audit feeds.
+pub fn check_counter(
+    rep: &mut CheckReport,
+    ctx: &str,
+    counter: &'static str,
+    got: u64,
+    want: u64,
+) {
+    if got != want {
+        rep.push(Diag::error(
+            "aud.bytes-conservation",
+            ctx,
+            format!("{counter} carries {got} events, the closed form conserves {want}"),
+        ));
+    }
+}
+
+/// One fitted calibration factor must be finite and inside the declared
+/// [`FACTOR_BOUNDS`]. Public for the corpus.
+pub fn check_factor(rep: &mut CheckReport, collective: &str, key: u64, factor: f64) {
+    let ctx = format!("{collective} key={key}");
+    if !factor.is_finite() {
+        rep.push(Diag::error(
+            "aud.calibration-bounds",
+            ctx,
+            format!("fitted factor is {factor} (not finite)"),
+        ));
+    } else if factor < FACTOR_BOUNDS.0 || factor > FACTOR_BOUNDS.1 {
+        rep.push(Diag::error(
+            "aud.calibration-bounds",
+            ctx,
+            format!(
+                "fitted factor {factor:.4} outside declared bounds [{}, {}]",
+                FACTOR_BOUNDS.0, FACTOR_BOUNDS.1
+            ),
+        ));
+    }
+}
+
+// ------------------------------------------------------- report sanity
+
+/// Finiteness / non-negativity / unit-range over every numeric field a
+/// [`PhaseReport`] carries (per-op latencies included; event counts are
+/// `u64` and cannot misbehave by type).
+pub fn check_phase_sanity(ctx: &str, r: &PhaseReport) -> CheckReport {
+    let mut rep = CheckReport::default();
+    num(&mut rep, ctx, "latency_ns", r.latency_ns);
+    num(&mut rep, ctx, "throughput_tok_s", r.throughput_tok_s);
+    num(&mut rep, ctx, "layer_cost.latency_ns", r.layer_cost.latency_ns);
+    for (name, pj) in r.energy.components() {
+        num(&mut rep, ctx, &format!("energy.{name}"), pj);
+    }
+    num(&mut rep, ctx, "energy.total_pj", r.energy.total_pj());
+    unit(&mut rep, ctx, "nonlinear_frac", r.nonlinear_frac);
+    unit(&mut rep, ctx, "collective_frac", r.collective_frac);
+    unit(&mut rep, ctx, "bank_util", r.bank_util);
+    for op in &r.ops {
+        num(&mut rep, ctx, &format!("op {}.latency_ns", op.name), op.cost.latency_ns);
+    }
+    rep.normalize();
+    rep
+}
+
+/// The shared serve-report validator: the predicate the serving/cluster
+/// tests and `compair audit` both enforce (this is the deduplicated form
+/// of the ad-hoc finiteness asserts the coordinator tests used to carry).
+pub fn check_serve_report(ctx: &str, r: &ServeReport) -> CheckReport {
+    let mut rep = CheckReport::default();
+    num(&mut rep, ctx, "throughput_tok_s", r.throughput_tok_s);
+    num(&mut rep, ctx, "energy_per_token_pj", r.energy_per_token_pj);
+    for (name, v) in [
+        ("ttft_p50_ns", r.ttft_p50_ns),
+        ("ttft_p99_ns", r.ttft_p99_ns),
+        ("tpot_p50_ns", r.tpot_p50_ns),
+        ("tpot_p99_ns", r.tpot_p99_ns),
+        ("req_latency_p50_ns", r.req_latency_p50_ns),
+        ("req_latency_p99_ns", r.req_latency_p99_ns),
+    ] {
+        num(&mut rep, ctx, name, v);
+    }
+    unit(&mut rep, ctx, "slo_attainment", r.slo_attainment);
+    for (name, pj) in r.energy.components() {
+        num(&mut rep, ctx, &format!("energy.{name}"), pj);
+    }
+    for c in &r.per_class {
+        let cctx = format!("{ctx}/{}", c.class);
+        for (name, v) in [
+            ("ttft_p50_ns", c.ttft_p50_ns),
+            ("ttft_p99_ns", c.ttft_p99_ns),
+            ("tpot_p50_ns", c.tpot_p50_ns),
+            ("tpot_p99_ns", c.tpot_p99_ns),
+        ] {
+            num(&mut rep, &cctx, name, v);
+        }
+        for (name, v) in [
+            ("ttft_attainment", c.ttft_attainment),
+            ("tpot_attainment", c.tpot_attainment),
+            ("slo_attainment", c.slo_attainment),
+        ] {
+            unit(&mut rep, &cctx, name, v);
+            if c.completed == 0 && v.abs() > 1e-12 {
+                rep.push(Diag::error(
+                    "aud.unit-range",
+                    cctx.clone(),
+                    format!("{name} = {v:.6} with zero completed requests (must be 0.0)"),
+                ));
+            }
+        }
+    }
+    rep.normalize();
+    rep
+}
+
+// ------------------------------------------------------- conservation
+
+/// Per-op → phase conservation and independent energy re-pricing. The
+/// re-composition mirrors `System::run_shape_mapped` exactly: fold the
+/// per-op costs in order, repeat over layers, append the pipeline
+/// handoff, then re-price the total counts through a fresh
+/// [`EnergyModel`] built from the same hardware point.
+pub fn check_phase_conservation(
+    ctx: &str,
+    r: &PhaseReport,
+    rc: &RunConfig,
+    phase: Phase,
+    batch: usize,
+    seq_len: usize,
+) -> CheckReport {
+    let mut rep = CheckReport::default();
+
+    // (1) the ops must fold to the layer cost the report claims
+    let mut layer = OpCost::zero();
+    let mut nl_ns = 0.0;
+    let mut coll_ns = 0.0;
+    for op in &r.ops {
+        match op.class {
+            crate::workload::OpClass::NonLinear => nl_ns += op.cost.latency_ns,
+            crate::workload::OpClass::Collective => coll_ns += op.cost.latency_ns,
+            _ => {}
+        }
+        layer = layer.then(&op.cost);
+    }
+    if layer.latency_ns.to_bits() != r.layer_cost.latency_ns.to_bits() {
+        rep.push(Diag::error(
+            "aud.op-conservation",
+            ctx,
+            format!(
+                "per-op latencies sum to {:.6} ns but layer_cost claims {:.6} ns",
+                layer.latency_ns, r.layer_cost.latency_ns
+            ),
+        ));
+    }
+    if let Some((name, got, want)) = first_count_diff(&r.layer_cost.counts, &layer.counts) {
+        rep.push(Diag::error(
+            "aud.op-conservation",
+            ctx,
+            format!("layer_cost.{name} = {got} but the per-op costs sum to {want}"),
+        ));
+    }
+
+    // (2) layer → phase linkage: layers × layer + (pp-1) × handoff
+    let layers = rc.model.n_layers as u64;
+    let pp = (rc.devices / rc.tp).max(1) as u64;
+    let handoff = coll::cxl_p2p((batch * rc.model.d_model * 2) as u64, &rc.hw.cxl);
+    let total = layer.repeat(layers).then(&handoff.repeat(pp.saturating_sub(1)));
+    if rel(total.latency_ns, r.latency_ns) > REL_TOL {
+        rep.push(Diag::error(
+            "aud.op-conservation",
+            ctx,
+            format!(
+                "re-composed phase latency {:.6} ns != reported {:.6} ns",
+                total.latency_ns, r.latency_ns
+            ),
+        ));
+    }
+    let tokens_per_pass = match phase {
+        Phase::Decode => batch as f64,
+        Phase::Prefill => (batch * seq_len) as f64,
+    };
+    let stage_ns = total.latency_ns / pp as f64;
+    let throughput = tokens_per_pass / (stage_ns / 1e9);
+    if rel(throughput, r.throughput_tok_s) > REL_TOL {
+        rep.push(Diag::error(
+            "aud.op-conservation",
+            ctx,
+            format!(
+                "re-derived throughput {throughput:.3} tok/s != reported {:.3}",
+                r.throughput_tok_s
+            ),
+        ));
+    }
+    let layer_ns = layer.latency_ns.max(1e-9);
+    for (name, got, want) in [
+        ("nonlinear_frac", r.nonlinear_frac, nl_ns / layer_ns),
+        ("collective_frac", r.collective_frac, coll_ns / layer_ns),
+    ] {
+        if rel(want, got) > REL_TOL {
+            rep.push(Diag::error(
+                "aud.op-conservation",
+                ctx,
+                format!("{name} = {got:.6} but the op classes sum to {want:.6}"),
+            ));
+        }
+    }
+
+    // (3) independent energy re-pricing of the re-composed counts
+    let em = EnergyModel::new(&rc.hw.sram, rc.hw.hb.pj_per_bit);
+    let mut want = em.dynamic(&total.counts).scale(1.0 / tokens_per_pass);
+    want.static_pj =
+        rc.devices as f64 * em.pim_device_static_w * (total.latency_ns / pp as f64)
+            / tokens_per_pass;
+    for ((name, got), (_, want_pj)) in r.energy.components().iter().zip(want.components().iter())
+    {
+        if (got - want_pj).abs() > REL_TOL * want_pj.abs().max(1.0) {
+            rep.push(Diag::error(
+                "aud.energy-conservation",
+                ctx,
+                format!(
+                    "energy.{name} = {got:.6} pJ but re-pricing the op counts gives {want_pj:.6} pJ"
+                ),
+            ));
+        }
+    }
+    rep.normalize();
+    rep
+}
+
+fn rel(a: f64, b: f64) -> f64 {
+    crate::util::stats::rel_err(a, b)
+}
+
+/// Bytes-in == bytes-out across every `arch/collective` closed form, and
+/// degenerate shapes price to exactly zero events.
+pub fn check_collective_identities(hw_label: &str, hw: &HwConfig) -> CheckReport {
+    let mut rep = CheckReport::default();
+    let cx = |what: &str| format!("{hw_label} {what}");
+    for bytes in [1u64, 4096, 1 << 20] {
+        let c = coll::cxl_p2p(bytes, &hw.cxl);
+        let ctx = cx(&format!("cxl_p2p bytes={bytes}"));
+        check_counter(&mut rep, &ctx, "cxl_bytes", c.counts.cxl_bytes, bytes);
+        check_counter(&mut rep, &ctx, "total_events", c.counts.total_events(), bytes);
+        for tp in [2u64, 3, 8] {
+            let c = coll::cxl_allreduce(bytes, tp, &hw.cxl);
+            let ctx = cx(&format!("cxl_allreduce bytes={bytes} tp={tp}"));
+            let ring = 2 * bytes * (tp - 1) / tp;
+            check_counter(&mut rep, &ctx, "cxl_bytes", c.counts.cxl_bytes, ring);
+            check_counter(&mut rep, &ctx, "total_events", c.counts.total_events(), ring);
+        }
+        let back = bytes / 2;
+        let c = coll::nlu_roundtrip(bytes, back, 33, 4, &hw.dram);
+        let ctx = cx(&format!("nlu_roundtrip bytes={bytes}"));
+        check_counter(&mut rep, &ctx, "gb_bytes", c.counts.gb_bytes, bytes + back);
+        check_counter(&mut rep, &ctx, "nlu_ops", c.counts.nlu_ops, 33);
+    }
+    for (elems, banks) in [(4u64, 4u64), (64, 16), (33, 12)] {
+        let edges = elems * (banks - 1);
+        let r = coll::noc_reduce(elems, banks, &hw.noc);
+        let ctx = cx(&format!("noc_reduce elems={elems} banks={banks}"));
+        check_counter(&mut rep, &ctx, "noc_flit_hops", r.counts.noc_flit_hops, edges);
+        check_counter(&mut rep, &ctx, "noc_alu_ops", r.counts.noc_alu_ops, edges);
+        let b = coll::noc_broadcast(elems, banks, &hw.noc);
+        let ctx = cx(&format!("noc_broadcast elems={elems} banks={banks}"));
+        check_counter(&mut rep, &ctx, "noc_flit_hops", b.counts.noc_flit_hops, edges);
+        check_counter(&mut rep, &ctx, "noc_alu_ops", b.counts.noc_alu_ops, 0);
+    }
+    for (e, rounds) in [(2u64, 8u64), (16, 4)] {
+        let x = coll::noc_exp(e, rounds, &hw.noc);
+        let ctx = cx(&format!("noc_exp elems={e} rounds={rounds}"));
+        check_counter(&mut rep, &ctx, "noc_alu_ops", x.counts.noc_alu_ops, e * 4 * rounds);
+        check_counter(&mut rep, &ctx, "noc_flit_hops", x.counts.noc_flit_hops, e * (2 * rounds + 2));
+        let s = coll::noc_sqrt(e, rounds, &hw.noc);
+        let ctx = cx(&format!("noc_sqrt elems={e} rounds={rounds}"));
+        check_counter(&mut rep, &ctx, "noc_alu_ops", s.counts.noc_alu_ops, e * 3 * rounds);
+        check_counter(&mut rep, &ctx, "noc_flit_hops", s.counts.noc_flit_hops, e * (2 * rounds + 3));
+    }
+    let st = coll::noc_scalar_stream(16, &hw.noc);
+    let ctx = cx("noc_scalar_stream elems=16");
+    check_counter(&mut rep, &ctx, "noc_alu_ops", st.counts.noc_alu_ops, 16);
+    check_counter(&mut rep, &ctx, "noc_flit_hops", st.counts.noc_flit_hops, 32);
+    for (what, c) in [
+        ("noc_reduce elems=0", coll::noc_reduce(0, 8, &hw.noc)),
+        ("noc_reduce banks=1", coll::noc_reduce(8, 1, &hw.noc)),
+        ("noc_broadcast banks=1", coll::noc_broadcast(8, 1, &hw.noc)),
+        ("noc_exp rounds=0", coll::noc_exp(8, 0, &hw.noc)),
+        ("noc_sqrt elems=0", coll::noc_sqrt(0, 6, &hw.noc)),
+        ("cxl_allreduce tp=1", coll::cxl_allreduce(4096, 1, &hw.cxl)),
+        ("cxl_p2p bytes=0", coll::cxl_p2p(0, &hw.cxl)),
+    ] {
+        check_counter(&mut rep, &cx(what), "total_events", c.counts.total_events(), 0);
+    }
+    rep.normalize();
+    rep
+}
+
+/// The cluster KV-migration path conserves bytes and bills them exactly
+/// once at the CXL per-byte rate.
+pub fn check_cluster_migration(ctx: &str, cr: &ClusterReport, rc: &RunConfig) -> CheckReport {
+    let mut rep = CheckReport::default();
+    let em = EnergyModel::new(&rc.hw.sram, rc.hw.hb.pj_per_bit);
+    let want = cr.migration_bytes as f64 * em.cxl_pj_per_byte;
+    if (cr.migration_energy_pj - want).abs() > REL_TOL * want.max(1.0) {
+        rep.push(Diag::error(
+            "aud.bytes-conservation",
+            ctx,
+            format!(
+                "migration_energy_pj = {:.3} but {} bytes at {} pJ/B = {want:.3}",
+                cr.migration_energy_pj, cr.migration_bytes, em.cxl_pj_per_byte
+            ),
+        ));
+    }
+    if (cr.migrations == 0) != (cr.migration_bytes == 0) {
+        rep.push(Diag::error(
+            "aud.bytes-conservation",
+            ctx,
+            format!(
+                "{} migrations moved {} bytes (bytes and hand-offs must appear together)",
+                cr.migrations, cr.migration_bytes
+            ),
+        ));
+    }
+    if cr.migration_energy_pj > cr.report.energy.cxl_pj * (1.0 + REL_TOL) {
+        rep.push(Diag::error(
+            "aud.bytes-conservation",
+            ctx,
+            format!(
+                "migration energy {:.3} pJ exceeds the run's total CXL energy {:.3} pJ",
+                cr.migration_energy_pj, cr.report.energy.cxl_pj
+            ),
+        ));
+    }
+    rep.normalize();
+    rep
+}
+
+// ------------------------------------------------------- monotonicity
+
+/// Latency and dynamic energy must be non-decreasing along pow2
+/// batch/seq/KV chains at fixed everything-else. Runs against any
+/// [`CostModel`]; the audit drives it with the static-mapping `System`
+/// (the auto-mapper re-searches per shape class, so its minimum is only
+/// guaranteed monotone where the search is exhaustive — never-lose is
+/// its audited property instead).
+pub fn check_monotonic(ctx: &str, m: &dyn CostModel, deep: bool) -> CheckReport {
+    let mut rep = CheckReport::default();
+    let rc = m.base();
+    let em = EnergyModel::new(&rc.hw.sram, rc.hw.hb.pj_per_bit);
+    let mut chain = |label: String, points: Vec<(String, OpCost)>| {
+        for w in points.windows(2) {
+            let (la, a) = &w[0];
+            let (lb, b) = &w[1];
+            let cctx = format!("{ctx} {label}");
+            if b.latency_ns < a.latency_ns * (1.0 - REL_TOL) {
+                rep.push(Diag::error(
+                    "aud.monotonic",
+                    cctx.clone(),
+                    format!(
+                        "latency decreased from {la} ({:.3} ns) to {lb} ({:.3} ns)",
+                        a.latency_ns, b.latency_ns
+                    ),
+                ));
+            }
+            let (ea, eb) = (em.dynamic(&a.counts).total_pj(), em.dynamic(&b.counts).total_pj());
+            if eb < ea * (1.0 - REL_TOL) {
+                rep.push(Diag::error(
+                    "aud.monotonic",
+                    cctx,
+                    format!("dynamic energy decreased from {la} ({ea:.3} pJ) to {lb} ({eb:.3} pJ)"),
+                ));
+            }
+        }
+    };
+    for phase in [Phase::Prefill, Phase::Decode] {
+        let seq = match phase {
+            Phase::Prefill => 512,
+            Phase::Decode => 1024,
+        };
+        let pts = lattice::batch_chain(deep)
+            .into_iter()
+            .map(|b| (format!("b={b}"), m.phase_report(phase, b, seq).layer_cost_total()))
+            .collect();
+        chain(format!("{} batch-chain s={seq}", phase.label()), pts);
+        let pts = lattice::seq_chain(deep)
+            .into_iter()
+            .map(|s| (format!("s={s}"), m.phase_report(phase, 2, s).layer_cost_total()))
+            .collect();
+        chain(format!("{} seq-chain b=2", phase.label()), pts);
+    }
+    let pts = lattice::kv_chain(deep)
+        .into_iter()
+        .map(|kv| (format!("kv={kv}"), m.iteration_cost(0, 4, kv)))
+        .collect();
+    chain("decode kv-chain b=4".to_string(), pts);
+    rep.normalize();
+    rep
+}
+
+// ------------------------------------------------- cache / mapping coherence
+
+/// Iteration-shape triples the coherence and never-lose checks probe
+/// (prefill-only, decode-only, and a mixed chunked iteration).
+const ITER_PROBES: [(usize, usize, usize); 3] = [(256, 0, 0), (0, 4, 1024), (128, 8, 2048)];
+
+/// `candidate` must answer bit-identically to `reference` at every
+/// anchor, and answer repeat queries with its own first answer (memo
+/// stability). The audit drives this with `CachedCostModel` vs the bare
+/// `System`, and with the auto-mapped model against itself.
+pub fn check_model_coherence(
+    ctx: &str,
+    reference: &dyn CostModel,
+    candidate: &dyn CostModel,
+    anchors: &[ShapeAnchor],
+) -> CheckReport {
+    let mut rep = CheckReport::default();
+    for a in anchors {
+        let actx = format!("{ctx} {}", a.label());
+        let want = reference.phase_report(a.phase, a.batch, a.seq_len);
+        let got = candidate.phase_report(a.phase, a.batch, a.seq_len);
+        let again = candidate.phase_report(a.phase, a.batch, a.seq_len);
+        for (name, w, g, g2) in [
+            ("latency_ns", want.latency_ns, got.latency_ns, again.latency_ns),
+            ("throughput_tok_s", want.throughput_tok_s, got.throughput_tok_s, again.throughput_tok_s),
+            ("energy.total_pj", want.energy.total_pj(), got.energy.total_pj(), again.energy.total_pj()),
+        ] {
+            if g.to_bits() != w.to_bits() {
+                rep.push(Diag::error(
+                    "aud.cache-coherence",
+                    actx.clone(),
+                    format!("{name} = {g:.6} diverges from the uncached reference {w:.6}"),
+                ));
+            }
+            if g2.to_bits() != g.to_bits() {
+                rep.push(Diag::error(
+                    "aud.cache-coherence",
+                    actx.clone(),
+                    format!("{name} unstable across repeat queries: {g:.6} then {g2:.6}"),
+                ));
+            }
+        }
+        if let Some((name, g, w)) = first_count_diff(&got.layer_cost.counts, &want.layer_cost.counts)
+        {
+            rep.push(Diag::error(
+                "aud.cache-coherence",
+                actx.clone(),
+                format!("layer_cost.{name} = {g} diverges from the uncached reference {w}"),
+            ));
+        }
+        if got.ops.len() != want.ops.len() {
+            rep.push(Diag::error(
+                "aud.cache-coherence",
+                actx,
+                format!("{} ops reported vs {} uncached", got.ops.len(), want.ops.len()),
+            ));
+        }
+    }
+    for (p, d, kv) in ITER_PROBES {
+        let actx = format!("{ctx} iter p={p} d={d} kv={kv}");
+        let w = reference.iteration_cost(p, d, kv);
+        let g = candidate.iteration_cost(p, d, kv);
+        let g2 = candidate.iteration_cost(p, d, kv);
+        if g.latency_ns.to_bits() != w.latency_ns.to_bits() || g.counts != w.counts {
+            rep.push(Diag::error(
+                "aud.cache-coherence",
+                actx.clone(),
+                format!(
+                    "iteration_cost latency {:.6} ns diverges from the uncached {:.6} ns",
+                    g.latency_ns, w.latency_ns
+                ),
+            ));
+        }
+        if g2.latency_ns.to_bits() != g.latency_ns.to_bits() || g2.counts != g.counts {
+            rep.push(Diag::error("aud.cache-coherence", actx, "iteration_cost unstable across repeat queries".to_string()));
+        }
+    }
+    rep.normalize();
+    rep
+}
+
+/// Re-prove the auto-mapper's structural guarantee from the audit side:
+/// at every anchor and iteration probe, the searched model never costs
+/// more than the static mapping.
+pub fn check_never_lose(
+    ctx: &str,
+    auto: &dyn CostModel,
+    static_ref: &dyn CostModel,
+    anchors: &[ShapeAnchor],
+) -> CheckReport {
+    let mut rep = CheckReport::default();
+    for a in anchors {
+        let s = static_ref.phase_report(a.phase, a.batch, a.seq_len).latency_ns;
+        let g = auto.phase_report(a.phase, a.batch, a.seq_len).latency_ns;
+        if g > s * (1.0 + REL_TOL) {
+            rep.push(Diag::error(
+                "aud.never-lose",
+                format!("{ctx} {}", a.label()),
+                format!("auto-mapped latency {g:.3} ns exceeds static {s:.3} ns"),
+            ));
+        }
+    }
+    for (p, d, kv) in ITER_PROBES {
+        let s = static_ref.iteration_cost(p, d, kv).latency_ns;
+        let g = auto.iteration_cost(p, d, kv).latency_ns;
+        if g > s * (1.0 + REL_TOL) {
+            rep.push(Diag::error(
+                "aud.never-lose",
+                format!("{ctx} iter p={p} d={d} kv={kv}"),
+                format!("auto-mapped iteration {g:.3} ns exceeds static {s:.3} ns"),
+            ));
+        }
+    }
+    rep.normalize();
+    rep
+}
+
+// ------------------------------------------------------- fidelity / fit
+
+fn shape_parts(shape: &str) -> (u64, String) {
+    let mut it = shape.split_whitespace();
+    let vol = it
+        .next()
+        .and_then(|t| t.split('=').nth(1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0);
+    (vol, it.next().unwrap_or("").to_string())
+}
+
+/// Cross-fidelity coherence over the calibration anchor rows: finite
+/// numbers, calibrated residual inside the gated band, raw ratio inside
+/// its documented band (warning), and — per (collective, structural
+/// param) group — the analytic and simulated tiers ranking anchor
+/// volumes the same way (warning; both tiers are chunk-linear, so an
+/// inversion means one of them lost linearity).
+pub fn check_fidelity_anchors(anchors: &[CalibAnchor]) -> CheckReport {
+    let mut rep = CheckReport::default();
+    for a in anchors {
+        let ctx = format!("{} {}", a.collective, a.shape);
+        for (name, v) in [
+            ("analytic_ns", a.analytic_ns),
+            ("simulated_ns", a.simulated_ns),
+            ("calibrated_ns", a.calibrated_ns),
+        ] {
+            num(&mut rep, &ctx, name, v);
+        }
+        if !(a.analytic_ns > 0.0 && a.simulated_ns > 0.0) {
+            continue; // ratios are undefined at a degenerate anchor
+        }
+        let err = a.calibrated_err();
+        if !err.is_finite() || err > FIDELITY_BAND {
+            rep.push(Diag::error(
+                "aud.fidelity-band",
+                ctx.clone(),
+                format!(
+                    "calibrated residual {:.1}% exceeds the {:.0}% gate",
+                    err * 100.0,
+                    FIDELITY_BAND * 100.0
+                ),
+            ));
+        }
+        let ratio = a.raw_ratio();
+        if ratio < RAW_RATIO_BAND.0 || ratio > RAW_RATIO_BAND.1 {
+            rep.push(Diag::warning(
+                "aud.fidelity-band",
+                ctx,
+                format!(
+                    "raw sim/analytic ratio {ratio:.2} outside the documented {}-{}x band",
+                    RAW_RATIO_BAND.0, RAW_RATIO_BAND.1
+                ),
+            ));
+        }
+    }
+    let mut groups: BTreeMap<(String, String), Vec<(u64, f64, f64)>> = BTreeMap::new();
+    for a in anchors {
+        let (vol, param) = shape_parts(&a.shape);
+        groups
+            .entry((a.collective.to_string(), param))
+            .or_default()
+            .push((vol, a.analytic_ns, a.simulated_ns));
+    }
+    for ((collective, param), mut rows) in groups {
+        rows.sort_by_key(|r| r.0);
+        for w in rows.windows(2) {
+            let (v0, a0, s0) = w[0];
+            let (v1, a1, s1) = w[1];
+            if (a1 >= a0) != (s1 >= s0) {
+                rep.push(Diag::warning(
+                    "aud.fidelity-band",
+                    format!("{collective} {param}"),
+                    format!(
+                        "analytic and simulated tiers disagree on the ordering of volumes {v0} and {v1}"
+                    ),
+                ));
+            }
+        }
+    }
+    rep.normalize();
+    rep
+}
+
+/// Every fitted NoC correction factor finite and inside the declared
+/// bounds (rows from [`calibration_factors`]).
+pub fn check_calibration_factors(rows: &[(&'static str, u64, f64)]) -> CheckReport {
+    let mut rep = CheckReport::default();
+    for (collective, key, factor) in rows {
+        check_factor(&mut rep, collective, *key, *factor);
+    }
+    rep.normalize();
+    rep
+}
+
+// ------------------------------------------------------------- drivers
+
+/// Audit one lattice point: report sanity + conservation at every shape
+/// anchor, cache coherence against the uncached reference, and — per
+/// mapping mode — monotonicity chains (static) or the never-lose
+/// re-proof (auto). The AttAcc roofline has its own simulator and no
+/// PIM cost model, so it gets report sanity only.
+pub fn audit_point(point: &AuditPoint, opts: &AuditOptions) -> CheckReport {
+    let ctx = point.label();
+    let mut rep = CheckReport::default();
+    let rc = point.rc();
+    let anchors = lattice::shape_anchors(opts.deep);
+    if point.arch == ArchKind::AttAcc {
+        for a in &anchors {
+            let mut rc2 = rc.clone();
+            rc2.phase = a.phase;
+            rc2.batch = a.batch;
+            rc2.seq_len = a.seq_len;
+            let r = attacc::simulate(&rc2, &AttAccConfig::default());
+            rep.extend(check_phase_sanity(&format!("{ctx} {}", a.label()), &r));
+        }
+        rep.normalize();
+        return rep;
+    }
+    let sys = System::new(rc.clone());
+    for a in &anchors {
+        let actx = format!("{ctx} {}", a.label());
+        let r = sys.run_shape(a.phase, a.batch, a.seq_len);
+        rep.extend(check_phase_sanity(&actx, &r));
+        rep.extend(check_phase_conservation(&actx, &r, &rc, a.phase, a.batch, a.seq_len));
+    }
+    let cached = CachedCostModel::new(System::new(rc.clone()));
+    rep.extend(check_model_coherence(&format!("{ctx} cached"), &sys, &cached, &anchors));
+    match point.mapping {
+        MappingMode::Static => rep.extend(check_monotonic(&ctx, &sys, opts.deep)),
+        MappingMode::Auto => {
+            let auto = AutoMappedCostModel::new(rc.clone());
+            for a in &anchors {
+                let actx = format!("{ctx} {}", a.label());
+                let r = auto.phase_report(a.phase, a.batch, a.seq_len);
+                rep.extend(check_phase_sanity(&actx, &r));
+                rep.extend(check_phase_conservation(&actx, &r, &rc, a.phase, a.batch, a.seq_len));
+            }
+            rep.extend(check_never_lose(&ctx, &auto, &sys, &anchors));
+            // the searched model must also answer repeat queries stably
+            rep.extend(check_model_coherence(&format!("{ctx} auto-repeat"), &auto, &auto, &anchors));
+        }
+    }
+    rep.normalize();
+    rep
+}
+
+/// The arch-independent audit slice, run once per `compair audit`
+/// invocation: collective closed-form identities on both shipped
+/// hardware points, the calibration anchors and fitted factors, and one
+/// serving + one disaggregated-cluster sample routed through the shared
+/// report validator and the KV-migration conservation check.
+pub fn check_global(opts: &AuditOptions) -> CheckReport {
+    let mut rep = CheckReport::default();
+    rep.extend(check_collective_identities("paper", &HwConfig::paper()));
+    rep.extend(check_collective_identities("paper-opt", &HwConfig::paper_opt()));
+    rep.extend(check_fidelity_anchors(&calibration_report(&HwConfig::paper(), 1)));
+    rep.extend(check_calibration_factors(&calibration_factors(&HwConfig::paper(), 1)));
+    if opts.deep {
+        rep.extend(check_fidelity_anchors(&calibration_report(&HwConfig::paper_opt(), 1)));
+        rep.extend(check_calibration_factors(&calibration_factors(&HwConfig::paper_opt(), 1)));
+    }
+    let rc = RunConfig::new(ArchKind::CompAirOpt, crate::config::ModelConfig::tiny());
+    let cfg = ServeConfig { n_requests: 16, prompt_len: 64, gen_len: 4, ..Default::default() };
+    let sr = Server::new(rc.clone(), cfg.clone()).run();
+    rep.extend(check_serve_report("serve compair-opt/tiny", &sr));
+    let ccfg =
+        ClusterConfig { replicas: 2, disagg: Some((1, 1)), router: RouterPolicy::RoundRobin };
+    let cr = Cluster::new(rc.clone(), cfg, ccfg).run();
+    rep.extend(check_serve_report("cluster compair-opt/tiny", &cr.report));
+    rep.extend(check_cluster_migration("cluster compair-opt/tiny", &cr, &rc));
+    rep.normalize();
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+
+    #[test]
+    fn shipped_point_audits_clean() {
+        let p = AuditPoint {
+            arch: ArchKind::CompAirOpt,
+            model: ModelConfig::tiny(),
+            fidelity: crate::config::NocFidelity::Analytic,
+            mapping: MappingMode::Static,
+        };
+        let rep = audit_point(&p, &AuditOptions::default());
+        assert!(rep.is_clean(), "{}", rep.render_brief());
+    }
+
+    #[test]
+    fn collective_identities_hold_on_shipped_hardware() {
+        for (label, hw) in [("paper", HwConfig::paper()), ("paper-opt", HwConfig::paper_opt())] {
+            let rep = check_collective_identities(label, &hw);
+            assert!(rep.diags.is_empty(), "{label}:\n{}", rep.render_brief());
+        }
+    }
+
+    #[test]
+    fn counter_mismatch_fires_bytes_conservation() {
+        let mut rep = CheckReport::default();
+        check_counter(&mut rep, "fabricated", "cxl_bytes", 5, 6);
+        assert!(rep.has_code("aud.bytes-conservation"));
+    }
+
+    #[test]
+    fn factor_bounds_accept_unity_reject_runaway() {
+        let mut rep = CheckReport::default();
+        check_factor(&mut rep, "reduce", 16, 1.0);
+        assert!(rep.diags.is_empty());
+        check_factor(&mut rep, "reduce", 16, FACTOR_BOUNDS.1 * 2.0);
+        assert!(rep.has_code("aud.calibration-bounds"));
+    }
+}

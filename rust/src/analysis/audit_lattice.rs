@@ -1,0 +1,207 @@
+//! The deterministic pow2 lattice `compair audit` walks.
+//!
+//! An audit point fixes everything but the workload shape — architecture
+//! variant, model, NoC fidelity tier, and mapping mode — and the shape
+//! anchors / pow2 chains below fix the shapes each invariant is proved
+//! at. The lattice is a pure function of `(filters, deep)`: no
+//! randomness, no environment, so `compair audit` covers the identical
+//! points however the work is fanned out, and `--jobs N` output is
+//! byte-identical to `--jobs 1` by the pool's submission-order merge.
+//!
+//! The default lattice keeps the gate fast: two models (the test-sized
+//! `tiny` and the paper's `llama2-7b`), the analytic and calibrated NoC
+//! tiers, static mapping everywhere, plus one auto-mapping point per
+//! non-roofline arch on `tiny` (where the search space is exhaustively
+//! enumerable). `--deep` widens to the full model zoo, the flit-level
+//! simulated tier, and longer monotonicity chains.
+
+use crate::config::{ArchKind, MappingMode, ModelConfig, NocFidelity, Phase, RunConfig};
+
+/// One workload shape an invariant is proved at.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShapeAnchor {
+    pub phase: Phase,
+    pub batch: usize,
+    pub seq_len: usize,
+}
+
+impl ShapeAnchor {
+    pub fn label(&self) -> String {
+        format!("{} b={} s={}", self.phase.label(), self.batch, self.seq_len)
+    }
+}
+
+/// One (arch × model × fidelity × mapping) lattice point; shapes vary
+/// per check inside it.
+#[derive(Debug, Clone)]
+pub struct AuditPoint {
+    pub arch: ArchKind,
+    pub model: ModelConfig,
+    pub fidelity: NocFidelity,
+    pub mapping: MappingMode,
+}
+
+impl AuditPoint {
+    /// Stable display/context label, e.g. `compair-opt/tiny/calibrated/static`.
+    pub fn label(&self) -> String {
+        format!(
+            "{}/{}/{}/{}",
+            self.arch.cli_name(),
+            self.model.name,
+            self.fidelity.label(),
+            self.mapping.label()
+        )
+    }
+
+    /// The base run configuration this point audits (shape fields are
+    /// overridden per anchor; `jobs = 1` because audit points already fan
+    /// out on the pool and nested pools would break nothing but waste
+    /// threads).
+    pub fn rc(&self) -> RunConfig {
+        let mut rc = RunConfig::new(self.arch, self.model.clone());
+        rc.noc_fidelity = self.fidelity;
+        rc.mapping = self.mapping;
+        rc.jobs = 1;
+        rc
+    }
+}
+
+/// The shape anchors every per-point invariant is proved at.
+pub fn shape_anchors(deep: bool) -> Vec<ShapeAnchor> {
+    let mut v = vec![
+        ShapeAnchor { phase: Phase::Prefill, batch: 1, seq_len: 128 },
+        ShapeAnchor { phase: Phase::Prefill, batch: 4, seq_len: 512 },
+        ShapeAnchor { phase: Phase::Decode, batch: 1, seq_len: 256 },
+        ShapeAnchor { phase: Phase::Decode, batch: 8, seq_len: 1024 },
+    ];
+    if deep {
+        v.push(ShapeAnchor { phase: Phase::Prefill, batch: 16, seq_len: 2048 });
+        v.push(ShapeAnchor { phase: Phase::Decode, batch: 64, seq_len: 4096 });
+    }
+    v
+}
+
+/// Pow2 batch chain for the monotonicity check (seq held fixed).
+pub fn batch_chain(deep: bool) -> Vec<usize> {
+    if deep {
+        vec![1, 2, 4, 8, 16, 32]
+    } else {
+        vec![1, 2, 4, 8]
+    }
+}
+
+/// Pow2 context chain for the monotonicity check (batch held fixed).
+pub fn seq_chain(deep: bool) -> Vec<usize> {
+    if deep {
+        vec![128, 256, 512, 1024, 2048, 4096]
+    } else {
+        vec![128, 256, 512, 1024]
+    }
+}
+
+/// Pow2 KV chain for the iteration-cost monotonicity check.
+pub fn kv_chain(deep: bool) -> Vec<usize> {
+    if deep {
+        vec![256, 512, 1024, 2048, 4096, 8192]
+    } else {
+        vec![256, 512, 1024, 2048]
+    }
+}
+
+/// Models the default lattice covers when `--model` is not given.
+pub fn default_models(deep: bool) -> Vec<ModelConfig> {
+    if deep {
+        ModelConfig::zoo()
+    } else {
+        vec![ModelConfig::tiny(), ModelConfig::by_name("llama2-7b").expect("zoo model")]
+    }
+}
+
+/// NoC fidelity tiers each (arch, model) pair is audited under.
+pub fn fidelities(deep: bool) -> Vec<NocFidelity> {
+    if deep {
+        NocFidelity::all().to_vec()
+    } else {
+        vec![NocFidelity::Analytic, NocFidelity::Calibrated]
+    }
+}
+
+/// Expand the full point lattice for the selected archs and models, in a
+/// fixed deterministic order (arch-major, then model, fidelity, mapping).
+/// The AttAcc roofline has no NoC tiers, no PIM cost model and no mapping
+/// space, so it contributes exactly one report-sanity point per model;
+/// auto-mapping points run on `tiny` only, where every variant's search
+/// space is exhaustively enumerable and the never-lose re-proof is cheap.
+pub fn points(archs: &[ArchKind], models: &[ModelConfig], deep: bool) -> Vec<AuditPoint> {
+    let mut pts = Vec::new();
+    for &arch in archs {
+        for model in models {
+            if arch == ArchKind::AttAcc {
+                pts.push(AuditPoint {
+                    arch,
+                    model: model.clone(),
+                    fidelity: NocFidelity::Analytic,
+                    mapping: MappingMode::Static,
+                });
+                continue;
+            }
+            for fid in fidelities(deep) {
+                pts.push(AuditPoint {
+                    arch,
+                    model: model.clone(),
+                    fidelity: fid,
+                    mapping: MappingMode::Static,
+                });
+            }
+            if model.name == "tiny" {
+                pts.push(AuditPoint {
+                    arch,
+                    model: model.clone(),
+                    fidelity: NocFidelity::Analytic,
+                    mapping: MappingMode::Auto,
+                });
+            }
+        }
+    }
+    pts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lattice_is_deterministic_and_pow2() {
+        assert_eq!(points(&ArchKind::all(), &default_models(false), false).len(), {
+            // 5 PIM archs × 2 models × 2 fidelities + 5 auto points on tiny
+            // + 1 AttAcc point per model
+            5 * 2 * 2 + 5 + 2
+        });
+        for chain in [batch_chain(true), seq_chain(true), kv_chain(true)] {
+            assert!(chain.windows(2).all(|w| w[1] == 2 * w[0]), "{chain:?} is not pow2");
+        }
+        let a = points(&ArchKind::all(), &default_models(true), true);
+        let b = points(&ArchKind::all(), &default_models(true), true);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.label(), y.label());
+        }
+    }
+
+    #[test]
+    fn deep_widens_the_lattice() {
+        assert!(shape_anchors(true).len() > shape_anchors(false).len());
+        assert!(default_models(true).len() > default_models(false).len());
+        assert!(fidelities(true).len() > fidelities(false).len());
+    }
+
+    #[test]
+    fn attacc_points_are_sanity_only() {
+        let pts = points(&[ArchKind::AttAcc], &default_models(false), false);
+        assert_eq!(pts.len(), 2);
+        for p in pts {
+            assert_eq!(p.mapping, MappingMode::Static);
+            assert_eq!(p.fidelity, NocFidelity::Analytic);
+        }
+    }
+}

@@ -15,6 +15,8 @@
 //! deterministic order, so `compair check --format json` is
 //! byte-identical however the work is fanned out.
 
+pub mod audit;
+pub mod audit_lattice;
 pub mod config_check;
 pub mod isa_lint;
 pub mod map_check;
@@ -121,7 +123,73 @@ pub const ALL_CODES: &[&str] = &[
     "cfg.flit-capacity",
     "cfg.slo-sanity",
     "cfg.disagg-split",
+    // audit (semantic invariants over the cost pipeline)
+    "aud.non-finite",
+    "aud.negative",
+    "aud.unit-range",
+    "aud.op-conservation",
+    "aud.energy-conservation",
+    "aud.bytes-conservation",
+    "aud.monotonic",
+    "aud.cache-coherence",
+    "aud.never-lose",
+    "aud.fidelity-band",
+    "aud.calibration-bounds",
 ];
+
+/// One-line meaning per registered code, behind `compair check
+/// --list-codes` / `--explain <code>`. Total coverage of [`ALL_CODES`] is
+/// enforced by `tests/audit.rs` (`descriptions_cover_every_registered_code`).
+pub fn code_description(code: &str) -> Option<&'static str> {
+    Some(match code {
+        // isa_lint
+        "isa.addr-bounds" => "an instruction addresses past the bank memory",
+        "isa.mask-range" => "a bank mask sets bits beyond the channel's banks",
+        "isa.mask-empty" => "a bank mask selects no banks (the op is a no-op)",
+        "isa.len-zero" => "an instruction has a zero element length",
+        "isa.exchange-shape" => "a NoC exchange's offset/group/len shape is inconsistent",
+        "isa.use-before-def" => "a bank address range is read before any store reaches it",
+        "isa.dead-store" => "a store is fully overwritten before any read",
+        "isa.lane-overflow" => "a fused chain needs more router columns than the mesh has",
+        "isa.alu-conflict" => "two chained steps bind the same router ALU with different args",
+        "isa.div-occupancy" => "back-to-back divides oversubscribe the iterative divider",
+        "isa.sram-order" => "an SRAM gang compute precedes the write that loads it",
+        "isa.sram-capacity" => "an SRAM write exceeds the gang's weight capacity",
+        "isa.count-drift" => "statically derived flit/op counts drift from the closed forms",
+        // map_check
+        "map.illegal-placement" => "a slot is mapped to an engine that cannot execute it",
+        "map.nonlinear-on-pim" => "a non-linear op is placed on a PIM MAC engine",
+        "map.sram-capacity" => "an FC projection oversubscribes SRAM gang residency (streams)",
+        "map.kv-capacity" => "the KV cache at max context exceeds device DRAM (streams)",
+        "map.weight-capacity" => "per-device weights exceed device DRAM capacity (streams)",
+        // config_check
+        "cfg.mesh-banks" => "mesh rows != banks per channel",
+        "cfg.head-divisibility" => "model head count does not divide the model dimension",
+        "cfg.kv-dtype" => "bookkept kv_bytes_per_token disagrees with the geometric value",
+        "cfg.shape-positive" => "a workload shape field (batch/seq/gen) is zero",
+        "cfg.tp-devices" => "tensor-parallel degree exceeds the device count",
+        "cfg.tp-remainder" => "devices do not split evenly into tp groups",
+        "cfg.fabric-devices" => "device count exceeds the CXL fabric's ports",
+        "cfg.gang-macros" => "SRAM gang shape does not tile the per-bank macros",
+        "cfg.voltage-corner" => "SRAM voltage is outside the characterized corners",
+        "cfg.flit-capacity" => "flit width cannot carry the 72-bit packet encoding",
+        "cfg.slo-sanity" => "a scenario SLO is zero, non-finite, or inverted",
+        "cfg.disagg-split" => "a disaggregated split has an empty pool or wrong total",
+        // audit
+        "aud.non-finite" => "a report carries a NaN or infinite number",
+        "aud.negative" => "a latency/energy/throughput field is negative",
+        "aud.unit-range" => "a fraction/utilization/attainment is outside [0, 1]",
+        "aud.op-conservation" => "per-op costs do not compose to the phase total",
+        "aud.energy-conservation" => "energy breakdown disagrees with independently re-priced counts",
+        "aud.bytes-conservation" => "bytes in != bytes out across a collective or KV migration",
+        "aud.monotonic" => "cost decreased when the workload grew along a pow2 chain",
+        "aud.cache-coherence" => "a memoizing cost model diverges from the uncached reference",
+        "aud.never-lose" => "an auto-mapped cost exceeds the static mapping's",
+        "aud.fidelity-band" => "a calibrated anchor is outside its gated band of the simulator",
+        "aud.calibration-bounds" => "a fitted NoC factor is non-finite or outside FACTOR_BOUNDS",
+        _ => return None,
+    })
+}
 
 /// An accumulated, deterministically ordered set of diagnostics.
 #[derive(Debug, Clone, Default, PartialEq, Eq)]

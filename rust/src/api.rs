@@ -33,7 +33,7 @@
 //! the fidelity is part of every memoization key, so cached results never
 //! mix tiers.
 
-use crate::analysis::{config_check, map_check, CheckReport};
+use crate::analysis::{audit, audit_lattice, config_check, map_check, CheckReport};
 use crate::arch::{attacc, AttAccConfig, CachedCostModel, PhaseReport, System};
 use crate::config::{ArchKind, MappingMode, RunConfig};
 use crate::coordinator::{
@@ -80,6 +80,24 @@ impl Engine {
         }
         rep.normalize();
         rep
+    }
+
+    /// Semantically audit this point: report sanity, op/energy
+    /// conservation, cache coherence, and — per mapping mode —
+    /// monotonicity or the never-lose re-proof, all at the standard shape
+    /// anchors (see `analysis::audit`). Complements [`Engine::check`]:
+    /// `check` proves the *inputs* are legal, `audit` proves the *numbers*
+    /// obey the physics. Returns a normalized [`CheckReport`] with
+    /// `aud.*` codes; `compair audit` fans the full lattice through the
+    /// same pass.
+    pub fn audit(&self) -> CheckReport {
+        let point = audit_lattice::AuditPoint {
+            arch: self.rc.arch,
+            model: self.rc.model.clone(),
+            fidelity: self.rc.noc_fidelity,
+            mapping: self.rc.mapping,
+        };
+        audit::audit_point(&point, &audit::AuditOptions::default())
     }
 
     /// A fresh, independent memoizing cost model over this configuration.
@@ -348,6 +366,14 @@ mod tests {
             let rep = Engine::new(rc(arch)).check();
             assert!(rep.is_clean(), "{arch:?}:\n{}", rep.render_brief());
         }
+    }
+
+    #[test]
+    fn audit_passes_the_default_compair_point() {
+        let mut c = rc(ArchKind::CompAirOpt);
+        c.model = ModelConfig::tiny();
+        let rep = Engine::new(c).audit();
+        assert!(rep.is_clean(), "{}", rep.render_brief());
     }
 
     #[test]

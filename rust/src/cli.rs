@@ -5,7 +5,7 @@
 use std::collections::BTreeMap;
 
 /// Flags that never take a value (resolves the `--all fig15` ambiguity).
-const KNOWN_SWITCHES: &[&str] = &["all", "verbose", "quiet"];
+const KNOWN_SWITCHES: &[&str] = &["all", "verbose", "quiet", "deep", "list-codes"];
 
 /// Parsed command line.
 #[derive(Debug, Clone, Default)]
@@ -148,6 +148,18 @@ USAGE:
                                           over every (arch, model) point;
                                           exits nonzero on any error-severity
                                           diagnostic (warnings pass)
+                   [--list-codes]         print every registered diagnostic
+                                          code with its one-line meaning
+                   [--explain CODE]       explain one diagnostic code
+  compair audit    [--arch A] [--model M] semantic auditor: proves physical
+                   [--deep]               invariants (finiteness, op/energy/
+                   [--jobs N|auto]        bytes conservation, monotonicity,
+                                          cache coherence, never-lose,
+                                          fidelity bands, calibration bounds)
+                                          over the pow2 point lattice; --deep
+                                          widens to the full model zoo, the
+                                          simulated NoC tier and longer
+                                          chains; exits nonzero on any error
   compair config show                     print the Table-3 hardware config
   compair list                            list figures/models/archs/scenarios
 
@@ -248,6 +260,17 @@ mod tests {
         let a = parse("figures fig15 --all");
         assert!(a.has("all"));
         assert_eq!(a.positional, vec!["fig15"]);
+    }
+
+    #[test]
+    fn audit_switches_parse_as_switches() {
+        // --deep and --list-codes take no value; a following flag must not
+        // be swallowed as one
+        let a = parse("audit --deep --jobs 4");
+        assert!(a.has("deep"));
+        assert_eq!(a.flag("jobs"), Some("4"));
+        let a = parse("check --list-codes");
+        assert!(a.has("list-codes"));
     }
 
     #[test]

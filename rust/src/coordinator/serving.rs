@@ -745,15 +745,11 @@ mod tests {
         assert_eq!(r.completed, 1);
         let with_work = r.per_class.iter().filter(|c| c.completed > 0).count();
         assert_eq!(with_work, 1, "exactly one class served the single request");
-        for c in &r.per_class {
-            assert!(c.ttft_attainment.is_finite(), "{} ttft_attainment NaN", c.class);
-            assert!(c.tpot_attainment.is_finite(), "{} tpot_attainment NaN", c.class);
-            assert!(c.slo_attainment.is_finite(), "{} slo_attainment NaN", c.class);
-            if c.completed == 0 {
-                assert!(c.ttft_attainment.abs() < 1e-12);
-                assert!(c.tpot_attainment.abs() < 1e-12);
-            }
-        }
+        // finiteness, unit ranges and the zero-completed ⇒ 0.0 attainment
+        // contract are enforced by the shared audit validator — the same
+        // predicate `compair audit` runs on its serving sample
+        let rep = crate::analysis::audit::check_serve_report("mixed n=1", &r);
+        assert!(rep.is_clean(), "{}", rep.render_brief());
     }
 
     #[test]

@@ -41,16 +41,26 @@ pub struct EnergyBreakdown {
 }
 
 impl EnergyBreakdown {
+    /// Every component as a `(name, pJ)` pair, in declaration order — the
+    /// one registry behind `total_pj`, the JSON rendering, and the semantic
+    /// auditor's per-component sweeps (`analysis/audit.rs`), so a new
+    /// component cannot silently escape any of them.
+    pub fn components(&self) -> [(&'static str, f64); 9] {
+        [
+            ("dram_pj", self.dram_pj),
+            ("sram_pj", self.sram_pj),
+            ("hb_pj", self.hb_pj),
+            ("noc_pj", self.noc_pj),
+            ("gb_pj", self.gb_pj),
+            ("cxl_pj", self.cxl_pj),
+            ("nlu_pj", self.nlu_pj),
+            ("gpu_pj", self.gpu_pj),
+            ("static_pj", self.static_pj),
+        ]
+    }
+
     pub fn total_pj(&self) -> f64 {
-        self.dram_pj
-            + self.sram_pj
-            + self.hb_pj
-            + self.noc_pj
-            + self.gb_pj
-            + self.cxl_pj
-            + self.nlu_pj
-            + self.gpu_pj
-            + self.static_pj
+        self.components().iter().map(|(_, pj)| pj).sum()
     }
 
     pub fn add(&self, o: &EnergyBreakdown) -> EnergyBreakdown {
@@ -84,16 +94,9 @@ impl EnergyBreakdown {
 
 impl ToJson for EnergyBreakdown {
     fn to_json(&self) -> Json {
-        Json::obj()
-            .field("dram_pj", self.dram_pj)
-            .field("sram_pj", self.sram_pj)
-            .field("hb_pj", self.hb_pj)
-            .field("noc_pj", self.noc_pj)
-            .field("gb_pj", self.gb_pj)
-            .field("cxl_pj", self.cxl_pj)
-            .field("nlu_pj", self.nlu_pj)
-            .field("gpu_pj", self.gpu_pj)
-            .field("static_pj", self.static_pj)
+        self.components()
+            .iter()
+            .fold(Json::obj(), |j, (name, pj)| j.field(name, *pj))
             .field("total_pj", self.total_pj())
     }
 }

@@ -30,6 +30,7 @@ fn main() {
         "serve" => cmd_serve(&args),
         "isa-demo" => cmd_isa_demo(&args),
         "check" => cmd_check(&args),
+        "audit" => cmd_audit(&args),
         "config" => cmd_config(&args),
         "list" => cmd_list(&args),
         "" | "help" | "-h" => {
@@ -386,8 +387,54 @@ fn cmd_isa_demo(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// `check --list-codes` / `check --explain CODE`: the registered
+/// diagnostic codes with their one-line meanings, straight from the
+/// `ALL_CODES` × `code_description` registry.
+fn cmd_check_codes(args: &Args, format: OutputFormat) -> Result<(), String> {
+    if let Some(code) = args.flag("explain") {
+        let desc = analysis::code_description(code)
+            .ok_or_else(|| format!("unknown diagnostic code '{code}' (see --list-codes)"))?;
+        match format {
+            OutputFormat::Text => println!("{code}: {desc}"),
+            OutputFormat::Json => {
+                let out = Json::obj()
+                    .field("command", "check")
+                    .field("code", code)
+                    .field("description", desc);
+                println!("{}", out.render());
+            }
+        }
+        return Ok(());
+    }
+    let rows: Vec<(&str, &str)> = analysis::ALL_CODES
+        .iter()
+        .map(|&c| (c, analysis::code_description(c).unwrap_or("(undocumented)")))
+        .collect();
+    match format {
+        OutputFormat::Text => {
+            let mut t = Table::new("diagnostic codes", &["code", "meaning"]);
+            for (code, desc) in &rows {
+                t.rowv(vec![code.to_string(), desc.to_string()]);
+            }
+            t.print();
+        }
+        OutputFormat::Json => {
+            let codes = Json::arr(
+                rows.iter()
+                    .map(|(c, d)| Json::obj().field("code", *c).field("description", *d)),
+            );
+            let out = Json::obj().field("command", "check").field("codes", codes);
+            println!("{}", out.render());
+        }
+    }
+    Ok(())
+}
+
 fn cmd_check(args: &Args) -> Result<(), String> {
     let format = args.format()?;
+    if args.has("list-codes") || args.flag("explain").is_some() {
+        return cmd_check_codes(args, format);
+    }
     let jobs = parse_jobs(args)?.unwrap_or_else(pool::default_jobs);
     let archs: Vec<ArchKind> = match args.flag("arch") {
         Some(a) => vec![ArchKind::by_name(a).ok_or("unknown --arch")?],
@@ -477,6 +524,79 @@ fn cmd_check(args: &Args) -> Result<(), String> {
     }
     if errors > 0 {
         return Err(format!("check found {errors} error diagnostic(s)"));
+    }
+    Ok(())
+}
+
+fn cmd_audit(args: &Args) -> Result<(), String> {
+    use compair::analysis::audit::{self, AuditOptions};
+    use compair::analysis::audit_lattice as lattice;
+    let format = args.format()?;
+    let jobs = parse_jobs(args)?.unwrap_or_else(pool::default_jobs);
+    let opts = AuditOptions { deep: args.has("deep") };
+    let archs: Vec<ArchKind> = match args.flag("arch") {
+        Some(a) => vec![ArchKind::by_name(a).ok_or("unknown --arch")?],
+        None => ArchKind::all().to_vec(),
+    };
+    let models: Vec<ModelConfig> = match args.flag("model") {
+        Some(m) => vec![ModelConfig::by_name(m).ok_or("unknown --model")?],
+        None => lattice::default_models(opts.deep),
+    };
+    // the arch-independent slice runs once: collective closed-form
+    // identities, calibration anchors/factors, serving + cluster samples
+    let global = audit::check_global(&opts);
+    // lattice points fan out across the pool; each point pins rc.jobs = 1
+    // (see AuditPoint::rc) and the submission-order merge keeps the output
+    // byte-identical whatever --jobs is
+    let points = lattice::points(&archs, &models, opts.deep);
+    let reports: Vec<(String, analysis::CheckReport)> = pool::par_map_indexed(
+        jobs,
+        points,
+        |_, p| (p.label(), audit::audit_point(&p, &opts)),
+    );
+    let point_errs: usize = reports.iter().map(|(_, r)| r.errors()).sum();
+    let point_warns: usize = reports.iter().map(|(_, r)| r.warnings()).sum();
+    let errors = global.errors() + point_errs;
+    let warnings = global.warnings() + point_warns;
+    if format == OutputFormat::Json {
+        let pts = Json::arr(
+            reports
+                .iter()
+                .map(|(label, rep)| {
+                    Json::obj().field("point", label.as_str()).field("report", rep.to_json())
+                }),
+        );
+        let out = Json::obj()
+            .field("command", "audit")
+            .field("deep", opts.deep)
+            .field("global", global.to_json())
+            .field("points", pts)
+            .field("errors", errors)
+            .field("warnings", warnings)
+            .field("ok", errors == 0);
+        println!("{}", out.render());
+    } else {
+        let mut t = Table::new("audit summary", &["point", "errors", "warnings"]);
+        t.rowv(vec![
+            "global".into(),
+            global.errors().to_string(),
+            global.warnings().to_string(),
+        ]);
+        for (label, rep) in &reports {
+            t.rowv(vec![label.clone(), rep.errors().to_string(), rep.warnings().to_string()]);
+        }
+        t.print();
+        let named = std::iter::once(("global".to_string(), &global))
+            .chain(reports.iter().map(|(l, r)| (l.clone(), r)));
+        for (title, rep) in named {
+            if !rep.diags.is_empty() {
+                println!("{}", rep.render_table(&title));
+            }
+        }
+        println!("audit: {} point(s), {errors} error(s), {warnings} warning(s)", reports.len());
+    }
+    if errors > 0 {
+        return Err(format!("audit found {errors} invariant violation(s)"));
     }
     Ok(())
 }

@@ -20,7 +20,7 @@ pub mod trees;
 pub use curry::{curry_exp, curry_exp_rr, curry_sqrt, CurryAlu};
 pub use mesh::{Delivery, Mesh};
 pub use model::{
-    calibration_report, collective_cost, AnalyticNoc, CalibAnchor, CalibratedNoc, NocCollective,
-    NocModel, SimulatedNoc,
+    calibration_factors, calibration_report, collective_cost, AnalyticNoc, CalibAnchor,
+    CalibratedNoc, NocCollective, NocModel, SimulatedNoc, FACTOR_BOUNDS,
 };
 pub use packet::{Packet, PacketType, PathStep, RouterId, StepOp};

@@ -627,6 +627,33 @@ pub fn calibration_report(hw: &HwConfig, jobs: usize) -> Vec<CalibAnchor> {
         .collect()
 }
 
+/// Declared sanity band for fitted calibration factors. The raw
+/// analytic-vs-simulator ratio is historically within 0.5–2.0× at every
+/// anchor, so a fit escaping this (deliberately generous) band means the
+/// closed forms and the mesh have structurally diverged — the semantic
+/// auditor flags it as `aud.calibration-bounds` rather than letting a
+/// nonsense correction silently rescale every calibrated latency.
+pub const FACTOR_BOUNDS: (f64, f64) = (0.2, 5.0);
+
+/// Every fitted correction factor over the anchor grid, as
+/// `(collective label, normalized structural key, factor)` rows in grid
+/// order — the input to the auditor's `aud.calibration-bounds` check.
+/// `factor()` already falls back to 1.0 on degenerate fits, so every row
+/// is the factor calibrated pricing would actually apply.
+pub fn calibration_factors(hw: &HwConfig, jobs: usize) -> Vec<(&'static str, u64, f64)> {
+    let cal = CalibratedNoc::new(hw);
+    cal.prefit(jobs);
+    let rows = hw.noc.mesh_rows;
+    let mut keys: Vec<(NocCollective, u64)> = Vec::new();
+    for (kind, _elems, param) in anchor_grid(hw) {
+        let key = (kind, factor_key(kind, param, rows));
+        if !keys.contains(&key) {
+            keys.push(key);
+        }
+    }
+    keys.into_iter().map(|(kind, key)| (kind.label(), key, cal.factor(kind, key))).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

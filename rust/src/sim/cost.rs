@@ -90,43 +90,38 @@ impl CostCounts {
         for_each_count!(self, o, *)
     }
 
+    /// Every counter as a `(name, value)` pair, in declaration order — the
+    /// one field registry behind `total_events`, the JSON rendering, and
+    /// the semantic auditor's per-counter sweeps (`analysis/audit.rs`), so
+    /// a new counter cannot silently escape any of them.
+    pub fn fields(&self) -> [(&'static str, u64); 15] {
+        [
+            ("dram_act", self.dram_act),
+            ("dram_col_rd", self.dram_col_rd),
+            ("dram_col_wr", self.dram_col_wr),
+            ("dram_mac", self.dram_mac),
+            ("sram_access", self.sram_access),
+            ("sram_mac", self.sram_mac),
+            ("sram_row_write", self.sram_row_write),
+            ("hb_bytes", self.hb_bytes),
+            ("noc_flit_hops", self.noc_flit_hops),
+            ("noc_alu_ops", self.noc_alu_ops),
+            ("gb_bytes", self.gb_bytes),
+            ("cxl_bytes", self.cxl_bytes),
+            ("nlu_ops", self.nlu_ops),
+            ("gpu_flop", self.gpu_flop),
+            ("gpu_hbm_bytes", self.gpu_hbm_bytes),
+        ]
+    }
+
     pub fn total_events(&self) -> u64 {
-        self.dram_act
-            + self.dram_col_rd
-            + self.dram_col_wr
-            + self.dram_mac
-            + self.sram_access
-            + self.sram_mac
-            + self.sram_row_write
-            + self.hb_bytes
-            + self.noc_flit_hops
-            + self.noc_alu_ops
-            + self.gb_bytes
-            + self.cxl_bytes
-            + self.nlu_ops
-            + self.gpu_flop
-            + self.gpu_hbm_bytes
+        self.fields().iter().map(|(_, v)| v).sum()
     }
 }
 
 impl ToJson for CostCounts {
     fn to_json(&self) -> Json {
-        Json::obj()
-            .field("dram_act", self.dram_act)
-            .field("dram_col_rd", self.dram_col_rd)
-            .field("dram_col_wr", self.dram_col_wr)
-            .field("dram_mac", self.dram_mac)
-            .field("sram_access", self.sram_access)
-            .field("sram_mac", self.sram_mac)
-            .field("sram_row_write", self.sram_row_write)
-            .field("hb_bytes", self.hb_bytes)
-            .field("noc_flit_hops", self.noc_flit_hops)
-            .field("noc_alu_ops", self.noc_alu_ops)
-            .field("gb_bytes", self.gb_bytes)
-            .field("cxl_bytes", self.cxl_bytes)
-            .field("nlu_ops", self.nlu_ops)
-            .field("gpu_flop", self.gpu_flop)
-            .field("gpu_hbm_bytes", self.gpu_hbm_bytes)
+        self.fields().iter().fold(Json::obj(), |j, (name, v)| j.field(name, *v))
     }
 }
 

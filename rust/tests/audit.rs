@@ -1,0 +1,250 @@
+//! The semantic-audit contract, from both sides.
+//!
+//! Positive: everything the repo ships audits clean — every default
+//! lattice point on the test-sized model, the arch-independent global
+//! slice (collective identities, calibration anchors/factors, serving +
+//! cluster samples), and the `Engine::audit` facade. The per-point pass
+//! is also jobs-invariant: fanning the lattice across the pool produces
+//! the identical reports in the identical order.
+//!
+//! Negative: a seeded-defect corpus proves every `aud.*` code in
+//! `analysis::ALL_CODES` can actually fire. Each defect is one doctored
+//! artifact — a tampered report field, a `Defect` cost-model wrapper
+//! injecting one wrong answer, a fabricated calibration row — fed to the
+//! same check the real audit runs.
+
+use std::collections::BTreeSet;
+
+use compair::analysis::audit::{self, AuditOptions};
+use compair::analysis::audit_lattice as lattice;
+use compair::analysis::{self, CheckReport, ALL_CODES};
+use compair::arch::{CostModel, PhaseReport, System};
+use compair::config::{ArchKind, ModelConfig, Phase, RunConfig};
+use compair::coordinator::{Cluster, ClusterConfig, RouterPolicy, ServeConfig, Server};
+use compair::noc::CalibAnchor;
+use compair::util::pool;
+use compair::Engine;
+
+fn tiny_rc(arch: ArchKind) -> RunConfig {
+    let mut rc = RunConfig::new(arch, ModelConfig::tiny());
+    rc.jobs = 1;
+    rc
+}
+
+fn tiny_system() -> System {
+    System::new(tiny_rc(ArchKind::CompAirOpt))
+}
+
+fn real_report() -> (PhaseReport, RunConfig) {
+    let rc = tiny_rc(ArchKind::CompAirOpt);
+    (System::new(rc.clone()).run_shape(Phase::Decode, 4, 512), rc)
+}
+
+/// How a [`Defect`] wrapper corrupts its inner model's answers.
+enum DefectKind {
+    /// Latency shrinks as batch grows — breaks monotonicity.
+    ShrinkWithBatch,
+    /// Every latency is 1 ns high — diverges from any reference.
+    InflateLatency,
+}
+
+/// Test-only cost-model wrapper injecting exactly one violation.
+struct Defect<M: CostModel> {
+    inner: M,
+    kind: DefectKind,
+}
+
+impl<M: CostModel> CostModel for Defect<M> {
+    fn base(&self) -> &RunConfig {
+        self.inner.base()
+    }
+
+    fn phase_report(&self, phase: Phase, batch: usize, seq_len: usize) -> PhaseReport {
+        let mut r = self.inner.phase_report(phase, batch, seq_len);
+        match self.kind {
+            DefectKind::ShrinkWithBatch => r.latency_ns = 1000.0 / batch as f64,
+            DefectKind::InflateLatency => r.latency_ns += 1.0,
+        }
+        r
+    }
+}
+
+/// One seeded defect per audit code: `(code, report the defect produces)`.
+fn corpus() -> Vec<(&'static str, CheckReport)> {
+    let anchors = lattice::shape_anchors(false);
+    let sys = tiny_system();
+
+    let nan = {
+        let (mut r, _) = real_report();
+        r.latency_ns = f64::NAN;
+        audit::check_phase_sanity("nan", &r)
+    };
+    let negative = {
+        let (mut r, _) = real_report();
+        r.energy.dram_pj = -1.0;
+        audit::check_phase_sanity("negative", &r)
+    };
+    let unit = {
+        let (mut r, _) = real_report();
+        r.nonlinear_frac = 1.5;
+        audit::check_phase_sanity("unit", &r)
+    };
+    let op_cons = {
+        let (mut r, rc) = real_report();
+        r.latency_ns *= 2.0; // ops no longer compose to the claimed total
+        audit::check_phase_conservation("op-cons", &r, &rc, Phase::Decode, 4, 512)
+    };
+    let energy_cons = {
+        let (mut r, rc) = real_report();
+        r.energy.dram_pj += 1.0; // breakdown drifts from the re-priced counts
+        audit::check_phase_conservation("energy-cons", &r, &rc, Phase::Decode, 4, 512)
+    };
+    let bytes = {
+        let mut rep = CheckReport::default();
+        audit::check_counter(&mut rep, "fabricated cxl_p2p", "cxl_bytes", 4095, 4096);
+        rep.normalize();
+        rep
+    };
+    let migration = {
+        // a real cluster run with its migration energy tampered after the fact
+        let rc = tiny_rc(ArchKind::CompAirOpt);
+        let serve = ServeConfig { n_requests: 8, prompt_len: 64, gen_len: 4, ..Default::default() };
+        let ccfg =
+            ClusterConfig { replicas: 2, disagg: Some((1, 1)), router: RouterPolicy::RoundRobin };
+        let mut cr = Cluster::new(rc.clone(), serve, ccfg).run();
+        cr.migration_energy_pj += 123.0;
+        audit::check_cluster_migration("tampered", &cr, &rc)
+    };
+    let monotonic = {
+        let m = Defect { inner: tiny_system(), kind: DefectKind::ShrinkWithBatch };
+        audit::check_monotonic("defect", &m, false)
+    };
+    let coherence = {
+        let m = Defect { inner: tiny_system(), kind: DefectKind::InflateLatency };
+        audit::check_model_coherence("defect", &sys, &m, &anchors)
+    };
+    let never_lose = {
+        let m = Defect { inner: tiny_system(), kind: DefectKind::InflateLatency };
+        audit::check_never_lose("defect", &m, &sys, &anchors)
+    };
+    let fidelity = {
+        let a = CalibAnchor {
+            collective: "reduce",
+            shape: "elems=32 banks=16".to_string(),
+            analytic_ns: 100.0,
+            simulated_ns: 100.0,
+            calibrated_ns: 160.0, // 60% residual, far outside the 20% gate
+        };
+        audit::check_fidelity_anchors(&[a])
+    };
+    let factor = {
+        let mut rep = CheckReport::default();
+        audit::check_factor(&mut rep, "reduce", 16, 100.0);
+        rep.normalize();
+        rep
+    };
+
+    vec![
+        ("aud.non-finite", nan),
+        ("aud.negative", negative),
+        ("aud.unit-range", unit),
+        ("aud.op-conservation", op_cons),
+        ("aud.energy-conservation", energy_cons),
+        ("aud.bytes-conservation", bytes),
+        ("aud.bytes-conservation", migration),
+        ("aud.monotonic", monotonic),
+        ("aud.cache-coherence", coherence),
+        ("aud.never-lose", never_lose),
+        ("aud.fidelity-band", fidelity),
+        ("aud.calibration-bounds", factor),
+    ]
+}
+
+#[test]
+fn every_seeded_defect_fires_its_code() {
+    for (code, rep) in corpus() {
+        assert!(rep.has_code(code), "defect for {code} did not fire:\n{}", rep.render_brief());
+    }
+}
+
+#[test]
+fn corpus_covers_every_registered_audit_code() {
+    let covered: BTreeSet<&str> = corpus().iter().map(|(c, _)| *c).collect();
+    let registered: BTreeSet<&str> =
+        ALL_CODES.iter().copied().filter(|c| c.starts_with("aud.")).collect();
+    assert_eq!(covered, registered, "negative corpus out of sync with ALL_CODES");
+}
+
+#[test]
+fn descriptions_cover_every_registered_code() {
+    for &code in ALL_CODES {
+        assert!(
+            analysis::code_description(code).is_some(),
+            "code {code} has no --list-codes description"
+        );
+    }
+    assert!(analysis::code_description("aud.no-such-code").is_none());
+}
+
+#[test]
+fn defects_only_fire_their_own_codes() {
+    // each defect is one violation; its report must not drag in sanity
+    // errors from unrelated invariants
+    for (code, rep) in corpus() {
+        for d in &rep.diags {
+            assert_eq!(d.code, code, "defect for {code} also fired {}: {}", d.code, d.render());
+        }
+    }
+}
+
+#[test]
+fn shipped_lattice_audits_clean_on_tiny() {
+    let opts = AuditOptions::default();
+    for p in lattice::points(&ArchKind::all(), &[ModelConfig::tiny()], false) {
+        let rep = audit::audit_point(&p, &opts);
+        assert!(rep.is_clean(), "{}:\n{}", p.label(), rep.render_brief());
+    }
+}
+
+#[test]
+fn global_audit_slice_is_clean() {
+    let rep = audit::check_global(&AuditOptions::default());
+    assert!(rep.is_clean(), "{}", rep.render_brief());
+}
+
+#[test]
+fn engine_audit_facade_is_clean_and_matches_direct_call() {
+    let rc = tiny_rc(ArchKind::CompAirOpt);
+    let rep = Engine::new(rc.clone()).audit();
+    assert!(rep.is_clean(), "{}", rep.render_brief());
+    let p = lattice::AuditPoint {
+        arch: rc.arch,
+        model: rc.model.clone(),
+        fidelity: rc.noc_fidelity,
+        mapping: rc.mapping,
+    };
+    assert_eq!(rep, audit::audit_point(&p, &AuditOptions::default()));
+}
+
+#[test]
+fn lattice_fanout_is_jobs_invariant() {
+    let opts = AuditOptions::default();
+    let points = lattice::points(
+        &[ArchKind::Cent, ArchKind::CompAirOpt, ArchKind::AttAcc],
+        &[ModelConfig::tiny()],
+        false,
+    );
+    let serial: Vec<CheckReport> =
+        points.iter().map(|p| audit::audit_point(p, &opts)).collect();
+    let fanned = pool::par_map_indexed(4, points, |_, p| audit::audit_point(&p, &opts));
+    assert_eq!(serial, fanned, "--jobs must not change audit output");
+}
+
+#[test]
+fn serve_report_validator_accepts_a_real_run() {
+    let rc = tiny_rc(ArchKind::CompAirOpt);
+    let cfg = ServeConfig { n_requests: 8, prompt_len: 64, gen_len: 4, ..Default::default() };
+    let r = Server::new(rc, cfg).run();
+    let rep = audit::check_serve_report("real", &r);
+    assert!(rep.is_clean(), "{}", rep.render_brief());
+}

@@ -26,6 +26,12 @@
 #                                     point lattice (conservation, monotonicity,
 #                                     coherence, fidelity bands), and its
 #                                     --jobs 4 output must equal --jobs 1
+#   5e. cost-expression proof gate  — `compair prove --format json` must report
+#                                     zero failed proof obligations (units,
+#                                     monotonicity, overflow headroom, pricing
+#                                     coverage, eval drift) with every point
+#                                     certified completely, and its --jobs 4
+#                                     output must equal --jobs 1
 #   6. bench artifacts gate         — bench_hotpath runs in fast mode and both
 #                                     BENCH_serving.json / BENCH_parallel.json
 #                                     must parse
@@ -193,6 +199,39 @@ if [[ "$AUD_J1" == "$AUD_J4" ]]; then
 else
     echo "error: audit output diverges between --jobs 1 and --jobs 4" >&2
     diff <(printf '%s\n' "$AUD_J1") <(printf '%s\n' "$AUD_J4") | head -40 >&2
+    exit 1
+fi
+
+say "cost-expression proof gate (compair prove: zero failed proof obligations)"
+# the prove subcommand captures the cost pipeline as a unit-checked
+# expression IR and certifies unit consistency, monotonicity, overflow
+# headroom, interval bounds and energy-pricing coverage over the whole
+# shape box (not sampled); any error-severity diagnostic fails CI, and
+# every point must certify completely (no budget-exhaustion partials)
+PRV_J1=$(./target/release/compair prove --jobs 1 --format json)
+printf '%s\n' "$PRV_J1" | python3 -c '
+import json, sys
+doc = json.load(sys.stdin)
+assert doc["command"] == "prove", "unexpected command field"
+assert doc["global"]["errors"] == 0, "global pricing-coverage errors: %r" % doc["global"]
+assert doc["points"], "prove covered no lattice points"
+bad = [p for p in doc["points"] if p["report"]["errors"]]
+if bad:
+    sys.exit("proof failures at: " + ", ".join(p["point"] for p in bad))
+partial = [p for p in doc["points"] if not p["summary"]["complete"]]
+if partial:
+    sys.exit("incomplete proofs at: " + ", ".join(p["point"] for p in partial))
+assert doc["errors"] == 0 and doc["ok"] is True, "prove reported errors"
+cells = sum(p["summary"]["certified"] for p in doc["points"])
+print(f"ok: {len(doc['points'])} points certified ({cells} cells), {doc['warnings']} warning(s)")
+'
+# the point fan-out runs on the pool; the report must not depend on --jobs
+PRV_J4=$(./target/release/compair prove --jobs 4 --format json)
+if [[ "$PRV_J1" == "$PRV_J4" ]]; then
+    echo "ok: prove --jobs 4 output is byte-identical to --jobs 1"
+else
+    echo "error: prove output diverges between --jobs 1 and --jobs 4" >&2
+    diff <(printf '%s\n' "$PRV_J1") <(printf '%s\n' "$PRV_J4") | head -40 >&2
     exit 1
 fi
 

@@ -1,0 +1,761 @@
+//! Cost-expression IR: an opt-in capture mode for the cost pipeline.
+//!
+//! When capture is enabled, every leaf cost (DRAM/SRAM/HB/CXL primitives,
+//! `arch/collective.rs` closed forms, `noc/model.rs` tier outputs) and
+//! every `OpCost` combinator (`then`/`join`/`repeat`/`replicate` and the
+//! fold helpers) records a node in a cost-expression DAG. Each node
+//! carries a unit tag ([`Unit`]) and — through its argument expressions
+//! ([`SymE`]) — its dependence on the symbolic workload shape variables
+//! (batch, seq, kv) as a composition from a *monotone-operation
+//! whitelist*: add, multiply (non-negative operands), max, min, ceiling
+//! division, floor division (direction-flipping in its divisor), and the
+//! power-of-two ceiling. `analysis/prove.rs` runs static passes over the
+//! DAG; anything outside the whitelist must be wrapped as
+//! [`SymE::Opaque`], which the prover reports with provenance instead of
+//! certifying.
+//!
+//! Two contracts keep the IR honest (both golden-tested):
+//!
+//! 1. **Capture is strictly opt-in and free when off.** Every tracing
+//!    type holds its symbolic side in an `Option<Rc<..>>` that is `None`
+//!    unless the entry point seeded symbolic inputs ([`Sh::input`] with a
+//!    `Some` capture context). With capture off, no IR is allocated and
+//!    the numeric path is the *same* `OpCost` arithmetic as before, in
+//!    the same order — `System::run_shape_mapped` stays bit-identical.
+//! 2. **Replay is bit-exact.** [`TC`] computes its concrete value by
+//!    delegating to the untouched `OpCost` combinators while the node it
+//!    records stores the same structure; [`replay`] re-executes the node
+//!    tree with those combinators, so point-evaluating the captured IR
+//!    reproduces the concrete pipeline's numbers bit-for-bit. The prover
+//!    checks this (`prv.eval-drift`) at every cell corner.
+
+use crate::sim::{CostCounts, OpCost};
+use std::cell::RefCell;
+use std::rc::Rc;
+
+// ------------------------------------------------------------------ units
+
+/// Unit tag carried by every IR value. Cost nodes are `Ns`-valued (their
+/// event counts carry per-field `Count`/`Bytes` units, see
+/// [`count_unit`]); energy pricing maps `Count`/`Bytes` to `Pj`;
+/// repeat/replicate factors are `Dimensionless`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Unit {
+    Ns,
+    Count,
+    Bytes,
+    Pj,
+    Dimensionless,
+}
+
+impl Unit {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Unit::Ns => "ns",
+            Unit::Count => "count",
+            Unit::Bytes => "bytes",
+            Unit::Pj => "pJ",
+            Unit::Dimensionless => "1",
+        }
+    }
+}
+
+/// The declared unit of each `CostCounts` field — the counts half of the
+/// unit-consistency story (`CostCounts::fields()` is the name registry;
+/// this is the unit registry over the same names).
+pub fn count_unit(field: &str) -> Unit {
+    match field {
+        "hb_bytes" | "gb_bytes" | "cxl_bytes" | "gpu_hbm_bytes" => Unit::Bytes,
+        _ => Unit::Count,
+    }
+}
+
+// -------------------------------------------------------- shape variables
+
+/// The symbolic workload shape variables a proof box ranges over. Decode
+/// boxes use `Batch` × `Kv` (the KV length `seq_len` plays); prefill
+/// boxes use `Batch` × `Seq`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShapeVar {
+    Batch,
+    Seq,
+    Kv,
+}
+
+impl ShapeVar {
+    pub const ALL: [ShapeVar; 3] = [ShapeVar::Batch, ShapeVar::Seq, ShapeVar::Kv];
+
+    pub fn index(&self) -> usize {
+        match self {
+            ShapeVar::Batch => 0,
+            ShapeVar::Seq => 1,
+            ShapeVar::Kv => 2,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ShapeVar::Batch => "batch",
+            ShapeVar::Seq => "seq",
+            ShapeVar::Kv => "kv",
+        }
+    }
+}
+
+/// An inclusive per-variable range box `[lo, hi]` (index by
+/// [`ShapeVar::index`]). Variables a phase does not use sit at a
+/// singleton `[1, 1]`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct VarBox {
+    pub lo: [u64; 3],
+    pub hi: [u64; 3],
+}
+
+impl VarBox {
+    pub fn point(b: u64, s: u64, k: u64) -> VarBox {
+        VarBox { lo: [b, s, k], hi: [b, s, k] }
+    }
+}
+
+// --------------------------------------------------- symbolic expressions
+
+/// A shape expression from the monotone-operation whitelist. All values
+/// are non-negative integers, so every constructor is monotone in each
+/// argument — non-decreasing except the divisors of `CeilDiv`/`FloorDiv`,
+/// which flip direction. [`Opaque`](SymE::Opaque) is the explicit escape
+/// hatch for anything else: it evaluates to its recorded value but the
+/// prover refuses to certify through it (`prv.whitelist-escape`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum SymE {
+    Const(u64),
+    Var(ShapeVar),
+    Add(Rc<SymE>, Rc<SymE>),
+    Mul(Rc<SymE>, Rc<SymE>),
+    CeilDiv(Rc<SymE>, Rc<SymE>),
+    FloorDiv(Rc<SymE>, Rc<SymE>),
+    Max(Rc<SymE>, Rc<SymE>),
+    Min(Rc<SymE>, Rc<SymE>),
+    Pow2Ceil(Rc<SymE>),
+    Opaque { label: &'static str, value: u64 },
+}
+
+impl SymE {
+    /// Evaluate at a point (`vals` indexed by [`ShapeVar::index`]).
+    pub fn eval(&self, vals: [u64; 3]) -> u64 {
+        match self {
+            SymE::Const(c) => *c,
+            SymE::Var(v) => vals[v.index()],
+            SymE::Add(a, b) => a.eval(vals).saturating_add(b.eval(vals)),
+            SymE::Mul(a, b) => a.eval(vals).saturating_mul(b.eval(vals)),
+            SymE::CeilDiv(a, b) => a.eval(vals).div_ceil(b.eval(vals).max(1)),
+            SymE::FloorDiv(a, b) => a.eval(vals) / b.eval(vals).max(1),
+            SymE::Max(a, b) => a.eval(vals).max(b.eval(vals)),
+            SymE::Min(a, b) => a.eval(vals).min(b.eval(vals)),
+            SymE::Pow2Ceil(a) => a.eval(vals).max(1).next_power_of_two(),
+            SymE::Opaque { value, .. } => *value,
+        }
+    }
+
+    /// Sound interval bounds over `bx` via interval arithmetic. Every
+    /// whitelist op is monotone in each argument (with the divisor
+    /// direction flip), so interval propagation is exact per node.
+    /// Returns `None` if an [`SymE::Opaque`] node makes the range
+    /// uncertifiable.
+    pub fn range(&self, bx: &VarBox) -> Option<(u64, u64)> {
+        Some(match self {
+            SymE::Const(c) => (*c, *c),
+            SymE::Var(v) => (bx.lo[v.index()], bx.hi[v.index()]),
+            SymE::Add(a, b) => {
+                let (al, ah) = a.range(bx)?;
+                let (bl, bh) = b.range(bx)?;
+                (al.saturating_add(bl), ah.saturating_add(bh))
+            }
+            SymE::Mul(a, b) => {
+                let (al, ah) = a.range(bx)?;
+                let (bl, bh) = b.range(bx)?;
+                (al.saturating_mul(bl), ah.saturating_mul(bh))
+            }
+            SymE::CeilDiv(a, b) => {
+                let (al, ah) = a.range(bx)?;
+                let (bl, bh) = b.range(bx)?;
+                (al.div_ceil(bh.max(1)), ah.div_ceil(bl.max(1)))
+            }
+            SymE::FloorDiv(a, b) => {
+                let (al, ah) = a.range(bx)?;
+                let (bl, bh) = b.range(bx)?;
+                (al / bh.max(1), ah / bl.max(1))
+            }
+            SymE::Max(a, b) => {
+                let (al, ah) = a.range(bx)?;
+                let (bl, bh) = b.range(bx)?;
+                (al.max(bl), ah.max(bh))
+            }
+            SymE::Min(a, b) => {
+                let (al, ah) = a.range(bx)?;
+                let (bl, bh) = b.range(bx)?;
+                (al.min(bl), ah.min(bh))
+            }
+            SymE::Pow2Ceil(a) => {
+                let (al, ah) = a.range(bx)?;
+                (al.max(1).next_power_of_two(), ah.max(1).next_power_of_two())
+            }
+            SymE::Opaque { .. } => return None,
+        })
+    }
+
+    /// Any [`SymE::Opaque`] node reachable from this expression, with its
+    /// label (provenance for `prv.whitelist-escape`).
+    pub fn find_opaque(&self) -> Option<&'static str> {
+        match self {
+            SymE::Const(_) | SymE::Var(_) => None,
+            SymE::Add(a, b)
+            | SymE::Mul(a, b)
+            | SymE::CeilDiv(a, b)
+            | SymE::FloorDiv(a, b)
+            | SymE::Max(a, b)
+            | SymE::Min(a, b) => a.find_opaque().or_else(|| b.find_opaque()),
+            SymE::Pow2Ceil(a) => a.find_opaque(),
+            SymE::Opaque { label, .. } => Some(label),
+        }
+    }
+}
+
+// ------------------------------------------------------------- directions
+
+/// Direction of an expression/node along one shape variable over a box.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dir {
+    /// Provably constant over the box.
+    Constant,
+    /// Non-decreasing.
+    Inc,
+    /// Non-increasing.
+    Dec,
+    /// Could go either way (or an opaque node blocks certification).
+    Unknown,
+}
+
+impl Dir {
+    /// Combine the directions of two monotonically-composed operands.
+    pub fn comb(self, o: Dir) -> Dir {
+        use Dir::*;
+        match (self, o) {
+            (Constant, d) | (d, Constant) => d,
+            (Inc, Inc) => Inc,
+            (Dec, Dec) => Dec,
+            _ => Unknown,
+        }
+    }
+
+    pub fn flip(self) -> Dir {
+        match self {
+            Dir::Inc => Dir::Dec,
+            Dir::Dec => Dir::Inc,
+            d => d,
+        }
+    }
+
+    /// Acceptable for a non-decreasing certificate.
+    pub fn non_decreasing(self) -> bool {
+        matches!(self, Dir::Constant | Dir::Inc)
+    }
+}
+
+/// Direction of `e` along `v` over `bx`. A singleton interval refines to
+/// `Constant` — this is what resolves products like
+/// `pairs * banks_per_pair` (Inc × Dec) once cell subdivision has pinned
+/// the decreasing factor's range.
+pub fn expr_dir(e: &SymE, v: ShapeVar, bx: &VarBox) -> Dir {
+    if let Some((lo, hi)) = e.range(bx) {
+        if lo == hi {
+            return Dir::Constant;
+        }
+    }
+    match e {
+        SymE::Const(_) => Dir::Constant,
+        SymE::Var(w) => {
+            if *w == v {
+                Dir::Inc
+            } else {
+                Dir::Constant
+            }
+        }
+        SymE::Add(a, b) | SymE::Mul(a, b) | SymE::Max(a, b) | SymE::Min(a, b) => {
+            expr_dir(a, v, bx).comb(expr_dir(b, v, bx))
+        }
+        SymE::CeilDiv(a, b) | SymE::FloorDiv(a, b) => {
+            expr_dir(a, v, bx).comb(expr_dir(b, v, bx).flip())
+        }
+        SymE::Pow2Ceil(a) => expr_dir(a, v, bx),
+        SymE::Opaque { .. } => Dir::Unknown,
+    }
+}
+
+// ------------------------------------------------------------ cost nodes
+
+/// The monotonicity axiom a leaf declares over its arguments.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mono {
+    /// Latency and every event count are non-decreasing in each argument.
+    /// The analytic closed forms and the substrate primitives all satisfy
+    /// this (property-tested in `tests/prove.rs`); the calibrated NoC
+    /// tier satisfies it *given* a stable correction-factor key, which
+    /// the capture records as a guard.
+    IncAll,
+    /// No axiom (the flit-level simulated tier): the prover reports any
+    /// shape-dependent use on a certified path as `prv.non-monotone`.
+    Opaque,
+}
+
+/// A leaf of the cost DAG: one substrate primitive or closed form, with
+/// its symbolic argument expressions and the concrete [`OpCost`] it
+/// returned at the captured point.
+#[derive(Debug, Clone)]
+pub struct LeafNode {
+    pub name: &'static str,
+    pub args: Vec<Rc<SymE>>,
+    pub mono: Mono,
+    pub cost: OpCost,
+}
+
+/// Node kinds mirror the `OpCost` combinator algebra one-to-one.
+#[derive(Debug, Clone)]
+pub enum NodeKind {
+    Leaf(LeafNode),
+    /// Sequential composition: latencies add, counts add.
+    Then(Rc<Node>, Rc<Node>),
+    /// Parallel composition: latency is the max, counts add.
+    Join(Rc<Node>, Rc<Node>),
+    /// Serial repetition by the factor expression (concrete value kept
+    /// for bit-exact replay).
+    Repeat(Rc<Node>, Rc<SymE>, u64),
+    /// Parallel replication: same latency, factor× the events.
+    Replicate(Rc<Node>, Rc<SymE>, u64),
+}
+
+/// One node of the captured cost-expression DAG. Builders always tag
+/// cost nodes `Unit::Ns`; the unit-consistency pass re-derives and checks
+/// the tags, so a doctored node (or a future builder bug) is caught
+/// rather than trusted.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub unit: Unit,
+    pub kind: NodeKind,
+}
+
+impl Node {
+    pub fn leaf(name: &'static str, args: Vec<Rc<SymE>>, mono: Mono, cost: OpCost) -> Rc<Node> {
+        Rc::new(Node { unit: Unit::Ns, kind: NodeKind::Leaf(LeafNode { name, args, mono, cost }) })
+    }
+}
+
+/// Re-execute the node tree with the plain `OpCost` combinators. Leaves
+/// return their stored concrete cost; combinators recompute in the same
+/// order the traced pipeline composed them, so the result is bit-exact.
+pub fn replay(n: &Node) -> OpCost {
+    match &n.kind {
+        NodeKind::Leaf(l) => l.cost,
+        NodeKind::Then(a, b) => replay(a).then(&replay(b)),
+        NodeKind::Join(a, b) => replay(a).join(&replay(b)),
+        NodeKind::Repeat(a, _, k) => replay(a).repeat(*k),
+        NodeKind::Replicate(a, _, k) => replay(a).replicate(*k),
+    }
+}
+
+/// Direction of a node's value (latency *and* every event count share the
+/// same certificate: `then`/`join`/`repeat`/`replicate` compose both
+/// through monotone non-negative operations) along `v` over `bx`.
+pub fn node_dir(n: &Node, v: ShapeVar, bx: &VarBox) -> Dir {
+    match &n.kind {
+        NodeKind::Leaf(l) => {
+            let mut d = Dir::Constant;
+            for a in &l.args {
+                d = d.comb(expr_dir(a, v, bx));
+            }
+            match l.mono {
+                Mono::IncAll => d,
+                // no axiom: only a provably shape-independent use is safe
+                Mono::Opaque => {
+                    if d == Dir::Constant {
+                        Dir::Constant
+                    } else {
+                        Dir::Unknown
+                    }
+                }
+            }
+        }
+        NodeKind::Then(a, b) | NodeKind::Join(a, b) => {
+            node_dir(a, v, bx).comb(node_dir(b, v, bx))
+        }
+        NodeKind::Repeat(a, k, _) | NodeKind::Replicate(a, k, _) => {
+            node_dir(a, v, bx).comb(expr_dir(k, v, bx))
+        }
+    }
+}
+
+// ---------------------------------------------------------- capture mode
+
+/// One shape-dependent control decision the capture observed: branch
+/// predicates (`attn.pairs>=banks`) and calibrated-tier correction-factor
+/// keys. Every recorded guard is a *monotone* function of the shape
+/// variables, so if all corners of a cell agree on the guard vector, the
+/// whole cell does — the prover subdivides until they agree.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Guard {
+    pub what: &'static str,
+    pub val: u64,
+}
+
+/// Capture context: seeded at the entry point, threaded explicitly (no
+/// globals) through the traced lowering, collecting guards as they are
+/// observed.
+#[derive(Debug, Default)]
+pub struct CaptureCtx {
+    guards: RefCell<Vec<Guard>>,
+}
+
+impl CaptureCtx {
+    pub fn new() -> CaptureCtx {
+        CaptureCtx::default()
+    }
+
+    pub fn guard(&self, what: &'static str, val: u64) {
+        self.guards.borrow_mut().push(Guard { what, val });
+    }
+
+    pub fn take_guards(&self) -> Vec<Guard> {
+        std::mem::take(&mut self.guards.borrow_mut())
+    }
+}
+
+/// The capture handle the traced lowering threads: `None` = capture off.
+pub type Cap<'a> = Option<&'a CaptureCtx>;
+
+// -------------------------------------------------- shape-tracked values
+
+/// A shape value: the concrete `usize` the pipeline computes with, plus
+/// (when capturing) the symbolic expression it came from. All arithmetic
+/// delegates the numeric part to the exact `usize` operation the
+/// untraced pipeline used, so the value side is bit-identical whether or
+/// not an expression rides along.
+#[derive(Debug, Clone)]
+pub struct Sh {
+    pub v: usize,
+    pub e: Option<Rc<SymE>>,
+}
+
+impl Sh {
+    /// A literal (configuration constant or untracked value).
+    pub fn lit(v: usize) -> Sh {
+        Sh { v, e: None }
+    }
+
+    /// A symbolic input: tagged with its shape variable when capturing,
+    /// a plain literal otherwise. This is the only place symbols enter —
+    /// capture-off runs allocate no expression anywhere downstream.
+    pub fn input(cap: Cap, v: usize, var: ShapeVar) -> Sh {
+        Sh { v, e: cap.map(|_| Rc::new(SymE::Var(var))) }
+    }
+
+    pub fn u64(&self) -> u64 {
+        self.v as u64
+    }
+
+    /// The expression (materializing a `Const` for literals) — only
+    /// called on paths that already allocate.
+    pub fn expr(&self) -> Rc<SymE> {
+        self.e.clone().unwrap_or_else(|| Rc::new(SymE::Const(self.v as u64)))
+    }
+
+    fn bin(&self, o: &Sh, v: usize, f: fn(Rc<SymE>, Rc<SymE>) -> SymE) -> Sh {
+        let e = if self.e.is_none() && o.e.is_none() {
+            None
+        } else {
+            Some(Rc::new(f(self.expr(), o.expr())))
+        };
+        Sh { v, e }
+    }
+
+    pub fn add(&self, o: &Sh) -> Sh {
+        self.bin(o, self.v + o.v, SymE::Add)
+    }
+
+    pub fn mul(&self, o: &Sh) -> Sh {
+        self.bin(o, self.v * o.v, SymE::Mul)
+    }
+
+    pub fn mulc(&self, k: usize) -> Sh {
+        self.mul(&Sh::lit(k))
+    }
+
+    pub fn div_ceil(&self, o: &Sh) -> Sh {
+        self.bin(o, self.v.div_ceil(o.v.max(1)), SymE::CeilDiv)
+    }
+
+    pub fn div_ceilc(&self, k: usize) -> Sh {
+        self.div_ceil(&Sh::lit(k))
+    }
+
+    pub fn floor_div(&self, o: &Sh) -> Sh {
+        self.bin(o, self.v / o.v.max(1), SymE::FloorDiv)
+    }
+
+    pub fn max(&self, o: &Sh) -> Sh {
+        self.bin(o, self.v.max(o.v), SymE::Max)
+    }
+
+    pub fn maxc(&self, k: usize) -> Sh {
+        self.max(&Sh::lit(k))
+    }
+
+    pub fn min(&self, o: &Sh) -> Sh {
+        self.bin(o, self.v.min(o.v), SymE::Min)
+    }
+
+    pub fn minc(&self, k: usize) -> Sh {
+        self.min(&Sh::lit(k))
+    }
+}
+
+// ----------------------------------------------------------- traced cost
+
+/// A traced cost: the concrete [`OpCost`] plus (when capturing) its DAG
+/// node. The combinators delegate every numeric operation to the
+/// untouched `OpCost` methods — same float operations, same order — so
+/// the `c` side is bit-identical to the pre-capture pipeline, and the
+/// node side replays to exactly `c` (see [`replay`]).
+#[derive(Debug, Clone)]
+pub struct TC {
+    pub c: OpCost,
+    pub n: Option<Rc<Node>>,
+}
+
+impl TC {
+    /// The fold identity (a zero-cost leaf when capturing).
+    pub fn zero(cap: Cap) -> TC {
+        TC::leaf(cap, "zero", &[], OpCost::zero())
+    }
+
+    /// A leaf with the default [`Mono::IncAll`] axiom.
+    pub fn leaf(cap: Cap, name: &'static str, args: &[&Sh], c: OpCost) -> TC {
+        TC::leaf_m(cap, name, args, Mono::IncAll, c)
+    }
+
+    /// A leaf with an explicit monotonicity axiom (the simulated NoC tier
+    /// passes [`Mono::Opaque`]).
+    pub fn leaf_m(cap: Cap, name: &'static str, args: &[&Sh], mono: Mono, c: OpCost) -> TC {
+        let n = cap.map(|_| Node::leaf(name, args.iter().map(|s| s.expr()).collect(), mono, c));
+        TC { c, n }
+    }
+
+    fn comb(
+        &self,
+        o: &TC,
+        c: OpCost,
+        f: fn(Rc<Node>, Rc<Node>) -> NodeKind,
+    ) -> TC {
+        let n = match (&self.n, &o.n) {
+            (Some(a), Some(b)) => {
+                Some(Rc::new(Node { unit: Unit::Ns, kind: f(a.clone(), b.clone()) }))
+            }
+            _ => None,
+        };
+        TC { c, n }
+    }
+
+    pub fn then(&self, o: &TC) -> TC {
+        self.comb(o, self.c.then(&o.c), NodeKind::Then)
+    }
+
+    pub fn join(&self, o: &TC) -> TC {
+        self.comb(o, self.c.join(&o.c), NodeKind::Join)
+    }
+
+    fn scaled(&self, k: &Sh, c: OpCost, f: fn(Rc<Node>, Rc<SymE>, u64) -> NodeKind) -> TC {
+        let n = self
+            .n
+            .as_ref()
+            .map(|a| Rc::new(Node { unit: Unit::Ns, kind: f(a.clone(), k.expr(), k.u64()) }));
+        TC { c, n }
+    }
+
+    pub fn repeat(&self, k: &Sh) -> TC {
+        self.scaled(k, self.c.repeat(k.u64()), NodeKind::Repeat)
+    }
+
+    pub fn replicate(&self, k: &Sh) -> TC {
+        self.scaled(k, self.c.replicate(k.u64()), NodeKind::Replicate)
+    }
+
+    pub fn serial_all<I: IntoIterator<Item = TC>>(cap: Cap, items: I) -> TC {
+        items.into_iter().fold(TC::zero(cap), |a, b| a.then(&b))
+    }
+
+    pub fn parallel_all<I: IntoIterator<Item = TC>>(cap: Cap, items: I) -> TC {
+        items.into_iter().fold(TC::zero(cap), |a, b| a.join(&b))
+    }
+}
+
+/// The result of one captured run: the DAG root for the composed phase
+/// total (pre-epilogue: all layers + pipeline handoffs), the guard
+/// vector, and the concrete totals the IR must replay to bit-for-bit.
+#[derive(Debug, Clone)]
+pub struct Captured {
+    pub root: Rc<Node>,
+    pub guards: Vec<Guard>,
+    /// Concrete total the traced fold computed (`root` replays to this).
+    pub total: OpCost,
+    /// `EnergyModel::dynamic(total.counts).total_pj()` at the point.
+    pub dynamic_pj: f64,
+}
+
+/// Overflow-headroom bound for u64 event counters: the prover requires
+/// every leaf count times the product of enclosing repeat/replicate
+/// factors to stay under this, leaving two orders of magnitude before
+/// wrap (the runtime side saturates + debug-asserts, see `sim/cost.rs`).
+pub const COUNT_HEADROOM: u64 = u64::MAX / 256;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bx(b: (u64, u64), s: (u64, u64)) -> VarBox {
+        VarBox { lo: [b.0, s.0, 1], hi: [b.1, s.1, 1] }
+    }
+
+    #[test]
+    fn expr_eval_and_range_agree_at_corners() {
+        // ceil(seq / max(512/batch, 1)) — the attn else-branch shape
+        let batch = Rc::new(SymE::Var(ShapeVar::Batch));
+        let seq = Rc::new(SymE::Var(ShapeVar::Seq));
+        let bpp = Rc::new(SymE::Max(
+            Rc::new(SymE::FloorDiv(Rc::new(SymE::Const(512)), batch)),
+            Rc::new(SymE::Const(1)),
+        ));
+        let tile = SymE::CeilDiv(seq, bpp);
+        let b = bx((1, 8), (128, 1024));
+        let (lo, hi) = tile.range(&b).unwrap();
+        for bv in [1u64, 2, 8] {
+            for sv in [128u64, 512, 1024] {
+                let v = tile.eval([bv, sv, 1]);
+                assert!(lo <= v && v <= hi, "{v} outside [{lo}, {hi}]");
+            }
+        }
+    }
+
+    #[test]
+    fn directions_follow_the_whitelist() {
+        let b = Rc::new(SymE::Var(ShapeVar::Batch));
+        let s = Rc::new(SymE::Var(ShapeVar::Seq));
+        let bxx = bx((1, 64), (128, 4096));
+        assert_eq!(expr_dir(&SymE::Mul(b.clone(), s.clone()), ShapeVar::Batch, &bxx), Dir::Inc);
+        // floor-div flips its divisor
+        let inv = SymE::FloorDiv(Rc::new(SymE::Const(512)), b.clone());
+        assert_eq!(expr_dir(&inv, ShapeVar::Batch, &bxx), Dir::Dec);
+        assert_eq!(expr_dir(&inv, ShapeVar::Seq, &bxx), Dir::Constant);
+        // Inc × Dec is Unknown over a wide box...
+        let prod = SymE::Mul(b.clone(), Rc::new(inv.clone()));
+        assert_eq!(expr_dir(&prod, ShapeVar::Batch, &bxx), Dir::Unknown);
+        // ...but refines to Inc once the box pins the Dec factor
+        let narrow = bx((257, 512), (128, 4096));
+        assert_eq!(SymE::FloorDiv(Rc::new(SymE::Const(512)), b).range(&narrow).unwrap(), (1, 1));
+        assert_eq!(expr_dir(&prod, ShapeVar::Batch, &narrow), Dir::Inc);
+    }
+
+    #[test]
+    fn opaque_blocks_range_and_direction() {
+        let o = SymE::Opaque { label: "mystery", value: 7 };
+        assert_eq!(o.eval([1, 1, 1]), 7);
+        assert!(o.range(&bx((1, 2), (1, 2))).is_none());
+        assert_eq!(expr_dir(&o, ShapeVar::Batch, &bx((1, 2), (1, 2))), Dir::Unknown);
+        assert_eq!(o.find_opaque(), Some("mystery"));
+    }
+
+    #[test]
+    fn sh_capture_off_allocates_nothing() {
+        let a = Sh::input(None, 8, ShapeVar::Batch);
+        let b = a.mulc(16).div_ceilc(512).maxc(1);
+        assert!(b.e.is_none());
+        assert_eq!(b.v, (8usize * 16).div_ceil(512).max(1));
+    }
+
+    #[test]
+    fn sh_capture_on_tracks_values_and_exprs() {
+        let ctx = CaptureCtx::new();
+        let cap: Cap = Some(&ctx);
+        let a = Sh::input(cap, 8, ShapeVar::Batch);
+        let t = a.mulc(40).div_ceilc(512).maxc(1);
+        assert_eq!(t.v, (8 * 40usize).div_ceil(512).max(1));
+        let e = t.e.as_ref().expect("expr");
+        // the expression evaluates to the same value at the same point
+        assert_eq!(e.eval([8, 1, 1]), t.v as u64);
+        assert_eq!(e.eval([64, 1, 1]), (64 * 40u64).div_ceil(512).max(1));
+    }
+
+    #[test]
+    fn tc_capture_off_is_plain_opcost() {
+        let c = OpCost { latency_ns: 5.0, counts: CostCounts { dram_mac: 3, ..Default::default() } };
+        let t = TC::leaf(None, "x", &[], c);
+        assert!(t.n.is_none());
+        let r = t.repeat(&Sh::lit(4)).then(&TC::leaf(None, "y", &[], c));
+        assert!(r.n.is_none());
+        let plain = c.repeat(4).then(&c);
+        assert_eq!(r.c.latency_ns.to_bits(), plain.latency_ns.to_bits());
+        assert_eq!(r.c.counts, plain.counts);
+    }
+
+    #[test]
+    fn replay_is_bit_exact() {
+        let ctx = CaptureCtx::new();
+        let cap: Cap = Some(&ctx);
+        let k = Sh::input(cap, 3, ShapeVar::Batch);
+        let a = TC::leaf(
+            cap,
+            "a",
+            &[&k],
+            OpCost { latency_ns: 1.25, counts: CostCounts { hb_bytes: 7, ..Default::default() } },
+        );
+        let b = TC::leaf(cap, "b", &[], OpCost::latency(0.75));
+        let total = a.repeat(&k).join(&b).then(&a).replicate(&Sh::lit(16));
+        let r = replay(total.n.as_ref().unwrap());
+        assert_eq!(r.latency_ns.to_bits(), total.c.latency_ns.to_bits());
+        assert_eq!(r.counts, total.c.counts);
+    }
+
+    #[test]
+    fn node_dir_composes_through_combinators() {
+        let ctx = CaptureCtx::new();
+        let cap: Cap = Some(&ctx);
+        let b = Sh::input(cap, 4, ShapeVar::Batch);
+        let leafy = TC::leaf(cap, "l", &[&b], OpCost::latency(1.0));
+        let total = leafy.repeat(&b.mulc(2)).then(&TC::leaf(cap, "k", &[], OpCost::latency(2.0)));
+        let n = total.n.unwrap();
+        let wide = bx((1, 64), (1, 1));
+        assert_eq!(node_dir(&n, ShapeVar::Batch, &wide), Dir::Inc);
+        assert_eq!(node_dir(&n, ShapeVar::Seq, &wide), Dir::Constant);
+        // an opaque leaf with shape-dependent args cannot be certified
+        let op = TC::leaf_m(cap, "sim", &[&b], Mono::Opaque, OpCost::latency(1.0));
+        assert_eq!(node_dir(op.n.as_ref().unwrap(), ShapeVar::Batch, &wide), Dir::Unknown);
+    }
+
+    #[test]
+    fn guards_record_in_order() {
+        let ctx = CaptureCtx::new();
+        ctx.guard("attn.pairs>=banks", 1);
+        ctx.guard("noc.reduce.factor-key", 8);
+        let g = ctx.take_guards();
+        assert_eq!(g.len(), 2);
+        assert_eq!(g[0], Guard { what: "attn.pairs>=banks", val: 1 });
+        assert_eq!(g[1].val, 8);
+    }
+
+    #[test]
+    fn count_units_cover_every_field() {
+        for (name, _) in CostCounts::default().fields() {
+            let u = count_unit(name);
+            assert!(matches!(u, Unit::Count | Unit::Bytes), "{name} has unit {u:?}");
+        }
+        assert_eq!(count_unit("hb_bytes"), Unit::Bytes);
+        assert_eq!(count_unit("dram_mac"), Unit::Count);
+    }
+}

@@ -18,8 +18,10 @@
 pub mod audit;
 pub mod audit_lattice;
 pub mod config_check;
+pub mod cost_ir;
 pub mod isa_lint;
 pub mod map_check;
+pub mod prove;
 
 use crate::config::HwConfig;
 use crate::config::SramGang;
@@ -135,6 +137,15 @@ pub const ALL_CODES: &[&str] = &[
     "aud.never-lose",
     "aud.fidelity-band",
     "aud.calibration-bounds",
+    // prove (static proofs over the captured cost-expression IR)
+    "prv.unit-mismatch",
+    "prv.non-monotone",
+    "prv.whitelist-escape",
+    "prv.guard-unstable",
+    "prv.overflow",
+    "prv.unpriced-counter",
+    "prv.double-priced",
+    "prv.eval-drift",
 ];
 
 /// One-line meaning per registered code, behind `compair check
@@ -187,6 +198,15 @@ pub fn code_description(code: &str) -> Option<&'static str> {
         "aud.never-lose" => "an auto-mapped cost exceeds the static mapping's",
         "aud.fidelity-band" => "a calibrated anchor is outside its gated band of the simulator",
         "aud.calibration-bounds" => "a fitted NoC factor is non-finite or outside FACTOR_BOUNDS",
+        // prove
+        "prv.unit-mismatch" => "a cost-IR node carries a unit its combinator cannot produce",
+        "prv.non-monotone" => "latency/energy is not provably non-decreasing in a shape variable",
+        "prv.whitelist-escape" => "a shape expression uses an op outside the monotone whitelist",
+        "prv.guard-unstable" => "cell subdivision exhausted its budget before guards stabilized",
+        "prv.overflow" => "a count multiplier chain exceeds the u64 overflow headroom",
+        "prv.unpriced-counter" => "a CostCounts field escapes the EnergyModel pricing rules",
+        "prv.double-priced" => "a CostCounts field is priced by more than one rule (double billed)",
+        "prv.eval-drift" => "replaying the captured IR disagrees with the concrete pipeline",
         _ => return None,
     })
 }

@@ -1,0 +1,913 @@
+//! `compair prove` — static proofs over the captured cost-expression IR.
+//!
+//! `compair check` lints configs and programs; `compair audit` samples
+//! semantic invariants at anchor shapes. This pass closes the remaining
+//! gap: claims about the *whole* shape space, certified compositionally
+//! instead of sampled. The cost pipeline is run once per box corner in
+//! capture mode ([`crate::arch::System::run_shape_captured`]), which
+//! yields a cost-expression DAG ([`super::cost_ir`]) whose leaves are the
+//! closed-form primitives and whose interior nodes are the `OpCost`
+//! combinators. Four passes then run over that DAG:
+//!
+//! * **Units** — every DAG node must carry `Unit::Ns` (leaves enter as
+//!   nanoseconds; `then`/`join`/`repeat`/`replicate` all preserve the
+//!   unit), and every `CostCounts` field keeps its declared `Count`/
+//!   `Bytes` unit through pricing into `Pj` (`prv.unit-mismatch`).
+//! * **Monotonicity** — the pre-epilogue phase total must be provably
+//!   non-decreasing in every active shape variable, via the monotone-op
+//!   whitelist on shape expressions and [`super::cost_ir::node_dir`],
+//!   not via sampling (`prv.non-monotone`, `prv.whitelist-escape`).
+//! * **Interval bounds** — on a certified cell the box endpoints bound
+//!   latency/energy/event totals, so the summary's lo/hi columns are
+//!   sound, and count-multiplier chains stay inside the u64 overflow
+//!   headroom (`prv.overflow`).
+//! * **Pricing coverage** — every `CostCounts` field is priced by the
+//!   [`EnergyModel`] exactly once, or is an explicitly declared
+//!   bookkeeping counter (`prv.unpriced-counter`, `prv.double-priced`).
+//!
+//! The soundness anchor is `prv.eval-drift`: at every evaluated corner
+//! the captured IR replays bit-for-bit against the concrete pipeline
+//! (and the capture-on run against the capture-off run), so the DAG the
+//! proofs run over is known to *be* the pipeline, not a model of it.
+//!
+//! ## Cell subdivision
+//!
+//! The pipeline takes shape-dependent branches (the attention `pairs >=
+//! banks` split, the calibrated NoC factor-key memo). Each branch
+//! decision is recorded as a monotone [`Guard`] during capture. The
+//! prover subdivides the shape box into cells until all four cell
+//! corners agree on the guard vector — guards are monotone in the shape
+//! variables, so corner agreement implies the whole cell lowers through
+//! one IR — and the root direction is `Inc`/`Constant` in every active
+//! variable. A bounded budget caps subdivision; exhaustion degrades to a
+//! `prv.guard-unstable` *warning* (bounds then cover certified cells
+//! only) rather than an unsound claim. A final pairwise-dominance sweep
+//! over every evaluated corner cross-checks the compositional argument
+//! against the concrete numbers.
+
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use super::cost_ir::{
+    count_unit, node_dir, replay, Captured, Guard, Node, NodeKind, ShapeVar, Unit, VarBox,
+    COUNT_HEADROOM,
+};
+use super::{CheckReport, Diag};
+use crate::arch::System;
+use crate::config::{ArchKind, ModelConfig, NocFidelity, Phase, RunConfig};
+use crate::energy::model::UNPRICED_BOOKKEEPING;
+use crate::energy::EnergyModel;
+use crate::sim::CostCounts;
+use crate::util::json::{Json, ToJson};
+
+/// Subdivision budget per prove point. The calibrated factor-key guards
+/// band the batch axis into a handful of plateaus, so real points
+/// certify in well under this; the cap bounds pathological configs.
+pub const CELL_BUDGET: usize = 96;
+
+/// Additive-term budget backing [`COUNT_HEADROOM`]: the per-leaf
+/// overflow pass proves each leaf contribution `<= u64::MAX / 256`, so
+/// the *sum* stays below `u64::MAX` only while a phase total composes
+/// at most 256 leaf terms per counter. The walk enforces that too.
+pub const LEAF_TERM_BUDGET: usize = 256;
+
+/// One (arch × model × fidelity × phase) point the prover certifies.
+/// Unlike an audit point the phase is part of the point: the shape box
+/// and the active variables differ between decode and prefill.
+#[derive(Debug, Clone)]
+pub struct ProvePoint {
+    pub arch: ArchKind,
+    pub model: ModelConfig,
+    pub fidelity: NocFidelity,
+    pub phase: Phase,
+}
+
+impl ProvePoint {
+    /// Stable display/context label, e.g. `compair-opt/tiny/calibrated/decode`.
+    pub fn label(&self) -> String {
+        format!(
+            "{}/{}/{}/{}",
+            self.arch.cli_name(),
+            self.model.name,
+            self.fidelity.label(),
+            self.phase.label()
+        )
+    }
+
+    /// The run configuration this point proves over (`jobs = 1`: prove
+    /// points already fan out on the pool).
+    pub fn rc(&self) -> RunConfig {
+        let mut rc = RunConfig::new(self.arch, self.model.clone());
+        rc.noc_fidelity = self.fidelity;
+        rc.jobs = 1;
+        rc
+    }
+}
+
+/// Models the default prove lattice covers (mirrors the audit default:
+/// `tiny` plus the paper's `llama2-7b`).
+pub fn default_models() -> Vec<ModelConfig> {
+    super::audit_lattice::default_models(false)
+}
+
+/// The prove lattice for a filter set: every non-roofline arch, both
+/// phases, and the two closed-form NoC tiers. The simulated tier lowers
+/// through flit-level `Mono::Opaque` leaves and is certified by `compair
+/// audit`'s sampled chains instead; AttAcc is a roofline model with no
+/// `System` lowering at all.
+pub fn points(archs: &[ArchKind], models: &[ModelConfig]) -> Vec<ProvePoint> {
+    let mut pts = Vec::new();
+    for &arch in archs {
+        if arch == ArchKind::AttAcc {
+            continue;
+        }
+        for model in models {
+            for fidelity in [NocFidelity::Analytic, NocFidelity::Calibrated] {
+                for phase in [Phase::Decode, Phase::Prefill] {
+                    pts.push(ProvePoint { arch, model: model.clone(), fidelity, phase });
+                }
+            }
+        }
+    }
+    pts
+}
+
+/// The shape box a phase is certified over. Axis order follows
+/// [`ShapeVar::index`]: `[batch, seq, kv]`; inactive axes are singleton.
+pub fn shape_box(phase: Phase) -> VarBox {
+    match phase {
+        // Decode ranges over (batch, kv-context); seq is per-token.
+        Phase::Decode => VarBox { lo: [1, 1, 128], hi: [64, 1, 8192] },
+        // Prefill ranges over (batch, prompt length); kv grows with seq.
+        Phase::Prefill => VarBox { lo: [1, 128, 1], hi: [8, 4096, 1] },
+    }
+}
+
+/// The shape variables a phase's box actually ranges over.
+pub fn active_vars(phase: Phase) -> [ShapeVar; 2] {
+    match phase {
+        Phase::Decode => [ShapeVar::Batch, ShapeVar::Kv],
+        Phase::Prefill => [ShapeVar::Batch, ShapeVar::Seq],
+    }
+}
+
+/// Sound interval bounds for one certified prove point, reported as a
+/// proof-summary row (not a diagnostic): on every certified cell the IR
+/// is non-decreasing in each active variable, so the cell's lo/hi
+/// corners bound it and the global extrema are the min/max over cells.
+#[derive(Debug, Clone)]
+pub struct ProveSummary {
+    pub label: String,
+    /// Cells processed (certified + split + failed).
+    pub cells: usize,
+    /// Cells whose guard vector stabilized and whose direction certified.
+    pub certified: usize,
+    /// Distinct box corners evaluated (capture + replay + drift checks).
+    pub corners: usize,
+    /// False when the cell budget ran out: bounds cover certified cells
+    /// only and a `prv.guard-unstable` warning was emitted.
+    pub complete: bool,
+    pub lat_lo_ns: f64,
+    pub lat_hi_ns: f64,
+    pub pj_lo: f64,
+    pub pj_hi: f64,
+    /// Largest total event count over the box (overflow headroom check
+    /// passes at this corner).
+    pub events_hi: u64,
+}
+
+impl ToJson for ProveSummary {
+    fn to_json(&self) -> Json {
+        Json::obj()
+            .field("point", self.label.as_str())
+            .field("cells", self.cells)
+            .field("certified", self.certified)
+            .field("corners", self.corners)
+            .field("complete", self.complete)
+            .field("lat_lo_ns", self.lat_lo_ns)
+            .field("lat_hi_ns", self.lat_hi_ns)
+            .field("pj_lo", self.pj_lo)
+            .field("pj_hi", self.pj_hi)
+            .field("events_hi", self.events_hi)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DAG walks (pure: usable on doctored nodes from tests)
+// ---------------------------------------------------------------------------
+
+fn walk<'a>(n: &'a Node, path: &mut String, f: &mut impl FnMut(&'a Node, &str)) {
+    f(n, path);
+    let len = path.len();
+    let mut child = |seg: &str, c: &'a Node, f: &mut dyn FnMut(&'a Node, &str)| {
+        path.push('/');
+        path.push_str(seg);
+        walk_dyn(c, path, f);
+        path.truncate(len);
+    };
+    match &n.kind {
+        NodeKind::Leaf(_) => {}
+        NodeKind::Then(a, b) => {
+            child("then.a", a, f);
+            child("then.b", b, f);
+        }
+        NodeKind::Join(a, b) => {
+            child("join.a", a, f);
+            child("join.b", b, f);
+        }
+        NodeKind::Repeat(a, _, _) => child("repeat", a, f),
+        NodeKind::Replicate(a, _, _) => child("replicate", a, f),
+    }
+}
+
+fn walk_dyn<'a>(n: &'a Node, path: &mut String, f: &mut dyn FnMut(&'a Node, &str)) {
+    walk(n, path, &mut |n, p| f(n, p))
+}
+
+fn node_name(n: &Node) -> &'static str {
+    match &n.kind {
+        NodeKind::Leaf(l) => l.name,
+        NodeKind::Then(..) => "then",
+        NodeKind::Join(..) => "join",
+        NodeKind::Repeat(..) => "repeat",
+        NodeKind::Replicate(..) => "replicate",
+    }
+}
+
+/// Unit-consistency pass. Leaves enter the DAG as `Unit::Ns` and every
+/// combinator preserves its operands' unit, so every node must carry
+/// `Ns`; any other tag means a combinator produced a unit it cannot
+/// (`prv.unit-mismatch`). The `Count`/`Bytes` side of the unit system
+/// lives on `CostCounts` fields and is discharged by [`check_pricing`],
+/// which proves each of those units is priced into `Pj` exactly once.
+pub fn check_units(root: &Node, ctx: &str, rep: &mut CheckReport) {
+    walk(root, &mut String::from("root"), &mut |n, path| {
+        if n.unit != Unit::Ns {
+            rep.push(Diag::error(
+                "prv.unit-mismatch",
+                format!("{ctx} {path}"),
+                format!(
+                    "{} node carries unit {} but its combinator can only produce ns",
+                    node_name(n),
+                    n.unit.label()
+                ),
+            ));
+        }
+    });
+}
+
+/// Whitelist pass: every shape expression reachable from the DAG — leaf
+/// arguments and `repeat`/`replicate` trip counts — must be built from
+/// the monotone-op whitelist. An [`SymE::Opaque`] marker anywhere means
+/// a value entered the IR that the direction analysis cannot reason
+/// about, which would silently weaken every monotonicity certificate;
+/// it is reported with full provenance instead (`prv.whitelist-escape`).
+pub fn check_whitelist(root: &Node, ctx: &str, rep: &mut CheckReport) {
+    let mut escape = |label: &'static str, what: &str, path: &str| {
+        rep.push(Diag::error(
+            "prv.whitelist-escape",
+            format!("{ctx} {path}"),
+            format!("{what} uses non-whitelisted opaque expression '{label}'"),
+        ));
+    };
+    walk(root, &mut String::from("root"), &mut |n, path| match &n.kind {
+        NodeKind::Leaf(l) => {
+            for (i, a) in l.args.iter().enumerate() {
+                if let Some(label) = a.find_opaque() {
+                    escape(label, &format!("leaf {} arg #{i}", l.name), path);
+                }
+            }
+        }
+        NodeKind::Repeat(_, k, _) | NodeKind::Replicate(_, k, _) => {
+            if let Some(label) = k.find_opaque() {
+                escape(label, "trip count", path);
+            }
+        }
+        _ => {}
+    });
+}
+
+/// Overflow-headroom pass, run at the hi corner of each certified cell
+/// (counts are non-decreasing there, so it is the worst case). Each
+/// leaf's count fields, multiplied by the u128 product of every
+/// ancestor `repeat`/`replicate` trip count, must stay within
+/// [`COUNT_HEADROOM`]; together with the [`LEAF_TERM_BUDGET`] cap on
+/// additive leaf terms this proves the u64 accumulation cannot wrap
+/// (the runtime `CostCounts` ops saturate + debug-assert as a backstop,
+/// this pass makes the shipped configs' totals exact by construction).
+pub fn check_overflow(root: &Node, ctx: &str, rep: &mut CheckReport) {
+    let mut terms = 0usize;
+    overflow_walk(root, 1u128, &mut String::from("root"), ctx, rep, &mut terms);
+    if terms > LEAF_TERM_BUDGET {
+        rep.push(Diag::error(
+            "prv.overflow",
+            format!("{ctx} root"),
+            format!(
+                "{terms} additive leaf terms exceed the {LEAF_TERM_BUDGET}-term budget backing the headroom divisor"
+            ),
+        ));
+    }
+}
+
+fn overflow_walk(
+    n: &Node,
+    mult: u128,
+    path: &mut String,
+    ctx: &str,
+    rep: &mut CheckReport,
+    terms: &mut usize,
+) {
+    match &n.kind {
+        NodeKind::Leaf(l) => {
+            *terms += 1;
+            for (field, v) in l.cost.counts.fields() {
+                if v as u128 * mult > COUNT_HEADROOM as u128 {
+                    rep.push(Diag::error(
+                        "prv.overflow",
+                        format!("{ctx} {path}"),
+                        format!(
+                            "leaf {} contributes {v} x{mult} to '{field}', exceeding the u64 headroom {COUNT_HEADROOM}",
+                            l.name
+                        ),
+                    ));
+                }
+            }
+        }
+        NodeKind::Then(a, b) | NodeKind::Join(a, b) => {
+            let len = path.len();
+            path.push_str("/a");
+            overflow_walk(a, mult, path, ctx, rep, terms);
+            path.truncate(len);
+            path.push_str("/b");
+            overflow_walk(b, mult, path, ctx, rep, terms);
+            path.truncate(len);
+        }
+        NodeKind::Repeat(a, _, k) | NodeKind::Replicate(a, _, k) => {
+            let len = path.len();
+            path.push_str("/x");
+            overflow_walk(a, mult.saturating_mul(*k as u128), path, ctx, rep, terms);
+            path.truncate(len);
+        }
+    }
+}
+
+/// Compositional monotonicity pass over one (sub)box: the root must be
+/// provably non-decreasing in every listed variable via the whitelist
+/// direction calculus — no sampling (`prv.non-monotone`). The cell
+/// driver calls [`node_dir`] directly so it can subdivide first; this
+/// entry point is the single-cell form tests exercise on doctored IR.
+pub fn check_monotone(root: &Node, vars: &[ShapeVar], bx: &VarBox, ctx: &str, rep: &mut CheckReport) {
+    for &v in vars {
+        let d = node_dir(root, v, bx);
+        if !d.non_decreasing() {
+            rep.push(Diag::error(
+                "prv.non-monotone",
+                format!("{ctx} root"),
+                format!(
+                    "phase total is not provably non-decreasing in {} over the cell (direction {:?})",
+                    v.label(),
+                    d
+                ),
+            ));
+        }
+    }
+}
+
+/// Replay the captured IR and require bit-for-bit agreement with the
+/// concrete totals recorded at capture time — latency, every count
+/// field, and the priced dynamic energy (`prv.eval-drift`). This is the
+/// soundness anchor: it pins the DAG the other passes reason over to
+/// the pipeline that produced it.
+pub fn check_replay(cap: &Captured, em: &EnergyModel, ctx: &str, rep: &mut CheckReport) {
+    let r = replay(&cap.root);
+    if r.latency_ns.to_bits() != cap.total.latency_ns.to_bits()
+        || r.counts.fields() != cap.total.counts.fields()
+    {
+        rep.push(Diag::error(
+            "prv.eval-drift",
+            ctx.to_string(),
+            "replaying the captured IR disagrees bit-for-bit with the recorded pipeline total",
+        ));
+    } else if em.dynamic(&r.counts).total_pj().to_bits() != cap.dynamic_pj.to_bits() {
+        rep.push(Diag::error(
+            "prv.eval-drift",
+            ctx.to_string(),
+            "pricing the replayed counts disagrees bit-for-bit with the recorded dynamic energy",
+        ));
+    }
+}
+
+/// Pricing-coverage pass over a declarative rule set: every
+/// `CostCounts` field must be priced by exactly one rule or appear in
+/// the bookkeeping allowlist (`prv.unpriced-counter` /
+/// `prv.double-priced`), and every rule must name a registered field.
+/// [`check_global`] feeds it the shipped [`EnergyModel::pricing_rules`];
+/// tests feed doctored rule lists.
+pub fn check_pricing(
+    rules: &[(&str, &str)],
+    bookkeeping: &[&str],
+    ctx: &str,
+    rep: &mut CheckReport,
+) {
+    let fields = CostCounts::default().fields();
+    for (field, _) in fields {
+        let priced: Vec<&str> =
+            rules.iter().filter(|(f, _)| *f == field).map(|(_, c)| *c).collect();
+        let declared_bookkeeping = bookkeeping.contains(&field);
+        let unit = count_unit(field).label();
+        if priced.is_empty() && !declared_bookkeeping {
+            rep.push(Diag::error(
+                "prv.unpriced-counter",
+                format!("{ctx} {field}"),
+                format!("counter '{field}' ({unit}) escapes the energy model: no pricing rule and not declared bookkeeping"),
+            ));
+        } else if !priced.is_empty() && declared_bookkeeping {
+            rep.push(Diag::error(
+                "prv.double-priced",
+                format!("{ctx} {field}"),
+                format!(
+                    "counter '{field}' is declared bookkeeping but priced via '{}'",
+                    priced[0]
+                ),
+            ));
+        } else if priced.len() > 1 {
+            rep.push(Diag::error(
+                "prv.double-priced",
+                format!("{ctx} {field}"),
+                format!("counter '{field}' is billed {} times ({})", priced.len(), priced.join(", ")),
+            ));
+        }
+    }
+    for (f, component) in rules {
+        if !fields.iter().any(|(name, _)| name == f) {
+            rep.push(Diag::error(
+                "prv.unit-mismatch",
+                format!("{ctx} {f}"),
+                format!("pricing rule '{component}' prices unknown counter '{f}' (no declared unit)"),
+            ));
+        }
+    }
+}
+
+/// The point-independent proofs: pricing coverage of the shipped energy
+/// model against the declared bookkeeping allowlist. Run once per
+/// invocation, not per lattice point.
+pub fn check_global() -> CheckReport {
+    let mut rep = CheckReport::default();
+    let rules = EnergyModel::pricing_rules();
+    check_pricing(&rules, UNPRICED_BOOKKEEPING, "energy-model", &mut rep);
+    rep.normalize();
+    rep
+}
+
+// ---------------------------------------------------------------------------
+// The cell-subdivision driver
+// ---------------------------------------------------------------------------
+
+struct CornerEval {
+    root: Rc<Node>,
+    guards: Vec<Guard>,
+    latency_ns: f64,
+    dynamic_pj: f64,
+    events: u64,
+}
+
+fn cell_label(cell: &VarBox, vars: &[ShapeVar; 2]) -> String {
+    let part = |v: ShapeVar| {
+        let i = v.index();
+        format!("{}={}..{}", v.label(), cell.lo[i], cell.hi[i])
+    };
+    format!("{} {}", part(vars[0]), part(vars[1]))
+}
+
+/// The 4 cell corners, lo-corner first and hi-corner last; inactive
+/// axes stay at the (singleton) cell value.
+fn corner_pts(cell: &VarBox, vars: &[ShapeVar; 2]) -> [[u64; 3]; 4] {
+    let mut out = [[0u64; 3]; 4];
+    for (i, slot) in out.iter_mut().enumerate() {
+        let mut p = cell.lo;
+        if i & 1 != 0 {
+            p[vars[0].index()] = cell.hi[vars[0].index()];
+        }
+        if i & 2 != 0 {
+            p[vars[1].index()] = cell.hi[vars[1].index()];
+        }
+        *slot = p;
+    }
+    out
+}
+
+/// Split the widest active dimension at its midpoint; `None` when the
+/// cell is a single point in every active dimension.
+fn split_dim(cell: &VarBox, vars: &[ShapeVar; 2]) -> Option<(usize, u64)> {
+    let mut best: Option<(usize, u64)> = None;
+    for v in vars {
+        let i = v.index();
+        let w = cell.hi[i] - cell.lo[i];
+        if w > 0 && best.map_or(true, |(bi, _)| w > cell.hi[bi] - cell.lo[bi]) {
+            best = Some((i, cell.lo[i] + w / 2));
+        }
+    }
+    best
+}
+
+fn eval_corner(
+    sys: &System,
+    phase: Phase,
+    vals: [u64; 3],
+    m: &crate::mapper::Mapping,
+    label: &str,
+    rep: &mut CheckReport,
+) -> CornerEval {
+    let batch = vals[ShapeVar::Batch.index()] as usize;
+    let seq = match phase {
+        Phase::Decode => vals[ShapeVar::Kv.index()],
+        Phase::Prefill => vals[ShapeVar::Seq.index()],
+    } as usize;
+    let ctx = format!("{label} b={batch} s={seq}");
+    let plain = sys.run_shape_mapped(phase, batch, seq, m);
+    let (traced, cap) = sys.run_shape_captured(phase, batch, seq, m);
+    if plain.latency_ns.to_bits() != traced.latency_ns.to_bits()
+        || plain.energy.total_pj().to_bits() != traced.energy.total_pj().to_bits()
+    {
+        rep.push(Diag::error(
+            "prv.eval-drift",
+            ctx.clone(),
+            "capture-on run disagrees bit-for-bit with the capture-off run",
+        ));
+    }
+    check_replay(&cap, &sys.em, &ctx, rep);
+    CornerEval {
+        root: cap.root,
+        guards: cap.guards,
+        latency_ns: cap.total.latency_ns,
+        dynamic_pj: cap.dynamic_pj,
+        events: cap.total.counts.total_events(),
+    }
+}
+
+/// Certify one prove point over its whole shape box. Returns the
+/// diagnostics plus the proof-summary row with sound interval bounds.
+pub fn prove_point(p: &ProvePoint) -> (CheckReport, ProveSummary) {
+    prove_point_budget(p, CELL_BUDGET)
+}
+
+/// [`prove_point`] with an explicit cell budget. Exposed so the budget-
+/// exhaustion path (`prv.guard-unstable`) is testable without a
+/// pathological hardware config; production callers use the default.
+pub fn prove_point_budget(p: &ProvePoint, budget: usize) -> (CheckReport, ProveSummary) {
+    let mut rep = CheckReport::default();
+    let label = p.label();
+    let sys = System::new(p.rc());
+    let m = sys.static_mapping();
+    let vars = active_vars(p.phase);
+    let mut memo: BTreeMap<[u64; 3], CornerEval> = BTreeMap::new();
+    let mut stack = vec![shape_box(p.phase)];
+    let mut cells = 0usize;
+    let mut certified = 0usize;
+    let mut complete = true;
+    let (mut lat_lo, mut lat_hi) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut pj_lo, mut pj_hi) = (f64::INFINITY, f64::NEG_INFINITY);
+    let mut events_hi = 0u64;
+
+    while let Some(cell) = stack.pop() {
+        if cells == budget {
+            complete = false;
+            rep.push(Diag::warning(
+                "prv.guard-unstable",
+                format!("{label} [{}]", cell_label(&cell, &vars)),
+                format!(
+                    "cell budget ({budget}) exhausted before guards stabilized; bounds cover certified cells only"
+                ),
+            ));
+            break;
+        }
+        cells += 1;
+        let pts = corner_pts(&cell, &vars);
+        for pt in pts {
+            if !memo.contains_key(&pt) {
+                let ce = eval_corner(&sys, p.phase, pt, &m, &label, &mut rep);
+                memo.insert(pt, ce);
+            }
+        }
+        let guards_stable = pts[1..].iter().all(|pt| memo[pt].guards == memo[&pts[0]].guards);
+        let root = memo[&pts[0]].root.clone();
+        let dir_ok = vars.iter().all(|&v| node_dir(&root, v, &cell).non_decreasing());
+        if guards_stable && dir_ok {
+            certified += 1;
+            let cctx = format!("{label} [{}]", cell_label(&cell, &vars));
+            check_units(&root, &cctx, &mut rep);
+            check_whitelist(&root, &cctx, &mut rep);
+            check_overflow(&memo[&pts[3]].root, &cctx, &mut rep);
+            let (lo, hi) = (&memo[&pts[0]], &memo[&pts[3]]);
+            lat_lo = lat_lo.min(lo.latency_ns);
+            lat_hi = lat_hi.max(hi.latency_ns);
+            pj_lo = pj_lo.min(lo.dynamic_pj);
+            pj_hi = pj_hi.max(hi.dynamic_pj);
+            events_hi = events_hi.max(hi.events);
+        } else if let Some((i, mid)) = split_dim(&cell, &vars) {
+            let mut a = cell;
+            a.hi[i] = mid;
+            let mut b = cell;
+            b.lo[i] = mid + 1;
+            stack.push(b);
+            stack.push(a);
+        } else if !guards_stable {
+            // A single-point cell has four identical corners, so guards
+            // agree by construction; defensive fallback only.
+            complete = false;
+            rep.push(Diag::warning(
+                "prv.guard-unstable",
+                format!("{label} [{}]", cell_label(&cell, &vars)),
+                "guards differ on an unsplittable cell",
+            ));
+        } else {
+            check_monotone(
+                &root,
+                &vars,
+                &cell,
+                &format!("{label} [{}]", cell_label(&cell, &vars)),
+                &mut rep,
+            );
+        }
+    }
+
+    // Cross-check the compositional certificate against the concrete
+    // corner numbers: componentwise-dominated shapes must not cost more.
+    let keys: Vec<[u64; 3]> = memo.keys().copied().collect();
+    for (i, a) in keys.iter().enumerate() {
+        for b in keys.iter().skip(i + 1) {
+            let (p_lo, p_hi) = if a.iter().zip(b).all(|(x, y)| x <= y) {
+                (a, b)
+            } else if b.iter().zip(a).all(|(x, y)| x <= y) {
+                (b, a)
+            } else {
+                continue;
+            };
+            let (lo, hi) = (&memo[p_lo], &memo[p_hi]);
+            if lo.latency_ns > hi.latency_ns || lo.dynamic_pj > hi.dynamic_pj || lo.events > hi.events
+            {
+                rep.push(Diag::error(
+                    "prv.non-monotone",
+                    format!("{label} {p_lo:?} vs {p_hi:?}"),
+                    "a dominated shape evaluates to a larger total than its dominator",
+                ));
+            }
+        }
+    }
+
+    rep.normalize();
+    let corners = memo.len();
+    let finite = |v: f64| if v.is_finite() { v } else { 0.0 };
+    let summary = ProveSummary {
+        label,
+        cells,
+        certified,
+        corners,
+        complete,
+        lat_lo_ns: finite(lat_lo),
+        lat_hi_ns: finite(lat_hi),
+        pj_lo: finite(pj_lo),
+        pj_hi: finite(pj_hi),
+        events_hi,
+    };
+    (rep, summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::cost_ir::{LeafNode, Mono, SymE};
+    use super::*;
+    use crate::sim::OpCost;
+
+    fn lit(v: u64) -> Rc<SymE> {
+        Rc::new(SymE::Const(v))
+    }
+
+    fn plain_leaf() -> Rc<Node> {
+        Node::leaf("test.leaf", vec![lit(4)], Mono::IncAll, OpCost::latency(1.0))
+    }
+
+    fn report_of(f: impl FnOnce(&mut CheckReport)) -> CheckReport {
+        let mut rep = CheckReport::default();
+        f(&mut rep);
+        rep.normalize();
+        rep
+    }
+
+    fn codes(rep: &CheckReport) -> Vec<&'static str> {
+        let mut v: Vec<&'static str> = rep.diags.iter().map(|d| d.code).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    #[test]
+    fn clean_leaf_passes_all_structural_checks() {
+        let n = plain_leaf();
+        let bx = VarBox { lo: [1, 1, 1], hi: [8, 1, 1] };
+        let rep = report_of(|rep| {
+            check_units(&n, "t", rep);
+            check_whitelist(&n, "t", rep);
+            check_overflow(&n, "t", rep);
+            check_monotone(&n, &[ShapeVar::Batch], &bx, "t", rep);
+        });
+        assert!(rep.is_clean(), "{:?}", rep.diags);
+    }
+
+    #[test]
+    fn doctored_unit_fires_only_unit_mismatch() {
+        let bad = Rc::new(Node {
+            unit: Unit::Bytes,
+            kind: NodeKind::Leaf(LeafNode {
+                name: "test.bad-unit",
+                args: vec![],
+                mono: Mono::IncAll,
+                cost: OpCost::zero(),
+            }),
+        });
+        let root = Rc::new(Node {
+            unit: Unit::Ns,
+            kind: NodeKind::Then(plain_leaf(), bad),
+        });
+        let rep = report_of(|rep| {
+            check_units(&root, "t", rep);
+            check_whitelist(&root, "t", rep);
+            check_overflow(&root, "t", rep);
+        });
+        assert_eq!(codes(&rep), vec!["prv.unit-mismatch"]);
+        assert!(rep.diags[0].context.contains("then.b"), "{}", rep.diags[0].context);
+    }
+
+    #[test]
+    fn doctored_opaque_arg_fires_only_whitelist_escape() {
+        let opaque = Rc::new(SymE::Opaque { label: "rng", value: 3 });
+        let n = Node::leaf("test.opaque", vec![opaque], Mono::IncAll, OpCost::latency(1.0));
+        let rep = report_of(|rep| {
+            check_units(&n, "t", rep);
+            check_whitelist(&n, "t", rep);
+            check_overflow(&n, "t", rep);
+        });
+        assert_eq!(codes(&rep), vec!["prv.whitelist-escape"]);
+        assert!(rep.diags[0].message.contains("rng"));
+    }
+
+    #[test]
+    fn doctored_opaque_trip_count_fires_whitelist_escape() {
+        let root = Rc::new(Node {
+            unit: Unit::Ns,
+            kind: NodeKind::Repeat(
+                plain_leaf(),
+                Rc::new(SymE::Opaque { label: "env", value: 2 }),
+                2,
+            ),
+        });
+        let rep = report_of(|rep| check_whitelist(&root, "t", rep));
+        assert_eq!(codes(&rep), vec!["prv.whitelist-escape"]);
+    }
+
+    #[test]
+    fn doctored_multiplier_chain_fires_only_overflow() {
+        let mut c = OpCost::latency(1.0);
+        c.counts.dram_mac = 1 << 40;
+        let leaf = Node::leaf("test.hot", vec![], Mono::IncAll, c);
+        let k = 1u64 << 30;
+        let root = Rc::new(Node {
+            unit: Unit::Ns,
+            kind: NodeKind::Repeat(leaf, lit(k), k),
+        });
+        let rep = report_of(|rep| {
+            check_units(&root, "t", rep);
+            check_whitelist(&root, "t", rep);
+            check_overflow(&root, "t", rep);
+        });
+        assert_eq!(codes(&rep), vec!["prv.overflow"]);
+        assert!(rep.diags[0].message.contains("dram_mac"));
+    }
+
+    #[test]
+    fn doctored_decreasing_construct_fires_only_non_monotone() {
+        // floor_div(8, batch) is Dec in batch over [1,8]: a whitelisted
+        // expression, but the wrong direction for a cost argument.
+        let e = Rc::new(SymE::FloorDiv(lit(8), Rc::new(SymE::Var(ShapeVar::Batch))));
+        let n = Node::leaf("test.dec", vec![e], Mono::IncAll, OpCost::latency(1.0));
+        let bx = VarBox { lo: [1, 1, 1], hi: [8, 1, 1] };
+        let rep = report_of(|rep| {
+            check_units(&n, "t", rep);
+            check_whitelist(&n, "t", rep);
+            check_monotone(&n, &[ShapeVar::Batch], &bx, "t", rep);
+        });
+        assert_eq!(codes(&rep), vec!["prv.non-monotone"]);
+    }
+
+    #[test]
+    fn doctored_opaque_leaf_model_is_not_certifiable() {
+        let n = Node::leaf(
+            "test.sim",
+            vec![Rc::new(SymE::Var(ShapeVar::Batch))],
+            Mono::Opaque,
+            OpCost::latency(1.0),
+        );
+        let bx = VarBox { lo: [1, 1, 1], hi: [8, 1, 1] };
+        let rep = report_of(|rep| check_monotone(&n, &[ShapeVar::Batch], &bx, "t", rep));
+        assert_eq!(codes(&rep), vec!["prv.non-monotone"]);
+    }
+
+    #[test]
+    fn doctored_total_fires_only_eval_drift() {
+        let em = EnergyModel::new(&crate::config::HwConfig::paper().sram, 1.0);
+        let root = plain_leaf();
+        let good = Captured {
+            root: root.clone(),
+            guards: vec![],
+            total: replay(&root),
+            dynamic_pj: em.dynamic(&replay(&root).counts).total_pj(),
+        };
+        let rep = report_of(|rep| check_replay(&good, &em, "t", rep));
+        assert!(rep.is_clean(), "{:?}", rep.diags);
+
+        let mut bad = good;
+        bad.total.latency_ns += 1.0;
+        let rep = report_of(|rep| check_replay(&bad, &em, "t", rep));
+        assert_eq!(codes(&rep), vec!["prv.eval-drift"]);
+    }
+
+    #[test]
+    fn doctored_energy_fires_eval_drift() {
+        let em = EnergyModel::new(&crate::config::HwConfig::paper().sram, 1.0);
+        let root = plain_leaf();
+        let cap = Captured {
+            root: root.clone(),
+            guards: vec![],
+            total: replay(&root),
+            dynamic_pj: em.dynamic(&replay(&root).counts).total_pj() + 1.0,
+        };
+        let rep = report_of(|rep| check_replay(&cap, &em, "t", rep));
+        assert_eq!(codes(&rep), vec!["prv.eval-drift"]);
+    }
+
+    #[test]
+    fn doctored_rules_fire_unpriced_and_double_priced() {
+        let shipped = EnergyModel::pricing_rules();
+        // drop one rule -> exactly prv.unpriced-counter
+        let missing: Vec<(&str, &str)> =
+            shipped.iter().filter(|(f, _)| *f != "dram_mac").map(|&(f, c)| (f, c)).collect();
+        let rep = report_of(|rep| check_pricing(&missing, UNPRICED_BOOKKEEPING, "t", rep));
+        assert_eq!(codes(&rep), vec!["prv.unpriced-counter"]);
+        assert!(rep.diags[0].context.contains("dram_mac"));
+
+        // duplicate one rule -> exactly prv.double-priced
+        let mut doubled: Vec<(&str, &str)> = shipped.iter().map(|&(f, c)| (f, c)).collect();
+        doubled.push(("dram_mac", "dram_pj"));
+        let rep = report_of(|rep| check_pricing(&doubled, UNPRICED_BOOKKEEPING, "t", rep));
+        assert_eq!(codes(&rep), vec!["prv.double-priced"]);
+
+        // price a declared bookkeeping counter -> prv.double-priced
+        let mut priced_bk: Vec<(&str, &str)> = shipped.iter().map(|&(f, c)| (f, c)).collect();
+        priced_bk.push(("sram_access", "sram_pj"));
+        let rep = report_of(|rep| check_pricing(&priced_bk, UNPRICED_BOOKKEEPING, "t", rep));
+        assert_eq!(codes(&rep), vec!["prv.double-priced"]);
+
+        // rule naming an unknown counter -> prv.unit-mismatch
+        let mut unknown: Vec<(&str, &str)> = shipped.iter().map(|&(f, c)| (f, c)).collect();
+        unknown.push(("warp_divergence", "gpu_pj"));
+        let rep = report_of(|rep| check_pricing(&unknown, UNPRICED_BOOKKEEPING, "t", rep));
+        assert_eq!(codes(&rep), vec!["prv.unit-mismatch"]);
+    }
+
+    #[test]
+    fn shipped_energy_model_proves_clean() {
+        let rep = check_global();
+        assert!(rep.is_clean(), "{:?}", rep.diags);
+    }
+
+    #[test]
+    fn lattice_skips_attacc_and_simulated() {
+        let pts = points(&ArchKind::all(), &default_models());
+        assert!(!pts.is_empty());
+        for p in &pts {
+            assert_ne!(p.arch, ArchKind::AttAcc);
+            assert_ne!(p.fidelity, NocFidelity::Simulated);
+        }
+        // arch-major deterministic order, both phases present
+        assert!(pts.iter().any(|p| p.phase == Phase::Decode));
+        assert!(pts.iter().any(|p| p.phase == Phase::Prefill));
+    }
+
+    #[test]
+    fn prove_point_certifies_a_shipped_config() {
+        let p = ProvePoint {
+            arch: ArchKind::CompAirOpt,
+            model: ModelConfig::tiny(),
+            fidelity: NocFidelity::Calibrated,
+            phase: Phase::Decode,
+        };
+        let (rep, sum) = prove_point(&p);
+        assert_eq!(rep.errors(), 0, "{:?}", rep.diags);
+        assert!(sum.certified > 0);
+        assert!(sum.corners >= 4);
+        assert!(sum.lat_lo_ns > 0.0 && sum.lat_lo_ns <= sum.lat_hi_ns);
+        assert!(sum.pj_lo > 0.0 && sum.pj_lo <= sum.pj_hi);
+        assert!(sum.events_hi > 0);
+    }
+}

@@ -33,7 +33,7 @@
 //! the fidelity is part of every memoization key, so cached results never
 //! mix tiers.
 
-use crate::analysis::{audit, audit_lattice, config_check, map_check, CheckReport};
+use crate::analysis::{audit, audit_lattice, config_check, map_check, prove, CheckReport};
 use crate::arch::{attacc, AttAccConfig, CachedCostModel, PhaseReport, System};
 use crate::config::{ArchKind, MappingMode, RunConfig};
 use crate::coordinator::{
@@ -98,6 +98,37 @@ impl Engine {
             mapping: self.rc.mapping,
         };
         audit::audit_point(&point, &audit::AuditOptions::default())
+    }
+
+    /// Statically *prove* this point over its whole shape box: capture
+    /// the cost pipeline as a unit-checked expression IR and certify
+    /// unit consistency, monotonicity, overflow headroom, interval
+    /// bounds and energy-pricing coverage compositionally (see
+    /// `analysis::prove`). Completes the three-tier story: `check`
+    /// proves the inputs are legal, `audit` samples the physics at
+    /// anchor shapes, `prove` certifies the closed forms for *every*
+    /// shape in the box. Simulated-fidelity points and the AttAcc
+    /// roofline have no closed-form IR, so they get the point-independent
+    /// pricing-coverage proof only. Returns a normalized [`CheckReport`]
+    /// with `prv.*` codes; `compair prove` fans the full lattice through
+    /// the same pass.
+    pub fn prove(&self) -> CheckReport {
+        use crate::config::{NocFidelity, Phase};
+        let mut rep = prove::check_global();
+        if self.rc.arch != ArchKind::AttAcc && self.rc.noc_fidelity != NocFidelity::Simulated {
+            for phase in [Phase::Decode, Phase::Prefill] {
+                let point = prove::ProvePoint {
+                    arch: self.rc.arch,
+                    model: self.rc.model.clone(),
+                    fidelity: self.rc.noc_fidelity,
+                    phase,
+                };
+                let (point_rep, _summary) = prove::prove_point(&point);
+                rep.extend(point_rep);
+            }
+        }
+        rep.normalize();
+        rep
     }
 
     /// A fresh, independent memoizing cost model over this configuration.
@@ -373,6 +404,21 @@ mod tests {
         let mut c = rc(ArchKind::CompAirOpt);
         c.model = ModelConfig::tiny();
         let rep = Engine::new(c).audit();
+        assert!(rep.is_clean(), "{}", rep.render_brief());
+    }
+
+    #[test]
+    fn prove_passes_the_default_compair_point() {
+        let mut c = rc(ArchKind::CompAirOpt);
+        c.model = ModelConfig::tiny();
+        let rep = Engine::new(c).prove();
+        assert_eq!(rep.errors(), 0, "{}", rep.render_brief());
+    }
+
+    #[test]
+    fn prove_degrades_to_global_proofs_for_attacc() {
+        // no System lowering -> only the point-independent pricing pass
+        let rep = Engine::new(rc(ArchKind::AttAcc)).prove();
         assert!(rep.is_clean(), "{}", rep.render_brief());
     }
 

@@ -8,8 +8,9 @@
 //! full pipeline is `batch · pp / (n_layers · layer_latency)` while
 //! per-token latency is `n_layers · layer_latency` plus stage handoffs.
 
+use crate::analysis::cost_ir::{Cap, CaptureCtx, Captured, Mono, Sh, ShapeVar, TC};
 use crate::config::hw::DramConfig;
-use crate::config::{ArchKind, FcMapping, Phase, RunConfig};
+use crate::config::{ArchKind, FcMapping, NocFidelity, Phase, RunConfig};
 use crate::dram::{Channel, PimBank};
 use crate::energy::{EnergyBreakdown, EnergyModel};
 use crate::mapper::{supported_placements, Mapping, Placement, Slot};
@@ -105,6 +106,19 @@ pub fn fc_tiles(mapping: FcMapping, d_in: usize, d_out: usize, dram: &DramConfig
     }
 }
 
+/// Symbolic mirrors of the shape-variable-dependent op fields the traced
+/// lowering consumes. `run_shape_traced` builds them once per phase from
+/// the symbolic (batch, seq) inputs, mirroring `layer_ops`; the plain
+/// `op_cost_mapped` path builds literal mirrors straight from the op.
+struct OpShapes {
+    tokens: Sh,
+    batch: Sh,
+    rows_q: Sh,
+    eff_seq: Sh,
+    /// Softmax row count (`batch · n_heads · rows_q`).
+    sm_rows: Sh,
+}
+
 /// The simulator facade.
 pub struct System {
     pub rc: RunConfig,
@@ -149,9 +163,41 @@ impl System {
         self.rc.hw.dram.banks_per_device()
     }
 
+    /// Monotonicity axiom for NoC-tier leaves: the analytic closed forms
+    /// are non-decreasing in every argument by construction, and the
+    /// calibrated tier multiplies them by a per-key constant (key
+    /// stability over a proof cell is guard-recorded via [`Self::noc_guard`]),
+    /// but the flit-level simulator carries no axiom the prover accepts.
+    fn noc_mono(&self) -> Mono {
+        if self.noc.fidelity() == NocFidelity::Simulated { Mono::Opaque } else { Mono::IncAll }
+    }
+
+    /// Record the calibrated correction-factor key for a NoC collective
+    /// whose banks/param argument is shape-dependent: within a proof cell
+    /// the key must stay constant for the correction to be a constant
+    /// factor (and the leaf's `IncAll` axiom to hold).
+    fn noc_guard(&self, cap: Cap, kind: noc_model::NocCollective, param: &Sh) {
+        if let Some(ctx) = cap {
+            if self.noc.fidelity() == NocFidelity::Calibrated && param.e.is_some() {
+                ctx.guard(
+                    kind.label(),
+                    noc_model::factor_key(kind, param.u64(), self.rc.hw.noc.mesh_rows),
+                );
+            }
+        }
+    }
+
     /// Cost of one FC op (per device; single layer) on the engine
     /// `use_sram` selects. Returns (cost, active-bank fraction).
-    fn fc_cost(&self, name: &str, d_in: usize, d_out: usize, tokens: usize, use_sram: bool) -> (OpCost, f64) {
+    fn fc_cost(
+        &self,
+        cap: Cap,
+        name: &str,
+        d_in: usize,
+        d_out: usize,
+        tokens: &Sh,
+        use_sram: bool,
+    ) -> (TC, f64) {
         let tp = self.rc.tp;
         let row_parallel = matches!(name, "o" | "down");
         let (din_dev, dout_dev) = if row_parallel {
@@ -165,38 +211,58 @@ impl System {
 
         // Input distribution: the activation vector reaches every channel's
         // global buffer (channels stream in parallel over the device bus).
-        let in_bytes = (tokens * din_dev * 2) as u64;
-        let bcast = self.channel.gb_broadcast(in_bytes).replicate(channels as u64);
+        let in_bytes = tokens.mulc(din_dev * 2);
+        let bcast =
+            TC::leaf(cap, "gb.broadcast", &[&in_bytes], self.channel.gb_broadcast(in_bytes.u64()))
+                .replicate(&Sh::lit(channels));
 
+        let gemm_leaf = |out_tile: usize, in_tile: usize| {
+            if use_sram {
+                TC::leaf(
+                    cap,
+                    "sram.gemm",
+                    &[&Sh::lit(out_tile), &Sh::lit(in_tile), tokens],
+                    self.sram.gemm(out_tile, in_tile, tokens.v, WeightPolicy::Reload),
+                )
+            } else {
+                TC::leaf(
+                    cap,
+                    "dram.gemv",
+                    &[&Sh::lit(out_tile), &Sh::lit(in_tile), tokens],
+                    self.bank.gemv(out_tile, in_tile, tokens.v),
+                )
+            }
+        };
         let (compute, active_banks, reduce) = match self.rc.fc_mapping {
             FcMapping::OutputSplit => {
                 let (out_tile, in_tile, active) =
                     fc_tiles(FcMapping::OutputSplit, din_dev, dout_dev, &self.rc.hw.dram);
-                let per_bank = if use_sram {
-                    self.sram.gemm(out_tile, in_tile, tokens, WeightPolicy::Reload)
-                } else {
-                    self.bank.gemv(out_tile, in_tile, tokens)
-                };
-                (per_bank.replicate(active as u64), active, OpCost::zero())
+                (gemm_leaf(out_tile, in_tile).replicate(&Sh::lit(active)), active, TC::zero(cap))
             }
             FcMapping::InputSplit => {
                 let (out_tile, in_tile, active) =
                     fc_tiles(FcMapping::InputSplit, din_dev, dout_dev, &self.rc.hw.dram);
-                let per_bank = if use_sram {
-                    self.sram.gemm(out_tile, in_tile, tokens, WeightPolicy::Reload)
-                } else {
-                    self.bank.gemv(out_tile, in_tile, tokens)
-                };
                 // partial sums reduced across the channel's banks
-                let elems = (tokens * out_tile) as u64;
+                let elems = tokens.mulc(out_tile);
                 let red = if self.rc.arch.has_curry() {
-                    self.noc.reduce(elems, banks_pc as u64).replicate(channels as u64)
+                    TC::leaf_m(
+                        cap,
+                        "noc.reduce",
+                        &[&elems, &Sh::lit(banks_pc)],
+                        self.noc_mono(),
+                        self.noc.reduce(elems.u64(), banks_pc as u64),
+                    )
+                    .replicate(&Sh::lit(channels))
                 } else {
-                    self.channel
-                        .gb_reduce(elems as usize, banks_pc)
-                        .replicate(channels as u64)
+                    TC::leaf(
+                        cap,
+                        "gb.reduce",
+                        &[&elems, &Sh::lit(banks_pc)],
+                        self.channel.gb_reduce(elems.v, banks_pc),
+                    )
+                    .replicate(&Sh::lit(channels))
                 };
-                (per_bank.replicate(active as u64), active, red)
+                (gemm_leaf(out_tile, in_tile).replicate(&Sh::lit(active)), active, red)
             }
         };
         let util = active_banks as f64 / banks as f64;
@@ -204,150 +270,309 @@ impl System {
     }
 
     /// Attention score / value matmuls (always DRAM-PIM in the default
-    /// CompAir mapping — K/V are input-dependent, §8).
-    fn attn_cost(&self, qk: bool, batch: usize, heads: usize, rows_q: usize, seq: usize, d_head: usize) -> OpCost {
+    /// CompAir mapping — K/V are input-dependent, §8). The
+    /// `pairs >= banks` branch is the one shape-dependent control decision
+    /// in the lowering: capture records it as a guard so the prover
+    /// subdivides the shape box into branch-stable cells (the predicate is
+    /// monotone in batch, so corner agreement implies cell agreement).
+    fn attn_cost(
+        &self,
+        cap: Cap,
+        qk: bool,
+        batch: &Sh,
+        heads: usize,
+        rows_q: &Sh,
+        seq: &Sh,
+        d_head: usize,
+    ) -> TC {
         let tp = self.rc.tp;
         let heads_dev = heads.div_ceil(tp).max(1);
         let banks = self.banks_per_device();
-        let pairs = batch * heads_dev;
-        if pairs >= banks {
-            let per_bank_pairs = pairs.div_ceil(banks);
+        let pairs = batch.mulc(heads_dev);
+        if let Some(ctx) = cap {
+            ctx.guard("attn.pairs>=banks", (pairs.v >= banks) as u64);
+        }
+        if pairs.v >= banks {
+            let per_bank_pairs = pairs.div_ceilc(banks);
             let per_pair = if qk {
-                self.bank.gemv(seq, d_head, rows_q)
+                TC::leaf(
+                    cap,
+                    "dram.gemv",
+                    &[seq, &Sh::lit(d_head), rows_q],
+                    self.bank.gemv(seq.v, d_head, rows_q.v),
+                )
             } else {
-                self.bank.gemv(d_head, seq, rows_q)
+                TC::leaf(
+                    cap,
+                    "dram.gemv",
+                    &[&Sh::lit(d_head), seq, rows_q],
+                    self.bank.gemv(d_head, seq.v, rows_q.v),
+                )
             };
-            per_pair.repeat(per_bank_pairs as u64).replicate(banks as u64)
+            per_pair.repeat(&per_bank_pairs).replicate(&Sh::lit(banks))
         } else {
-            let banks_per_pair = (banks / pairs).max(1);
+            let banks_per_pair = Sh::lit(banks).floor_div(&pairs).maxc(1);
             if qk {
                 // output-split along seq: no reduction needed
-                let seq_tile = seq.div_ceil(banks_per_pair).max(1);
-                self.bank.gemv(seq_tile, d_head, rows_q).replicate(pairs as u64 * banks_per_pair as u64)
+                let seq_tile = seq.div_ceil(&banks_per_pair).maxc(1);
+                TC::leaf(
+                    cap,
+                    "dram.gemv",
+                    &[&seq_tile, &Sh::lit(d_head), rows_q],
+                    self.bank.gemv(seq_tile.v, d_head, rows_q.v),
+                )
+                .replicate(&pairs.mul(&banks_per_pair))
             } else {
                 // input-split along seq: partial Dh sums reduced per pair
-                let in_tile = seq.div_ceil(banks_per_pair).max(1);
-                let gemv = self
-                    .bank
-                    .gemv(d_head, in_tile, rows_q)
-                    .replicate(pairs as u64 * banks_per_pair as u64);
-                let elems = (d_head * rows_q) as u64;
+                let in_tile = seq.div_ceil(&banks_per_pair).maxc(1);
+                let gemv = TC::leaf(
+                    cap,
+                    "dram.gemv",
+                    &[&Sh::lit(d_head), &in_tile, rows_q],
+                    self.bank.gemv(d_head, in_tile.v, rows_q.v),
+                )
+                .replicate(&pairs.mul(&banks_per_pair));
+                let elems = rows_q.mulc(d_head);
+                let bpp16 = banks_per_pair.minc(16);
                 let red = if self.rc.arch.has_curry() {
-                    self.noc.reduce(elems, banks_per_pair.min(16) as u64).replicate(pairs as u64)
+                    self.noc_guard(cap, noc_model::NocCollective::Reduce, &bpp16);
+                    TC::leaf_m(
+                        cap,
+                        "noc.reduce",
+                        &[&elems, &bpp16],
+                        self.noc_mono(),
+                        self.noc.reduce(elems.u64(), bpp16.u64()),
+                    )
+                    .replicate(&pairs)
                 } else {
-                    self.channel
-                        .gb_reduce(elems as usize, banks_per_pair.min(16))
-                        .replicate(pairs as u64)
+                    TC::leaf(
+                        cap,
+                        "gb.reduce",
+                        &[&elems, &bpp16],
+                        self.channel.gb_reduce(elems.v, bpp16.v),
+                    )
+                    .replicate(&pairs)
                 };
                 gemv.then(&red)
             }
         }
     }
 
-    fn softmax_cost(&self, rows: usize, seq: usize, on_noc: bool) -> OpCost {
+    fn softmax_cost(&self, cap: Cap, rows: &Sh, seq: &Sh, on_noc: bool) -> TC {
         let tp = self.rc.tp;
-        let rows_dev = rows.div_ceil(tp).max(1);
-        let banks = self.banks_per_device() as u64;
-        let elems = rows_dev as u64 * seq as u64;
+        let rows_dev = rows.div_ceilc(tp).maxc(1);
+        let banks = self.banks_per_device();
+        let elems = rows_dev.mul(seq);
         if on_noc {
             // distributed: exp bank-locally, per-row partial sums on the MAC
             // lanes, scalar tree reduce + broadcast, divide in transit
-            let per_bank = elems.div_ceil(banks);
-            let exp = self.noc.exp(per_bank, 8).replicate(banks);
-            let partial_ns = per_bank as f64 / 16.0 * self.rc.hw.dram.t_ccd_ns;
-            let partial = OpCost::latency(partial_ns);
-            let banks_pc = self.rc.hw.dram.banks_per_channel as u64;
-            let channels = self.rc.hw.dram.channels_per_device as u64;
-            let rows_pc = (rows_dev as u64).div_ceil(channels).max(1);
-            let red = self.noc.reduce(rows_pc, banks_pc).replicate(channels);
-            let bc = self.noc.broadcast(rows_pc, banks_pc).replicate(channels);
-            let div = self.noc.scalar_stream(per_bank).replicate(banks);
+            let per_bank = elems.div_ceilc(banks);
+            let exp = TC::leaf_m(
+                cap,
+                "noc.exp",
+                &[&per_bank, &Sh::lit(8)],
+                self.noc_mono(),
+                self.noc.exp(per_bank.u64(), 8),
+            )
+            .replicate(&Sh::lit(banks));
+            let partial_ns = per_bank.v as f64 / 16.0 * self.rc.hw.dram.t_ccd_ns;
+            let partial = TC::leaf(cap, "dram.mac-partial", &[&per_bank], OpCost::latency(partial_ns));
+            let banks_pc = self.rc.hw.dram.banks_per_channel;
+            let channels = self.rc.hw.dram.channels_per_device;
+            let rows_pc = rows_dev.div_ceilc(channels).maxc(1);
+            let red = TC::leaf_m(
+                cap,
+                "noc.reduce",
+                &[&rows_pc, &Sh::lit(banks_pc)],
+                self.noc_mono(),
+                self.noc.reduce(rows_pc.u64(), banks_pc as u64),
+            )
+            .replicate(&Sh::lit(channels));
+            let bc = TC::leaf_m(
+                cap,
+                "noc.broadcast",
+                &[&rows_pc, &Sh::lit(banks_pc)],
+                self.noc_mono(),
+                self.noc.broadcast(rows_pc.u64(), banks_pc as u64),
+            )
+            .replicate(&Sh::lit(channels));
+            let div = TC::leaf_m(
+                cap,
+                "noc.scalar-stream",
+                &[&per_bank],
+                self.noc_mono(),
+                self.noc.scalar_stream(per_bank.u64()),
+            )
+            .replicate(&Sh::lit(banks));
             exp.then(&partial).then(&red).then(&bc).then(&div)
         } else {
             // centralized NLU: scores cross the channel I/O both ways
-            let bytes = elems * 2;
-            coll::nlu_roundtrip(
-                bytes,
-                bytes,
-                5 * elems,
-                self.rc.hw.dram.channels_per_device as u64,
-                &self.rc.hw.dram,
+            let bytes = elems.mulc(2);
+            TC::leaf(
+                cap,
+                "nlu.roundtrip",
+                &[&bytes, &bytes, &elems.mulc(5)],
+                coll::nlu_roundtrip(
+                    bytes.u64(),
+                    bytes.u64(),
+                    5 * elems.u64(),
+                    self.rc.hw.dram.channels_per_device as u64,
+                    &self.rc.hw.dram,
+                ),
             )
         }
     }
 
-    fn rope_cost(&self, tokens: usize, heads: usize, d_head: usize, on_noc: bool) -> OpCost {
+    fn rope_cost(&self, cap: Cap, tokens: &Sh, heads: usize, d_head: usize, on_noc: bool) -> TC {
         let tp = self.rc.tp;
-        let vecs_dev = (tokens * heads.div_ceil(tp)).max(1);
+        let vecs_dev = tokens.mulc(heads.div_ceil(tp)).maxc(1);
         let banks = self.banks_per_device();
         if on_noc {
-            let per_bank_vecs = vecs_dev.div_ceil(banks).max(1);
-            let ex = exchange::exchange_cost(d_head, &self.rc.hw.noc)
-                .repeat(per_bank_vecs as u64)
-                .replicate(banks as u64);
+            let per_bank_vecs = vecs_dev.div_ceilc(banks).maxc(1);
+            let ex = TC::leaf(
+                cap,
+                "noc.exchange",
+                &[&Sh::lit(d_head)],
+                exchange::exchange_cost(d_head, &self.rc.hw.noc),
+            )
+            .repeat(&per_bank_vecs)
+            .replicate(&Sh::lit(banks));
             // cos/sin EWMULs on the bank lanes: 2 muls + 1 add per element
-            let ew = coll::dram_ewmul((per_bank_vecs * d_head * 2) as u64, &self.rc.hw)
-                .replicate(banks as u64);
+            let ew_elems = per_bank_vecs.mulc(d_head * 2);
+            let ew = TC::leaf(
+                cap,
+                "dram.ewmul",
+                &[&ew_elems],
+                coll::dram_ewmul(ew_elems.u64(), &self.rc.hw),
+            )
+            .replicate(&Sh::lit(banks));
             ex.then(&ew)
         } else {
-            let bytes = (vecs_dev * d_head * 2) as u64;
-            coll::nlu_roundtrip(
-                bytes,
-                bytes,
-                3 * (vecs_dev * d_head) as u64,
-                self.rc.hw.dram.channels_per_device as u64,
-                &self.rc.hw.dram,
+            let bytes = vecs_dev.mulc(d_head * 2);
+            TC::leaf(
+                cap,
+                "nlu.roundtrip",
+                &[&bytes, &bytes, &vecs_dev.mulc(d_head).mulc(3)],
+                coll::nlu_roundtrip(
+                    bytes.u64(),
+                    bytes.u64(),
+                    3 * vecs_dev.mulc(d_head).u64(),
+                    self.rc.hw.dram.channels_per_device as u64,
+                    &self.rc.hw.dram,
+                ),
             )
         }
     }
 
-    fn rmsnorm_cost(&self, tokens: usize, d_model: usize, on_noc: bool) -> OpCost {
-        let banks = self.banks_per_device() as u64;
-        let elems = (tokens * d_model) as u64;
+    fn rmsnorm_cost(&self, cap: Cap, tokens: &Sh, d_model: usize, on_noc: bool) -> TC {
+        let banks = self.banks_per_device();
+        let elems = tokens.mulc(d_model);
         if on_noc {
-            let per_bank = elems.div_ceil(banks);
+            let per_bank = elems.div_ceilc(banks);
             // square-accumulate on MAC lanes (x·x into the accumulator)
-            let sq = OpCost::latency(per_bank as f64 / 16.0 * self.rc.hw.dram.t_ccd_ns)
-                .replicate(banks);
-            let banks_pc = self.rc.hw.dram.banks_per_channel as u64;
-            let channels = self.rc.hw.dram.channels_per_device as u64;
-            let rows_pc = (tokens as u64).div_ceil(channels).max(1);
-            let red = self.noc.reduce(rows_pc, banks_pc).replicate(channels);
-            let rsqrt = self.noc.sqrt(rows_pc, 4).replicate(channels);
-            let bc = self.noc.broadcast(rows_pc, banks_pc).replicate(channels);
-            let scale = coll::dram_ewmul(per_bank, &self.rc.hw).replicate(banks);
+            let sq = TC::leaf(
+                cap,
+                "dram.mac-square",
+                &[&per_bank],
+                OpCost::latency(per_bank.v as f64 / 16.0 * self.rc.hw.dram.t_ccd_ns),
+            )
+            .replicate(&Sh::lit(banks));
+            let banks_pc = self.rc.hw.dram.banks_per_channel;
+            let channels = self.rc.hw.dram.channels_per_device;
+            let rows_pc = tokens.div_ceilc(channels).maxc(1);
+            let red = TC::leaf_m(
+                cap,
+                "noc.reduce",
+                &[&rows_pc, &Sh::lit(banks_pc)],
+                self.noc_mono(),
+                self.noc.reduce(rows_pc.u64(), banks_pc as u64),
+            )
+            .replicate(&Sh::lit(channels));
+            let rsqrt = TC::leaf_m(
+                cap,
+                "noc.sqrt",
+                &[&rows_pc, &Sh::lit(4)],
+                self.noc_mono(),
+                self.noc.sqrt(rows_pc.u64(), 4),
+            )
+            .replicate(&Sh::lit(channels));
+            let bc = TC::leaf_m(
+                cap,
+                "noc.broadcast",
+                &[&rows_pc, &Sh::lit(banks_pc)],
+                self.noc_mono(),
+                self.noc.broadcast(rows_pc.u64(), banks_pc as u64),
+            )
+            .replicate(&Sh::lit(channels));
+            let scale = TC::leaf(
+                cap,
+                "dram.ewmul",
+                &[&per_bank],
+                coll::dram_ewmul(per_bank.u64(), &self.rc.hw),
+            )
+            .replicate(&Sh::lit(banks));
             sq.then(&red).then(&rsqrt).then(&bc).then(&scale)
         } else {
-            let bytes = elems * 2;
-            coll::nlu_roundtrip(
-                bytes,
-                bytes,
-                3 * elems,
-                self.rc.hw.dram.channels_per_device as u64,
-                &self.rc.hw.dram,
+            let bytes = elems.mulc(2);
+            TC::leaf(
+                cap,
+                "nlu.roundtrip",
+                &[&bytes, &bytes, &elems.mulc(3)],
+                coll::nlu_roundtrip(
+                    bytes.u64(),
+                    bytes.u64(),
+                    3 * elems.u64(),
+                    self.rc.hw.dram.channels_per_device as u64,
+                    &self.rc.hw.dram,
+                ),
             )
         }
     }
 
-    fn activation_cost(&self, tokens: usize, width: usize, on_noc: bool) -> OpCost {
+    fn activation_cost(&self, cap: Cap, tokens: &Sh, width: usize, on_noc: bool) -> TC {
         let tp = self.rc.tp;
-        let elems = (tokens * width.div_ceil(tp)) as u64;
-        let banks = self.banks_per_device() as u64;
+        let elems = tokens.mulc(width.div_ceil(tp));
+        let banks = self.banks_per_device();
         if on_noc {
-            let per_bank = elems.div_ceil(banks);
+            let per_bank = elems.div_ceilc(banks);
             // sigmoid: exp + 1/(1+e); gating: EWMUL on the lanes
-            let exp = self.noc.exp(per_bank, 8).replicate(banks);
-            let post = self.noc.scalar_stream(per_bank).replicate(banks);
-            let gate = coll::dram_ewmul(per_bank, &self.rc.hw).replicate(banks);
+            let exp = TC::leaf_m(
+                cap,
+                "noc.exp",
+                &[&per_bank, &Sh::lit(8)],
+                self.noc_mono(),
+                self.noc.exp(per_bank.u64(), 8),
+            )
+            .replicate(&Sh::lit(banks));
+            let post = TC::leaf_m(
+                cap,
+                "noc.scalar-stream",
+                &[&per_bank],
+                self.noc_mono(),
+                self.noc.scalar_stream(per_bank.u64()),
+            )
+            .replicate(&Sh::lit(banks));
+            let gate = TC::leaf(
+                cap,
+                "dram.ewmul",
+                &[&per_bank],
+                coll::dram_ewmul(per_bank.u64(), &self.rc.hw),
+            )
+            .replicate(&Sh::lit(banks));
             exp.then(&post).then(&gate)
         } else {
-            let bytes = elems * 2;
-            coll::nlu_roundtrip(
-                bytes * 2, // x and gate move out
-                bytes,
-                4 * elems,
-                self.rc.hw.dram.channels_per_device as u64,
-                &self.rc.hw.dram,
+            let bytes = elems.mulc(2);
+            TC::leaf(
+                cap,
+                "nlu.roundtrip",
+                &[&bytes.mulc(2), &bytes, &elems.mulc(4)], // x and gate move out
+                coll::nlu_roundtrip(
+                    bytes.u64() * 2,
+                    bytes.u64(),
+                    4 * elems.u64(),
+                    self.rc.hw.dram.channels_per_device as u64,
+                    &self.rc.hw.dram,
+                ),
             )
         }
     }
@@ -363,6 +588,49 @@ impl System {
     /// the search only emits legal mappings, so this is a debug assert,
     /// not a runtime gate.
     pub fn op_cost_mapped(&self, op: &LlmOp, m: &Mapping) -> (OpCost, f64) {
+        // literal shape mirrors straight from the op's own fields: no
+        // capture, no symbols — the traced lowering degenerates to the
+        // plain arithmetic
+        let lit = Sh::lit;
+        let sh = match op {
+            LlmOp::AttnQK { batch, rows_q, seq, .. } | LlmOp::AttnSV { batch, rows_q, seq, .. } => {
+                OpShapes {
+                    tokens: lit(0),
+                    batch: lit(*batch),
+                    rows_q: lit(*rows_q),
+                    eff_seq: lit(*seq),
+                    sm_rows: lit(0),
+                }
+            }
+            LlmOp::Softmax { rows, seq } => OpShapes {
+                tokens: lit(0),
+                batch: lit(1),
+                rows_q: lit(1),
+                eff_seq: lit(*seq),
+                sm_rows: lit(*rows),
+            },
+            LlmOp::Fc { tokens, .. }
+            | LlmOp::Rope { tokens, .. }
+            | LlmOp::RmsNorm { tokens, .. }
+            | LlmOp::Activation { tokens, .. }
+            | LlmOp::AllReduce { tokens, .. } => OpShapes {
+                tokens: lit(*tokens),
+                batch: lit(0),
+                rows_q: lit(0),
+                eff_seq: lit(0),
+                sm_rows: lit(0),
+            },
+        };
+        let (c, util) = self.op_cost_traced(None, op, m, &sh);
+        (c.c, util)
+    }
+
+    /// The one lowering path, shared by the plain and capture entries.
+    /// `sh` carries the symbolic mirrors of every shape-variable-dependent
+    /// op field; their concrete values are debug-asserted against the op's
+    /// own fields (the `prv.eval-drift` pass is the release-mode backstop
+    /// against the mirrors drifting from `layer_ops`).
+    fn op_cost_traced(&self, cap: Cap, op: &LlmOp, m: &Mapping, sh: &OpShapes) -> (TC, f64) {
         let place = m.placement_of(op);
         debug_assert!(
             supported_placements(Slot::of_op(op), self.rc.arch).contains(&place),
@@ -373,38 +641,52 @@ impl System {
         );
         let use_sram = place == Placement::SramPim;
         let on_noc = place == Placement::NocAlu;
-        let tp = self.rc.tp as u64;
+        let tp = self.rc.tp;
         let (c, util) = match op {
             LlmOp::Fc { name, d_in, d_out, tokens } => {
-                self.fc_cost(name, *d_in, *d_out, *tokens, use_sram)
+                debug_assert_eq!(sh.tokens.v, *tokens);
+                self.fc_cost(cap, name, *d_in, *d_out, &sh.tokens, use_sram)
             }
             LlmOp::AttnQK { batch, heads, rows_q, seq, d_head } => {
-                (self.attn_cost(true, *batch, *heads, *rows_q, *seq, *d_head), 1.0)
+                debug_assert_eq!((sh.batch.v, sh.rows_q.v, sh.eff_seq.v), (*batch, *rows_q, *seq));
+                (self.attn_cost(cap, true, &sh.batch, *heads, &sh.rows_q, &sh.eff_seq, *d_head), 1.0)
             }
             LlmOp::AttnSV { batch, heads, rows_q, seq, d_head } => {
-                (self.attn_cost(false, *batch, *heads, *rows_q, *seq, *d_head), 1.0)
+                debug_assert_eq!((sh.batch.v, sh.rows_q.v, sh.eff_seq.v), (*batch, *rows_q, *seq));
+                (self.attn_cost(cap, false, &sh.batch, *heads, &sh.rows_q, &sh.eff_seq, *d_head), 1.0)
             }
-            LlmOp::Softmax { rows, seq } => (self.softmax_cost(*rows, *seq, on_noc), 1.0),
+            LlmOp::Softmax { rows, seq } => {
+                debug_assert_eq!((sh.sm_rows.v, sh.eff_seq.v), (*rows, *seq));
+                (self.softmax_cost(cap, &sh.sm_rows, &sh.eff_seq, on_noc), 1.0)
+            }
             LlmOp::Rope { tokens, heads, d_head } => {
-                (self.rope_cost(*tokens, *heads, *d_head, on_noc), 1.0)
+                debug_assert_eq!(sh.tokens.v, *tokens);
+                (self.rope_cost(cap, &sh.tokens, *heads, *d_head, on_noc), 1.0)
             }
             LlmOp::RmsNorm { tokens, d_model } => {
-                (self.rmsnorm_cost(*tokens, *d_model, on_noc), 1.0)
+                debug_assert_eq!(sh.tokens.v, *tokens);
+                (self.rmsnorm_cost(cap, &sh.tokens, *d_model, on_noc), 1.0)
             }
             LlmOp::Activation { tokens, width, .. } => {
-                (self.activation_cost(*tokens, *width, on_noc), 1.0)
+                debug_assert_eq!(sh.tokens.v, *tokens);
+                (self.activation_cost(cap, &sh.tokens, *width, on_noc), 1.0)
             }
-            LlmOp::AllReduce { tokens, d_model } => (
-                coll::cxl_allreduce(
-                    (*tokens * *d_model * 2) as u64,
-                    self.rc.tp as u64,
-                    &self.rc.hw.cxl,
-                ),
-                1.0,
-            ),
+            LlmOp::AllReduce { tokens, d_model } => {
+                debug_assert_eq!(sh.tokens.v, *tokens);
+                let bytes = sh.tokens.mulc(*d_model * 2);
+                (
+                    TC::leaf(
+                        cap,
+                        "cxl.allreduce",
+                        &[&bytes, &Sh::lit(self.rc.tp)],
+                        coll::cxl_allreduce(bytes.u64(), self.rc.tp as u64, &self.rc.hw.cxl),
+                    ),
+                    1.0,
+                )
+            }
         };
         // events happen on every device of the tp group
-        (c.replicate(tp), util)
+        (c.replicate(&Sh::lit(tp)), util)
     }
 
     /// Simulate the configured phase (`rc.phase` / `rc.batch` /
@@ -426,6 +708,8 @@ impl System {
     /// default path is `run_shape_mapped(.., &self.static_mapping())`, so
     /// the static mapping reproduces the pre-mapper numbers bit-for-bit;
     /// the mapping search scores its candidates through this entry.
+    /// Capture stays off: no IR is allocated and the arithmetic is the
+    /// plain `OpCost` fold.
     pub fn run_shape_mapped(
         &self,
         phase: Phase,
@@ -433,49 +717,103 @@ impl System {
         seq_len: usize,
         m: &Mapping,
     ) -> PhaseReport {
+        self.run_shape_traced(None, phase, batch, seq_len, m).0
+    }
+
+    /// Capture-mode entry: run one phase shape with cost-expression IR
+    /// recording enabled (`analysis/cost_ir.rs`). The report is
+    /// numerically identical to [`Self::run_shape_mapped`]; the second
+    /// return value carries the captured DAG for the phase total
+    /// (pre-epilogue: all layers plus pipeline handoffs), the guard
+    /// vector, and the concrete totals the IR must replay to bit-for-bit.
+    pub fn run_shape_captured(
+        &self,
+        phase: Phase,
+        batch: usize,
+        seq_len: usize,
+        m: &Mapping,
+    ) -> (PhaseReport, Captured) {
+        let ctx = CaptureCtx::new();
+        let (report, total) = self.run_shape_traced(Some(&ctx), phase, batch, seq_len, m);
+        let captured = Captured {
+            root: total.n.clone().expect("capture was enabled"),
+            guards: ctx.take_guards(),
+            total: total.c,
+            dynamic_pj: self.em.dynamic(&total.c.counts).total_pj(),
+        };
+        (report, captured)
+    }
+
+    fn run_shape_traced(
+        &self,
+        cap: Cap,
+        phase: Phase,
+        batch: usize,
+        seq_len: usize,
+        m: &Mapping,
+    ) -> (PhaseReport, TC) {
         let rc = &self.rc;
         let ops = layer_ops(&rc.model, phase, batch, seq_len);
-        let mut layer = OpCost::zero();
+        // symbolic mirrors of layer_ops' shape decomposition: decode
+        // ranges over (batch, kv), prefill over (batch, seq)
+        let b = Sh::input(cap, batch, ShapeVar::Batch);
+        let (tokens, rows_q, eff_seq) = match phase {
+            Phase::Decode => {
+                let s = Sh::input(cap, seq_len, ShapeVar::Kv);
+                (b.clone(), Sh::lit(1), s)
+            }
+            Phase::Prefill => {
+                let s = Sh::input(cap, seq_len, ShapeVar::Seq);
+                (b.mul(&s), s.clone(), s.div_ceilc(2).maxc(1))
+            }
+        };
+        let sm_rows = b.mulc(rc.model.n_heads).mul(&rows_q);
+        let sh = OpShapes { tokens, batch: b, rows_q, eff_seq, sm_rows };
+        let mut layer = TC::zero(cap);
         let mut reports = Vec::new();
         let mut nl_ns = 0.0;
         let mut coll_ns = 0.0;
         let mut utils = Vec::new();
         for op in &ops {
-            let (c, util) = self.op_cost_mapped(op, m);
+            let (c, util) = self.op_cost_traced(cap, op, m, &sh);
             match op.class() {
-                OpClass::NonLinear => nl_ns += c.latency_ns,
-                OpClass::Collective => coll_ns += c.latency_ns,
+                OpClass::NonLinear => nl_ns += c.c.latency_ns,
+                OpClass::Collective => coll_ns += c.c.latency_ns,
                 OpClass::Fc => utils.push(util),
                 _ => {}
             }
-            reports.push(OpReport { name: op.name(), class: op.class(), cost: c });
+            reports.push(OpReport { name: op.name(), class: op.class(), cost: c.c });
             layer = layer.then(&c);
         }
-        let layers = rc.model.n_layers as u64;
+        let layers = rc.model.n_layers;
         let pp = (rc.devices / rc.tp).max(1) as u64;
         // stage handoff between pipeline stages (activations move once per
         // stage boundary)
-        let handoff = coll::cxl_p2p((batch * rc.model.d_model * 2) as u64, &rc.hw.cxl);
-        let total = layer.repeat(layers).then(&handoff.repeat(pp.saturating_sub(1)));
+        let hbytes = sh.batch.mulc(rc.model.d_model * 2);
+        let handoff =
+            TC::leaf(cap, "cxl.p2p", &[&hbytes], coll::cxl_p2p(hbytes.u64(), &rc.hw.cxl));
+        let total = layer
+            .repeat(&Sh::lit(layers))
+            .then(&handoff.repeat(&Sh::lit(pp.saturating_sub(1) as usize)));
 
         let (latency_ns, tokens_per_pass) = match phase {
-            Phase::Decode => (total.latency_ns, batch as f64),
-            Phase::Prefill => (total.latency_ns, (batch * seq_len) as f64),
+            Phase::Decode => (total.c.latency_ns, batch as f64),
+            Phase::Prefill => (total.c.latency_ns, (batch * seq_len) as f64),
         };
         // pipeline-full throughput
         let stage_ns = latency_ns / pp as f64;
         let throughput = tokens_per_pass / (stage_ns / 1e9);
 
         // energy per token: dynamic of all layers / tokens + static share
-        let dyn_e = self.em.dynamic(&total.counts);
+        let dyn_e = self.em.dynamic(&total.c.counts);
         let static_pj =
             rc.devices as f64 * self.em.pim_device_static_w * (latency_ns / pp as f64)
                 / tokens_per_pass;
         let mut energy = dyn_e.scale(1.0 / tokens_per_pass);
         energy.static_pj = static_pj;
 
-        let layer_ns = layer.latency_ns.max(1e-9);
-        PhaseReport {
+        let layer_ns = layer.c.latency_ns.max(1e-9);
+        let report = PhaseReport {
             latency_ns,
             throughput_tok_s: throughput,
             energy,
@@ -487,8 +825,9 @@ impl System {
             } else {
                 utils.iter().sum::<f64>() / utils.len() as f64
             },
-            layer_cost: layer,
-        }
+            layer_cost: layer.c,
+        };
+        (report, total)
     }
 }
 
@@ -697,6 +1036,34 @@ mod tests {
                 assert_eq!(a.latency_ns.to_bits(), b.latency_ns.to_bits(), "{arch:?}");
                 assert_eq!(a.layer_cost, b.layer_cost, "{arch:?}");
                 assert_eq!(a.energy.total_pj().to_bits(), b.energy.total_pj().to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn captured_run_matches_plain_run_bit_for_bit() {
+        use crate::analysis::cost_ir::replay;
+        // the soundness anchor, both directions: capture-off is the plain
+        // fold (same entry), and the captured IR replays to the same bits
+        for arch in [ArchKind::Cent, ArchKind::CompAirOpt, ArchKind::SramStack] {
+            let sys = System::new(rc(arch));
+            let m = sys.static_mapping();
+            for (phase, batch, seq) in [(Phase::Decode, 16, 4096), (Phase::Prefill, 2, 512)] {
+                let plain = sys.run_shape_mapped(phase, batch, seq, &m);
+                let (traced, cap) = sys.run_shape_captured(phase, batch, seq, &m);
+                assert_eq!(plain.latency_ns.to_bits(), traced.latency_ns.to_bits(), "{arch:?}");
+                assert_eq!(plain.layer_cost, traced.layer_cost, "{arch:?}");
+                assert_eq!(
+                    plain.energy.total_pj().to_bits(),
+                    traced.energy.total_pj().to_bits()
+                );
+                let r = replay(&cap.root);
+                assert_eq!(r.latency_ns.to_bits(), cap.total.latency_ns.to_bits(), "{arch:?}");
+                assert_eq!(r.counts, cap.total.counts, "{arch:?}");
+                assert_eq!(
+                    sys.em.dynamic(&r.counts).total_pj().to_bits(),
+                    cap.dynamic_pj.to_bits()
+                );
             }
         }
     }

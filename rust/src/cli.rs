@@ -4,6 +4,9 @@
 
 use std::collections::BTreeMap;
 
+use crate::config::{ArchKind, ModelConfig};
+use crate::util::pool;
+
 /// Flags that never take a value (resolves the `--all fig15` ambiguity).
 const KNOWN_SWITCHES: &[&str] = &["all", "verbose", "quiet", "deep", "list-codes"];
 
@@ -101,6 +104,64 @@ impl Args {
             Some(o) => Err(format!("unknown --format '{o}' (text | json)")),
         }
     }
+
+    /// The shared `--jobs N|auto` flag; `None` when absent (callers pick
+    /// their own default). `auto` resolves to the machine's available
+    /// parallelism. Results never depend on N (submission-order merge).
+    pub fn jobs(&self) -> Result<Option<usize>, String> {
+        match self.flag("jobs") {
+            None => Ok(None),
+            Some("auto") => Ok(Some(pool::default_jobs())),
+            Some(v) => {
+                let n: usize = v.parse().map_err(|_| {
+                    format!("--jobs expects a positive integer or 'auto', got '{v}'")
+                })?;
+                if n == 0 {
+                    return Err("--jobs must be >= 1 (use 1 for serial)".into());
+                }
+                if n > 1024 {
+                    return Err(format!("--jobs must be <= 1024, got {n}"));
+                }
+                Ok(Some(n))
+            }
+        }
+    }
+
+    /// The shared `--arch` point filter of the static-analysis family
+    /// (`check` / `audit` / `prove`): one named arch, or all of them.
+    pub fn archs(&self) -> Result<Vec<ArchKind>, String> {
+        match self.flag("arch") {
+            Some(a) => Ok(vec![
+                ArchKind::by_name(a).ok_or_else(|| format!("unknown --arch '{a}'"))?
+            ]),
+            None => Ok(ArchKind::all().to_vec()),
+        }
+    }
+
+    /// The shared `--model` point filter: one named zoo model, or the
+    /// command's default lattice (`check` covers the zoo, `audit`/`prove`
+    /// keep the gate fast with `tiny` + `llama2-7b`).
+    pub fn models(
+        &self,
+        default: impl FnOnce() -> Vec<ModelConfig>,
+    ) -> Result<Vec<ModelConfig>, String> {
+        match self.flag("model") {
+            Some(m) => Ok(vec![
+                ModelConfig::by_name(m).ok_or_else(|| format!("unknown --model '{m}'"))?
+            ]),
+            None => Ok(default()),
+        }
+    }
+}
+
+/// Shared nonzero-exit epilogue of the static-analysis family: any
+/// error-severity diagnostic fails the command (warnings pass).
+pub fn gate_errors(command: &str, noun: &str, errors: usize) -> Result<(), String> {
+    if errors > 0 {
+        Err(format!("{command} found {errors} {noun}(s)"))
+    } else {
+        Ok(())
+    }
 }
 
 /// How a subcommand renders its report.
@@ -160,6 +221,17 @@ USAGE:
                                           widens to the full model zoo, the
                                           simulated NoC tier and longer
                                           chains; exits nonzero on any error
+  compair prove    [--arch A] [--model M] static prover: captures the cost
+                   [--phase decode|prefill] pipeline as a unit-checked
+                   [--jobs N|auto]        expression IR and certifies unit
+                                          consistency, monotonicity, interval
+                                          bounds and energy-pricing coverage
+                                          over the whole shape box (not
+                                          sampled); exits nonzero on any
+                                          failed proof obligation
+                   [--list-codes]         print every registered diagnostic
+                                          code with its one-line meaning
+                   [--explain CODE]       explain one diagnostic code
   compair config show                     print the Table-3 hardware config
   compair list                            list figures/models/archs/scenarios
 
@@ -271,6 +343,43 @@ mod tests {
         assert_eq!(a.flag("jobs"), Some("4"));
         let a = parse("check --list-codes");
         assert!(a.has("list-codes"));
+    }
+
+    #[test]
+    fn jobs_flag_parses_and_bounds() {
+        assert_eq!(parse("prove").jobs().unwrap(), None);
+        assert_eq!(parse("prove --jobs 4").jobs().unwrap(), Some(4));
+        assert!(parse("prove --jobs auto").jobs().unwrap().unwrap() >= 1);
+        assert!(parse("prove --jobs 0").jobs().is_err());
+        assert!(parse("prove --jobs 2048").jobs().is_err());
+        assert!(parse("prove --jobs lots").jobs().is_err());
+    }
+
+    #[test]
+    fn arch_filter_parses() {
+        assert_eq!(parse("check").archs().unwrap().len(), ArchKind::all().len());
+        let one = parse("check --arch compair-opt").archs().unwrap();
+        assert_eq!(one, vec![ArchKind::CompAirOpt]);
+        let e = parse("check --arch warp9").archs().unwrap_err();
+        assert!(e.contains("unknown --arch 'warp9'"), "{e}");
+    }
+
+    #[test]
+    fn model_filter_parses_with_command_default() {
+        let def = parse("audit").models(|| vec![ModelConfig::tiny()]).unwrap();
+        assert_eq!(def.len(), 1);
+        assert_eq!(def[0].name, "tiny");
+        let one = parse("audit --model llama2-7b").models(ModelConfig::zoo).unwrap();
+        assert_eq!(one.len(), 1);
+        assert_eq!(one[0].name, "llama2-7b");
+        assert!(parse("audit --model gpt5").models(ModelConfig::zoo).is_err());
+    }
+
+    #[test]
+    fn gate_errors_epilogue() {
+        assert!(gate_errors("check", "error diagnostic", 0).is_ok());
+        let e = gate_errors("audit", "invariant violation", 3).unwrap_err();
+        assert_eq!(e, "audit found 3 invariant violation(s)");
     }
 
     #[test]

@@ -26,6 +26,14 @@ use crate::config::SramConfig;
 use crate::sim::{CostCounts, OpCost};
 use crate::util::json::{Json, ToJson};
 
+/// `CostCounts` fields that are deliberately *not* priced: pure
+/// bookkeeping duplicates of events whose energy is billed elsewhere.
+/// `sram_access` counts macro activations whose MACs are already priced
+/// per-op through `sram_mac` (one access = inputs×outputs MACs); pricing
+/// both would double-bill the array. The prove pricing-coverage pass
+/// accepts exactly this list as unpriced.
+pub const UNPRICED_BOOKKEEPING: &[&str] = &["sram_access"];
+
 /// Energy broken down by component (pJ).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct EnergyBreakdown {
@@ -168,6 +176,32 @@ impl EnergyModel {
         }
     }
 
+    /// The declarative mirror of [`Self::dynamic`]: which breakdown
+    /// component prices each `CostCounts` field. `compair prove`'s
+    /// pricing-coverage pass joins this against `CostCounts::fields()`
+    /// and [`UNPRICED_BOOKKEEPING`] so a new counter cannot silently
+    /// escape the energy model (`prv.unpriced-counter`) and no counter is
+    /// billed twice (`prv.double-priced`); the liveness test below keeps
+    /// this list from drifting away from the arithmetic in `dynamic`.
+    pub fn pricing_rules() -> Vec<(&'static str, &'static str)> {
+        vec![
+            ("dram_act", "dram_pj"),
+            ("dram_col_rd", "dram_pj"),
+            ("dram_col_wr", "dram_pj"),
+            ("dram_mac", "dram_pj"),
+            ("sram_mac", "sram_pj"),
+            ("sram_row_write", "sram_pj"),
+            ("hb_bytes", "hb_pj"),
+            ("noc_flit_hops", "noc_pj"),
+            ("noc_alu_ops", "noc_pj"),
+            ("gb_bytes", "gb_pj"),
+            ("cxl_bytes", "cxl_pj"),
+            ("nlu_ops", "nlu_pj"),
+            ("gpu_flop", "gpu_pj"),
+            ("gpu_hbm_bytes", "gpu_pj"),
+        ]
+    }
+
     /// Price a full phase: dynamic events + static power over the phase
     /// latency for the given device counts.
     pub fn phase(&self, cost: &OpCost, pim_devices: usize, gpus: usize) -> EnergyBreakdown {
@@ -234,6 +268,53 @@ mod tests {
         assert!((e32.static_pj / e8.static_pj - 4.0).abs() < 1e-9);
         // W × ns = pJ·1e0: 4 W × 1000 ns × 8 devices = 32000 pJ
         assert!((e8.static_pj - 32_000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pricing_rules_mirror_dynamic_exactly() {
+        // liveness: bumping a counter listed in pricing_rules must move
+        // exactly the component the rule names (and only it); bumping a
+        // bookkeeping counter must move nothing
+        let m = model();
+        let base = m.dynamic(&CostCounts::default());
+        for (field, component) in EnergyModel::pricing_rules() {
+            let mut c = CostCounts::default();
+            match field {
+                "dram_act" => c.dram_act = 1,
+                "dram_col_rd" => c.dram_col_rd = 1,
+                "dram_col_wr" => c.dram_col_wr = 1,
+                "dram_mac" => c.dram_mac = 1,
+                "sram_mac" => c.sram_mac = 1,
+                "sram_row_write" => c.sram_row_write = 1,
+                "hb_bytes" => c.hb_bytes = 1,
+                "noc_flit_hops" => c.noc_flit_hops = 1,
+                "noc_alu_ops" => c.noc_alu_ops = 1,
+                "gb_bytes" => c.gb_bytes = 1,
+                "cxl_bytes" => c.cxl_bytes = 1,
+                "nlu_ops" => c.nlu_ops = 1,
+                "gpu_flop" => c.gpu_flop = 1,
+                "gpu_hbm_bytes" => c.gpu_hbm_bytes = 1,
+                other => panic!("rule names unknown field {other}"),
+            }
+            assert!(
+                c.fields().iter().any(|(n, v)| *n == field && *v == 1),
+                "{field} is not a registered CostCounts field"
+            );
+            let e = m.dynamic(&c);
+            for ((name, pj), (_, base_pj)) in e.components().iter().zip(base.components()) {
+                if *name == component {
+                    assert!(*pj > *base_pj, "{field} must move {component}");
+                } else {
+                    assert_eq!(*pj, base_pj, "{field} must not move {name}");
+                }
+            }
+        }
+        // bookkeeping counters price to zero
+        for field in UNPRICED_BOOKKEEPING {
+            assert_eq!(*field, "sram_access", "update this test with the new field");
+            let c = CostCounts { sram_access: 1_000_000, ..Default::default() };
+            assert_eq!(m.dynamic(&c).total_pj(), 0.0);
+        }
     }
 
     #[test]

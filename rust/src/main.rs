@@ -4,7 +4,7 @@
 //! reports on every subcommand.
 
 use compair::analysis;
-use compair::cli::{Args, OutputFormat, USAGE};
+use compair::cli::{self, Args, OutputFormat, USAGE};
 use compair::config::{ArchKind, MappingMode, ModelConfig, NocFidelity, Phase, RunConfig};
 use compair::coordinator::{cluster, serving, ClusterConfig, RouterPolicy, ServeConfig};
 use compair::figures;
@@ -31,6 +31,7 @@ fn main() {
         "isa-demo" => cmd_isa_demo(&args),
         "check" => cmd_check(&args),
         "audit" => cmd_audit(&args),
+        "prove" => cmd_prove(&args),
         "config" => cmd_config(&args),
         "list" => cmd_list(&args),
         "" | "help" | "-h" => {
@@ -57,27 +58,6 @@ fn parse_noc_fidelity(args: &Args) -> Result<Option<NocFidelity>, String> {
     }
 }
 
-/// Parse `--jobs`; `None` when absent (callers pick their own default).
-/// `auto` resolves to the machine's available parallelism.
-fn parse_jobs(args: &Args) -> Result<Option<usize>, String> {
-    match args.flag("jobs") {
-        None => Ok(None),
-        Some("auto") => Ok(Some(pool::default_jobs())),
-        Some(v) => {
-            let n: usize = v
-                .parse()
-                .map_err(|_| format!("--jobs expects a positive integer or 'auto', got '{v}'"))?;
-            if n == 0 {
-                return Err("--jobs must be >= 1 (use 1 for serial)".into());
-            }
-            if n > 1024 {
-                return Err(format!("--jobs must be <= 1024, got {n}"));
-            }
-            Ok(Some(n))
-        }
-    }
-}
-
 fn cmd_figures(args: &Args) -> Result<(), String> {
     let format = args.format()?;
     // figure generators build their RunConfigs internally; the flags
@@ -87,7 +67,7 @@ fn cmd_figures(args: &Args) -> Result<(), String> {
     if let Some(f) = parse_noc_fidelity(args)? {
         cx.noc_fidelity = f;
     }
-    if let Some(j) = parse_jobs(args)? {
+    if let Some(j) = args.jobs()? {
         cx.jobs = j;
     }
     let registry = figures::registry();
@@ -162,7 +142,7 @@ fn build_rc(args: &Args, default_fidelity: NocFidelity) -> Result<RunConfig, Str
     if let Some(f) = parse_noc_fidelity(args)? {
         rc.noc_fidelity = f;
     }
-    if let Some(j) = parse_jobs(args)? {
+    if let Some(j) = args.jobs()? {
         rc.jobs = j;
     }
     if let Some(m) = args.flag("mapping") {
@@ -435,15 +415,9 @@ fn cmd_check(args: &Args) -> Result<(), String> {
     if args.has("list-codes") || args.flag("explain").is_some() {
         return cmd_check_codes(args, format);
     }
-    let jobs = parse_jobs(args)?.unwrap_or_else(pool::default_jobs);
-    let archs: Vec<ArchKind> = match args.flag("arch") {
-        Some(a) => vec![ArchKind::by_name(a).ok_or("unknown --arch")?],
-        None => ArchKind::all().to_vec(),
-    };
-    let models: Vec<ModelConfig> = match args.flag("model") {
-        Some(m) => vec![ModelConfig::by_name(m).ok_or("unknown --model")?],
-        None => ModelConfig::zoo(),
-    };
+    let jobs = args.jobs()?.unwrap_or_else(pool::default_jobs);
+    let archs = args.archs()?;
+    let models = args.models(ModelConfig::zoo)?;
     let doc = match args.flag("config") {
         None => None,
         Some(path) => {
@@ -522,26 +496,17 @@ fn cmd_check(args: &Args) -> Result<(), String> {
         }
         println!("check: {} point(s), {errors} error(s), {warnings} warning(s)", reports.len());
     }
-    if errors > 0 {
-        return Err(format!("check found {errors} error diagnostic(s)"));
-    }
-    Ok(())
+    cli::gate_errors("check", "error diagnostic", errors)
 }
 
 fn cmd_audit(args: &Args) -> Result<(), String> {
     use compair::analysis::audit::{self, AuditOptions};
     use compair::analysis::audit_lattice as lattice;
     let format = args.format()?;
-    let jobs = parse_jobs(args)?.unwrap_or_else(pool::default_jobs);
+    let jobs = args.jobs()?.unwrap_or_else(pool::default_jobs);
     let opts = AuditOptions { deep: args.has("deep") };
-    let archs: Vec<ArchKind> = match args.flag("arch") {
-        Some(a) => vec![ArchKind::by_name(a).ok_or("unknown --arch")?],
-        None => ArchKind::all().to_vec(),
-    };
-    let models: Vec<ModelConfig> = match args.flag("model") {
-        Some(m) => vec![ModelConfig::by_name(m).ok_or("unknown --model")?],
-        None => lattice::default_models(opts.deep),
-    };
+    let archs = args.archs()?;
+    let models = args.models(|| lattice::default_models(opts.deep))?;
     // the arch-independent slice runs once: collective closed-form
     // identities, calibration anchors/factors, serving + cluster samples
     let global = audit::check_global(&opts);
@@ -595,10 +560,80 @@ fn cmd_audit(args: &Args) -> Result<(), String> {
         }
         println!("audit: {} point(s), {errors} error(s), {warnings} warning(s)", reports.len());
     }
-    if errors > 0 {
-        return Err(format!("audit found {errors} invariant violation(s)"));
+    cli::gate_errors("audit", "invariant violation", errors)
+}
+
+fn cmd_prove(args: &Args) -> Result<(), String> {
+    use compair::analysis::prove;
+    let format = args.format()?;
+    if args.has("list-codes") || args.flag("explain").is_some() {
+        return cmd_check_codes(args, format);
     }
-    Ok(())
+    let jobs = args.jobs()?.unwrap_or_else(pool::default_jobs);
+    let archs = args.archs()?;
+    let models = args.models(prove::default_models)?;
+    let phase = match args.flag("phase") {
+        None => None,
+        Some("decode") => Some(Phase::Decode),
+        Some("prefill") => Some(Phase::Prefill),
+        Some(p) => return Err(format!("unknown --phase '{p}'")),
+    };
+    // the point-independent proofs run once (energy pricing coverage);
+    // lattice points fan out across the pool with rc.jobs = 1 each, and
+    // the submission-order merge keeps the output byte-identical
+    // whatever --jobs is
+    let global = prove::check_global();
+    let mut points = prove::points(&archs, &models);
+    if let Some(ph) = phase {
+        points.retain(|p| p.phase == ph);
+    }
+    let results: Vec<(analysis::CheckReport, prove::ProveSummary)> =
+        pool::par_map_indexed(jobs, points, |_, p| prove::prove_point(&p));
+    let point_errs: usize = results.iter().map(|(r, _)| r.errors()).sum();
+    let point_warns: usize = results.iter().map(|(r, _)| r.warnings()).sum();
+    let errors = global.errors() + point_errs;
+    let warnings = global.warnings() + point_warns;
+    if format == OutputFormat::Json {
+        let pts = Json::arr(results.iter().map(|(rep, sum)| {
+            Json::obj()
+                .field("point", sum.label.as_str())
+                .field("summary", sum.to_json())
+                .field("report", rep.to_json())
+        }));
+        let out = Json::obj()
+            .field("command", "prove")
+            .field("global", global.to_json())
+            .field("points", pts)
+            .field("errors", errors)
+            .field("warnings", warnings)
+            .field("ok", errors == 0);
+        println!("{}", out.render());
+    } else {
+        let mut t = Table::new(
+            "prove summary",
+            &["point", "cells", "certified", "corners", "latency lo..hi", "energy lo..hi"],
+        );
+        for (_, s) in &results {
+            t.rowv(vec![
+                s.label.clone(),
+                s.cells.to_string(),
+                format!("{}{}", s.certified, if s.complete { "" } else { " (partial)" }),
+                s.corners.to_string(),
+                format!("{}..{}", ftime_ns(s.lat_lo_ns), ftime_ns(s.lat_hi_ns)),
+                format!("{}..{}", fenergy_pj(s.pj_lo), fenergy_pj(s.pj_hi)),
+            ]);
+        }
+        t.print();
+        let named = std::iter::once(("global".to_string(), &global))
+            .chain(results.iter().map(|(r, s)| (s.label.clone(), r)));
+        for (title, rep) in named {
+            if !rep.diags.is_empty() {
+                println!("{}", rep.render_table(&title));
+            }
+        }
+        println!("prove: {} point(s), {errors} error(s), {warnings} warning(s)", results.len());
+    }
+    cli::gate_errors("prove", "failed proof obligation", errors)
 }
 
 fn cmd_config(args: &Args) -> Result<(), String> {

@@ -421,7 +421,7 @@ fn granule_elems(kind: NocCollective, cols: u64) -> u64 {
 /// IterNum field (which the simulated tier rejects outright) fit at the
 /// 15-round ceiling: the calibrated tier extrapolates the closed form
 /// with the nearest simulable correction rather than refusing the query.
-fn factor_key(kind: NocCollective, param: u64, mesh_rows: usize) -> u64 {
+pub fn factor_key(kind: NocCollective, param: u64, mesh_rows: usize) -> u64 {
     match kind {
         NocCollective::Reduce | NocCollective::Broadcast => tree_banks(param, mesh_rows),
         NocCollective::Exp | NocCollective::Sqrt => param.clamp(1, 15),

@@ -43,30 +43,50 @@ pub struct CostCounts {
 }
 
 macro_rules! for_each_count {
-    ($self:ident, $other:ident, $op:tt) => {{
+    ($self:ident, $other:ident, $f:ident) => {{
         CostCounts {
-            dram_act: $self.dram_act $op $other.dram_act,
-            dram_col_rd: $self.dram_col_rd $op $other.dram_col_rd,
-            dram_col_wr: $self.dram_col_wr $op $other.dram_col_wr,
-            dram_mac: $self.dram_mac $op $other.dram_mac,
-            sram_access: $self.sram_access $op $other.sram_access,
-            sram_mac: $self.sram_mac $op $other.sram_mac,
-            sram_row_write: $self.sram_row_write $op $other.sram_row_write,
-            hb_bytes: $self.hb_bytes $op $other.hb_bytes,
-            noc_flit_hops: $self.noc_flit_hops $op $other.noc_flit_hops,
-            noc_alu_ops: $self.noc_alu_ops $op $other.noc_alu_ops,
-            gb_bytes: $self.gb_bytes $op $other.gb_bytes,
-            cxl_bytes: $self.cxl_bytes $op $other.cxl_bytes,
-            nlu_ops: $self.nlu_ops $op $other.nlu_ops,
-            gpu_flop: $self.gpu_flop $op $other.gpu_flop,
-            gpu_hbm_bytes: $self.gpu_hbm_bytes $op $other.gpu_hbm_bytes,
+            dram_act: $f($self.dram_act, $other.dram_act, "dram_act"),
+            dram_col_rd: $f($self.dram_col_rd, $other.dram_col_rd, "dram_col_rd"),
+            dram_col_wr: $f($self.dram_col_wr, $other.dram_col_wr, "dram_col_wr"),
+            dram_mac: $f($self.dram_mac, $other.dram_mac, "dram_mac"),
+            sram_access: $f($self.sram_access, $other.sram_access, "sram_access"),
+            sram_mac: $f($self.sram_mac, $other.sram_mac, "sram_mac"),
+            sram_row_write: $f($self.sram_row_write, $other.sram_row_write, "sram_row_write"),
+            hb_bytes: $f($self.hb_bytes, $other.hb_bytes, "hb_bytes"),
+            noc_flit_hops: $f($self.noc_flit_hops, $other.noc_flit_hops, "noc_flit_hops"),
+            noc_alu_ops: $f($self.noc_alu_ops, $other.noc_alu_ops, "noc_alu_ops"),
+            gb_bytes: $f($self.gb_bytes, $other.gb_bytes, "gb_bytes"),
+            cxl_bytes: $f($self.cxl_bytes, $other.cxl_bytes, "cxl_bytes"),
+            nlu_ops: $f($self.nlu_ops, $other.nlu_ops, "nlu_ops"),
+            gpu_flop: $f($self.gpu_flop, $other.gpu_flop, "gpu_flop"),
+            gpu_hbm_bytes: $f($self.gpu_hbm_bytes, $other.gpu_hbm_bytes, "gpu_hbm_bytes"),
         }
     }};
 }
 
+// Overflow policy for the u64 event counters: saturate in release (a
+// pinned counter is visibly wrong but never wraps to a tiny plausible
+// value that would silently invert a cost comparison), debug-assert in
+// debug so tests catch the defect at its source. The static side of the
+// same defect class is `prove`'s headroom pass (`prv.overflow`), which
+// rejects configurations that could get anywhere near saturation.
+#[inline]
+fn sat_add(a: u64, b: u64, field: &str) -> u64 {
+    let (v, wrapped) = a.overflowing_add(b);
+    debug_assert!(!wrapped, "CostCounts::{field} add overflowed u64 ({a} + {b})");
+    if wrapped { u64::MAX } else { v }
+}
+
+#[inline]
+fn sat_mul(a: u64, k: u64, field: &str) -> u64 {
+    let (v, wrapped) = a.overflowing_mul(k);
+    debug_assert!(!wrapped, "CostCounts::{field} scale overflowed u64 ({a} * {k})");
+    if wrapped { u64::MAX } else { v }
+}
+
 impl CostCounts {
     pub fn add(&self, o: &CostCounts) -> CostCounts {
-        for_each_count!(self, o, +)
+        for_each_count!(self, o, sat_add)
     }
 
     pub fn scale(&self, k: u64) -> CostCounts {
@@ -87,7 +107,7 @@ impl CostCounts {
             gpu_flop: k,
             gpu_hbm_bytes: k,
         };
-        for_each_count!(self, o, *)
+        for_each_count!(self, o, sat_mul)
     }
 
     /// Every counter as a `(name, value)` pair, in declaration order — the
@@ -147,6 +167,13 @@ impl OpCost {
     }
 
     /// Parallel composition: latency is the max, counts add.
+    ///
+    /// NaN note: `f64::max` *ignores* a NaN operand — `join` with one
+    /// NaN latency returns the finite side, and only NaN-join-NaN stays
+    /// NaN. The pipeline never produces NaN latencies (the `aud.non-finite`
+    /// auditor gate enforces this), so join quietly preferring the finite
+    /// side is acceptable; the behavior is pinned by a test so a change
+    /// of `max` semantics cannot slip in silently.
     pub fn join(&self, o: &OpCost) -> OpCost {
         OpCost {
             latency_ns: self.latency_ns.max(o.latency_ns),
@@ -154,12 +181,14 @@ impl OpCost {
         }
     }
 
-    /// Repeat serially k times.
+    /// Repeat serially k times. Counts saturate at u64::MAX instead of
+    /// wrapping (see `CostCounts::scale`).
     pub fn repeat(&self, k: u64) -> OpCost {
         OpCost { latency_ns: self.latency_ns * k as f64, counts: self.counts.scale(k) }
     }
 
-    /// k identical units running in parallel: same latency, k× the events.
+    /// k identical units running in parallel: same latency, k× the
+    /// events. Counts saturate at u64::MAX instead of wrapping.
     pub fn replicate(&self, k: u64) -> OpCost {
         OpCost { latency_ns: self.latency_ns, counts: self.counts.scale(k) }
     }
@@ -225,6 +254,121 @@ mod tests {
         let p = OpCost::parallel_all((0..3).map(|_| c(1, 1)));
         assert_eq!(p.latency_ns, 10.0);
         assert_eq!(p.counts.dram_act, 3);
+    }
+
+    // --- combinator algebra (satellite: property tests) ---
+
+    fn cases() -> Vec<OpCost> {
+        vec![
+            OpCost::zero(),
+            OpCost::latency(1.5),
+            c(1, 10),
+            OpCost { latency_ns: 9.25, ..c(3, 7) },
+            OpCost {
+                latency_ns: 0.125,
+                counts: CostCounts { hb_bytes: 11, noc_flit_hops: 5, ..Default::default() },
+            },
+        ]
+    }
+
+    fn eq_bits(a: &OpCost, b: &OpCost) {
+        assert_eq!(a.latency_ns.to_bits(), b.latency_ns.to_bits(), "{a:?} vs {b:?}");
+        assert_eq!(a.counts, b.counts);
+    }
+
+    #[test]
+    fn join_is_commutative_and_associative() {
+        for a in cases() {
+            for b in cases() {
+                eq_bits(&a.join(&b), &b.join(&a));
+                for x in cases() {
+                    eq_bits(&a.join(&b).join(&x), &a.join(&b.join(&x)));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn then_is_associative_with_zero_identity() {
+        for a in cases() {
+            eq_bits(&a.then(&OpCost::zero()), &a);
+            eq_bits(&OpCost::zero().then(&a), &a);
+            for b in cases() {
+                for x in cases() {
+                    eq_bits(&a.then(&b).then(&x), &a.then(&b.then(&x)));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn repeat_splits_additively() {
+        // repeat(a+b) == repeat(a).then(repeat(b)); latencies here are
+        // exactly representable so even the float side is bit-equal
+        for cost in cases() {
+            for (a, b) in [(0u64, 1u64), (1, 1), (3, 5), (4, 4), (7, 9)] {
+                eq_bits(&cost.repeat(a + b), &cost.repeat(a).then(&cost.repeat(b)));
+            }
+        }
+    }
+
+    #[test]
+    fn replicate_composes_multiplicatively() {
+        for cost in cases() {
+            let r = cost.replicate(3).replicate(4);
+            eq_bits(&r, &cost.replicate(12));
+        }
+    }
+
+    #[test]
+    fn join_nan_prefers_the_finite_side() {
+        let nan = OpCost { latency_ns: f64::NAN, ..c(1, 1) };
+        let fin = OpCost { latency_ns: 7.0, ..c(2, 2) };
+        // f64::max ignores a single NaN operand, in both positions
+        assert_eq!(nan.join(&fin).latency_ns, 7.0);
+        assert_eq!(fin.join(&nan).latency_ns, 7.0);
+        assert_eq!(nan.join(&fin).counts.dram_act, 3);
+        // only NaN-join-NaN stays NaN
+        assert!(nan.join(&nan).latency_ns.is_nan());
+    }
+
+    // --- overflow boundary (satellite: saturate + debug-assert policy) ---
+
+    #[test]
+    #[cfg(not(debug_assertions))]
+    fn counts_saturate_instead_of_wrapping() {
+        let near = CostCounts { dram_mac: u64::MAX - 1, ..Default::default() };
+        assert_eq!(near.add(&near).dram_mac, u64::MAX);
+        assert_eq!(near.scale(3).dram_mac, u64::MAX);
+        let oc = OpCost { latency_ns: 1.0, counts: near };
+        assert_eq!(oc.repeat(2).counts.dram_mac, u64::MAX);
+        assert_eq!(oc.replicate(u64::MAX).counts.dram_mac, u64::MAX);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "dram_mac add overflowed")]
+    fn counts_add_overflow_panics_in_debug() {
+        let near = CostCounts { dram_mac: u64::MAX - 1, ..Default::default() };
+        let _ = near.add(&near);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "noc_flit_hops scale overflowed")]
+    fn counts_scale_overflow_panics_in_debug() {
+        let near = CostCounts { noc_flit_hops: u64::MAX / 2 + 1, ..Default::default() };
+        let _ = near.scale(2);
+    }
+
+    #[test]
+    fn counts_at_the_boundary_stay_exact() {
+        // the largest non-overflowing cases must be untouched by hardening
+        let half = CostCounts { gpu_flop: u64::MAX / 2, ..Default::default() };
+        assert_eq!(half.scale(2).gpu_flop, u64::MAX - 1);
+        let a = CostCounts { cxl_bytes: u64::MAX - 5, ..Default::default() };
+        let b = CostCounts { cxl_bytes: 5, ..Default::default() };
+        assert_eq!(a.add(&b).cxl_bytes, u64::MAX);
     }
 
     #[test]

@@ -184,6 +184,19 @@ fn descriptions_cover_every_registered_code() {
         );
     }
     assert!(analysis::code_description("aud.no-such-code").is_none());
+    // the registry spans all four families, prover codes included
+    for prefix in ["isa.", "map.", "cfg.", "aud.", "prv."] {
+        assert!(
+            ALL_CODES.iter().any(|c| c.starts_with(prefix)),
+            "no {prefix}* codes registered"
+        );
+    }
+    for code in ["prv.unit-mismatch", "prv.non-monotone", "prv.whitelist-escape",
+                 "prv.guard-unstable", "prv.overflow", "prv.unpriced-counter",
+                 "prv.double-priced", "prv.eval-drift"] {
+        assert!(ALL_CODES.contains(&code), "{code} not registered");
+        assert!(analysis::code_description(code).is_some(), "{code} undescribed");
+    }
 }
 
 #[test]

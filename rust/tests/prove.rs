@@ -1,0 +1,163 @@
+//! Integration tests for `compair prove` — the static prover over the
+//! captured cost-expression IR (`analysis/cost_ir.rs` + `analysis/prove.rs`).
+//!
+//! Positive: every shipped (arch, model, fidelity, phase) point in the
+//! default prove lattice certifies with zero errors, the capture-mode run
+//! is bit-identical to the plain run in both directions (the soundness
+//! anchor), and fanning the lattice over the worker pool is invariant in
+//! the job count. Negative: seeded defects (a doctored budget, doctored
+//! totals) fire exactly their own `prv.*` codes — the per-pass doctored-IR
+//! corpus lives next to the passes in `analysis/prove.rs`.
+
+use compair::analysis::prove::{
+    self, active_vars, prove_point, prove_point_budget, shape_box, ProvePoint,
+};
+use compair::arch::System;
+use compair::config::{ArchKind, ModelConfig, NocFidelity, Phase};
+use compair::util::pool;
+use compair::Engine;
+
+fn point(arch: ArchKind, model: ModelConfig, fidelity: NocFidelity, phase: Phase) -> ProvePoint {
+    ProvePoint { arch, model, fidelity, phase }
+}
+
+#[test]
+fn the_default_lattice_proves_clean() {
+    // the exact set ci.sh gates on: every non-roofline arch, tiny +
+    // llama2-7b, both closed-form NoC tiers, both phases
+    let pts = prove::points(&ArchKind::all(), &prove::default_models());
+    assert!(pts.len() >= 16, "lattice unexpectedly small: {}", pts.len());
+    for p in pts {
+        let label = p.label();
+        let (rep, sum) = prove_point(&p);
+        assert_eq!(rep.errors(), 0, "{label}:\n{}", rep.render_brief());
+        assert!(sum.complete, "{label}: budget exhausted");
+        assert!(sum.certified > 0, "{label}: nothing certified");
+        assert!(sum.lat_lo_ns > 0.0 && sum.lat_lo_ns <= sum.lat_hi_ns, "{label}");
+        assert!(sum.pj_lo > 0.0 && sum.pj_lo <= sum.pj_hi, "{label}");
+        assert!(sum.events_hi > 0, "{label}");
+    }
+}
+
+#[test]
+fn global_pricing_coverage_proves_clean() {
+    let rep = prove::check_global();
+    assert!(rep.is_clean(), "{}", rep.render_brief());
+}
+
+#[test]
+fn prove_results_are_invariant_in_the_job_count() {
+    let pts = prove::points(
+        &[ArchKind::CompAirOpt, ArchKind::Cent],
+        &[ModelConfig::tiny()],
+    );
+    let run = |jobs: usize| -> Vec<String> {
+        pool::par_map_indexed(jobs, pts.clone(), |_, p| {
+            let (rep, sum) = prove_point(&p);
+            format!(
+                "{} e={} w={} cells={} cert={} corners={} lat={:x}..{:x} pj={:x}..{:x} ev={}",
+                sum.label,
+                rep.errors(),
+                rep.warnings(),
+                sum.cells,
+                sum.certified,
+                sum.corners,
+                sum.lat_lo_ns.to_bits(),
+                sum.lat_hi_ns.to_bits(),
+                sum.pj_lo.to_bits(),
+                sum.pj_hi.to_bits(),
+                sum.events_hi,
+            )
+        })
+    };
+    assert_eq!(run(1), run(4));
+}
+
+#[test]
+fn starved_budget_fires_only_guard_unstable() {
+    // calibrated decode on llama2-7b needs subdivision (the NoC factor
+    // key bands the batch axis); one cell cannot certify the whole box
+    let p = point(
+        ArchKind::CompAirOpt,
+        ModelConfig::by_name("llama2-7b").unwrap(),
+        NocFidelity::Calibrated,
+        Phase::Decode,
+    );
+    let (rep, sum) = prove_point_budget(&p, 1);
+    assert!(!sum.complete);
+    assert!(rep.has_code("prv.guard-unstable"), "{}", rep.render_brief());
+    assert_eq!(rep.errors(), 0, "starvation must degrade, not fail:\n{}", rep.render_brief());
+    for d in &rep.diags {
+        assert_eq!(d.code, "prv.guard-unstable", "stray code: {}", d.code);
+    }
+    // the same point certifies under the default budget
+    let (rep, sum) = prove_point(&p);
+    assert_eq!(rep.errors(), 0, "{}", rep.render_brief());
+    assert!(sum.complete);
+}
+
+#[test]
+fn captured_totals_are_monotone_over_the_corner_grid() {
+    // independent restatement of the certificate at the lib level: walk a
+    // concrete (batch, kv) grid and require componentwise dominance of
+    // the captured pre-epilogue totals
+    let p = point(
+        ArchKind::CompAirOpt,
+        ModelConfig::tiny(),
+        NocFidelity::Analytic,
+        Phase::Decode,
+    );
+    let sys = System::new(p.rc());
+    let m = sys.static_mapping();
+    let grid: Vec<(usize, usize)> = [1usize, 4, 16, 64]
+        .iter()
+        .flat_map(|&b| [128usize, 1024, 8192].iter().map(move |&kv| (b, kv)))
+        .collect();
+    let evals: Vec<((usize, usize), f64, f64)> = grid
+        .iter()
+        .map(|&(b, kv)| {
+            let (_, cap) = sys.run_shape_captured(Phase::Decode, b, kv, &m);
+            ((b, kv), cap.total.latency_ns, cap.dynamic_pj)
+        })
+        .collect();
+    for (pa, la, ea) in &evals {
+        for (pb, lb, eb) in &evals {
+            if pa.0 <= pb.0 && pa.1 <= pb.1 {
+                assert!(la <= lb, "latency dropped {pa:?} -> {pb:?}: {la} > {lb}");
+                assert!(ea <= eb, "energy dropped {pa:?} -> {pb:?}: {ea} > {eb}");
+            }
+        }
+    }
+}
+
+#[test]
+fn shape_boxes_match_their_active_vars() {
+    for phase in [Phase::Decode, Phase::Prefill] {
+        let bx = shape_box(phase);
+        let vars = active_vars(phase);
+        for v in vars {
+            let i = v.index();
+            assert!(bx.lo[i] < bx.hi[i], "{phase:?}: {v:?} axis is degenerate");
+        }
+        // inactive axes are singleton so corners only vary active vars
+        let active: Vec<usize> = vars.iter().map(|v| v.index()).collect();
+        for i in 0..3 {
+            if !active.contains(&i) {
+                assert_eq!(bx.lo[i], bx.hi[i], "{phase:?}: axis {i} should be pinned");
+            }
+        }
+    }
+}
+
+#[test]
+fn engine_facade_proves_both_phases() {
+    let rep = Engine::new(ProvePoint {
+        arch: ArchKind::CompAirOpt,
+        model: ModelConfig::tiny(),
+        fidelity: NocFidelity::Calibrated,
+        phase: Phase::Decode, // facade proves both phases regardless
+    }
+    .rc())
+    .prove();
+    assert_eq!(rep.errors(), 0, "{}", rep.render_brief());
+}
